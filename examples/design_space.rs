@@ -1,0 +1,101 @@
+//! Design-space exploration (paper §IV "Design Points"): sweep IMA shapes,
+//! buffer sizes and FC-tile knobs over the full Table-II suite and print
+//! CE/PE frontiers — the exploration that led the paper to the 16-IMA,
+//! 128x256, 16 KB design point.
+//!
+//! Run: `cargo run --release --example design_space`
+
+use newton::config::{ChipConfig, ImaConfig, TileConfig, XbarParams};
+use newton::energy::TileModel;
+use newton::mapping::{self, Mapping, MappingPolicy};
+use newton::tiles::ChipPlan;
+use newton::util::{f1, f2, Table};
+use newton::workloads;
+
+fn main() {
+    let nets = workloads::suite();
+    let p = XbarParams::default();
+
+    // ---- IMA shape frontier -----------------------------------------------
+    println!("IMA shape frontier (suite average):");
+    let mut t = Table::new(&["IMA in x out", "xbars", "under-util %", "CE GOPS/mm²", "PE GOPS/W"]);
+    for (i, o) in [
+        (128, 64),
+        (128, 128),
+        (128, 256),
+        (128, 512),
+        (256, 256),
+        (512, 512),
+        (2048, 1024),
+        (8192, 1024),
+    ] {
+        let ima = ImaConfig {
+            inputs: i,
+            outputs: o,
+            ..ImaConfig::newton_default()
+        };
+        let u = mapping::avg_underutilization(&nets, &ima, &p, 16);
+        let tile = TileConfig {
+            ima,
+            ..TileConfig::newton_conv()
+        };
+        let m = TileModel::with_features(tile, p, true, 0);
+        // deliverable CE discounts the fragmentation the mapping showed
+        let ce = m.ce() * (1.0 - u);
+        t.row(&[
+            format!("{i}x{o}"),
+            format!("{}", ima.xbars(&p)),
+            f1(u * 100.0),
+            f1(ce),
+            f1(m.pe()),
+        ]);
+    }
+    t.print();
+    println!("-> the paper's 128x256 point balances utilisation and HTree complexity\n");
+
+    // ---- eDRAM buffer sizing ----------------------------------------------
+    println!("Per-tile buffer requirement vs image size (worst net in suite):");
+    let mut t = Table::new(&["image px", "ISAAC worst KB", "Newton spread KB"]);
+    for w in [64usize, 128, 224, 256, 384, 512] {
+        let (mut worst, mut spread) = (0.0f64, 0.0f64);
+        for n in &nets {
+            let n = n.with_input_width(w);
+            worst = worst.max(
+                Mapping::build(&n, &ImaConfig::newton_default(), &p, MappingPolicy::isaac(), 16)
+                    .buffer_per_tile_bytes(),
+            );
+            spread = spread.max(
+                Mapping::build(&n, &ImaConfig::newton_default(), &p, MappingPolicy::newton(), 16)
+                    .buffer_per_tile_bytes(),
+            );
+        }
+        t.row(&[w.to_string(), f1(worst / 1024.0), f1(spread / 1024.0)]);
+    }
+    t.print();
+    println!("-> layer spreading keeps 224-256 px images within a 16 KB tile buffer\n");
+
+    // ---- heterogeneous-tile knobs ------------------------------------------
+    println!("FC-tile knobs (chip peak power / area, geometric mean over suite):");
+    let mut t = Table::new(&["fc adc slowdown", "xbars/adc", "peak W", "area mm²"]);
+    for (slow, share) in [(1.0, 1), (8.0, 1), (32.0, 2), (128.0, 4)] {
+        let mut chip = ChipConfig::newton();
+        chip.fc_tile.ima.adc_slowdown = slow;
+        chip.fc_tile.ima.xbars_per_adc = share;
+        let (mut pw, mut ar) = (1.0f64, 1.0f64);
+        for n in &nets {
+            let m = Mapping::build(n, &chip.conv_tile.ima, &p, MappingPolicy::newton(), 16);
+            let plan = ChipPlan::new(&chip, &m);
+            pw *= plan.peak_power_w();
+            ar *= plan.area_mm2();
+        }
+        let k = 1.0 / nets.len() as f64;
+        t.row(&[
+            format!("{slow}x"),
+            share.to_string(),
+            f2(pw.powf(k)),
+            f1(ar.powf(k)),
+        ]);
+    }
+    t.print();
+    println!("-> 128x slowdown + 4:1 sharing is the paper's FC-tile design point");
+}

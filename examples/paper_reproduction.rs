@@ -1,0 +1,78 @@
+//! Full paper reproduction in one run: the headline comparison, the Fig-20
+//! incremental technique stack, and the per-benchmark breakdowns. The
+//! individual figure benches (`cargo bench`) print the same data with
+//! paper-reported values alongside; this example is the single-command tour.
+//!
+//! Run: `cargo run --release --example paper_reproduction`
+
+use newton::config::ChipConfig;
+use newton::metrics;
+use newton::pipeline::evaluate;
+use newton::util::{f1, f2, Table};
+use newton::workloads;
+
+fn main() {
+    let nets = workloads::suite();
+
+    println!("=== headline (paper abstract) ===");
+    let h = metrics::headline(&nets);
+    let mut t = Table::new(&["metric", "paper", "model"]);
+    t.row(&["power decrease".into(), "77%".into(), format!("{:.1}%", h.power_decrease * 100.0)]);
+    t.row(&["energy decrease".into(), "51%".into(), format!("{:.1}%", h.energy_decrease * 100.0)]);
+    t.row(&["throughput/area".into(), "2.2x".into(), format!("{:.2}x", h.throughput_area_ratio)]);
+    t.row(&["newton pJ/op".into(), "0.85".into(), f2(h.newton_pj_per_op)]);
+    t.row(&["isaac pJ/op".into(), "1.8".into(), f2(h.isaac_pj_per_op)]);
+    t.print();
+
+    println!("\n=== incremental techniques (Fig 20) ===");
+    let mut t = Table::new(&["design point", "peak CE", "peak PE", "suite pJ/op", "suite peak W"]);
+    for r in metrics::incremental_progression(&nets) {
+        t.row(&[
+            r.label.to_string(),
+            f1(r.peak.ce_gops_mm2),
+            f1(r.peak.pe_gops_w),
+            f2(r.energy_per_op_pj),
+            f2(r.peak_power_w),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== per-benchmark: Newton vs ISAAC ===");
+    let isaac = ChipConfig::isaac();
+    let newton = ChipConfig::newton();
+    let mut t = Table::new(&[
+        "net",
+        "isaac pJ/op",
+        "newton pJ/op",
+        "energy x",
+        "power x",
+        "thr/area x",
+    ]);
+    for net in &nets {
+        let i = evaluate(net, &isaac);
+        let n = evaluate(net, &newton);
+        t.row(&[
+            net.name.to_string(),
+            f2(i.energy_per_op_pj),
+            f2(n.energy_per_op_pj),
+            f2(i.energy_per_op_pj / n.energy_per_op_pj),
+            f2(i.peak_power_w / n.peak_power_w),
+            f2(n.ce_eff / i.ce_eff),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== energy ladder (paper §I) ===");
+    let ladder = [
+        ("ideal neuron", newton::baselines::ideal_neuron().pj_per_op, 0.33),
+        ("newton (model)", h.newton_pj_per_op, 0.85),
+        ("eyeriss", newton::baselines::eyeriss().pj_per_op, 1.67),
+        ("isaac (model)", h.isaac_pj_per_op, 1.8),
+        ("dadiannao", newton::baselines::dadiannao().pj_per_op, 3.5),
+    ];
+    let mut t = Table::new(&["design", "model pJ/op", "paper pJ/op"]);
+    for (name, model, paper) in ladder {
+        t.row(&[name.into(), f2(model), f2(paper)]);
+    }
+    t.print();
+}

@@ -1,0 +1,71 @@
+//! Quickstart: one IMA's worth of work, three ways.
+//!
+//! 1. the rust golden model (pure, no artifacts needed),
+//! 2. Karatsuba divide & conquer (bit-identical, cheaper ADC schedule),
+//! 3. the AOT-compiled Pallas kernel through PJRT (if `make artifacts` ran).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use newton::config::XbarParams;
+use newton::karatsuba::{karatsuba_vmm, DncSchedule};
+use newton::runtime::{default_artifacts_dir, Runtime};
+use newton::util::Rng;
+use newton::xbar::{matmul, scale_clamp, vmm, Matrix};
+
+fn main() -> anyhow::Result<()> {
+    let p = XbarParams::default();
+    println!(
+        "crossbar: {}x{} cells, {} bits/cell, {}-bit DAC, {}-bit ADC",
+        p.rows, p.cols, p.cell_bits, p.dac_bits, p.adc_bits
+    );
+    println!(
+        "a 16-bit VMM = {} iterations x {} weight slices = {} ADC samples/column\n",
+        p.iters(),
+        p.slices(),
+        p.iters() * p.slices()
+    );
+
+    // One IMA: 8 input vectors of 128 values x a 128x256 weight matrix.
+    let mut rng = Rng::new(7);
+    let x = Matrix::from_fn(8, p.rows, |_, _| rng.range_i64(0, 1 << p.input_bits));
+    let w = Matrix::from_fn(p.rows, 256, |_, _| {
+        rng.range_i64(-(1 << (p.weight_bits - 1)), 1 << (p.weight_bits - 1))
+    });
+
+    // 1. bit-serial analog pipeline (golden model)
+    let y = vmm(&x, &w, &p);
+    let oracle = scale_clamp(&matmul(&x, &w), &p);
+    assert_eq!(y, oracle, "analog pipeline must be bit-exact");
+    println!("golden model: 8x256 outputs, bit-exact vs int64 matmul ✓");
+
+    // 2. Karatsuba divide & conquer — same numbers, fewer ADC samples
+    let yk = karatsuba_vmm(&x, &w, &p);
+    assert_eq!(yk, oracle);
+    let s = DncSchedule::new(1, &p);
+    println!(
+        "karatsuba:    bit-identical; ADC samples {} -> {} (-{:.0}%), {} -> {} iterations",
+        p.iters() * p.slices(),
+        s.adc_samples,
+        (1.0 - s.adc_work_ratio(&p)) * 100.0,
+        p.iters(),
+        s.time_iters
+    );
+
+    // 3. the real Pallas artifact through PJRT (weights baked at install
+    //    time, like programming crossbar conductances)
+    let dir = default_artifacts_dir();
+    match Runtime::new(&dir) {
+        Ok(mut rt) => {
+            let (_, vin) = rt.manifest.load_testvec("vmm_in")?;
+            let (_, want) = rt.manifest.load_testvec("vmm_out")?;
+            let got = rt.run("vmm_plain", &vin)?;
+            assert_eq!(got, want, "PJRT artifact must match the golden vector");
+            println!("pjrt:         vmm_plain artifact matches golden test vector ✓");
+        }
+        Err(_) => {
+            println!("pjrt:         skipped (run `make artifacts` first)");
+        }
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

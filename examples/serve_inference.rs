@@ -1,0 +1,71 @@
+//! End-to-end serving driver (EXPERIMENTS.md §End-to-end).
+//!
+//! Loads the newton-mini stage artifacts, spins up the coordinator's
+//! inter-tile-style pipeline (leader -> 4 stage threads -> completion
+//! router), serves batched inference requests with real numerics, verifies
+//! a sample against the fused-model artifact, and reports wallclock
+//! latency/throughput next to the simulated Newton-hardware metrics.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_inference -- [--requests 64]`
+
+use std::time::Instant;
+
+use newton::cli::Args;
+use newton::config::ChipConfig;
+use newton::coordinator::{argmax, newton_mini, PipelineServer, ServerConfig};
+use newton::pipeline::evaluate;
+use newton::runtime::{default_artifacts_dir, Runtime};
+use newton::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_req = args.get_usize("requests", 64);
+    let seed = args.get_usize("seed", 42) as u64;
+    let dir = default_artifacts_dir();
+
+    // ---- serve -----------------------------------------------------------
+    let mut server = PipelineServer::start(ServerConfig::newton_mini(dir.clone()))?;
+    let mut rng = Rng::new(seed);
+    let images: Vec<Vec<i32>> = (0..n_req)
+        .map(|_| (0..32 * 32 * 3).map(|_| rng.below(256) as i32).collect())
+        .collect();
+
+    let t0 = Instant::now();
+    for img in &images {
+        server.submit(img.clone())?;
+    }
+    let mut results = server.collect(n_req)?;
+    let wall = t0.elapsed();
+    results.sort_by_key(|r| r.id);
+    let report = server.shutdown(&results, wall);
+
+    println!("served {} requests in {:.2}s", report.completed, wall.as_secs_f64());
+    println!("  throughput  : {:6.1} req/s (wallclock; interpret-mode kernels)", report.throughput_rps);
+    println!("  latency p50 : {:6.1} ms", report.latency_p50_ms);
+    println!("  latency max : {:6.1} ms", report.latency_max_ms);
+    println!("  batches     : {} (fill {:.0}%)", report.batches, report.batch_fill * 100.0);
+
+    // ---- verify a batch against the fused-model artifact ------------------
+    let mut rt = Runtime::new(&dir)?;
+    let fused_in: Vec<i32> = images.iter().take(8).flatten().copied().collect();
+    let fused_out = rt.run("model_b8", &fused_in)?;
+    for i in 0..8.min(n_req) {
+        let served = &results[i].logits;
+        let fused = &fused_out[i * 10..(i + 1) * 10];
+        assert_eq!(served, fused, "request {i}: staged pipeline != fused model");
+    }
+    println!("verified: first batch logits identical to the fused-model artifact ✓");
+
+    let classes: Vec<usize> = results.iter().take(8).map(|r| argmax(&r.logits)).collect();
+    println!("sample predictions: {classes:?}");
+
+    // ---- simulated hardware-side metrics ----------------------------------
+    let sim = evaluate(&newton_mini(), &ChipConfig::newton());
+    println!("\nsimulated Newton hardware serving newton-mini:");
+    println!("  throughput  : {:8.0} images/s", sim.throughput);
+    println!("  latency     : {:8.1} us", sim.latency_us);
+    println!("  energy/image: {:8.4} mJ", sim.energy_per_image_mj);
+    println!("  energy/op   : {:8.2} pJ", sim.energy_per_op_pj);
+    println!("  tiles       : {} conv + {} fc", sim.conv_tiles, sim.fc_tiles);
+    Ok(())
+}

@@ -1,0 +1,335 @@
+"""L1 — bit-serial memristor-crossbar vector-matrix multiply as a Pallas kernel.
+
+This models the Newton/ISAAC analog pipeline (paper §II-C, §III) bit-exactly:
+
+  * a 16-bit weight is sliced into ``n_slices`` planes of ``cell_bits`` bits
+    (one plane per physical crossbar; 8 planes of 2-bit cells by default),
+  * a 16-bit input is streamed over ``n_iters`` iterations of ``dac_bits``
+    each (16 iterations of a 1-bit DAC by default),
+  * every (iteration, slice) pair produces a per-column analog sum that is
+    digitised by a SAR ADC (``adc_sample``) and shift-and-added into a 39-bit
+    accumulator,
+  * negative weights use ISAAC's bias encoding: the crossbar stores
+    ``w + 2^(weight_bits-1)`` and the bias term ``2^(wb-1) * sum(x)`` is
+    subtracted digitally,
+  * the scaling stage drops ``out_shift`` LSBs (with round-half-up carries)
+    and clamps to a signed ``out_bits`` window — the paper's "drop 10 LSBs,
+    clamp 13 MSBs".
+
+With 128 rows, 1-bit DAC and 2-bit cells the per-column sum is at most
+``128 * 1 * 3 = 384 < 2^9``, so the default 9-bit ADC is *exact* — the whole
+pipeline then computes ``clamp(round(x @ w >> out_shift))`` exactly, which is
+what ``python/tests`` verify against an int64 matmul.
+
+``adaptive_adc=True`` enables the Fig-5 heterogeneous sampling: LSBs of a
+partial sum that fall below the final kept window are rounded away at the
+ADC (the paper's "rounding modes to generate carries"). This changes results
+by at most a few output ULPs (see tests) and by design never touches bits
+that survive the scaling stage.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the analog column-
+current summation maps to one integer contraction over stacked input
+bit-planes (``einsum 'bir,srn->bisn'``) — a single MXU-shaped matmul per
+block instead of 16x8 tiny dots — and the HBM<->VMEM schedule is expressed
+with BlockSpecs over (batch rows, output neurons). interpret=True always
+(CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The 39-bit accumulator needs int64; enable once at import. aot.py and the
+# tests import this module before tracing anything.
+jax.config.update("jax_enable_x64", True)
+
+
+@dataclasses.dataclass(frozen=True)
+class XbarConfig:
+    """Static crossbar/ADC parameters (paper Table I defaults)."""
+
+    rows: int = 128          # wordlines per crossbar (reduction chunk)
+    cell_bits: int = 2       # bits per memristor cell
+    dac_bits: int = 1        # input bits applied per iteration
+    weight_bits: int = 16    # fixed-point weight width
+    input_bits: int = 16     # fixed-point input width (unsigned)
+    adc_bits: int = 9        # SAR ADC resolution
+    out_shift: int = 10      # LSBs dropped by the scaling stage
+    out_bits: int = 16       # signed output window
+    adaptive_adc: bool = False  # Fig-5 heterogeneous sampling
+    block_rows: int = 128    # pallas block over batch rows
+    block_cols: int = 128    # pallas block over output neurons
+
+    @property
+    def n_slices(self) -> int:
+        return -(-self.weight_bits // self.cell_bits)
+
+    @property
+    def n_iters(self) -> int:
+        return -(-self.input_bits // self.dac_bits)
+
+    @property
+    def weight_bias(self) -> int:
+        return 1 << (self.weight_bits - 1)
+
+    @property
+    def col_sum_bits(self) -> int:
+        """Bits needed to represent a worst-case column sum exactly."""
+        max_sum = self.rows * ((1 << self.dac_bits) - 1) * ((1 << self.cell_bits) - 1)
+        return max(1, max_sum.bit_length())
+
+
+def n_slices_for(w_bits: int, cfg: XbarConfig) -> int:
+    return -(-w_bits // cfg.cell_bits)
+
+
+def n_iters_for(in_bits: int, cfg: XbarConfig) -> int:
+    return -(-in_bits // cfg.dac_bits)
+
+
+def slice_weights(wb, w_bits: int, cfg: XbarConfig):
+    """Split biased (unsigned) weights into per-crossbar cell planes.
+
+    Returns ``(n_slices, rows, n)`` int32 planes; plane ``s`` holds bits
+    ``[s*cell_bits, (s+1)*cell_bits)`` of each weight — crossbar ``s`` in the
+    paper's "crossbars 0/8 hold the least significant bits" layout.
+    """
+    wb = wb.astype(jnp.int32)
+    mask = (1 << cfg.cell_bits) - 1
+    planes = [
+        (wb >> (s * cfg.cell_bits)) & mask for s in range(n_slices_for(w_bits, cfg))
+    ]
+    return jnp.stack(planes, axis=0)
+
+
+def adc_sample(col_sum, place, cfg: XbarConfig):
+    """SAR ADC digitisation of a per-column analog sum.
+
+    ``col_sum`` is the exact analog value (int32 >= 0); ``place`` is the bit
+    position its LSB occupies in the final accumulator (``i*dac + s*cell``).
+
+    * If ``adc_bits`` is too small for a worst-case sum, the ADC truncates
+      the excess LSBs (round-half-up) — a *lossy* config used by the
+      design-space sweeps, never by the default 9-bit design.
+    * If ``adaptive_adc``, LSBs that land below ``out_shift`` in the final
+      result are rounded away (Fig 5): the ADC simply does not sample them.
+    """
+    q = col_sum
+    lossy = cfg.col_sum_bits - cfg.adc_bits
+    if lossy > 0:
+        half = 1 << (lossy - 1)
+        q = ((q + half) >> lossy) << lossy
+    if cfg.adaptive_adc:
+        drop = cfg.out_shift - place
+        if drop > 0:
+            # Sample only bits >= out_shift; round the dropped tail.
+            half = 1 << (drop - 1)
+            q = ((q + half) >> drop) << drop
+    return q
+
+
+def _place_matrix(in_bits: int, w_bits: int, cfg: XbarConfig):
+    """(n_iters, n_slices) bit position of each partial product's LSB."""
+    ni, ns = n_iters_for(in_bits, cfg), n_slices_for(w_bits, cfg)
+    i = jnp.arange(ni, dtype=jnp.int64)[:, None] * cfg.dac_bits
+    s = jnp.arange(ns, dtype=jnp.int64)[None, :] * cfg.cell_bits
+    return i + s
+
+
+def _adc_sample_all(partials, in_bits: int, w_bits: int, cfg: XbarConfig):
+    """Vectorised ``adc_sample`` over a (b, n_iters, n_slices, n) tensor."""
+    partials = partials.astype(jnp.int64)
+    lossy = cfg.col_sum_bits - cfg.adc_bits
+    if lossy > 0:
+        half = 1 << (lossy - 1)
+        partials = ((partials + half) >> lossy) << lossy
+    if cfg.adaptive_adc:
+        place = _place_matrix(in_bits, w_bits, cfg)[None, :, :, None]
+        drop = jnp.maximum(cfg.out_shift - place, 0)
+        half = jnp.where(drop > 0, jnp.int64(1) << jnp.maximum(drop - 1, 0), 0)
+        partials = ((partials + half) >> drop) << drop
+    return partials
+
+
+def _xbar_vmm_kernel(x_ref, w_ref, out_ref, *, in_bits, w_bits, cfg: XbarConfig):
+    """Pallas body: one (block_rows x block_cols) output tile.
+
+    x_ref: (block_rows, rows) int32 — unsigned fixed-point inputs
+    w_ref: (n_slices, rows, block_cols) int32 — biased weight cell planes
+    out_ref: (block_rows, block_cols) int64 — raw accumulator x @ w_biased
+    """
+    x = x_ref[...]
+    ni = n_iters_for(in_bits, cfg)
+    dac_mask = (1 << cfg.dac_bits) - 1
+    # All input bit-planes at once: (b, n_iters, rows).
+    shifts = (jnp.arange(ni, dtype=jnp.int32) * cfg.dac_bits)[None, :, None]
+    xbits = (x[:, None, :] >> shifts) & dac_mask
+    # The "analog" step — every (iteration, slice) column sum in one
+    # MXU-shaped contraction: (b, i, rows) x (s, rows, n) -> (b, i, s, n).
+    # §Perf L1: when the worst-case column sum fits float32's integer window
+    # (< 2^24; default is 128*1*3 = 384) the contraction runs in f32 —
+    # bit-exact and ~3.7x faster on CPU PJRT than the int32 dot, and the
+    # direct analogue of feeding the MXU. Otherwise fall back to int32.
+    max_sum = cfg.rows * ((1 << cfg.dac_bits) - 1) * ((1 << cfg.cell_bits) - 1)
+    if max_sum < (1 << 24):
+        partials = jnp.einsum(
+            "bir,srn->bisn",
+            xbits.astype(jnp.float32),
+            w_ref[...].astype(jnp.float32),
+        ).astype(jnp.int32)
+    else:
+        partials = jnp.einsum(
+            "bir,srn->bisn", xbits, w_ref[...], preferred_element_type=jnp.int32
+        )
+    # ADC digitisation + shift-and-add tree.
+    sampled = _adc_sample_all(partials, in_bits, w_bits, cfg)
+    weight = (jnp.int64(1) << _place_matrix(in_bits, w_bits, cfg))[None, :, :, None]
+    out_ref[...] = jnp.sum(sampled * weight, axis=(1, 2))
+
+
+def _pad_to(a, axis, mult):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("in_bits", "w_bits", "cfg"))
+def xbar_matmul_biased(x, wb, in_bits: int, w_bits: int, cfg: XbarConfig):
+    """Raw crossbar product ``x @ wb`` (both unsigned) through the full
+    bit-serial + ADC pipeline. Returns int64 of shape (batch, n).
+
+    ``x.shape[1]`` must equal ``cfg.rows`` — one crossbar's worth of inputs.
+    Larger reductions are split by the caller (that is the paper's
+    "layer split across IMAs/tiles", see model.py).
+    """
+    b, rows = x.shape
+    assert rows == cfg.rows, f"reduction dim {rows} != crossbar rows {cfg.rows}"
+    n = wb.shape[1]
+    planes = slice_weights(wb, w_bits, cfg)
+    br, bc = min(cfg.block_rows, max(b, 1)), min(cfg.block_cols, max(n, 1))
+    xp = _pad_to(x.astype(jnp.int32), 0, br)
+    pp = _pad_to(planes, 2, bc)
+    grid = (xp.shape[0] // br, pp.shape[2] // bc)
+    out = pl.pallas_call(
+        functools.partial(_xbar_vmm_kernel, in_bits=in_bits, w_bits=w_bits, cfg=cfg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, rows), lambda r, c: (r, 0)),
+            pl.BlockSpec((planes.shape[0], rows, bc), lambda r, c: (0, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda r, c: (r, c)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], pp.shape[2]), jnp.int64),
+        interpret=True,
+    )(xp, pp)
+    return out[:b, :n]
+
+
+def crossbar_vmm_raw(x, w, cfg: XbarConfig = XbarConfig()):
+    """Unscaled signed product ``x @ w`` via the crossbar pipeline.
+
+    x: (batch, rows) unsigned fixed-point in [0, 2^input_bits)
+    w: (rows, n) signed fixed-point in [-2^(wb-1), 2^(wb-1))
+    Returns int64 (batch, n) — the exact 39-bit-ish accumulator value.
+    """
+    x = x.astype(jnp.int64)
+    wb = (w.astype(jnp.int64) + cfg.weight_bias).astype(jnp.int32)
+    raw = xbar_matmul_biased(
+        x.astype(jnp.int32), wb, cfg.input_bits, cfg.weight_bits, cfg
+    )
+    # Digital bias correction: x @ (wb - B) = x @ wb - B * sum(x).
+    return raw - cfg.weight_bias * jnp.sum(x, axis=1, keepdims=True)
+
+
+def scale_clamp(raw, cfg: XbarConfig):
+    """Scaling stage: round-half-up shift by ``out_shift``, clamp to the
+    signed ``out_bits`` window (paper: 39-bit -> 16-bit)."""
+    half = jnp.int64(1) << (cfg.out_shift - 1) if cfg.out_shift > 0 else 0
+    scaled = (raw + half) >> cfg.out_shift
+    lo = -(1 << (cfg.out_bits - 1))
+    hi = (1 << (cfg.out_bits - 1)) - 1
+    return jnp.clip(scaled, lo, hi).astype(jnp.int32)
+
+
+def crossbar_vmm(x, w, cfg: XbarConfig = XbarConfig()):
+    """Full pipeline: bit-serial crossbar product -> scale -> clamp.
+
+    Computes ``clamp(round((x @ w) / 2^out_shift))`` bit-exactly for the
+    default (lossless-ADC) configuration.
+    """
+    return scale_clamp(crossbar_vmm_raw(x, w, cfg), cfg)
+
+
+# ----------------------------------------------------------------------------
+# Karatsuba divide & conquer (paper §III-A1, Figs 3 & 9)
+# ----------------------------------------------------------------------------
+
+def karatsuba_vmm_raw(x, w, cfg: XbarConfig = XbarConfig()):
+    """One level of bit-level Karatsuba over the crossbar pipeline.
+
+    Splits inputs and (biased) weights into 8-bit halves and computes
+
+        x @ wb = 2^16 X1W1 + 2^8 [(X1+X0)(W1+W0) - X1W1 - X0W0] + X0W0
+
+    with three crossbar products instead of one full-width product:
+    X0W0 and X1W1 use 8-bit operands (8 iterations x 4 slices) and the
+    middle term uses 9-bit operands (9 iterations x 5 slices) — the paper's
+    "5 crossbars, 9 iterations" mat schedule. (W1+W0) is precomputed at
+    weight-install time, (X1+X0) by 128 1-bit full adders on the fly.
+    """
+    assert cfg.weight_bits % 2 == 0 and cfg.input_bits % 2 == 0
+    hw, hi = cfg.weight_bits // 2, cfg.input_bits // 2
+    x = x.astype(jnp.int64)
+    wb = w.astype(jnp.int64) + cfg.weight_bias
+
+    x0 = (x & ((1 << hi) - 1)).astype(jnp.int32)
+    x1 = (x >> hi).astype(jnp.int32)
+    w0 = (wb & ((1 << hw) - 1)).astype(jnp.int32)
+    w1 = (wb >> hw).astype(jnp.int32)
+
+    p00 = xbar_matmul_biased(x0, w0, hi, hw, cfg)
+    p11 = xbar_matmul_biased(x1, w1, hi, hw, cfg)
+    pmid = xbar_matmul_biased(x0 + x1, w0 + w1, hi + 1, hw + 1, cfg)
+
+    raw = (p11 << (hi + hw)) + ((pmid - p11 - p00) << hw) + p00
+    return raw - cfg.weight_bias * jnp.sum(x, axis=1, keepdims=True)
+
+
+def karatsuba_vmm(x, w, cfg: XbarConfig = XbarConfig()):
+    """Karatsuba crossbar product with the standard scaling stage."""
+    return scale_clamp(karatsuba_vmm_raw(x, w, cfg), cfg)
+
+
+# ----------------------------------------------------------------------------
+# ADC work accounting (used by aot reports and mirrored by rust/src/adc)
+# ----------------------------------------------------------------------------
+
+def relevant_bits(in_bits: int, w_bits: int, cfg: XbarConfig):
+    """Fig 5 — bits per (iteration, slice) ADC sample that can influence the
+    kept output window [out_shift, out_shift + out_bits)."""
+    import numpy as np
+
+    ni, ns = n_iters_for(in_bits, cfg), n_slices_for(w_bits, cfg)
+    lo, hi = cfg.out_shift, cfg.out_shift + cfg.out_bits
+    out = np.zeros((ni, ns), dtype=np.int64)
+    for i in range(ni):
+        for s in range(ns):
+            p = i * cfg.dac_bits + s * cfg.cell_bits
+            # sample bits occupy [p, p + adc_bits); one extra MSB test is
+            # needed to detect clamping when the sample crosses `hi`.
+            lo_bit, hi_bit = max(p, lo), min(p + cfg.adc_bits, hi)
+            bits = max(0, hi_bit - lo_bit)
+            if p + cfg.adc_bits > hi:
+                # One extra comparison detects a nonzero MSB -> clamp signal
+                # on the HTree; needed even when the kept-window overlap is 0
+                # (partials entirely above the window).
+                bits += 1
+            out[i, s] = bits
+    return out

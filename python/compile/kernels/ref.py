@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for the crossbar kernel — the CORE correctness signal.
+
+Written independently of ``crossbar.py`` (direct formulas, no pallas, no
+shared helpers) so that agreement between the two is meaningful. Everything
+here is also cross-checked against a plain int64 matmul: with the default
+(9-bit, lossless) ADC the whole analog pipeline must be *exactly*
+
+    clamp(round_half_up((x @ w) >> out_shift))
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .crossbar import XbarConfig  # config only; no math imported
+
+
+def exact_vmm_raw(x, w):
+    """Ground truth: plain int64 matmul."""
+    return jnp.matmul(x.astype(jnp.int64), w.astype(jnp.int64))
+
+
+def ref_scale_clamp(raw, cfg: XbarConfig):
+    half = (1 << (cfg.out_shift - 1)) if cfg.out_shift > 0 else 0
+    scaled = jnp.floor_divide(raw + half, jnp.int64(1) << cfg.out_shift)
+    bound = jnp.int64(1) << (cfg.out_bits - 1)
+    return jnp.clip(scaled, -bound, bound - 1).astype(jnp.int32)
+
+
+def exact_vmm(x, w, cfg: XbarConfig = XbarConfig()):
+    """Ground truth for the full pipeline (matmul + scale + clamp)."""
+    return ref_scale_clamp(exact_vmm_raw(x, w), cfg)
+
+
+def _ref_sample(col_sum, place, cfg: XbarConfig):
+    """Independent ADC model: reconstruct the sampled value bit by bit."""
+    col_sum = col_sum.astype(jnp.int64)
+    max_sum = cfg.rows * ((1 << cfg.dac_bits) - 1) * ((1 << cfg.cell_bits) - 1)
+    need = max(1, int(max_sum).bit_length())
+    if cfg.adc_bits < need:
+        d = need - cfg.adc_bits
+        col_sum = ((col_sum + (1 << (d - 1))) >> d) << d
+    if cfg.adaptive_adc and place < cfg.out_shift:
+        d = cfg.out_shift - place
+        col_sum = ((col_sum + (1 << (d - 1))) >> d) << d
+    return col_sum
+
+
+def ref_biased_product(x, wb, in_bits: int, w_bits: int, cfg: XbarConfig):
+    """x @ wb through the bit-serial pipeline, as explicit python loops over
+    iterations and slices (the hardware schedule, one partial at a time)."""
+    x = x.astype(jnp.int64)
+    wb = wb.astype(jnp.int64)
+    ni = -(-in_bits // cfg.dac_bits)
+    ns = -(-w_bits // cfg.cell_bits)
+    acc = jnp.zeros((x.shape[0], wb.shape[1]), dtype=jnp.int64)
+    for i in range(ni):
+        xb = (x >> (i * cfg.dac_bits)) & ((1 << cfg.dac_bits) - 1)
+        for s in range(ns):
+            ws = (wb >> (s * cfg.cell_bits)) & ((1 << cfg.cell_bits) - 1)
+            place = i * cfg.dac_bits + s * cfg.cell_bits
+            partial = _ref_sample(jnp.matmul(xb, ws), place, cfg)
+            acc = acc + (partial << place)
+    return acc
+
+
+def ref_vmm_raw(x, w, cfg: XbarConfig = XbarConfig()):
+    x = x.astype(jnp.int64)
+    wb = w.astype(jnp.int64) + (1 << (cfg.weight_bits - 1))
+    raw = ref_biased_product(x, wb, cfg.input_bits, cfg.weight_bits, cfg)
+    bias = (jnp.int64(1) << (cfg.weight_bits - 1)) * jnp.sum(x, 1, keepdims=True)
+    return raw - bias
+
+
+def ref_vmm(x, w, cfg: XbarConfig = XbarConfig()):
+    return ref_scale_clamp(ref_vmm_raw(x, w, cfg), cfg)
+
+
+def ref_karatsuba_vmm_raw(x, w, cfg: XbarConfig = XbarConfig()):
+    """Independent Karatsuba oracle (Fig 3 identity, explicit halves)."""
+    hi, hw = cfg.input_bits // 2, cfg.weight_bits // 2
+    x = x.astype(jnp.int64)
+    wb = w.astype(jnp.int64) + (1 << (cfg.weight_bits - 1))
+    x0, x1 = x & ((1 << hi) - 1), x >> hi
+    w0, w1 = wb & ((1 << hw) - 1), wb >> hw
+    p00 = ref_biased_product(x0, w0, hi, hw, cfg)
+    p11 = ref_biased_product(x1, w1, hi, hw, cfg)
+    pm = ref_biased_product(x0 + x1, w0 + w1, hi + 1, hw + 1, cfg)
+    raw = (p11 << (hi + hw)) + ((pm - p11 - p00) << hw) + p00
+    bias = (jnp.int64(1) << (cfg.weight_bits - 1)) * jnp.sum(x, 1, keepdims=True)
+    return raw - bias
+
+
+def ref_karatsuba_vmm(x, w, cfg: XbarConfig = XbarConfig()):
+    return ref_scale_clamp(ref_karatsuba_vmm_raw(x, w, cfg), cfg)

@@ -1,0 +1,165 @@
+"""L2 — the "newton-mini" CNN whose convolutions run on the L1 crossbar kernel.
+
+A small quantized CNN (CIFAR-shaped, 32x32x3 -> 10 classes) written so each
+layer maps onto crossbar hardware exactly the way the paper maps layers onto
+IMAs:
+
+  * conv layers are im2col'd into (pixels, K*K*C) patch matrices,
+  * the patch dimension is split into 128-row chunks — one chunk per
+    crossbar/IMA group (the paper's "if the crossbar is large, it is split
+    across tiles", Fig 6a) — whose *raw* (pre-scaling) outputs are summed
+    digitally before the single scaling stage, exactly like partial-sum
+    reduction at HTree junctions,
+  * activations are unsigned 8-bit (stored in the 16-bit input window),
+    weights signed 7-bit (stored in the 16-bit weight window) — both run
+    through the full 16-bit bit-serial pipeline,
+  * ``use_karatsuba=True`` swaps every product for the Karatsuba schedule
+    (bit-identical results; different hardware cost — the ablation artifact).
+
+Weights are synthetic but deterministic (seeded); they are baked into the
+lowered HLO as constants — the direct analogue of programming conductances
+into the crossbars at install time ("weights are in-situ"). Python never
+runs at serve time: rust loads the lowered artifacts.
+
+Stage structure (== inter-tile pipeline stages served by the coordinator):
+
+  stage0  conv3x3x3->32  + relu8 + maxpool2   32x32 -> 16x16
+  stage1  conv3x3x32->64 + relu8 + maxpool2   16x16 -> 8x8
+  stage2  conv3x3x64->128+ relu8 + maxpool2   8x8   -> 4x4
+  stage3  fc 2048 -> 10  (logits, int32)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import crossbar as cb
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    image_hw: int = 32
+    in_channels: int = 3
+    channels: tuple = (32, 64, 128)
+    classes: int = 10
+    kernel: int = 3
+    act_bits: int = 8                  # relu clamp ceiling: [0, 2^act_bits)
+    # per-stage scaling shifts (chosen so typical activations use the full
+    # 8-bit window without constant clamping; see test_model.py)
+    shifts: tuple = (10, 9, 9, 8)
+    weight_mag: int = 64               # |w| < 64 (signed 7-bit)
+    use_karatsuba: bool = False
+    xbar: cb.XbarConfig = cb.XbarConfig()
+
+    def stage_shift_cfg(self, stage: int) -> cb.XbarConfig:
+        return dataclasses.replace(self.xbar, out_shift=self.shifts[stage])
+
+
+DEFAULT = ModelConfig()
+
+
+def init_weights(mcfg: ModelConfig = DEFAULT, seed: int = 0):
+    """Deterministic synthetic weights, int64 in (-weight_mag, weight_mag)."""
+    rng = np.random.default_rng(seed)
+    k = mcfg.kernel
+    dims = []
+    cin = mcfg.in_channels
+    for cout in mcfg.channels:
+        dims.append((k * k * cin, cout))
+        cin = cout
+    hw = mcfg.image_hw // (2 ** len(mcfg.channels))
+    dims.append((hw * hw * cin, mcfg.classes))
+    ws = []
+    for rows, cols in dims:
+        w = rng.integers(-mcfg.weight_mag + 1, mcfg.weight_mag, (rows, cols))
+        ws.append(jnp.asarray(w, jnp.int64))
+    return ws
+
+
+def im2col(x, k: int):
+    """(B, H, W, C) -> (B, H, W, k*k*C) SAME-padded 3x3 patches."""
+    b, h, w, c = x.shape
+    p = k // 2
+    xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+    cols = [
+        xp[:, dy : dy + h, dx : dx + w, :] for dy in range(k) for dx in range(k)
+    ]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def xbar_linear(rows2d, w, cfg: cb.XbarConfig, use_karatsuba: bool):
+    """(r, d) x (d, n) through the crossbar pipeline, chunking d into
+    crossbar-rows pieces and summing raw partials digitally."""
+    r, d = rows2d.shape
+    rows = cfg.rows
+    pad = (-d) % rows
+    if pad:
+        rows2d = jnp.pad(rows2d, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    vmm_raw = cb.karatsuba_vmm_raw if use_karatsuba else cb.crossbar_vmm_raw
+    acc = None
+    for c in range((d + pad) // rows):
+        part = vmm_raw(
+            rows2d[:, c * rows : (c + 1) * rows], w[c * rows : (c + 1) * rows], cfg
+        )
+        acc = part if acc is None else acc + part
+    return cb.scale_clamp(acc, cfg)
+
+
+def relu8(y, mcfg: ModelConfig):
+    return jnp.clip(y, 0, (1 << mcfg.act_bits) - 1)
+
+
+def maxpool2(x):
+    b, h, w, c = x.shape
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def conv_stage(x, w, stage: int, mcfg: ModelConfig):
+    b, h, ww, c = x.shape
+    patches = im2col(x, mcfg.kernel).reshape(b * h * ww, -1)
+    y = xbar_linear(
+        patches, w, mcfg.stage_shift_cfg(stage), mcfg.use_karatsuba
+    )
+    y = relu8(y, mcfg).reshape(b, h, ww, -1)
+    return maxpool2(y)
+
+
+def fc_stage(x, w, stage: int, mcfg: ModelConfig):
+    b = x.shape[0]
+    flat = x.reshape(b, -1)
+    return xbar_linear(flat, w, mcfg.stage_shift_cfg(stage), mcfg.use_karatsuba)
+
+
+def forward(x, weights, mcfg: ModelConfig = DEFAULT):
+    """Full inference: (B, 32, 32, 3) uint8-range int32 -> (B, 10) int32."""
+    for i in range(len(mcfg.channels)):
+        x = conv_stage(x, weights[i], i, mcfg)
+    return fc_stage(x, weights[-1], len(mcfg.channels), mcfg)
+
+
+def stage_fn(stage: int, weights, mcfg: ModelConfig = DEFAULT):
+    """Single pipeline stage as a standalone jittable fn (per-stage artifact,
+    served tile-to-tile by the rust coordinator)."""
+    n_conv = len(mcfg.channels)
+    if stage < n_conv:
+        return functools.partial(conv_stage, w=weights[stage], stage=stage, mcfg=mcfg)
+    return functools.partial(fc_stage, w=weights[-1], stage=stage, mcfg=mcfg)
+
+
+def stage_input_shape(stage: int, batch: int, mcfg: ModelConfig = DEFAULT):
+    hw = mcfg.image_hw >> stage
+    c = mcfg.in_channels if stage == 0 else mcfg.channels[stage - 1]
+    return (batch, hw, hw, c)
+
+
+def single_vmm(x, w, use_karatsuba: bool = False, cfg: cb.XbarConfig = cb.XbarConfig()):
+    """One IMA's worth of work (128 inputs -> N neurons) — the quickstart /
+    microbenchmark artifact."""
+    vmm = cb.karatsuba_vmm if use_karatsuba else cb.crossbar_vmm
+    return vmm(x, w, cfg)

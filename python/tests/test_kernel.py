@@ -1,0 +1,266 @@
+"""L1 correctness: pallas crossbar kernel vs pure-jnp oracle vs int64 matmul.
+
+The default configuration (128 rows, 1-bit DAC, 2-bit cells, 9-bit ADC) is
+*lossless*, so all three must agree bit-for-bit; hypothesis sweeps shapes,
+bit-widths and value distributions.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import crossbar as cb
+from compile.kernels import ref
+
+DEF = cb.XbarConfig()
+
+
+def rand_xw(rng, b, n, cfg=DEF, in_bits=None, w_bits=None):
+    in_bits = in_bits or cfg.input_bits
+    w_bits = w_bits or cfg.weight_bits
+    x = jnp.asarray(rng.integers(0, 1 << in_bits, (b, cfg.rows)), jnp.int64)
+    w = jnp.asarray(
+        rng.integers(-(1 << (w_bits - 1)), 1 << (w_bits - 1), (cfg.rows, n)),
+        jnp.int64,
+    )
+    return x, w
+
+
+# ---------------------------------------------------------------- exactness
+
+
+def test_default_pipeline_is_exact():
+    rng = np.random.default_rng(1)
+    x, w = rand_xw(rng, 8, 64)
+    assert (cb.crossbar_vmm(x, w, DEF) == ref.exact_vmm(x, w, DEF)).all()
+
+
+def test_ref_matches_exact():
+    rng = np.random.default_rng(2)
+    x, w = rand_xw(rng, 8, 64)
+    assert (ref.ref_vmm(x, w, DEF) == ref.exact_vmm(x, w, DEF)).all()
+
+
+def test_raw_accumulator_matches_matmul():
+    rng = np.random.default_rng(3)
+    x, w = rand_xw(rng, 4, 32)
+    assert (cb.crossbar_vmm_raw(x, w, DEF) == ref.exact_vmm_raw(x, w)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 20),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_vs_exact_hypothesis(b, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand_xw(rng, b, n)
+    assert (cb.crossbar_vmm(x, w, DEF) == ref.exact_vmm(x, w, DEF)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    cell_bits=st.sampled_from([1, 2, 4]),
+    dac_bits=st.sampled_from([1, 2]),
+    out_shift=st.integers(0, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_vs_exact_config_sweep(cell_bits, dac_bits, out_shift, seed):
+    # The ADC stays lossless as long as adc_bits covers the worst-case sum.
+    max_sum = 128 * ((1 << dac_bits) - 1) * ((1 << cell_bits) - 1)
+    cfg = cb.XbarConfig(
+        cell_bits=cell_bits,
+        dac_bits=dac_bits,
+        out_shift=out_shift,
+        adc_bits=max(1, int(max_sum).bit_length()),
+    )
+    rng = np.random.default_rng(seed)
+    x, w = rand_xw(rng, 3, 17, cfg)
+    assert (cb.crossbar_vmm(x, w, cfg) == ref.exact_vmm(x, w, cfg)).all()
+    assert (ref.ref_vmm(x, w, cfg) == ref.exact_vmm(x, w, cfg)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.sampled_from([16, 32, 64, 128, 256]), seed=st.integers(0, 2**31 - 1))
+def test_kernel_rows_sweep(rows, seed):
+    max_sum = rows * 3
+    cfg = cb.XbarConfig(rows=rows, adc_bits=int(max_sum).bit_length())
+    rng = np.random.default_rng(seed)
+    x, w = rand_xw(rng, 2, 9, cfg)
+    assert (cb.crossbar_vmm(x, w, cfg) == ref.exact_vmm(x, w, cfg)).all()
+
+
+def test_block_tiling_boundaries():
+    # Shapes that do not divide the pallas block sizes must still be exact.
+    cfg = cb.XbarConfig(block_rows=32, block_cols=16)
+    rng = np.random.default_rng(7)
+    for b, n in [(1, 1), (31, 15), (33, 17), (64, 48), (5, 130)]:
+        x, w = rand_xw(rng, b, n, cfg)
+        assert (cb.crossbar_vmm(x, w, cfg) == ref.exact_vmm(x, w, cfg)).all()
+
+
+# ------------------------------------------------------------ edge values
+
+
+def test_extreme_values_clamp():
+    cfg = DEF
+    x = jnp.full((1, 128), (1 << 16) - 1, jnp.int64)
+    w_hi = jnp.full((128, 4), (1 << 15) - 1, jnp.int64)
+    w_lo = jnp.full((128, 4), -(1 << 15), jnp.int64)
+    assert (cb.crossbar_vmm(x, w_hi, cfg) == (1 << 15) - 1).all()
+    assert (cb.crossbar_vmm(x, w_lo, cfg) == -(1 << 15)).all()
+    assert (ref.ref_vmm(x, w_hi, cfg) == (1 << 15) - 1).all()
+
+
+def test_zero_inputs_and_weights():
+    cfg = DEF
+    z = jnp.zeros((2, 128), jnp.int64)
+    w = jnp.ones((128, 3), jnp.int64)
+    assert (cb.crossbar_vmm(z, w, cfg) == 0).all()
+    x = jnp.ones((2, 128), jnp.int64)
+    assert (cb.crossbar_vmm(x, jnp.zeros((128, 3), jnp.int64), cfg) == 0).all()
+
+
+def test_rounding_half_up():
+    # 1 * w with out_shift such that the true product sits exactly on .5
+    cfg = cb.XbarConfig(out_shift=1)
+    x = jnp.zeros((1, 128), jnp.int64).at[0, 0].set(1)
+    w = jnp.zeros((128, 1), jnp.int64).at[0, 0].set(3)  # 3/2 -> rounds to 2
+    assert int(cb.crossbar_vmm(x, w, cfg)[0, 0]) == 2
+    w = w.at[0, 0].set(-3)  # -3/2 -> round half *up* = -1
+    assert int(cb.crossbar_vmm(x, w, cfg)[0, 0]) == -1
+
+
+# ------------------------------------------------------------ adaptive ADC
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), out_shift=st.integers(4, 14))
+def test_adaptive_adc_bounded_functional_impact(seed, out_shift):
+    """Paper §III-A3: adaptive sampling only rounds away bits below the kept
+    window ("rounding modes to generate carries"). Each rounded partial
+    deviates by at most half an output ULP, so the result is provably within
+    ``ceil(n_rounded/2) + 1`` ULPs of the exact pipeline — and in practice
+    almost always identical (see the exact-match test below)."""
+    cfg = cb.XbarConfig(out_shift=out_shift, adaptive_adc=True)
+    rng = np.random.default_rng(seed)
+    x, w = rand_xw(rng, 4, 33, cfg)
+    a = cb.crossbar_vmm(x, w, cfg).astype(jnp.int64)
+    e = ref.exact_vmm(x, w, cfg).astype(jnp.int64)
+    n_rounded = sum(
+        1
+        for i in range(cfg.n_iters)
+        for s in range(cfg.n_slices)
+        if i * cfg.dac_bits + s * cfg.cell_bits < cfg.out_shift
+    )
+    bound = n_rounded // 2 + 2
+    err = int(jnp.abs(a - e).max())
+    assert err <= bound, (err, bound)
+
+
+def test_adaptive_adc_matches_ref_model():
+    cfg = cb.XbarConfig(adaptive_adc=True)
+    rng = np.random.default_rng(11)
+    x, w = rand_xw(rng, 4, 33, cfg)
+    assert (cb.crossbar_vmm(x, w, cfg) == ref.ref_vmm(x, w, cfg)).all()
+
+
+# --------------------------------------------------------------- karatsuba
+
+
+def test_karatsuba_exact():
+    rng = np.random.default_rng(13)
+    x, w = rand_xw(rng, 6, 40)
+    assert (cb.karatsuba_vmm(x, w, DEF) == ref.exact_vmm(x, w, DEF)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 8), n=st.integers(1, 50), seed=st.integers(0, 2**31 - 1))
+def test_karatsuba_hypothesis(b, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand_xw(rng, b, n)
+    k = cb.karatsuba_vmm(x, w, DEF)
+    assert (k == ref.exact_vmm(x, w, DEF)).all()
+    assert (k == ref.ref_karatsuba_vmm(x, w, DEF)).all()
+
+
+def test_karatsuba_raw_equals_plain_raw():
+    rng = np.random.default_rng(17)
+    x, w = rand_xw(rng, 3, 21)
+    assert (cb.karatsuba_vmm_raw(x, w, DEF) == cb.crossbar_vmm_raw(x, w, DEF)).all()
+
+
+# ------------------------------------------------------------ weight slices
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), w_bits=st.sampled_from([8, 9, 16]))
+def test_slice_weights_reconstruct(seed, w_bits):
+    rng = np.random.default_rng(seed)
+    wb = jnp.asarray(rng.integers(0, 1 << w_bits, (16, 8)), jnp.int64)
+    planes = cb.slice_weights(wb, w_bits, DEF)
+    recon = sum(
+        planes[s].astype(jnp.int64) << (s * DEF.cell_bits)
+        for s in range(planes.shape[0])
+    )
+    assert (recon == wb).all()
+    assert int(planes.max()) <= (1 << DEF.cell_bits) - 1
+
+
+# ------------------------------------------------------------- fig-5 matrix
+
+
+def test_relevant_bits_shape_and_bounds():
+    m = cb.relevant_bits(16, 16, DEF)
+    assert m.shape == (16, 8)
+    assert m.max() <= DEF.adc_bits + 1
+    assert m.min() >= 0
+    # the centre of the band is fully sampled
+    assert m[8, 4] >= DEF.adc_bits
+
+
+def test_relevant_bits_savings():
+    """Fig 5's point: total sampled bits are well below n_iters*n_slices*9."""
+    m = cb.relevant_bits(16, 16, DEF)
+    full = 16 * 8 * DEF.adc_bits
+    # ~24% of all bit-tests are skipped for the default window; the power
+    # win in rust/src/adc additionally gates whole components per sample.
+    assert m.sum() < 0.80 * full
+
+
+def test_int32_einsum_fallback_path():
+    """Configs whose worst-case column sum exceeds f32's exact-integer
+    window must take the int32 contraction path — and stay exact given a
+    wide-enough ADC."""
+    cfg = cb.XbarConfig(
+        rows=512,
+        cell_bits=8,
+        dac_bits=8,
+        weight_bits=16,
+        input_bits=16,
+        adc_bits=int(512 * 255 * 255).bit_length(),
+        out_shift=0,
+        out_bits=48,
+        block_rows=64,
+        block_cols=16,
+    )
+    # worst-case column sum 512*255*255 ~ 33M >= 2^24 -> int32 path
+    assert cfg.rows * ((1 << cfg.dac_bits) - 1) * ((1 << cfg.cell_bits) - 1) >= (1 << 24)
+    rng = np.random.default_rng(31)
+    x = jnp.asarray(rng.integers(0, 1 << 16, (2, 512)), jnp.int64)
+    w = jnp.asarray(rng.integers(-(1 << 15), 1 << 15, (512, 5)), jnp.int64)
+    assert (cb.crossbar_vmm_raw(x, w, cfg) == ref.exact_vmm_raw(x, w)).all()
+
+
+def test_lossy_adc_is_actually_lossy():
+    cfg = cb.XbarConfig(adc_bits=6, out_shift=0)
+    rng = np.random.default_rng(23)
+    x, w = rand_xw(rng, 4, 16, cfg)
+    a = cb.crossbar_vmm_raw(x, w, cfg)
+    e = ref.exact_vmm_raw(x, w)
+    assert not bool((a == e).all())
+    # ...but the ref model agrees with the kernel about *how* it is lossy.
+    r = ref.ref_vmm_raw(x, w, cfg)
+    assert (a == r).all()

@@ -1,0 +1,102 @@
+"""L2 correctness: shapes, stage composition, numeric properties of the
+newton-mini model, and Karatsuba-vs-plain equivalence at model scale."""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import crossbar as cb, ref
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return M.init_weights()
+
+
+@pytest.fixture(scope="module")
+def image():
+    rng = np.random.default_rng(42)
+    return jnp.asarray(rng.integers(0, 256, (2, 32, 32, 3)), jnp.int64)
+
+
+def test_forward_shape(weights, image):
+    logits = M.forward(image, weights)
+    assert logits.shape == (2, 10)
+    assert logits.dtype == jnp.int32
+
+
+def test_stage_shapes(weights, image):
+    act = image
+    expect = [(2, 16, 16, 32), (2, 8, 8, 64), (2, 4, 4, 128), (2, 10)]
+    for s in range(4):
+        act = M.stage_fn(s, weights)(act)
+        assert act.shape == expect[s]
+
+
+def test_stage_composition_equals_forward(weights, image):
+    act = image
+    for s in range(4):
+        act = M.stage_fn(s, weights)(act)
+    assert (act == M.forward(image, weights)).all()
+
+
+def test_activations_in_window(weights, image):
+    act = image
+    for s in range(3):
+        act = M.stage_fn(s, weights)(act)
+        assert int(act.min()) >= 0
+        assert int(act.max()) <= 255
+
+
+def test_forward_deterministic(weights, image):
+    a = M.forward(image, weights)
+    b = M.forward(image, weights)
+    assert (a == b).all()
+
+
+def test_karatsuba_model_is_bit_identical(weights, image):
+    mcfg = dataclasses.replace(M.DEFAULT, use_karatsuba=True)
+    assert (M.forward(image, weights, mcfg) == M.forward(image, weights)).all()
+
+
+def test_im2col_reconstruction():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 10, (1, 4, 4, 2)), jnp.int64)
+    p = M.im2col(x, 3)
+    assert p.shape == (1, 4, 4, 18)
+    # centre tap of the patch at (1,1) is the pixel itself
+    centre = p[0, 1, 1, 4 * 2 : 4 * 2 + 2]
+    assert (centre == x[0, 1, 1]).all()
+    # corner patch includes zero padding
+    assert (p[0, 0, 0, :2] == 0).all()
+
+
+def test_xbar_linear_matches_exact_matmul(weights):
+    """Chunked crossbar linear == plain matmul + scale (paper: digital
+    partial-sum reduction across split crossbars is exact)."""
+    rng = np.random.default_rng(5)
+    d = 300  # forces 3 chunks with padding
+    x = jnp.asarray(rng.integers(0, 256, (7, d)), jnp.int64)
+    w = jnp.asarray(rng.integers(-63, 64, (d, 13)), jnp.int64)
+    cfg = dataclasses.replace(cb.XbarConfig(), out_shift=9)
+    got = M.xbar_linear(x, w, cfg, use_karatsuba=False)
+    want = ref.ref_scale_clamp(ref.exact_vmm_raw(x, w), cfg)
+    assert (got == want).all()
+
+
+def test_maxpool2():
+    x = jnp.arange(16, dtype=jnp.int32).reshape(1, 4, 4, 1)
+    p = M.maxpool2(x)
+    assert p.shape == (1, 2, 2, 1)
+    assert (p[0, :, :, 0] == jnp.array([[5, 7], [13, 15]])).all()
+
+
+def test_single_vmm_is_exact():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.integers(0, 1 << 16, (4, 128)), jnp.int64)
+    w = jnp.asarray(rng.integers(-(1 << 15), 1 << 15, (128, 256)), jnp.int64)
+    assert (M.single_vmm(x, w) == ref.exact_vmm(x, w, cb.XbarConfig())).all()
+    assert (M.single_vmm(x, w, use_karatsuba=True) == M.single_vmm(x, w)).all()

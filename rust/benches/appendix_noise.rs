@@ -1,0 +1,69 @@
+//! Appendix — crossbar non-idealities: the active-row sizing rule, the
+//! chip weight-programming delay (§IV: 16.4 ms), and Monte-Carlo output
+//! error under write noise / IR drop with and without install-time
+//! compensation (Hu et al. [14]).
+use newton::config::XbarParams;
+use newton::util::{f2, Rng, Table};
+use newton::workloads;
+use newton::xbar::noise::{noisy_vmm_error, NoiseParams};
+use newton::xbar::Matrix;
+
+fn main() {
+    let p = XbarParams::default();
+    let np = NoiseParams::default();
+
+    println!("=== Appendix: active-row limit rows <= r_range/(l * dr) ===");
+    let mut t = Table::new(&["cell bits", "levels", "max active rows", "128-row ok?"]);
+    for bits in [1u32, 2, 3, 4] {
+        let rows = np.max_active_rows(1 << bits);
+        t.row(&[
+            bits.to_string(),
+            (1u32 << bits).to_string(),
+            rows.to_string(),
+            if rows >= 128 { "yes".into() } else { "no".into() },
+        ]);
+    }
+    t.print();
+    println!("paper: a conservative 128x128 with 2-bit cells is the design point\n");
+
+    println!("=== §IV: chip weight-programming delay ===");
+    let mut t = Table::new(&["net", "weights (M)", "program ms (paper: ~16.4)"]);
+    for n in workloads::suite() {
+        t.row(&[
+            n.name.to_string(),
+            f2(n.total_weights() as f64 / 1e6),
+            f2(np.chip_program_ms(n.total_weights(), &p, 160)),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== Monte-Carlo output error (ULPs of the 16-bit result) ===");
+    let mut rng = Rng::new(1);
+    let x = Matrix::from_fn(4, p.rows, |_, _| rng.range_i64(0, 1 << 16));
+    let w = Matrix::from_fn(p.rows, 16, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
+    let mut t = Table::new(&["config", "mean err", "max err"]);
+    let configs = [
+        ("tight writes + compensation", NoiseParams::default()),
+        (
+            "tight writes, no compensation",
+            NoiseParams {
+                compensate_ir: false,
+                ..NoiseParams::default()
+            },
+        ),
+        (
+            "sloppy writes (1 pv iter)",
+            NoiseParams {
+                write_tolerance: 0.25,
+                pv_iterations: 1,
+                ..NoiseParams::default()
+            },
+        ),
+    ];
+    for (name, cfg) in configs {
+        let (mx, mean) = noisy_vmm_error(&x, &w, &p, &cfg, 77);
+        t.row(&[name.to_string(), f2(mean), f2(mx)]);
+    }
+    t.print();
+    println!("\npaper: program-and-verify + encoding keep a 128x128 2-bit array accurate");
+}

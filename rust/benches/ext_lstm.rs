@@ -1,0 +1,45 @@
+//! Conclusion extension — "Many of these ideas would also apply ... to
+//! other neural networks such as RNN, LSTM": evaluate LSTM stacks on
+//! ISAAC vs Newton. Recurrent layers reuse in-situ weights every timestep
+//! (no refetch), so the Newton gains carry over.
+use newton::config::ChipConfig;
+use newton::pipeline::evaluate;
+use newton::util::{f1, f2, geomean, Table};
+use newton::workloads::lstm;
+
+fn main() {
+    let nets = [
+        lstm("lstm-512x2-t32", 512, 512, 2, 32),
+        lstm("lstm-1024x4-t64", 1024, 1024, 4, 64),
+        lstm("lstm-2048x2-t128", 2048, 2048, 2, 128),
+    ];
+    println!("=== LSTM workloads: ISAAC vs Newton ===");
+    let mut t = Table::new(&[
+        "net",
+        "weights (M)",
+        "isaac pJ/op",
+        "newton pJ/op",
+        "energy x",
+        "newton seq/s",
+    ]);
+    let mut ratios = vec![];
+    for net in &nets {
+        let i = evaluate(net, &ChipConfig::isaac());
+        let n = evaluate(net, &ChipConfig::newton());
+        let r = i.energy_per_op_pj / n.energy_per_op_pj;
+        ratios.push(r);
+        t.row(&[
+            net.name.to_string(),
+            f1(net.total_weights() as f64 / 1e6),
+            f2(i.energy_per_op_pj),
+            f2(n.energy_per_op_pj),
+            f2(r),
+            f1(n.throughput),
+        ]);
+    }
+    t.print();
+    println!(
+        "\ngeomean energy improvement: {:.2}x — the CNN-era techniques transfer",
+        geomean(&ratios)
+    );
+}

@@ -1,0 +1,48 @@
+//! §III-B2 extension — multi-chip deployments: conv-chips + classifier-
+//! chips for workloads beyond one chip's in-situ capacity, with the
+//! HyperTransport cut checked against the pipeline rate.
+use newton::config::{ChipConfig, XbarParams};
+use newton::mapping::{Mapping, MappingPolicy};
+use newton::pipeline::evaluate;
+use newton::tiles::multichip::MultiChipPlan;
+use newton::util::{f1, f2, Table};
+use newton::workloads;
+
+fn main() {
+    let chip = ChipConfig::newton();
+    println!("=== multi-chip plans (max {} tiles/chip) ===", chip.max_tiles);
+    let mut t = Table::new(&[
+        "net",
+        "conv chips",
+        "fc chips",
+        "cut KB/img",
+        "HT-bound img/s",
+        "pipeline img/s",
+        "total W",
+        "total mm2",
+    ]);
+    for net in workloads::suite() {
+        let m = Mapping::build(
+            &net,
+            &chip.conv_tile.ima,
+            &XbarParams::default(),
+            MappingPolicy::newton(),
+            chip.conv_tile.imas_per_tile,
+        );
+        let plan = MultiChipPlan::new(&chip, &m, &net);
+        let a = evaluate(&net, &chip);
+        t.row(&[
+            net.name.to_string(),
+            plan.conv_chips.to_string(),
+            plan.fc_chips.to_string(),
+            f2(plan.cut_bytes_per_image as f64 / 1024.0),
+            f1(plan.ht_bound_throughput),
+            f1(a.throughput),
+            f1(plan.total_power_w),
+            f1(plan.total_area_mm2),
+        ]);
+    }
+    t.print();
+    println!("\npaper: large workloads split into ~equal conv-chips and classifier-chips;");
+    println!("HT links must never be the pipeline bottleneck (statically routed)");
+}

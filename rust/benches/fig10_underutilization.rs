@@ -1,0 +1,47 @@
+//! Fig 10 — crossbar under-utilisation vs constrained-IMA size, averaged
+//! over the Table-II suite. Paper: the 128x256 IMA leaves only ~9% unused.
+use newton::config::{ImaConfig, XbarParams};
+use newton::mapping::avg_underutilization;
+use newton::util::{f1, Table};
+use newton::workloads;
+
+fn main() {
+    let nets = workloads::suite();
+    let p = XbarParams::default();
+    println!("=== Fig 10: xbar under-utilisation with constrained mapping ===");
+    let mut t = Table::new(&["IMA (in x out)", "model under-util %", "paper"]);
+    let points = [
+        (128usize, 64usize, ""),
+        (128, 128, ""),
+        (128, 256, "~9% (chosen design point)"),
+        (128, 512, ""),
+        (256, 512, ""),
+        (512, 512, ""),
+        (1024, 1024, ""),
+        (2048, 1024, ""),
+        (8192, 1024, "large IMAs waste significantly"),
+    ];
+    for (i, o, note) in points {
+        let ima = ImaConfig {
+            inputs: i,
+            outputs: o,
+            ..ImaConfig::newton_default()
+        };
+        let u = avg_underutilization(&nets, &ima, &p, 16);
+        t.row(&[format!("{i}x{o}"), f1(u * 100.0), note.to_string()]);
+    }
+    t.print();
+    println!("\nper-net at the 128x256 design point:");
+    let mut t = Table::new(&["net", "under-util %"]);
+    for n in &nets {
+        let m = newton::mapping::Mapping::build(
+            n,
+            &ImaConfig::newton_default(),
+            &p,
+            newton::mapping::MappingPolicy::newton(),
+            16,
+        );
+        t.row(&[n.name.to_string(), f1(m.underutilization() * 100.0)]);
+    }
+    t.print();
+}

@@ -1,0 +1,37 @@
+//! Fig 11 — impact of constrained mapping + compact HTree, per workload.
+//! Paper: ~37% better area efficiency, ~18% better power/energy, at the
+//! cost of ~9% idle crossbars.
+use newton::config::{ChipConfig, NewtonFeatures};
+use newton::pipeline::evaluate;
+use newton::util::{f2, geomean, Table};
+use newton::workloads;
+
+fn main() {
+    let isaac = ChipConfig::isaac();
+    let constrained = ChipConfig::newton_with(NewtonFeatures {
+        constrained_mapping: true,
+        ..NewtonFeatures::none()
+    });
+    println!("=== Fig 11: constrained mapping + compact HTree (vs ISAAC) ===");
+    let mut t = Table::new(&["net", "area-eff x", "power x", "energy-eff x"]);
+    let (mut ae, mut pw, mut ee) = (vec![], vec![], vec![]);
+    for net in workloads::suite() {
+        let i = evaluate(&net, &isaac);
+        let c = evaluate(&net, &constrained);
+        let a = c.ce_eff / i.ce_eff;
+        let p = i.peak_power_w / c.peak_power_w;
+        let e = i.energy_per_op_pj / c.energy_per_op_pj;
+        ae.push(a);
+        pw.push(p);
+        ee.push(e);
+        t.row(&[net.name.to_string(), f2(a), f2(p), f2(e)]);
+    }
+    t.row(&[
+        "geomean".into(),
+        f2(geomean(&ae)),
+        f2(geomean(&pw)),
+        f2(geomean(&ee)),
+    ]);
+    t.print();
+    println!("\npaper: area eff +37% (1.37x), power/energy eff +18% (1.18x)");
+}

@@ -1,0 +1,52 @@
+//! Fig 12 — improvement from the adaptive-ADC scheme on top of the
+//! compact-HTree design. Paper: ~15% average power reduction (ADC was ~49%
+//! of ISAAC chip power), plus area efficiency from the 16-bit out-HTree.
+//! Also the CDAC-share sensitivity mentioned in §V.
+use newton::adc::{AdaptiveSchedule, SarShares};
+use newton::config::{ChipConfig, NewtonFeatures, XbarParams};
+use newton::pipeline::evaluate;
+use newton::util::{f2, geomean, Table};
+use newton::workloads;
+
+fn main() {
+    let base = ChipConfig::newton_with(NewtonFeatures {
+        constrained_mapping: true,
+        ..NewtonFeatures::none()
+    });
+    let adaptive = ChipConfig::newton_with(NewtonFeatures {
+        constrained_mapping: true,
+        adaptive_adc: true,
+        ..NewtonFeatures::none()
+    });
+    println!("=== Fig 12: adaptive ADC (vs compact-HTree design) ===");
+    let mut t = Table::new(&["net", "power x", "energy-eff x", "area-eff x"]);
+    let (mut pw, mut ee, mut ae) = (vec![], vec![], vec![]);
+    for net in workloads::suite() {
+        let b = evaluate(&net, &base);
+        let a = evaluate(&net, &adaptive);
+        let p = b.peak_power_w / a.peak_power_w;
+        let e = b.energy_per_op_pj / a.energy_per_op_pj;
+        let ar = a.ce_eff / b.ce_eff;
+        pw.push(p);
+        ee.push(e);
+        ae.push(ar);
+        t.row(&[net.name.to_string(), f2(p), f2(e), f2(ar)]);
+    }
+    t.row(&["geomean".into(), f2(geomean(&pw)), f2(geomean(&ee)), f2(geomean(&ae))]);
+    t.print();
+    println!("\npaper: ~15% power reduction; out-HTree carries 16 bits instead of 39");
+
+    // CDAC sensitivity (§V: 10% and 27% CDAC -> 13% and 12% improvements)
+    let p = XbarParams::default();
+    let sched = AdaptiveSchedule::new(&p, 16, 16);
+    println!("\nCDAC-share sensitivity of the ADC energy scale:");
+    for share in [0.10, 0.27, 0.30] {
+        let e = sched.energy_scale(&SarShares::with_cdac_share(share));
+        println!(
+            "  cdac {:>4.0}% -> ADC energy scale {:.3} (chip saving at 49% ADC share: {:.1}%)",
+            share * 100.0,
+            e,
+            (1.0 - e) * 49.0
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! Fig 13 — CE and PE as Karatsuba divide & conquer is applied recursively.
+//! Paper: applying it once is nearly as good as twice, and much simpler.
+use newton::config::{ChipConfig, XbarParams};
+use newton::energy::TileModel;
+use newton::karatsuba::DncSchedule;
+use newton::util::{f1, f2, Table};
+
+fn main() {
+    let p = XbarParams::default();
+    println!("=== Fig 13: recursive divide & conquer ===");
+    let mut t = Table::new(&[
+        "k",
+        "xbars/IMA-slot",
+        "iters",
+        "ADC samples",
+        "ADC work x",
+        "CE GOPS/mm2",
+        "PE GOPS/W",
+    ]);
+    let chip = ChipConfig::newton();
+    for k in 0..=2u32 {
+        let s = DncSchedule::new(k, &p);
+        let m = TileModel::with_features(chip.conv_tile, p, true, k);
+        t.row(&[
+            k.to_string(),
+            s.xbars_allocated.to_string(),
+            s.time_iters.to_string(),
+            s.adc_samples.to_string(),
+            f2(s.adc_work_ratio(&p)),
+            f1(m.ce()),
+            f1(m.pe()),
+        ]);
+    }
+    t.print();
+    println!("\npaper: k=1 -> 16 xbars, 17 iters, -15% work; k=2 -> 20 xbars, faster,");
+    println!("more ADC savings but diminishing returns -> the paper picks k=1");
+}

@@ -1,0 +1,43 @@
+//! Fig 14 — improvement with Karatsuba's algorithm on top of the adaptive
+//! ADC design. Paper: ~25% energy-efficiency gain, ~6.4% area-efficiency
+//! loss, ADCs busy ~75-80% of the lengthened window.
+use newton::config::{ChipConfig, NewtonFeatures, XbarParams};
+use newton::karatsuba::DncSchedule;
+use newton::pipeline::evaluate;
+use newton::util::{f2, geomean, Table};
+use newton::workloads;
+
+fn main() {
+    let base = ChipConfig::newton_with(NewtonFeatures {
+        constrained_mapping: true,
+        adaptive_adc: true,
+        ..NewtonFeatures::none()
+    });
+    let kara = ChipConfig::newton_with(NewtonFeatures {
+        constrained_mapping: true,
+        adaptive_adc: true,
+        karatsuba: 1,
+        ..NewtonFeatures::none()
+    });
+    println!("=== Fig 14: Karatsuba (vs adaptive-ADC design) ===");
+    let mut t = Table::new(&["net", "energy-eff x", "power x", "area-eff x"]);
+    let (mut ee, mut pw, mut ae) = (vec![], vec![], vec![]);
+    for net in workloads::suite() {
+        let b = evaluate(&net, &base);
+        let k = evaluate(&net, &kara);
+        let e = b.energy_per_op_pj / k.energy_per_op_pj;
+        let p = b.peak_power_w / k.peak_power_w;
+        let a = k.ce_eff / b.ce_eff;
+        ee.push(e);
+        pw.push(p);
+        ae.push(a);
+        t.row(&[net.name.to_string(), f2(e), f2(p), f2(a)]);
+    }
+    t.row(&["geomean".into(), f2(geomean(&ee)), f2(geomean(&pw)), f2(geomean(&ae))]);
+    t.print();
+    let p = XbarParams::default();
+    let s = DncSchedule::new(1, &p);
+    println!("\nschedule: {} ADC samples (paper 109), {} iters (paper 17), busy {:.0}% (paper ~75%)",
+        s.adc_samples, s.time_iters, s.adc_busy_frac(&p) * 100.0);
+    println!("paper: energy eff +~25%, area eff -6.4%");
+}

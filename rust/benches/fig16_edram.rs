@@ -1,0 +1,36 @@
+//! Fig 16 — area-efficiency improvement from the smaller eDRAM buffer
+//! (64 KB -> 16 KB via layer spreading). Paper: ~6.5% average.
+use newton::config::{ChipConfig, NewtonFeatures};
+use newton::pipeline::evaluate;
+use newton::util::{f2, geomean, Table};
+use newton::workloads;
+
+fn main() {
+    let pre = ChipConfig::newton_with(NewtonFeatures {
+        constrained_mapping: true,
+        adaptive_adc: true,
+        karatsuba: 1,
+        ..NewtonFeatures::none()
+    });
+    let post = ChipConfig::newton_with(NewtonFeatures {
+        small_buffers: true,
+        ..pre.features
+    });
+    assert_eq!(pre.conv_tile.edram_kb, 64.0);
+    assert_eq!(post.conv_tile.edram_kb, 16.0);
+    println!("=== Fig 16: smaller eDRAM buffers (64 KB -> 16 KB) ===");
+    let mut t = Table::new(&["net", "area-eff x", "power x"]);
+    let (mut ae, mut pw) = (vec![], vec![]);
+    for net in workloads::suite() {
+        let b = evaluate(&net, &pre);
+        let s = evaluate(&net, &post);
+        let a = s.ce_eff / b.ce_eff;
+        let p = b.peak_power_w / s.peak_power_w;
+        ae.push(a);
+        pw.push(p);
+        t.row(&[net.name.to_string(), f2(a), f2(p)]);
+    }
+    t.row(&["geomean".into(), f2(geomean(&ae)), f2(geomean(&pw))]);
+    t.print();
+    println!("\npaper: ~6.5% average area-efficiency improvement");
+}

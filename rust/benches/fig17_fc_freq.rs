@@ -1,0 +1,49 @@
+//! Fig 17 — chip peak power as FC tiles run 8x/32x/128x slower.
+//! Paper: power is lowest at 128x (~50% lower peak power on average);
+//! throughput is unaffected because FC is off the critical path.
+use newton::config::{ChipConfig, XbarParams};
+use newton::mapping::{Mapping, MappingPolicy};
+use newton::pipeline::evaluate;
+use newton::tiles::fc_slowdown_sweep;
+use newton::util::{f2, geomean, Table};
+use newton::workloads;
+
+fn main() {
+    let p = XbarParams::default();
+    let mut chip = ChipConfig::newton();
+    // isolate the frequency effect: sweep from un-shared (1:1) FC ADCs,
+    // like the paper's Fig 17 (sharing is Fig 18's axis)
+    chip.fc_tile.ima.xbars_per_adc = 1;
+    println!("=== Fig 17: FC-tile ADC slowdown vs chip peak power (W) ===");
+    let slows = [1.0, 8.0, 32.0, 128.0];
+    let mut headers = vec!["net".to_string()];
+    headers.extend(slows.iter().map(|s| format!("{s}x")));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    let mut ratio = vec![];
+    for net in workloads::suite() {
+        let m = Mapping::build(&net, &chip.conv_tile.ima, &p, MappingPolicy::newton(), 16);
+        let sweep = fc_slowdown_sweep(&chip, &m, &slows);
+        let mut row = vec![net.name.to_string()];
+        for (_, w) in &sweep {
+            row.push(f2(*w));
+        }
+        ratio.push(sweep[0].1 / sweep[3].1);
+        t.row(&row);
+    }
+    t.print();
+    println!(
+        "\ngeomean power reduction 1x -> 128x: {:.2}x (paper: ~2x / 50% lower)",
+        geomean(&ratio)
+    );
+
+    // throughput must be unchanged (FC off the critical path)
+    let base = evaluate(&workloads::vgg_a(), &chip);
+    let mut slow = chip.clone();
+    slow.fc_tile.ima.adc_slowdown = 8.0;
+    let s = evaluate(&workloads::vgg_a(), &slow);
+    println!(
+        "vgg-a throughput at 128x vs 8x FC tiles: {:.1} vs {:.1} images/s (must match)",
+        base.throughput, s.throughput
+    );
+}

@@ -1,0 +1,35 @@
+//! Fig 18 — area-efficiency improvement when FC tiles share multiple
+//! crossbars per ADC. Paper: ~38% average chip-area saving at 4:1; the
+//! ratio stops at 4 because the mux gets complex.
+use newton::config::{ChipConfig, XbarParams};
+use newton::mapping::{Mapping, MappingPolicy};
+use newton::tiles::fc_sharing_sweep;
+use newton::util::{f1, f2, geomean, Table};
+use newton::workloads;
+
+fn main() {
+    let p = XbarParams::default();
+    let chip = ChipConfig::newton();
+    println!("=== Fig 18: FC-tile crossbars per ADC vs chip area (mm2) ===");
+    let mut t = Table::new(&["net", "1:1", "2:1", "4:1", "saving @4:1"]);
+    let mut savings = vec![];
+    for net in workloads::suite() {
+        let m = Mapping::build(&net, &chip.conv_tile.ima, &p, MappingPolicy::newton(), 16);
+        let sweep = fc_sharing_sweep(&chip, &m, &[1, 2, 4]);
+        let save = 1.0 - sweep[2].1 / sweep[0].1;
+        savings.push(1.0 - save); // for geomean of ratios
+        t.row(&[
+            net.name.to_string(),
+            f1(sweep[0].1),
+            f1(sweep[1].1),
+            f1(sweep[2].1),
+            format!("{:.0}%", save * 100.0),
+        ]);
+    }
+    t.print();
+    println!(
+        "\ngeomean area saving at 4:1: {:.0}% (paper: ~38%; resnet gains least)",
+        (1.0 - geomean(&savings)) * 100.0
+    );
+    let _ = f2(0.0);
+}

@@ -1,0 +1,43 @@
+//! Fig 19 — improvement from Strassen's algorithm. Paper: +4.5% energy
+//! efficiency overall; Resnet gains nothing (small matrices, high wastage).
+use newton::config::{ChipConfig, NewtonFeatures};
+use newton::pipeline::evaluate;
+use newton::util::{f2, geomean, Table};
+use newton::workloads;
+
+fn main() {
+    let mut pre_f = NewtonFeatures::all();
+    pre_f.strassen = false;
+    pre_f.hetero_tiles = false;
+    let mut post_f = pre_f;
+    post_f.strassen = true;
+    let pre = ChipConfig::newton_with(pre_f);
+    let post = ChipConfig::newton_with(post_f);
+    println!("=== Fig 19: Strassen's algorithm ===");
+    let mut t = Table::new(&["net", "energy-eff x", "eligible MAC frac"]);
+    let mut ee = vec![];
+    for net in workloads::suite() {
+        let b = evaluate(&net, &pre);
+        let s = evaluate(&net, &post);
+        let e = b.energy_per_op_pj / s.energy_per_op_pj;
+        ee.push(e);
+        let total: f64 = net.conv_layers().map(|l| l.macs() as f64).sum();
+        let eligible: f64 = net
+            .conv_layers()
+            .filter(|l| {
+                let (r, c) = l.matrix().unwrap();
+                newton::strassen::eligible(r, c, &pre.xbar)
+            })
+            .map(|l| l.macs() as f64)
+            .sum();
+        t.row(&[
+            net.name.to_string(),
+            f2(e),
+            format!("{:.0}%", eligible / total * 100.0),
+        ]);
+    }
+    t.row(&["geomean".into(), f2(geomean(&ee)), "".into()]);
+    t.print();
+    println!("\npaper: +4.5% energy efficiency; resnet does not benefit;");
+    println!("also frees 1-in-8 IMAs for more compact mapping");
+}

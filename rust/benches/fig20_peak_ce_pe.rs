@@ -1,0 +1,36 @@
+//! Fig 20 — peak CE and PE of DaDianNao, ISAAC and the incrementally
+//! enhanced Newton design points. Paper values: DaDianNao ~63 GOPS/mm² /
+//! ~286 GOPS/W; ISAAC ~455-480 / ~380; Newton roughly doubles both.
+//! The heterogeneous FC tile is excluded (it is deliberately slow).
+use newton::baselines;
+use newton::metrics::incremental_progression;
+use newton::util::{f1, f2, Table};
+use newton::workloads;
+
+fn main() {
+    println!("=== Fig 20: peak CE and PE of the design points ===");
+    let (dce, dpe) = baselines::dadiannao_ce_pe();
+    let mut t = Table::new(&["design point", "peak CE GOPS/mm2", "peak PE GOPS/W", "suite pJ/op"]);
+    t.row(&["dadiannao (published)".into(), f1(dce), f1(dpe), f2(baselines::dadiannao().pj_per_op)]);
+    for r in incremental_progression(&workloads::suite()) {
+        if r.label == "+fc-tiles (newton)" {
+            // Fig 20 excludes the FC tile from the *peak* plot
+            t.row(&[
+                "newton (conv tile, fc excluded)".into(),
+                f1(r.peak.ce_gops_mm2),
+                f1(r.peak.pe_gops_w),
+                f2(r.energy_per_op_pj),
+            ]);
+        } else {
+            t.row(&[
+                r.label.to_string(),
+                f1(r.peak.ce_gops_mm2),
+                f1(r.peak.pe_gops_w),
+                f2(r.energy_per_op_pj),
+            ]);
+        }
+    }
+    t.print();
+    println!("\npaper anchors: ISAAC CE ~455-480, PE ~380; adaptive ADC and D&C");
+    println!("drive the PE gains; Strassen mostly frees resources (1 IMA in 8)");
+}

@@ -1,0 +1,40 @@
+//! Fig 21 — per-benchmark area-efficiency improvement, broken down by
+//! technique (incremental stacking). Paper: compact HTree and FC tiles are
+//! the biggest contributors.
+use newton::config::{ChipConfig, NewtonFeatures};
+use newton::pipeline::evaluate;
+use newton::util::{f2, Table};
+use newton::workloads;
+
+fn steps() -> Vec<(&'static str, ChipConfig)> {
+    NewtonFeatures::incremental()
+        .into_iter()
+        .map(|(label, f)| {
+            let chip = if label == "isaac" {
+                ChipConfig::isaac()
+            } else {
+                ChipConfig::newton_with(f)
+            };
+            (label, chip)
+        })
+        .collect()
+}
+
+fn main() {
+    println!("=== Fig 21: area-efficiency improvement breakdown (x over ISAAC) ===");
+    let chips = steps();
+    let mut headers = vec!["net".to_string()];
+    headers.extend(chips.iter().skip(1).map(|(l, _)| l.to_string()));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    for net in workloads::suite() {
+        let base = evaluate(&net, &chips[0].1).ce_eff;
+        let mut row = vec![net.name.to_string()];
+        for (_, chip) in chips.iter().skip(1) {
+            row.push(f2(evaluate(&net, chip).ce_eff / base));
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!("\npaper: final column ~2.2x average; HTree + FC tiles dominate the gains");
+}

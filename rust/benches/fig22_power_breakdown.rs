@@ -1,0 +1,46 @@
+//! Fig 22 — per-benchmark decrease in the chip power envelope, broken down
+//! by technique. Paper: HTree, adaptive ADC, Karatsuba and FC tiles
+//! contribute roughly equally; total ~77% decrease.
+use newton::config::{ChipConfig, NewtonFeatures};
+use newton::pipeline::evaluate;
+use newton::util::{f2, geomean, Table};
+use newton::workloads;
+
+fn main() {
+    println!("=== Fig 22: power-envelope decrease breakdown (fraction of ISAAC) ===");
+    let steps: Vec<(&str, ChipConfig)> = NewtonFeatures::incremental()
+        .into_iter()
+        .map(|(l, f)| {
+            (
+                l,
+                if l == "isaac" {
+                    ChipConfig::isaac()
+                } else {
+                    ChipConfig::newton_with(f)
+                },
+            )
+        })
+        .collect();
+    let mut headers = vec!["net".to_string()];
+    headers.extend(steps.iter().skip(1).map(|(l, _)| l.to_string()));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    let mut finals = vec![];
+    for net in workloads::suite() {
+        let base = evaluate(&net, &steps[0].1).peak_power_w;
+        let mut row = vec![net.name.to_string()];
+        for (i, (_, chip)) in steps.iter().enumerate().skip(1) {
+            let frac = evaluate(&net, chip).peak_power_w / base;
+            if i == steps.len() - 1 {
+                finals.push(frac);
+            }
+            row.push(f2(frac));
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!(
+        "\nfinal power envelope: {:.0}% of ISAAC (paper: 23%, i.e. -77%)",
+        geomean(&finals) * 100.0
+    );
+}

@@ -1,0 +1,46 @@
+//! Fig 23 — per-benchmark energy-efficiency improvement, broken down by
+//! technique. Paper: multiple innovations (HTree, adaptive ADC, Karatsuba,
+//! FC tiles) contribute comparably; ~51% total energy decrease.
+use newton::config::{ChipConfig, NewtonFeatures};
+use newton::pipeline::evaluate;
+use newton::util::{f2, geomean, Table};
+use newton::workloads;
+
+fn main() {
+    println!("=== Fig 23: energy-efficiency improvement breakdown (x over ISAAC) ===");
+    let steps: Vec<(&str, ChipConfig)> = NewtonFeatures::incremental()
+        .into_iter()
+        .map(|(l, f)| {
+            (
+                l,
+                if l == "isaac" {
+                    ChipConfig::isaac()
+                } else {
+                    ChipConfig::newton_with(f)
+                },
+            )
+        })
+        .collect();
+    let mut headers = vec!["net".to_string()];
+    headers.extend(steps.iter().skip(1).map(|(l, _)| l.to_string()));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    let mut finals = vec![];
+    for net in workloads::suite() {
+        let base = evaluate(&net, &steps[0].1).energy_per_op_pj;
+        let mut row = vec![net.name.to_string()];
+        for (i, (_, chip)) in steps.iter().enumerate().skip(1) {
+            let x = base / evaluate(&net, chip).energy_per_op_pj;
+            if i == steps.len() - 1 {
+                finals.push(x);
+            }
+            row.push(f2(x));
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!(
+        "\nfinal energy efficiency: {:.2}x ISAAC (paper: ~2.05x, i.e. -51% energy)",
+        geomean(&finals)
+    );
+}

@@ -1,0 +1,72 @@
+//! Fig 24 — Newton (8-bit) vs TPU-1, iso-area, 7 ms latency target.
+//! Paper: ~10.3x average throughput, ~3.4x energy; MSRA-C is the TPU's
+//! worst case (batch 1, weight-streaming-bound); CE 12.3x peak.
+use newton::baselines::TpuModel;
+use newton::config::{ChipConfig, XbarParams};
+use newton::pipeline::evaluate;
+use newton::util::{f1, f2, geomean, Table};
+use newton::workloads;
+
+/// Newton's 8-bit variant: 8-bit weights (4 slices) and inputs (8 iters).
+fn newton_8bit() -> ChipConfig {
+    let mut chip = ChipConfig::newton();
+    chip.xbar = XbarParams {
+        weight_bits: 8,
+        input_bits: 8,
+        out_shift: 4,
+        out_bits: 8,
+        ..chip.xbar
+    };
+    chip
+}
+
+fn main() {
+    let tpu = TpuModel::default();
+    let chip = newton_8bit();
+    println!("=== Fig 24: Newton (8-bit) vs TPU-1 (iso-area {:.0} mm2) ===", tpu.area_mm2);
+    let mut t = Table::new(&[
+        "net",
+        "tpu batch",
+        "tpu img/s",
+        "newton img/s",
+        "thr x",
+        "tpu mJ/img",
+        "newton mJ/img",
+        "energy x",
+    ]);
+    let (mut thr, mut en) = (vec![], vec![]);
+    for net in workloads::suite() {
+        let tr = tpu.evaluate(&net);
+        let nr = evaluate(&net, &chip);
+        // iso-area: scale Newton's one-pipeline numbers to the TPU die area
+        let scale = tpu.area_mm2 / nr.area_mm2;
+        let n_thr = nr.throughput * scale.max(1.0);
+        let tx = n_thr / tr.throughput;
+        let ex = tr.energy_per_image_mj / nr.energy_per_image_mj;
+        thr.push(tx);
+        en.push(ex);
+        t.row(&[
+            net.name.to_string(),
+            tr.batch.to_string(),
+            f1(tr.throughput),
+            f1(n_thr),
+            f2(tx),
+            f2(tr.energy_per_image_mj),
+            f2(nr.energy_per_image_mj),
+            f2(ex),
+        ]);
+    }
+    t.print();
+    println!(
+        "\ngeomean: throughput {:.1}x (paper 10.3x), energy {:.1}x (paper 3.4x)",
+        geomean(&thr),
+        geomean(&en)
+    );
+    let pm = newton::metrics::peak_metrics(&chip);
+    println!(
+        "peak CE: newton-8b {:.0} vs TPU {:.0} GOPS/mm2 -> {:.1}x (paper 12.3x)",
+        pm.ce_gops_mm2,
+        tpu.peak_ce(),
+        pm.ce_gops_mm2 / tpu.peak_ce()
+    );
+}

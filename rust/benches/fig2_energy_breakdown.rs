@@ -1,0 +1,58 @@
+//! Fig 2 — energy breakdown of a 1x128 . 128x128 16-bit VMM across
+//! digital (DaDianNao-like, Eyeriss-like) and analog (ISAAC-like, +Newton
+//! optimisations) pipelines.
+use newton::adc::{AdaptiveSchedule, SarShares};
+use newton::config::XbarParams;
+use newton::energy::constants as k;
+use newton::karatsuba::DncSchedule;
+use newton::util::{f1, Table};
+
+fn main() {
+    let p = XbarParams::default();
+    let macs = 128.0 * 128.0;
+    let ops = 2.0 * macs;
+
+    // --- analog pipeline: per-component pJ for the whole VMM ---------------
+    let adc_pj = k::ADC_POWER_MW * 1e-3 / k::ADC_RATE_SPS * 1e12;
+    let samples = 128.0 * (p.iters() * p.slices()) as f64; // per column x (i,s)
+    let xbar = (k::XBAR_POWER_MW + k::SH_POWER_MW) * 1e-3 * k::CYCLE_NS * (p.slices() * p.iters()) as f64;
+    let dac = k::DAC_ARRAY_POWER_MW * 1e-3 * k::CYCLE_NS * (p.slices() * p.iters()) as f64;
+    let sa = samples * 0.05;
+    let edram = (128.0 + 128.0) * 2.0 * k::EDRAM_PJ_PER_BYTE;
+
+    let isaac_adc = samples * adc_pj;
+    let adaptive_scale =
+        AdaptiveSchedule::new(&p, 16, 16).energy_scale(&SarShares::default());
+    let kara = DncSchedule::new(1, &p).adc_work_ratio(&p);
+
+    // --- digital pipelines: movement-dominated ------------------------------
+    let dig_compute = macs * 0.25;
+    let dadi_movement = macs * (2.0 * 0.65 + 1.95);
+    let eyeriss_movement = macs * (0.55 + 0.82);
+
+    println!("=== Fig 2: VMM energy breakdown, pJ per 1x128x128 16-bit VMM ===");
+    let mut t = Table::new(&["pipeline", "compute", "ADC", "DAC+xbar", "S+A", "buffer/mem", "total", "pJ/op"]);
+    let rows = [
+        ("dadiannao-like", dig_compute, 0.0, 0.0, 0.0, dadi_movement),
+        ("eyeriss-like", dig_compute, 0.0, 0.0, 0.0, eyeriss_movement),
+        ("isaac-like", 0.0, isaac_adc, dac + xbar, sa, edram),
+        ("+adaptive adc", 0.0, isaac_adc * adaptive_scale, dac + xbar, sa, edram),
+        ("+karatsuba", 0.0, isaac_adc * adaptive_scale * kara, dac + xbar, sa, edram),
+    ];
+    for (name, c, a, dx, s, m) in rows {
+        let total = c + a + dx + s + m;
+        t.row(&[
+            name.to_string(),
+            f1(c),
+            f1(a),
+            f1(dx),
+            f1(s),
+            f1(m),
+            f1(total),
+            format!("{:.2}", total / ops),
+        ]);
+    }
+    t.print();
+    println!("\npaper's point: digital is communication/memory-bound; analog is ADC-bound");
+    println!("ADC share of isaac-like analog total: {:.0}%", isaac_adc / (isaac_adc + dac + xbar + sa + edram) * 100.0);
+}

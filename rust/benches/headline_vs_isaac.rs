@@ -1,0 +1,30 @@
+//! Headline comparison (paper abstract): Newton vs ISAAC across the suite,
+//! plus the §I energy ladder.
+use newton::baselines;
+use newton::metrics::headline;
+use newton::util::{f2, Table};
+use newton::workloads;
+
+fn main() {
+    let h = headline(&workloads::suite());
+    println!("=== headline: Newton vs ISAAC (geomean over suite) ===");
+    let mut t = Table::new(&["metric", "paper", "model"]);
+    t.row(&["power decrease".into(), "77%".into(), format!("{:.1}%", h.power_decrease * 100.0)]);
+    t.row(&["energy decrease".into(), "51%".into(), format!("{:.1}%", h.energy_decrease * 100.0)]);
+    t.row(&["throughput/area".into(), "2.2x".into(), format!("{:.2}x", h.throughput_area_ratio)]);
+    t.row(&["newton pJ/op".into(), "0.85".into(), f2(h.newton_pj_per_op)]);
+    t.row(&["isaac pJ/op".into(), "1.8".into(), f2(h.isaac_pj_per_op)]);
+    t.print();
+
+    println!("\n=== energy ladder (paper §I), pJ/op ===");
+    let mut t = Table::new(&["design", "model", "paper"]);
+    t.row(&["ideal neuron".into(), f2(baselines::ideal_neuron().pj_per_op), "0.33".into()]);
+    t.row(&["newton".into(), f2(h.newton_pj_per_op), "0.85".into()]);
+    t.row(&["eyeriss".into(), f2(baselines::eyeriss().pj_per_op), "1.67".into()]);
+    t.row(&["isaac".into(), f2(h.isaac_pj_per_op), "1.8".into()]);
+    t.row(&["dadiannao".into(), f2(baselines::dadiannao().pj_per_op), "3.5".into()]);
+    t.print();
+    println!("\npaper conclusion: Newton cuts the ISAAC-to-ideal gap roughly in half");
+    let gap_frac = (h.newton_pj_per_op - 0.33) / (h.isaac_pj_per_op - 0.33);
+    println!("model: remaining gap = {:.0}% of ISAAC's", gap_frac * 100.0);
+}

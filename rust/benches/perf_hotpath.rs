@@ -1,0 +1,87 @@
+//! Hot-path timing microbenchmarks (EXPERIMENTS.md §Perf, L3).
+//!
+//! Times the coordinator-side hot paths with a median-of-N harness
+//! (criterion is unavailable offline): the analytic suite evaluation (inner
+//! loop of every design-space sweep), the rust golden-model VMM, the
+//! batcher, and — when artifacts exist — the PJRT VMM/stage/model execute
+//! path used at serve time.
+
+use std::time::Instant;
+
+use newton::config::{ChipConfig, XbarParams};
+use newton::coordinator::batcher::{Batcher, PendingRequest};
+use newton::pipeline::evaluate_suite;
+use newton::runtime::{default_artifacts_dir, Runtime};
+use newton::util::{median, Rng};
+use newton::workloads;
+use newton::xbar::{vmm, Matrix};
+
+/// Median wall time of `f` over `n` runs, after one warmup, in microseconds.
+fn bench<T>(name: &str, n: usize, mut f: impl FnMut() -> T) {
+    let _ = f();
+    let mut times = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    println!("{name:44} {:12.1} us (median of {n})", median(&times));
+}
+
+fn main() {
+    println!("=== L3 hot-path microbenchmarks ===");
+    let nets = workloads::suite();
+    let newton_chip = ChipConfig::newton();
+    let isaac_chip = ChipConfig::isaac();
+    bench("analytic: evaluate_suite(newton)", 20, || {
+        evaluate_suite(&nets, &newton_chip)
+    });
+    bench("analytic: evaluate_suite(isaac)", 20, || {
+        evaluate_suite(&nets, &isaac_chip)
+    });
+
+    let p = XbarParams::default();
+    let mut rng = Rng::new(3);
+    let x = Matrix::from_fn(8, p.rows, |_, _| rng.range_i64(0, 1 << 16));
+    let w = Matrix::from_fn(p.rows, 256, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
+    bench("golden model: 8x128x256 bit-serial VMM", 10, || {
+        vmm(&x, &w, &p)
+    });
+
+    bench("batcher: 1024 requests through batches of 8", 50, || {
+        let mut b = Batcher::new(8, 4, std::time::Duration::from_secs(0));
+        let mut taken = 0;
+        for i in 0..1024u64 {
+            b.push(PendingRequest {
+                id: i,
+                image: vec![0; 4],
+                enqueued: Instant::now(),
+            });
+            while let Some(batch) = b.take_batch() {
+                taken += batch.n_real;
+            }
+        }
+        taken
+    });
+
+    let dir = default_artifacts_dir();
+    match Runtime::new(&dir) {
+        Ok(mut rt) => {
+            let (_, vin) = rt.manifest.load_testvec("vmm_in").unwrap();
+            rt.compile("vmm_plain").unwrap();
+            bench("pjrt: vmm_plain (8x128 -> 8x256)", 20, || {
+                rt.run("vmm_plain", &vin).unwrap()
+            });
+            let (_, input) = rt.manifest.load_testvec("input_b8").unwrap();
+            rt.compile("stage0_b8").unwrap();
+            bench("pjrt: stage0 conv (8x32x32x3)", 5, || {
+                rt.run("stage0_b8", &input).unwrap()
+            });
+            rt.compile("model_b8").unwrap();
+            bench("pjrt: fused model (batch 8)", 3, || {
+                rt.run("model_b8", &input).unwrap()
+            });
+        }
+        Err(_) => println!("pjrt benches skipped (run `make artifacts`)"),
+    }
+}

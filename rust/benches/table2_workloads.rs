@@ -1,0 +1,28 @@
+//! Table II — the benchmark suite: layer counts, weights, MACs per image.
+use newton::util::{f1, Table};
+use newton::workloads;
+
+fn main() {
+    println!("=== Table II: benchmark suite ===");
+    let mut t = Table::new(&["net", "convs", "fcs", "weights (M)", "MACs/img (G)", "min fmap px"]);
+    for n in workloads::suite() {
+        let min_px = n
+            .conv_layers()
+            .map(|l| l.out_hw())
+            .min()
+            .unwrap_or(0);
+        t.row(&[
+            n.name.to_string(),
+            n.conv_layers().count().to_string(),
+            n.fc_layers().count().to_string(),
+            f1(n.total_weights() as f64 / 1e6),
+            f1(n.total_macs() as f64 / 1e9),
+            min_px.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\npaper checks: MSRA nets ~5.5x Alexnet's parameters; Resnet-34 deep but small");
+    let a = workloads::alexnet().total_weights() as f64;
+    let m = workloads::msra_c().total_weights() as f64;
+    println!("  msra-c / alexnet weights = {:.1}x (paper: ~5.5x)", m / a);
+}

@@ -1,0 +1,101 @@
+//! Tiny argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional args.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants a float, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["serve", "--batch", "8", "--net=vgg-a", "--verbose"]);
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.get("batch"), Some("8"));
+        assert_eq!(a.get("net"), Some("vgg-a"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_usize("batch", 1), 8);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("n", 3), 3);
+        assert_eq!(a.get_f64("f", 1.5), 1.5);
+        assert!(!a.has_flag("nope"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--fast"]);
+        assert!(a.has_flag("fast"));
+    }
+}

@@ -1,0 +1,391 @@
+//! Architecture configuration: crossbar, IMA, tile and chip parameters.
+//!
+//! Defaults follow the paper's optimal design point (§IV "Design Points"):
+//! 128x128 crossbars with 2-bit cells and 1-bit DACs, IMAs that process 128
+//! inputs for 256 neurons (16 crossbars), 16 IMAs per tile. The ISAAC
+//! baseline (§II-C) is 8 crossbars per IMA, 12 IMAs per tile, 64 KB eDRAM,
+//! with an unconstrained mapping and a worst-case-provisioned HTree.
+
+/// Physical crossbar + converter parameters (paper Table I).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct XbarParams {
+    /// Wordlines (simultaneously active rows).
+    pub rows: usize,
+    /// Bitlines.
+    pub cols: usize,
+    /// Bits stored per memristor cell.
+    pub cell_bits: u32,
+    /// Input bits applied per 100 ns iteration (DAC resolution).
+    pub dac_bits: u32,
+    /// Fixed-point weight width.
+    pub weight_bits: u32,
+    /// Fixed-point input width.
+    pub input_bits: u32,
+    /// SAR ADC resolution (bits at full precision).
+    pub adc_bits: u32,
+    /// Crossbar read (one iteration) latency in nanoseconds.
+    pub read_ns: f64,
+    /// LSBs dropped by the scaling stage (paper: 10).
+    pub out_shift: u32,
+    /// Output fixed-point window (paper: 16).
+    pub out_bits: u32,
+}
+
+impl Default for XbarParams {
+    fn default() -> Self {
+        XbarParams {
+            rows: 128,
+            cols: 128,
+            cell_bits: 2,
+            dac_bits: 1,
+            weight_bits: 16,
+            input_bits: 16,
+            adc_bits: 9,
+            read_ns: 100.0,
+            out_shift: 10,
+            out_bits: 16,
+        }
+    }
+}
+
+impl XbarParams {
+    /// Crossbars (cell planes) holding one full-width weight.
+    pub fn slices(&self) -> usize {
+        (self.weight_bits as usize).div_ceil(self.cell_bits as usize)
+    }
+
+    /// Iterations streaming one full-width input.
+    pub fn iters(&self) -> usize {
+        (self.input_bits as usize).div_ceil(self.dac_bits as usize)
+    }
+
+    /// Full-width weights stored per crossbar.
+    pub fn weights_per_xbar(&self) -> usize {
+        self.rows * self.cols / self.slices()
+    }
+
+    /// Latency of one full vector-matrix multiply (all input iterations).
+    pub fn vmm_ns(&self) -> f64 {
+        self.read_ns * self.iters() as f64
+    }
+
+    /// Worst-case analog column sum needs this many ADC bits to be lossless.
+    pub fn lossless_adc_bits(&self) -> u32 {
+        let max_sum = self.rows as u64
+            * ((1u64 << self.dac_bits) - 1)
+            * ((1u64 << self.cell_bits) - 1);
+        64 - max_sum.leading_zeros()
+    }
+}
+
+/// In-situ multiply-accumulate unit: a group of crossbars sharing an input
+/// HTree, their ADCs, and shift-and-add reduction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ImaConfig {
+    /// Inputs the IMA accepts per VMM (= crossbar rows under the Newton
+    /// constraint "a maximum of 128 inputs").
+    pub inputs: usize,
+    /// Output neurons produced per VMM.
+    pub outputs: usize,
+    /// Crossbars per ADC (1 for conv tiles, up to 4 for FC tiles, §III-B2).
+    pub xbars_per_adc: usize,
+    /// ADC sampling-rate slowdown vs 1.28 GS/s (1 = full rate; FC tiles run
+    /// 8x/32x/128x slower, Fig 17).
+    pub adc_slowdown: f64,
+    /// Karatsuba divide-&-conquer recursion depth (0 = off, §III-A1).
+    pub karatsuba: u32,
+}
+
+impl ImaConfig {
+    /// The paper's optimal IMA: 128 inputs -> 256 neurons.
+    pub fn newton_default() -> Self {
+        ImaConfig {
+            inputs: 128,
+            outputs: 256,
+            xbars_per_adc: 1,
+            adc_slowdown: 1.0,
+            karatsuba: 0,
+        }
+    }
+
+    /// ISAAC IMA: 8 crossbars, unconstrained input feed.
+    pub fn isaac_default() -> Self {
+        ImaConfig {
+            inputs: 128,
+            outputs: 128,
+            xbars_per_adc: 1,
+            adc_slowdown: 1.0,
+            karatsuba: 0,
+        }
+    }
+
+    /// Crossbars needed for the logical (inputs x outputs) matrix at full
+    /// weight precision (no Karatsuba).
+    pub fn xbars(&self, p: &XbarParams) -> usize {
+        let row_groups = self.inputs.div_ceil(p.rows);
+        let col_xbars = (self.outputs * p.slices()).div_ceil(p.cols);
+        row_groups * col_xbars
+    }
+
+    /// ADCs in the IMA.
+    pub fn adcs(&self, p: &XbarParams) -> usize {
+        self.xbars(p).div_ceil(self.xbars_per_adc)
+    }
+
+    /// Peak 16-bit ops per second (1 MAC = 2 ops, ISAAC counting).
+    pub fn peak_gops(&self, p: &XbarParams) -> f64 {
+        let macs = (self.inputs * self.outputs) as f64;
+        2.0 * macs / p.vmm_ns() / 1.0 // ns -> GOPS: ops/ns = GOPS
+    }
+}
+
+/// Tile flavour (§III-B2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileKind {
+    Conv,
+    Fc,
+}
+
+/// A tile: eDRAM buffer + IMAs + digital units + router share.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TileConfig {
+    pub kind: TileKind,
+    pub imas_per_tile: usize,
+    pub ima: ImaConfig,
+    /// eDRAM input buffer per tile, KB.
+    pub edram_kb: f64,
+    /// Output-HTree width in bits per neuron result carried to the tile
+    /// output register (39 for ISAAC's full accumulator, 16 once the
+    /// adaptive ADC clamps/rounds at the source, Fig 12).
+    pub out_htree_bits: u32,
+    /// Input HTree provisioned for this many independent input streams
+    /// (ISAAC worst case: one per crossbar; Newton constrained: 1).
+    pub in_streams: usize,
+}
+
+impl TileConfig {
+    pub fn newton_conv() -> Self {
+        TileConfig {
+            kind: TileKind::Conv,
+            imas_per_tile: 16,
+            ima: ImaConfig::newton_default(),
+            edram_kb: 16.0,
+            out_htree_bits: 16,
+            in_streams: 1,
+        }
+    }
+
+    pub fn newton_fc() -> Self {
+        TileConfig {
+            kind: TileKind::Fc,
+            imas_per_tile: 16,
+            ima: ImaConfig {
+                xbars_per_adc: 4,
+                adc_slowdown: 128.0,
+                ..ImaConfig::newton_default()
+            },
+            edram_kb: 4.0,
+            out_htree_bits: 16,
+            in_streams: 1,
+        }
+    }
+
+    pub fn isaac() -> Self {
+        TileConfig {
+            kind: TileKind::Conv,
+            imas_per_tile: 12,
+            ima: ImaConfig::isaac_default(),
+            edram_kb: 64.0,
+            out_htree_bits: 39,
+            // ISAAC's HTree can feed every crossbar an independent stream.
+            in_streams: 8,
+        }
+    }
+
+    /// Peak tile throughput in GOPS.
+    pub fn peak_gops(&self, p: &XbarParams) -> f64 {
+        self.imas_per_tile as f64 * self.ima.peak_gops(p) / self.ima.adc_slowdown
+    }
+}
+
+/// Which Newton techniques are enabled — the incremental-results axis of
+/// Figs 11/12/14/16/19/20.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NewtonFeatures {
+    /// Constrained mapping + compact HTree (§III-C first enhancement).
+    pub constrained_mapping: bool,
+    /// Adaptive (heterogeneous-resolution) SAR ADC sampling (§III-A3).
+    pub adaptive_adc: bool,
+    /// Karatsuba divide & conquer depth (0 = off).
+    pub karatsuba: u32,
+    /// Layer spreading for small eDRAM buffers (§III-B1).
+    pub small_buffers: bool,
+    /// Heterogeneous conv/FC tiles (§III-B2).
+    pub hetero_tiles: bool,
+    /// Strassen's algorithm across IMAs (§III-A2).
+    pub strassen: bool,
+}
+
+impl NewtonFeatures {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Everything on — the full Newton design point.
+    pub fn all() -> Self {
+        NewtonFeatures {
+            constrained_mapping: true,
+            adaptive_adc: true,
+            karatsuba: 1,
+            small_buffers: true,
+            hetero_tiles: true,
+            strassen: true,
+        }
+    }
+
+    /// The incremental stacking order used by the paper's results section.
+    pub fn incremental() -> Vec<(&'static str, NewtonFeatures)> {
+        let mut f = NewtonFeatures::none();
+        let mut out = vec![("isaac", f)];
+        f.constrained_mapping = true;
+        out.push(("+constrained-htree", f));
+        f.adaptive_adc = true;
+        out.push(("+adaptive-adc", f));
+        f.karatsuba = 1;
+        out.push(("+karatsuba", f));
+        f.small_buffers = true;
+        out.push(("+small-buffers", f));
+        f.strassen = true;
+        out.push(("+strassen", f));
+        f.hetero_tiles = true;
+        out.push(("+fc-tiles (newton)", f));
+        out
+    }
+}
+
+/// Whole-chip configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChipConfig {
+    pub xbar: XbarParams,
+    pub conv_tile: TileConfig,
+    pub fc_tile: TileConfig,
+    pub features: NewtonFeatures,
+    /// Tiles sharing one router (ISAAC: 4).
+    pub tiles_per_router: usize,
+    /// Router payload bandwidth, GB/s per router.
+    pub router_gbps: f64,
+    /// Off-chip HyperTransport links per chip.
+    pub ht_links: usize,
+    /// Max tiles per chip (area budget guard).
+    pub max_tiles: usize,
+}
+
+impl ChipConfig {
+    pub fn isaac() -> Self {
+        ChipConfig {
+            xbar: XbarParams::default(),
+            conv_tile: TileConfig::isaac(),
+            fc_tile: TileConfig::isaac(),
+            features: NewtonFeatures::none(),
+            tiles_per_router: 4,
+            router_gbps: 32.0,
+            ht_links: 4,
+            max_tiles: 168,
+        }
+    }
+
+    pub fn newton() -> Self {
+        Self::newton_with(NewtonFeatures::all())
+    }
+
+    /// Newton hardware with a chosen feature subset. Disabled features fall
+    /// back to the ISAAC provisioning for the corresponding resource.
+    pub fn newton_with(features: NewtonFeatures) -> Self {
+        let mut conv = TileConfig::newton_conv();
+        conv.ima.karatsuba = features.karatsuba;
+        if !features.constrained_mapping {
+            conv.in_streams = TileConfig::isaac().in_streams;
+        }
+        if !features.adaptive_adc {
+            conv.out_htree_bits = 39;
+        }
+        if !features.small_buffers {
+            conv.edram_kb = 64.0;
+        }
+        let fc = if features.hetero_tiles {
+            let mut fc = TileConfig::newton_fc();
+            fc.ima.karatsuba = features.karatsuba;
+            fc
+        } else {
+            conv
+        };
+        ChipConfig {
+            xbar: XbarParams::default(),
+            conv_tile: conv,
+            fc_tile: fc,
+            features,
+            tiles_per_router: 4,
+            router_gbps: 32.0,
+            ht_links: 4,
+            max_tiles: 168,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_xbar_matches_paper() {
+        let p = XbarParams::default();
+        assert_eq!(p.slices(), 8);
+        assert_eq!(p.iters(), 16);
+        assert_eq!(p.weights_per_xbar(), 2048);
+        assert_eq!(p.vmm_ns(), 1600.0);
+        // 128 rows * 1-bit DAC * 2-bit cells -> 384 needs 9 bits
+        assert_eq!(p.lossless_adc_bits(), 9);
+    }
+
+    #[test]
+    fn newton_ima_is_16_xbars_256_neurons() {
+        let p = XbarParams::default();
+        let ima = ImaConfig::newton_default();
+        assert_eq!(ima.xbars(&p), 16);
+        assert_eq!(ima.adcs(&p), 16);
+        // 128x256 MACs per 1.6us = 40.96 GOPS
+        assert!((ima.peak_gops(&p) - 40.96).abs() < 1e-9);
+    }
+
+    #[test]
+    fn isaac_ima_is_8_xbars() {
+        let p = XbarParams::default();
+        assert_eq!(ImaConfig::isaac_default().xbars(&p), 8);
+    }
+
+    #[test]
+    fn fc_tile_shares_adcs() {
+        let p = XbarParams::default();
+        let fc = TileConfig::newton_fc();
+        assert_eq!(fc.ima.adcs(&p), 4);
+        assert_eq!(fc.ima.xbars(&p), 16);
+    }
+
+    #[test]
+    fn incremental_ends_at_full_newton() {
+        let steps = NewtonFeatures::incremental();
+        assert_eq!(steps.len(), 7);
+        assert_eq!(steps.last().unwrap().1, NewtonFeatures::all());
+        assert_eq!(steps[0].1, NewtonFeatures::none());
+    }
+
+    #[test]
+    fn newton_without_small_buffers_keeps_isaac_edram() {
+        let f = NewtonFeatures {
+            small_buffers: false,
+            ..NewtonFeatures::all()
+        };
+        assert_eq!(ChipConfig::newton_with(f).conv_tile.edram_kb, 64.0);
+        assert_eq!(ChipConfig::newton().conv_tile.edram_kb, 16.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Dynamic batcher: collects inference requests into fixed-shape batches.
+//!
+//! The crossbar pipeline (and the AOT-compiled stage artifacts) work on a
+//! fixed batch shape, so the batcher pads short batches with zero images
+//! and remembers how many rows are real. A batch closes when it is full or
+//! when the oldest request has waited `max_wait` (vLLM-style deadline).
+
+use std::time::{Duration, Instant};
+
+/// A request queued for inference.
+#[derive(Debug)]
+pub struct PendingRequest {
+    pub id: u64,
+    pub image: Vec<i32>,
+    pub enqueued: Instant,
+}
+
+/// A closed batch ready for the stage pipeline.
+#[derive(Debug)]
+pub struct Batch {
+    pub ids: Vec<u64>,
+    /// Flattened batch-major data, padded to `capacity` images.
+    pub data: Vec<i32>,
+    /// Real images in the batch (the rest is padding).
+    pub n_real: usize,
+    pub enqueued: Vec<Instant>,
+}
+
+/// Fixed-shape batch assembler.
+pub struct Batcher {
+    capacity: usize,
+    image_elems: usize,
+    max_wait: Duration,
+    pending: Vec<PendingRequest>,
+}
+
+impl Batcher {
+    pub fn new(capacity: usize, image_elems: usize, max_wait: Duration) -> Self {
+        assert!(capacity > 0 && image_elems > 0);
+        Batcher {
+            capacity,
+            image_elems,
+            max_wait,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Queue a request. Panics if the image shape is wrong (callers validate
+    /// at the API edge).
+    pub fn push(&mut self, req: PendingRequest) {
+        assert_eq!(req.image.len(), self.image_elems, "bad image shape");
+        self.pending.push(req);
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True if a batch should close now (full, or deadline hit).
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.pending.len() >= self.capacity {
+            return true;
+        }
+        match self.pending.first() {
+            Some(first) => now.duration_since(first.enqueued) >= self.max_wait,
+            None => false,
+        }
+    }
+
+    /// Close and return a batch (padded to capacity), or None if empty.
+    pub fn take_batch(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let n = self.pending.len().min(self.capacity);
+        let taken: Vec<PendingRequest> = self.pending.drain(..n).collect();
+        let mut data = Vec::with_capacity(self.capacity * self.image_elems);
+        let mut ids = Vec::with_capacity(n);
+        let mut enqueued = Vec::with_capacity(n);
+        for r in &taken {
+            ids.push(r.id);
+            enqueued.push(r.enqueued);
+            data.extend_from_slice(&r.image);
+        }
+        data.resize(self.capacity * self.image_elems, 0);
+        Some(Batch {
+            ids,
+            data,
+            n_real: n,
+            enqueued,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, elems: usize) -> PendingRequest {
+        PendingRequest {
+            id,
+            image: vec![id as i32; elems],
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fills_to_capacity() {
+        let mut b = Batcher::new(4, 2, Duration::from_secs(60));
+        for i in 0..5 {
+            b.push(req(i, 2));
+        }
+        assert!(b.ready(Instant::now()));
+        let batch = b.take_batch().unwrap();
+        assert_eq!(batch.n_real, 4);
+        assert_eq!(batch.ids, vec![0, 1, 2, 3]);
+        assert_eq!(batch.data.len(), 8);
+        assert_eq!(b.pending_len(), 1);
+    }
+
+    #[test]
+    fn pads_short_batches() {
+        let mut b = Batcher::new(4, 3, Duration::from_millis(0));
+        b.push(req(7, 3));
+        assert!(b.ready(Instant::now()));
+        let batch = b.take_batch().unwrap();
+        assert_eq!(batch.n_real, 1);
+        assert_eq!(batch.data.len(), 12);
+        assert_eq!(&batch.data[..3], &[7, 7, 7]);
+        assert!(batch.data[3..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn deadline_closes_partial_batch() {
+        let mut b = Batcher::new(8, 1, Duration::from_millis(5));
+        b.push(req(1, 1));
+        assert!(!b.ready(Instant::now()));
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn empty_batcher_not_ready() {
+        let b = Batcher::new(8, 1, Duration::from_millis(0));
+        assert!(!b.ready(Instant::now()));
+        let mut b = b;
+        assert!(b.take_batch().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "bad image shape")]
+    fn rejects_wrong_shape() {
+        let mut b = Batcher::new(2, 4, Duration::from_secs(1));
+        b.push(req(1, 4 + 1));
+    }
+}

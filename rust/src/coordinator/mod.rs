@@ -1,0 +1,106 @@
+//! L3 coordinator: the serving stack on top of the PJRT runtime.
+//!
+//! Newton is an inference accelerator, so the L3 contribution is a serving
+//! pipeline shaped like the chip itself: requests are routed to a leader,
+//! batched (the crossbar pipeline works on fixed-shape batches, like tiles
+//! working on fixed 128-input VMMs), and pushed through one worker thread
+//! per pipeline *stage* — the software analogue of the paper's inter-tile
+//! pipeline, where stage k's tiles hand neuron outputs to stage k+1's tiles
+//! over the mesh. Stage artifacts are the per-stage HLO modules produced by
+//! `python/compile/aot.py`; weights ride inside them ("in-situ").
+//!
+//! Alongside the real numerics, the coordinator reports *simulated* hardware
+//! metrics for the served model by running the same analytic pipeline model
+//! used for the paper's figures on the newton-mini geometry.
+
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{Batch, Batcher};
+pub use server::{PipelineServer, ServerConfig, ServerReport};
+
+use crate::workloads::{Layer, Network};
+
+/// The newton-mini CNN served by the examples (mirrors
+/// `python/compile/model.py`): 32x32x3 -> conv 32/64/128 -> fc 10.
+pub fn newton_mini() -> Network {
+    let mk_conv = |cin, cout, in_hw| Layer::Conv {
+        k: 3,
+        cin,
+        cout,
+        stride: 1,
+        in_hw,
+    };
+    Network {
+        name: "newton-mini",
+        layers: vec![
+            mk_conv(3, 32, 32),
+            Layer::Pool {
+                k: 2,
+                stride: 2,
+                cin: 32,
+                in_hw: 32,
+            },
+            mk_conv(32, 64, 16),
+            Layer::Pool {
+                k: 2,
+                stride: 2,
+                cin: 64,
+                in_hw: 16,
+            },
+            mk_conv(64, 128, 8),
+            Layer::Pool {
+                k: 2,
+                stride: 2,
+                cin: 128,
+                in_hw: 8,
+            },
+            Layer::Fc {
+                inputs: 4 * 4 * 128,
+                outputs: 10,
+            },
+        ],
+    }
+}
+
+/// Argmax over a logits row (ties -> lowest index).
+pub fn argmax(logits: &[i32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn newton_mini_geometry_matches_model_py() {
+        let n = newton_mini();
+        assert_eq!(n.conv_layers().count(), 3);
+        let fc: Vec<_> = n.fc_layers().collect();
+        assert_eq!(fc.len(), 1);
+        assert_eq!(fc[0].matrix(), Some((2048, 10)));
+        // conv2: 3x3x32 -> 64 at 16x16
+        let c2 = n.conv_layers().nth(1).unwrap();
+        assert_eq!(c2.matrix(), Some((288, 64)));
+        assert_eq!(c2.out_hw(), 16);
+    }
+
+    #[test]
+    fn newton_mini_evaluates_under_the_analytic_model() {
+        let r = crate::pipeline::evaluate(&newton_mini(), &crate::config::ChipConfig::newton());
+        assert!(r.energy_per_op_pj > 0.0 && r.energy_per_op_pj < 20.0);
+        assert!(r.throughput > 0.0);
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[1, 5, 5, 2]), 1);
+        assert_eq!(argmax(&[-3, -1, -2]), 1);
+        assert_eq!(argmax(&[7]), 0);
+    }
+}

@@ -1,0 +1,281 @@
+//! Pipeline inference server: leader + one worker thread per stage.
+//!
+//! Topology (mirrors the chip's inter-tile pipeline):
+//!
+//! ```text
+//!   clients -> leader (router + batcher)
+//!          -> stage0 thread -> stage1 -> stage2 -> stage3 (threads)
+//!          -> completion router -> per-request response channels
+//! ```
+//!
+//! Each stage thread owns its *own* PJRT client and compiled artifact (PJRT
+//! handles are not Send; per-stage clients also model per-tile-group
+//! hardware). Activations move between stages as host `Vec<i32>` — the
+//! software analogue of neuron values crossing the tile mesh.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::batcher::{Batcher, PendingRequest};
+use crate::runtime::Runtime;
+use crate::util::median;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifacts_dir: PathBuf,
+    /// Stage artifact names, in pipeline order.
+    pub stages: Vec<String>,
+    /// Batch capacity (must match the stage artifacts' leading dim).
+    pub batch: usize,
+    /// Elements per input image.
+    pub image_elems: usize,
+    /// Batch-close deadline.
+    pub max_wait: Duration,
+}
+
+impl ServerConfig {
+    /// The newton-mini 4-stage pipeline at batch 8.
+    pub fn newton_mini(artifacts_dir: PathBuf) -> Self {
+        ServerConfig {
+            artifacts_dir,
+            stages: (0..4).map(|s| format!("stage{s}_b8")).collect(),
+            batch: 8,
+            image_elems: 32 * 32 * 3,
+            max_wait: Duration::from_millis(20),
+        }
+    }
+}
+
+/// One completed inference.
+#[derive(Clone, Debug)]
+pub struct InferenceResult {
+    pub id: u64,
+    pub logits: Vec<i32>,
+    pub latency: Duration,
+}
+
+struct StageBatch {
+    ids: Vec<u64>,
+    enqueued: Vec<Instant>,
+    n_real: usize,
+    data: Vec<i32>,
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug)]
+pub struct ServerReport {
+    pub completed: usize,
+    pub batches: usize,
+    pub wall: Duration,
+    pub throughput_rps: f64,
+    pub latency_p50_ms: f64,
+    pub latency_max_ms: f64,
+    /// Mean per-batch pipeline occupancy (real images / capacity).
+    pub batch_fill: f64,
+}
+
+/// The running server: request sender + worker handles.
+pub struct PipelineServer {
+    req_tx: Option<Sender<PendingRequest>>,
+    res_rx: Receiver<InferenceResult>,
+    handles: Vec<JoinHandle<Result<()>>>,
+    batch: usize,
+    next_id: u64,
+    batches_submitted: usize,
+}
+
+impl PipelineServer {
+    /// Spawn the leader + stage threads. Fails fast if any stage artifact
+    /// is missing or does not compile.
+    pub fn start(cfg: ServerConfig) -> Result<PipelineServer> {
+        // Pre-flight on the main thread for crisp errors.
+        {
+            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            for s in &cfg.stages {
+                rt.manifest.artifact(s)?;
+            }
+        }
+
+        let (req_tx, req_rx) = channel::<PendingRequest>();
+        let mut handles = Vec::new();
+
+        // stage channels: leader -> s0 -> s1 -> ... -> completion
+        let mut stage_rx: Receiver<StageBatch>;
+        let (leader_out, first_rx) = channel::<StageBatch>();
+        stage_rx = first_rx;
+
+        // Leader: batcher loop.
+        let leader_cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut batcher = Batcher::new(
+                leader_cfg.batch,
+                leader_cfg.image_elems,
+                leader_cfg.max_wait,
+            );
+            loop {
+                // Block for the first request, then drain greedily.
+                match req_rx.recv_timeout(Duration::from_millis(5)) {
+                    Ok(r) => batcher.push(r),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        // flush and exit
+                        while let Some(b) = batcher.take_batch() {
+                            let _ = leader_out.send(StageBatch {
+                                ids: b.ids,
+                                enqueued: b.enqueued,
+                                n_real: b.n_real,
+                                data: b.data,
+                            });
+                        }
+                        return Ok(());
+                    }
+                }
+                while let Ok(r) = req_rx.try_recv() {
+                    batcher.push(r);
+                }
+                while batcher.ready(Instant::now()) {
+                    if let Some(b) = batcher.take_batch() {
+                        leader_out
+                            .send(StageBatch {
+                                ids: b.ids,
+                                enqueued: b.enqueued,
+                                n_real: b.n_real,
+                                data: b.data,
+                            })
+                            .map_err(|_| anyhow!("pipeline closed"))?;
+                    }
+                }
+            }
+        }));
+
+        // Stage threads.
+        for stage_name in cfg.stages.clone() {
+            let (tx, rx_next) = channel::<StageBatch>();
+            let dir = cfg.artifacts_dir.clone();
+            let rx = stage_rx;
+            stage_rx = rx_next;
+            handles.push(std::thread::spawn(move || -> Result<()> {
+                let mut rt =
+                    Runtime::new(&dir).with_context(|| format!("stage {stage_name}: runtime"))?;
+                rt.compile(&stage_name)?;
+                for mut batch in rx.iter() {
+                    batch.data = rt.run(&stage_name, &batch.data)?;
+                    if tx.send(batch).is_err() {
+                        break; // downstream closed
+                    }
+                }
+                Ok(())
+            }));
+        }
+
+        // Completion router: split batch outputs back into per-request
+        // results.
+        let (res_tx, res_rx) = channel::<InferenceResult>();
+        let batch_cap = cfg.batch;
+        let final_rx = stage_rx;
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            for batch in final_rx.iter() {
+                let per = batch.data.len() / batch_cap;
+                for (i, id) in batch.ids.iter().enumerate().take(batch.n_real) {
+                    let logits = batch.data[i * per..(i + 1) * per].to_vec();
+                    let latency = batch.enqueued[i].elapsed();
+                    if res_tx
+                        .send(InferenceResult {
+                            id: *id,
+                            logits,
+                            latency,
+                        })
+                        .is_err()
+                    {
+                        return Ok(());
+                    }
+                }
+            }
+            Ok(())
+        }));
+
+        Ok(PipelineServer {
+            req_tx: Some(req_tx),
+            res_rx,
+            handles,
+            batch: cfg.batch,
+            next_id: 0,
+            batches_submitted: 0,
+        })
+    }
+
+    /// Submit one image; returns its request id.
+    pub fn submit(&mut self, image: Vec<i32>) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        if id as usize % self.batch == 0 {
+            self.batches_submitted += 1;
+        }
+        self.req_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("server draining"))?
+            .send(PendingRequest {
+                id,
+                image,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow!("pipeline closed"))?;
+        Ok(id)
+    }
+
+    /// Collect `n` results (blocking).
+    pub fn collect(&self, n: usize) -> Result<Vec<InferenceResult>> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            out.push(
+                self.res_rx
+                    .recv_timeout(Duration::from_secs(120))
+                    .map_err(|e| anyhow!("waiting for results: {e:?}"))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Stop accepting requests, drain workers, and summarise.
+    pub fn shutdown(mut self, results: &[InferenceResult], wall: Duration) -> ServerReport {
+        self.req_tx.take(); // closes the leader
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let lat_ms: Vec<f64> = results
+            .iter()
+            .map(|r| r.latency.as_secs_f64() * 1e3)
+            .collect();
+        let completed = results.len();
+        let batches = completed.div_ceil(self.batch);
+        ServerReport {
+            completed,
+            batches,
+            wall,
+            throughput_rps: completed as f64 / wall.as_secs_f64(),
+            latency_p50_ms: if lat_ms.is_empty() { 0.0 } else { median(&lat_ms) },
+            latency_max_ms: lat_ms.iter().cloned().fold(0.0, f64::max),
+            batch_fill: completed as f64 / (batches * self.batch).max(1) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // End-to-end server tests live in rust/tests/serving.rs (they need the
+    // artifacts). Here: config shape only.
+    #[test]
+    fn newton_mini_config() {
+        let c = ServerConfig::newton_mini(PathBuf::from("artifacts"));
+        assert_eq!(c.stages.len(), 4);
+        assert_eq!(c.batch, 8);
+        assert_eq!(c.image_elems, 3072);
+    }
+}

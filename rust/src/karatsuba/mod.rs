@@ -1,0 +1,280 @@
+//! Karatsuba bit-level divide & conquer (paper §III-A1, Figs 3, 9, 13, 14).
+//!
+//! Two halves: a *functional* decomposition (verified bit-exact against the
+//! plain pipeline, mirroring the L1 kernel's `karatsuba_vmm`) and a
+//! *schedule model* that accounts crossbars, iterations and ADC samples for
+//! recursion depth `k` — the quantities that drive the Fig 13/14 results.
+//!
+//! Recursion follows the paper's construction: level `k` splits the two
+//! equal-half products again, while the (n/2+1)-bit middle term
+//! `(X1+X0)(W1+W0)` always runs as a plain bit-serial product (Fig 9 maps it
+//! onto the right crossbars of the mats). The middle term starts as soon as
+//! the first sub-phase ends, overlapping with the sub-products' own middle
+//! terms (this is how k=2 ends up *faster* than the 16-iteration baseline).
+
+use crate::config::XbarParams;
+use crate::xbar::{biased_product, scale_clamp, Matrix};
+
+/// One timeline phase: `adcs` converters busy for `iters` iterations.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Phase {
+    pub iters: usize,
+    pub adcs: usize,
+}
+
+/// Hardware cost of a divide-&-conquer VMM schedule on one IMA.
+#[derive(Clone, Debug)]
+pub struct DncSchedule {
+    /// Crossbars actually holding weights (per baseline-slice group).
+    pub xbars_used: usize,
+    /// Crossbars allocated (mat structure rounds up; Fig 9: 16 for 13 used).
+    pub xbars_allocated: usize,
+    /// Critical-path iterations for one full VMM.
+    pub time_iters: usize,
+    /// Total ADC samples per output column (the energy driver).
+    pub adc_samples: usize,
+    /// Busy phases on the critical path.
+    pub phases: Vec<Phase>,
+    /// Recursion depth.
+    pub k: u32,
+}
+
+fn iters_of(in_bits: u32, p: &XbarParams) -> usize {
+    (in_bits as usize).div_ceil(p.dac_bits as usize)
+}
+
+fn slices_of(w_bits: u32, p: &XbarParams) -> usize {
+    (w_bits as usize).div_ceil(p.cell_bits as usize)
+}
+
+struct Sub {
+    time: usize,
+    first_phase: usize,
+    samples: usize,
+    xbars: usize,
+}
+
+fn build(in_bits: u32, w_bits: u32, k: u32, p: &XbarParams) -> Sub {
+    if k == 0 {
+        let it = iters_of(in_bits, p);
+        let sl = slices_of(w_bits, p);
+        return Sub {
+            time: it,
+            first_phase: it,
+            samples: it * sl,
+            xbars: sl,
+        };
+    }
+    let hi = in_bits / 2;
+    let hw = w_bits / 2;
+    let sub = build(hi, hw, k - 1, p);
+    let mid = build(hi + 1, hw + 1, 0, p);
+    Sub {
+        // the two half products run in parallel; the middle term starts
+        // when their first phase frees its ADCs
+        time: (sub.first_phase + mid.time).max(sub.time),
+        first_phase: sub.first_phase,
+        samples: 2 * sub.samples + mid.samples,
+        xbars: 2 * sub.xbars + mid.xbars,
+    }
+}
+
+impl DncSchedule {
+    /// Schedule for a full-width VMM at recursion depth `k` (k = 0 is the
+    /// plain bit-serial baseline).
+    pub fn new(k: u32, p: &XbarParams) -> Self {
+        let s = build(p.input_bits, p.weight_bits, k, p);
+        let baseline_slices = slices_of(p.weight_bits, p);
+        // mats pair two crossbars behind one ADC/DAC (Fig 9); allocation
+        // rounds up to the mat structure, at least one mat per baseline
+        // slice position.
+        let allocated = if k == 0 {
+            baseline_slices
+        } else {
+            (2 * baseline_slices).max(s.xbars.div_ceil(2) * 2)
+        };
+        let phases = Self::phases_of(k, p);
+        DncSchedule {
+            xbars_used: s.xbars,
+            xbars_allocated: allocated,
+            time_iters: s.time,
+            adc_samples: s.samples,
+            phases,
+            k,
+        }
+    }
+
+    fn phases_of(k: u32, p: &XbarParams) -> Vec<Phase> {
+        match k {
+            0 => vec![Phase {
+                iters: iters_of(p.input_bits, p),
+                adcs: slices_of(p.weight_bits, p),
+            }],
+            _ => {
+                // first phase: all equal-half leaf products in parallel;
+                // afterwards the middle terms drain.
+                let s = build(p.input_bits, p.weight_bits, k, p);
+                let leaf_in = p.input_bits >> k;
+                let leaf_sl = slices_of(p.weight_bits >> k, p);
+                let leaves = 1usize << k;
+                let first = Phase {
+                    iters: iters_of(leaf_in, p),
+                    adcs: leaves * leaf_sl,
+                };
+                let rest_iters = s.time - first.iters;
+                let rest_samples = s.samples - first.iters * first.adcs;
+                let rest = Phase {
+                    iters: rest_iters,
+                    adcs: rest_samples.div_ceil(rest_iters.max(1)),
+                };
+                vec![first, rest]
+            }
+        }
+    }
+
+    /// ADC-work ratio vs the k=0 baseline — the adaptive-energy multiplier
+    /// the pipeline model applies when Karatsuba is on.
+    pub fn adc_work_ratio(&self, p: &XbarParams) -> f64 {
+        let base = iters_of(p.input_bits, p) * slices_of(p.weight_bits, p);
+        self.adc_samples as f64 / base as f64
+    }
+
+    /// Execution-time ratio vs baseline.
+    pub fn time_ratio(&self, p: &XbarParams) -> f64 {
+        self.time_iters as f64 / iters_of(p.input_bits, p) as f64
+    }
+
+    /// Crossbar-area ratio vs baseline (xbars allocated per slice group).
+    pub fn xbar_ratio(&self, p: &XbarParams) -> f64 {
+        self.xbars_allocated as f64 / slices_of(p.weight_bits, p) as f64
+    }
+
+    /// Fraction of the allocated ADCs busy over the VMM window (the paper's
+    /// "ADCs end up being used 75% of the time in the 1700 ns window").
+    pub fn adc_busy_frac(&self, p: &XbarParams) -> f64 {
+        let adcs = slices_of(p.weight_bits, p); // ADCs per mat group
+        self.adc_samples as f64 / (self.time_iters as f64 * adcs as f64)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Functional Karatsuba (bit-exact; mirrors kernels/crossbar.py)
+// ---------------------------------------------------------------------------
+
+/// Signed VMM through one level of Karatsuba on the crossbar pipeline.
+pub fn karatsuba_vmm_raw(x: &Matrix, w: &Matrix, p: &XbarParams) -> Matrix {
+    assert!(p.input_bits % 2 == 0 && p.weight_bits % 2 == 0);
+    let hi = p.input_bits / 2;
+    let hw = p.weight_bits / 2;
+    let bias = 1i64 << (p.weight_bits - 1);
+    let mi = (1i64 << hi) - 1;
+    let mw = (1i64 << hw) - 1;
+
+    let x0 = Matrix::from_fn(x.rows, x.cols, |r, c| x.at(r, c) & mi);
+    let x1 = Matrix::from_fn(x.rows, x.cols, |r, c| x.at(r, c) >> hi);
+    let w0 = Matrix::from_fn(w.rows, w.cols, |r, c| (w.at(r, c) + bias) & mw);
+    let w1 = Matrix::from_fn(w.rows, w.cols, |r, c| (w.at(r, c) + bias) >> hw);
+    let xs = Matrix::from_fn(x.rows, x.cols, |r, c| x0.at(r, c) + x1.at(r, c));
+    let ws = Matrix::from_fn(w.rows, w.cols, |r, c| w0.at(r, c) + w1.at(r, c));
+
+    let p00 = biased_product(&x0, &w0, hi, hw, p, false);
+    let p11 = biased_product(&x1, &w1, hi, hw, p, false);
+    let pm = biased_product(&xs, &ws, hi + 1, hw + 1, p, false);
+
+    Matrix::from_fn(x.rows, w.cols, |r, c| {
+        let sx: i64 = (0..x.cols).map(|k| x.at(r, k)).sum();
+        let v = (p11.at(r, c) << (hi + hw))
+            + ((pm.at(r, c) - p11.at(r, c) - p00.at(r, c)) << hw)
+            + p00.at(r, c);
+        v - bias * sx
+    })
+}
+
+/// Karatsuba VMM with the standard scaling stage.
+pub fn karatsuba_vmm(x: &Matrix, w: &Matrix, p: &XbarParams) -> Matrix {
+    scale_clamp(&karatsuba_vmm_raw(x, w, p), p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::xbar::matmul;
+
+    fn p() -> XbarParams {
+        XbarParams::default()
+    }
+
+    #[test]
+    fn k0_is_the_baseline() {
+        let s = DncSchedule::new(0, &p());
+        assert_eq!(s.time_iters, 16);
+        assert_eq!(s.adc_samples, 128);
+        assert_eq!(s.xbars_allocated, 8);
+        assert!((s.adc_work_ratio(&p()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k1_matches_paper_schedule() {
+        // Paper: 8 ADCs for 8 iterations, then 5 ADCs for 9 iterations;
+        // 109 samples = 15% less work; 17 iterations; 16 xbars per IMA slot.
+        let s = DncSchedule::new(1, &p());
+        assert_eq!(s.time_iters, 17);
+        assert_eq!(s.adc_samples, 2 * 8 * 4 + 9 * 5);
+        assert_eq!(s.adc_samples, 109);
+        assert_eq!(s.xbars_used, 13);
+        assert_eq!(s.xbars_allocated, 16);
+        let ratio = s.adc_work_ratio(&p());
+        assert!((ratio - 109.0 / 128.0).abs() < 1e-12);
+        // "reduced by 15%"
+        assert!((1.0 - ratio - 0.148).abs() < 0.01);
+        // busy fraction ~0.75-0.80
+        let busy = s.adc_busy_frac(&p());
+        assert!((0.70..0.85).contains(&busy), "{busy}");
+    }
+
+    #[test]
+    fn k2_is_faster_and_cheaper_but_bigger() {
+        let s1 = DncSchedule::new(1, &p());
+        let s2 = DncSchedule::new(2, &p());
+        // paper: 20 crossbars, ~13% faster than baseline, more ADC savings
+        assert_eq!(s2.xbars_used, 19);
+        assert_eq!(s2.xbars_allocated, 20);
+        assert!(s2.time_iters < 16, "{}", s2.time_iters);
+        assert!(s2.adc_samples < s1.adc_samples);
+        assert!(s2.xbars_allocated > s1.xbars_allocated);
+    }
+
+    #[test]
+    fn functional_karatsuba_is_bit_exact() {
+        let pp = p();
+        let mut rng = Rng::new(9);
+        let x = Matrix::from_fn(3, pp.rows, |_, _| rng.range_i64(0, 1 << 16));
+        let w = Matrix::from_fn(pp.rows, 11, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
+        let got = karatsuba_vmm(&x, &w, &pp);
+        let want = scale_clamp(&matmul(&x, &w), &pp);
+        assert_eq!(got, want);
+        assert_eq!(karatsuba_vmm_raw(&x, &w, &pp), matmul(&x, &w));
+    }
+
+    #[test]
+    fn deeper_recursion_monotone_adc_savings() {
+        let pp = p();
+        let r: Vec<f64> = (0..3)
+            .map(|k| DncSchedule::new(k, &pp).adc_work_ratio(&pp))
+            .collect();
+        assert!(r[0] > r[1] && r[1] > r[2], "{r:?}");
+    }
+
+    #[test]
+    fn phases_cover_all_samples() {
+        for k in 0..3 {
+            let s = DncSchedule::new(k, &p());
+            let by_phase: usize = s.phases.iter().map(|ph| ph.iters * ph.adcs).sum();
+            // phase boxes over-approximate (rest phase rounds adcs up)
+            assert!(by_phase >= s.adc_samples);
+            let t: usize = s.phases.iter().map(|ph| ph.iters).sum();
+            assert_eq!(t, s.time_iters);
+        }
+    }
+}

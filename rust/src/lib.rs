@@ -1,0 +1,38 @@
+//! # newton — crossbar-accelerator simulator & serving stack
+//!
+//! A reproduction of *"Newton: Gravitating Towards the Physical Limits of
+//! Crossbar Acceleration"* (Nag et al.). The paper's substrate — memristor
+//! crossbars, SAR ADCs, eDRAM tiles, HTree interconnect — is simulated
+//! (see DESIGN.md §Substitutions); the paper's evaluation is an analytic,
+//! deterministic model, which this crate reimplements bottom-up from the
+//! published component constants, plus a functional bit-accurate crossbar
+//! pipeline and a serving coordinator that executes real inference through
+//! AOT-compiled XLA artifacts (PJRT).
+//!
+//! Layer map (DESIGN.md):
+//! * L1 — `python/compile/kernels/crossbar.py` (Pallas, build-time); its
+//!   bit-exact twin lives in [`xbar`] so the rust side can verify artifacts.
+//! * L2 — `python/compile/model.py` (JAX, build-time).
+//! * L3 — this crate: [`coordinator`] + [`runtime`] on the request path,
+//!   everything else is the architecture model regenerating the paper's
+//!   tables and figures (see `rust/benches/`).
+
+pub mod adc;
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod karatsuba;
+pub mod mapping;
+pub mod metrics;
+pub mod pipeline;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod strassen;
+pub mod tiles;
+pub mod util;
+pub mod workloads;
+pub mod xbar;
+
+pub use config::{ChipConfig, ImaConfig, NewtonFeatures, TileConfig, XbarParams};

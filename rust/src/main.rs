@@ -1,0 +1,269 @@
+//! `newton` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   report                     headline Newton-vs-ISAAC comparison
+//!   simulate --net <name>      analytic evaluation of one workload
+//!   incremental                Fig-20-style technique stacking table
+//!   sweep --what ima|buffer|fc design-space sweeps (Figs 10/15/17/18)
+//!   verify                     run artifacts against golden test vectors
+//!   serve --requests N         batched serving demo over the PJRT runtime
+//!   list                       workloads and artifacts available
+
+use anyhow::{anyhow, bail, Result};
+
+use newton::cli::Args;
+use newton::config::{ChipConfig, ImaConfig, XbarParams};
+use newton::coordinator::{newton_mini, PipelineServer, ServerConfig};
+use newton::mapping::{self, Mapping, MappingPolicy};
+use newton::metrics;
+use newton::pipeline::evaluate;
+use newton::runtime::{default_artifacts_dir, Runtime};
+use newton::tiles;
+use newton::util::{f1, f2, Rng, Table};
+use newton::workloads::{self, Network};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("report");
+    let r = match cmd {
+        "report" => cmd_report(),
+        "simulate" => cmd_simulate(&args),
+        "incremental" => cmd_incremental(),
+        "sweep" => cmd_sweep(&args),
+        "verify" => cmd_verify(&args),
+        "serve" => cmd_serve(&args),
+        "export" => cmd_export(&args),
+        "list" => cmd_list(),
+        other => Err(anyhow!(
+            "unknown command {other:?}; try report|simulate|incremental|sweep|verify|serve|export|list"
+        )),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn find_net(name: &str) -> Result<Network> {
+    if name == "newton-mini" {
+        return Ok(newton_mini());
+    }
+    workloads::suite()
+        .into_iter()
+        .find(|n| n.name == name)
+        .ok_or_else(|| anyhow!("unknown net {name:?}; see `newton list`"))
+}
+
+fn cmd_report() -> Result<()> {
+    let nets = workloads::suite();
+    let h = metrics::headline(&nets);
+    println!("Newton vs ISAAC (geomean over the Table-II suite)");
+    println!("  power decrease        : {:5.1}%  (paper: 77%)", h.power_decrease * 100.0);
+    println!("  energy decrease       : {:5.1}%  (paper: 51%)", h.energy_decrease * 100.0);
+    println!("  throughput/area ratio : {:5.2}x (paper: 2.2x)", h.throughput_area_ratio);
+    println!("  energy per op (newton): {:5.2} pJ (paper: 0.85 pJ)", h.newton_pj_per_op);
+    println!("  energy per op (isaac) : {:5.2} pJ (paper: 1.8 pJ)", h.isaac_pj_per_op);
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let name = args.get_or("net", "vgg-a");
+    let net = find_net(name)?;
+    let chip = if args.has_flag("isaac") {
+        ChipConfig::isaac()
+    } else {
+        ChipConfig::newton()
+    };
+    let r = evaluate(&net, &chip);
+    println!("{name} on {}", if args.has_flag("isaac") { "ISAAC" } else { "Newton" });
+    println!("  throughput    : {:.1} images/s", r.throughput);
+    println!("  latency       : {:.1} us", r.latency_us);
+    println!("  peak power    : {:.2} W", r.peak_power_w);
+    println!("  avg power     : {:.2} W", r.avg_power_w);
+    println!("  energy/image  : {:.3} mJ", r.energy_per_image_mj);
+    println!("  energy/op     : {:.2} pJ", r.energy_per_op_pj);
+    println!("  area          : {:.1} mm² ({} conv + {} fc tiles)", r.area_mm2, r.conv_tiles, r.fc_tiles);
+    println!("  CE (delivered): {:.0} GOPS/mm²", r.ce_eff);
+    println!("  PE (delivered): {:.0} GOPS/W", r.pe_eff);
+    Ok(())
+}
+
+fn cmd_incremental() -> Result<()> {
+    let nets = workloads::suite();
+    let rows = metrics::incremental_progression(&nets);
+    let mut t = Table::new(&[
+        "design point",
+        "peak CE",
+        "peak PE",
+        "pJ/op",
+        "peak W",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.label.to_string(),
+            f1(r.peak.ce_gops_mm2),
+            f1(r.peak.pe_gops_w),
+            f2(r.energy_per_op_pj),
+            f2(r.peak_power_w),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let what = args.get_or("what", "ima");
+    let nets = workloads::suite();
+    let p = XbarParams::default();
+    match what {
+        "ima" => {
+            let mut t = Table::new(&["IMA (in x out)", "under-utilization %"]);
+            for (i, o) in [(128, 64), (128, 128), (128, 256), (256, 256), (512, 512), (2048, 1024), (8192, 1024)] {
+                let ima = ImaConfig {
+                    inputs: i,
+                    outputs: o,
+                    ..ImaConfig::newton_default()
+                };
+                let u = mapping::avg_underutilization(&nets, &ima, &p, 16);
+                t.row(&[format!("{i}x{o}"), f1(u * 100.0)]);
+            }
+            t.print();
+        }
+        "buffer" => {
+            let mut t = Table::new(&["image", "worst-case KB", "spread KB"]);
+            for w in [32usize, 64, 128, 224, 256, 512] {
+                let (mut worst, mut avg) = (0.0f64, 0.0f64);
+                for n in &nets {
+                    let n = n.with_input_width(w);
+                    let mw = Mapping::build(&n, &ImaConfig::newton_default(), &p, MappingPolicy::isaac(), 16);
+                    let ma = Mapping::build(&n, &ImaConfig::newton_default(), &p, MappingPolicy::newton(), 16);
+                    worst = worst.max(mw.buffer_per_tile_bytes());
+                    avg = avg.max(ma.buffer_per_tile_bytes());
+                }
+                t.row(&[w.to_string(), f1(worst / 1024.0), f1(avg / 1024.0)]);
+            }
+            t.print();
+        }
+        "fc" => {
+            let chip = ChipConfig::newton();
+            let net = workloads::vgg_a();
+            let m = Mapping::build(&net, &chip.conv_tile.ima, &p, MappingPolicy::newton(), 16);
+            println!("FC-tile ADC slowdown vs chip peak power (vgg-a):");
+            for (s, w) in tiles::fc_slowdown_sweep(&chip, &m, &[1.0, 8.0, 32.0, 128.0]) {
+                println!("  {s:>5}x : {w:.2} W");
+            }
+            println!("FC-tile xbars/ADC vs chip area (vgg-a):");
+            for (r, a) in tiles::fc_sharing_sweep(&chip, &m, &[1, 2, 4]) {
+                println!("  {r}:1   : {a:.1} mm²");
+            }
+        }
+        other => bail!("unknown sweep {other:?}; try ima|buffer|fc"),
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", ""));
+    let dir = if dir.as_os_str().is_empty() {
+        default_artifacts_dir()
+    } else {
+        dir
+    };
+    let mut rt = Runtime::new(&dir)?;
+
+    // fused model vs golden logits
+    let (_, input) = rt.manifest.load_testvec("input_b8")?;
+    let (_, want_logits) = rt.manifest.load_testvec("logits_b8")?;
+    let got = rt.run("model_b8", &input)?;
+    if got != want_logits {
+        bail!("model_b8 output mismatches golden logits");
+    }
+    println!("model_b8 matches golden logits ({} values)", got.len());
+
+    // staged pipeline == fused model
+    let mut act = input.clone();
+    for s in 0..4 {
+        act = rt.run(&format!("stage{s}_b8"), &act)?;
+        let (_, want) = rt.manifest.load_testvec(&format!("stage{s}_out_b8"))?;
+        if act != want {
+            bail!("stage{s} output mismatches golden");
+        }
+    }
+    println!("staged pipeline matches per-stage goldens");
+
+    // single-IMA VMM vs rust golden model and testvec
+    let (_, vin) = rt.manifest.load_testvec("vmm_in")?;
+    let (_, vout) = rt.manifest.load_testvec("vmm_out")?;
+    let got = rt.run("vmm_plain", &vin)?;
+    if got != vout {
+        bail!("vmm_plain mismatches golden");
+    }
+    let got_k = rt.run("vmm_karatsuba", &vin)?;
+    if got_k != vout {
+        bail!("vmm_karatsuba mismatches plain VMM");
+    }
+    println!("vmm artifacts match goldens (plain == karatsuba)");
+    println!("verify OK");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n_req = args.get_usize("requests", 64);
+    let dir = default_artifacts_dir();
+    let cfg = ServerConfig::newton_mini(dir);
+    let mut server = PipelineServer::start(cfg)?;
+
+    let mut rng = Rng::new(args.get_usize("seed", 42) as u64);
+    let t0 = std::time::Instant::now();
+    for _ in 0..n_req {
+        let img: Vec<i32> = (0..32 * 32 * 3).map(|_| rng.below(256) as i32).collect();
+        server.submit(img)?;
+    }
+    let results = server.collect(n_req)?;
+    let wall = t0.elapsed();
+    let report = server.shutdown(&results, wall);
+
+    println!("served {} requests in {:.2}s", report.completed, wall.as_secs_f64());
+    println!("  throughput : {:.1} req/s (wallclock, interpret-mode kernels)", report.throughput_rps);
+    println!("  latency p50: {:.1} ms   max: {:.1} ms", report.latency_p50_ms, report.latency_max_ms);
+    println!("  batches    : {} (fill {:.0}%)", report.batches, report.batch_fill * 100.0);
+
+    // simulated hardware-side metrics for the served model
+    let sim = evaluate(&newton_mini(), &ChipConfig::newton());
+    println!("simulated newton hardware for newton-mini:");
+    println!("  throughput : {:.0} images/s   energy/op: {:.2} pJ", sim.throughput, sim.energy_per_op_pj);
+    Ok(())
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("out", "results"));
+    let files = newton::metrics::export::export_all(&dir)?;
+    println!("wrote {} CSV series to {dir:?}:", files.len());
+    for f in files {
+        println!("  {f}");
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("workloads:");
+    for n in workloads::suite() {
+        println!(
+            "  {:10} {:3} layers  {:6.1}M weights  {:7.2}G MACs/image",
+            n.name,
+            n.layers.len(),
+            n.total_weights() as f64 / 1e6,
+            n.total_macs() as f64 / 1e9
+        );
+    }
+    println!("  newton-mini (serving demo model)");
+    if let Ok(rt) = Runtime::new(&default_artifacts_dir()) {
+        println!("artifacts:");
+        for a in rt.artifact_names() {
+            println!("  {a}");
+        }
+    } else {
+        println!("artifacts: none (run `make artifacts`)");
+    }
+    Ok(())
+}

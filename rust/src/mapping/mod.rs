@@ -1,0 +1,367 @@
+//! Layer -> IMA/tile mapping (paper §III-B1, §III-C, Figs 6, 7, 10, 15).
+//!
+//! The mapper decides, per layer: the replication factor needed to balance
+//! the inter-tile pipeline, how many IMAs the (replicated) layer occupies,
+//! how under-utilised those IMAs are, and how much eDRAM buffering the tile
+//! hosting it needs. Two policies:
+//!
+//! * **Unconstrained (ISAAC)** — crossbars from different layers can share
+//!   an IMA, so utilisation is ~perfect, but every IMA's HTree and buffers
+//!   must be provisioned for the worst case (the cost shows up in
+//!   `TileConfig::in_streams = 8` and the 64 KB buffer).
+//! * **Constrained (Newton)** — an IMA serves one layer and at most
+//!   `ima.inputs` inputs; the HTree collapses to a single shared stream and
+//!   partial sums reduce at its junctions, at the price of fragmentation
+//!   (Fig 10's under-utilisation).
+//!
+//! Buffering (Figs 6/7/15): a conv layer in steady state holds
+//! `((k-1)*W + k) * Cin` input values; replicated copies co-located in a
+//! tile *share* that buffer (Fig 6d), and spreading every layer across many
+//! tiles (Fig 7b) moves the per-tile requirement from the worst case to the
+//! average case.
+
+use crate::config::{ImaConfig, XbarParams};
+use crate::workloads::{Layer, Network};
+
+/// Mapping policy knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MappingPolicy {
+    /// Newton's single-layer-per-IMA, <=128-input constraint.
+    pub constrained: bool,
+    /// Spread layers across tiles to average buffer demand (Fig 7b).
+    pub spread_layers: bool,
+}
+
+impl MappingPolicy {
+    pub fn isaac() -> Self {
+        MappingPolicy {
+            constrained: false,
+            spread_layers: false,
+        }
+    }
+
+    pub fn newton() -> Self {
+        MappingPolicy {
+            constrained: true,
+            spread_layers: true,
+        }
+    }
+}
+
+/// Per-layer allocation result.
+#[derive(Clone, Debug)]
+pub struct LayerAlloc {
+    pub layer: Layer,
+    /// Pipeline-balance replication (1 for the slowest layer).
+    pub replication: usize,
+    /// IMAs allocated for all copies.
+    pub imas: usize,
+    /// Fraction of allocated IMA capacity holding real weights.
+    pub utilization: f64,
+    /// Steady-state input buffer for this layer (bytes, shared by copies).
+    pub buffer_bytes: f64,
+    /// Inter-layer traffic out of this layer per image (bytes).
+    pub traffic_bytes: usize,
+}
+
+/// Whole-network mapping.
+#[derive(Clone, Debug)]
+pub struct Mapping {
+    pub allocs: Vec<LayerAlloc>,
+    pub policy: MappingPolicy,
+    /// IMAs per tile used to convert IMA counts into tile counts.
+    pub imas_per_tile: usize,
+    pub conv_imas: usize,
+    pub fc_imas: usize,
+}
+
+/// Bytes per neuron value on the wire / in buffers (16-bit fixed point).
+pub const BYTES_PER_NEURON: usize = 2;
+
+fn ima_capacity(ima: &ImaConfig) -> usize {
+    ima.inputs * ima.outputs
+}
+
+impl Mapping {
+    /// Map `net` onto IMAs of shape `ima` (tile granularity `imas_per_tile`).
+    pub fn build(
+        net: &Network,
+        ima: &ImaConfig,
+        _xbar: &XbarParams,
+        policy: MappingPolicy,
+        imas_per_tile: usize,
+    ) -> Mapping {
+        // Replication balances conv layers to the slowest layer's rate
+        // (out_pixels per image; the layer producing the fewest pixels sets
+        // the pipeline period).
+        let min_pixels = net
+            .conv_layers()
+            .map(|l| l.out_hw() * l.out_hw())
+            .min()
+            .unwrap_or(1)
+            .max(1);
+
+        let mut allocs = Vec::new();
+        let mut conv_imas = 0usize;
+        let mut fc_imas = 0usize;
+        for l in &net.layers {
+            let Some((rows, cols)) = l.matrix() else {
+                continue;
+            };
+            let replication = if l.is_conv() {
+                (l.out_hw() * l.out_hw()).div_ceil(min_pixels)
+            } else {
+                1 // FC layers are off the critical path (§III-B2)
+            };
+            let used_cells = rows * cols * replication;
+            let imas = if policy.constrained {
+                // replicated copies of the SAME layer may share an IMA's
+                // output columns (the constraint forbids sharing across
+                // *different* layers, §III-C), so the copies pack together
+                rows.div_ceil(ima.inputs) * (cols * replication).div_ceil(ima.outputs)
+            } else {
+                // ISAAC packs crossbars densely across layer boundaries
+                used_cells.div_ceil(ima_capacity(ima))
+            };
+            let utilization = used_cells as f64 / (imas * ima_capacity(ima)) as f64;
+            let buffer_bytes = match *l {
+                Layer::Conv {
+                    k, cin, in_hw, ..
+                } => (((k - 1) * in_hw + k) * cin * BYTES_PER_NEURON) as f64,
+                Layer::Fc { inputs, .. } => {
+                    // inputs seen once, discarded right after (§III-B2)
+                    (inputs * BYTES_PER_NEURON) as f64
+                }
+                Layer::Rnn { inputs, .. } => {
+                    // one timestep's input + the recurrent state
+                    (inputs * BYTES_PER_NEURON) as f64
+                }
+                Layer::Pool { .. } => 0.0,
+            };
+            if l.is_fc() {
+                fc_imas += imas;
+            } else {
+                conv_imas += imas;
+            }
+            allocs.push(LayerAlloc {
+                layer: *l,
+                replication,
+                imas,
+                utilization,
+                buffer_bytes,
+                traffic_bytes: l.out_neurons() * BYTES_PER_NEURON,
+            });
+        }
+        Mapping {
+            allocs,
+            policy,
+            imas_per_tile,
+            conv_imas,
+            fc_imas,
+        }
+    }
+
+    /// Conv tiles needed (IMA granularity rounded up to tiles).
+    pub fn conv_tiles(&self) -> usize {
+        self.conv_imas.div_ceil(self.imas_per_tile).max(1)
+    }
+
+    pub fn fc_tiles(&self) -> usize {
+        self.fc_imas.div_ceil(self.imas_per_tile)
+    }
+
+    /// Capacity-weighted crossbar under-utilisation (Fig 10's metric),
+    /// over conv layers.
+    pub fn underutilization(&self) -> f64 {
+        let (mut used, mut alloc) = (0.0f64, 0.0f64);
+        for a in self.allocs.iter().filter(|a| a.layer.is_conv()) {
+            alloc += a.imas as f64;
+            used += a.imas as f64 * a.utilization;
+        }
+        if alloc == 0.0 {
+            return 0.0;
+        }
+        1.0 - used / alloc
+    }
+
+    /// Worst-case per-tile buffer under this policy, bytes (Fig 15).
+    ///
+    /// Without spreading, a tile is dedicated to (part of) one layer: its
+    /// buffer must hold that layer's working set, divided across the tiles
+    /// the layer's *input splits* span (Fig 6a: split inputs are not
+    /// replicated). With spreading, every tile hosts a proportional slice
+    /// of every layer, so the requirement is the network average.
+    pub fn buffer_per_tile_bytes(&self) -> f64 {
+        let conv: Vec<&LayerAlloc> = self
+            .allocs
+            .iter()
+            .filter(|a| a.layer.is_conv() || a.layer.is_fc())
+            .collect();
+        if conv.is_empty() {
+            return 0.0;
+        }
+        if self.policy.spread_layers {
+            let total: f64 = conv.iter().map(|a| a.buffer_bytes).sum();
+            let tiles = (self.conv_imas + self.fc_imas).div_ceil(self.imas_per_tile).max(1);
+            total / tiles as f64
+        } else {
+            conv.iter()
+                .map(|a| {
+                    let tiles_for_layer = a.imas.div_ceil(self.imas_per_tile).max(1);
+                    // only splits along the *input* dimension reduce the
+                    // per-tile buffer (Fig 6a); replication shares it
+                    let row_splits = match a.layer.matrix() {
+                        Some((rows, _)) => rows.div_ceil(
+                            self.imas_per_tile * 128, // inputs a tile can host
+                        ),
+                        None => 1,
+                    }
+                    .clamp(1, tiles_for_layer);
+                    a.buffer_bytes / row_splits as f64
+                })
+                .fold(0.0, f64::max)
+        }
+    }
+
+    /// Total inter-layer traffic per image, bytes.
+    pub fn traffic_per_image(&self) -> usize {
+        self.allocs.iter().map(|a| a.traffic_bytes).sum()
+    }
+}
+
+/// Fig 10 sweep entry: average conv under-utilisation across a suite for a
+/// given constrained-IMA shape.
+pub fn avg_underutilization(
+    nets: &[Network],
+    ima: &ImaConfig,
+    xbar: &XbarParams,
+    imas_per_tile: usize,
+) -> f64 {
+    let vals: Vec<f64> = nets
+        .iter()
+        .map(|n| {
+            Mapping::build(n, ima, xbar, MappingPolicy::newton(), imas_per_tile)
+                .underutilization()
+        })
+        .collect();
+    crate::util::mean(&vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    fn newton_ima() -> ImaConfig {
+        ImaConfig::newton_default()
+    }
+
+    fn build(net: &Network, policy: MappingPolicy) -> Mapping {
+        Mapping::build(net, &newton_ima(), &XbarParams::default(), policy, 16)
+    }
+
+    #[test]
+    fn replication_balances_early_layers() {
+        let m = build(&workloads::vgg_a(), MappingPolicy::newton());
+        let reps: Vec<usize> = m
+            .allocs
+            .iter()
+            .filter(|a| a.layer.is_conv())
+            .map(|a| a.replication)
+            .collect();
+        // early layers replicate more; the deepest conv layer has r = 1
+        assert!(reps.first().unwrap() > reps.last().unwrap());
+        assert_eq!(*reps.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn constrained_mapping_wastes_some_crossbars() {
+        let m = build(&workloads::alexnet(), MappingPolicy::newton());
+        let u = m.underutilization();
+        assert!(u > 0.0 && u < 0.5, "{u}");
+    }
+
+    #[test]
+    fn unconstrained_mapping_packs_tightly() {
+        let m = build(&workloads::alexnet(), MappingPolicy::isaac());
+        assert!(m.underutilization() < 0.02, "{}", m.underutilization());
+    }
+
+    #[test]
+    fn default_ima_underutilization_is_about_nine_percent() {
+        // paper Fig 10: the 128x256 IMA leaves ~9% of crossbars unused on
+        // average across the suite
+        let nets = workloads::suite();
+        let u = avg_underutilization(&nets, &newton_ima(), &XbarParams::default(), 16);
+        assert!((0.03..0.20).contains(&u), "{u}");
+    }
+
+    #[test]
+    fn bigger_imas_waste_more() {
+        let nets = workloads::suite();
+        let p = XbarParams::default();
+        let small = avg_underutilization(&nets, &newton_ima(), &p, 16);
+        let big = ImaConfig {
+            inputs: 2048,
+            outputs: 1024,
+            ..newton_ima()
+        };
+        let u_big = avg_underutilization(&nets, &big, &p, 16);
+        assert!(u_big > small + 0.1, "{u_big} vs {small}");
+    }
+
+    #[test]
+    fn spreading_reduces_per_tile_buffer() {
+        for net in [workloads::vgg_a(), workloads::msra_a()] {
+            let worst = build(&net, MappingPolicy::isaac()).buffer_per_tile_bytes();
+            let avg = build(&net, MappingPolicy::newton()).buffer_per_tile_bytes();
+            assert!(
+                avg < 0.6 * worst,
+                "{}: avg {avg} vs worst {worst}",
+                net.name
+            );
+        }
+    }
+
+    #[test]
+    fn isaac_worst_case_buffer_is_around_64kb() {
+        // the paper sized ISAAC's buffer at 64 KB for the worst case
+        let worst = workloads::suite()
+            .iter()
+            .map(|n| build(n, MappingPolicy::isaac()).buffer_per_tile_bytes())
+            .fold(0.0, f64::max);
+        assert!((30_000.0..90_000.0).contains(&worst), "{worst}");
+    }
+
+    #[test]
+    fn newton_buffer_fits_16kb_at_224(){
+        let worst = workloads::suite()
+            .iter()
+            .map(|n| build(n, MappingPolicy::newton()).buffer_per_tile_bytes())
+            .fold(0.0, f64::max);
+        assert!(worst <= 16.0 * 1024.0, "{worst}");
+    }
+
+    #[test]
+    fn buffer_scales_with_image_size() {
+        let net = workloads::vgg_a();
+        let b224 = build(&net, MappingPolicy::newton()).buffer_per_tile_bytes();
+        let b448 = build(&net.with_input_width(448), MappingPolicy::newton())
+            .buffer_per_tile_bytes();
+        assert!(b448 > 1.5 * b224, "{b448} vs {b224}");
+    }
+
+    #[test]
+    fn fc_imas_dominate_for_vgg() {
+        // VGG's classifier holds ~90% of the weights -> most IMAs are FC
+        let m = build(&workloads::vgg_a(), MappingPolicy::newton());
+        assert!(m.fc_imas > m.conv_imas, "{} vs {}", m.fc_imas, m.conv_imas);
+        assert!(m.fc_tiles() > 0 && m.conv_tiles() > 0);
+    }
+
+    #[test]
+    fn traffic_counts_all_layers() {
+        let m = build(&workloads::alexnet(), MappingPolicy::newton());
+        assert!(m.traffic_per_image() > 100_000);
+    }
+}

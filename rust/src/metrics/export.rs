@@ -1,0 +1,204 @@
+//! CSV export of every figure's data series — the machine-readable output
+//! a downstream user plots (`newton export --out results/`).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ChipConfig, ImaConfig, NewtonFeatures, XbarParams};
+use crate::mapping::{self, Mapping, MappingPolicy};
+use crate::pipeline::evaluate;
+use crate::workloads;
+
+fn write_csv(dir: &Path, name: &str, header: &str, rows: &[String]) -> Result<()> {
+    let path = dir.join(name);
+    let mut f =
+        std::fs::File::create(&path).with_context(|| format!("creating {path:?}"))?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    Ok(())
+}
+
+/// Export all figure data series as CSVs into `dir`. Returns the file names
+/// written.
+pub fn export_all(dir: &Path) -> Result<Vec<String>> {
+    std::fs::create_dir_all(dir)?;
+    let nets = workloads::suite();
+    let p = XbarParams::default();
+    let mut written = Vec::new();
+
+    // fig10: under-utilisation vs IMA shape
+    {
+        let mut rows = Vec::new();
+        for (i, o) in [
+            (128usize, 64usize),
+            (128, 128),
+            (128, 256),
+            (128, 512),
+            (256, 512),
+            (512, 512),
+            (1024, 1024),
+            (2048, 1024),
+            (8192, 1024),
+        ] {
+            let ima = ImaConfig {
+                inputs: i,
+                outputs: o,
+                ..ImaConfig::newton_default()
+            };
+            let u = mapping::avg_underutilization(&nets, &ima, &p, 16);
+            rows.push(format!("{i}x{o},{u:.4}"));
+        }
+        write_csv(dir, "fig10_underutilization.csv", "ima,underutil", &rows)?;
+        written.push("fig10_underutilization.csv".into());
+    }
+
+    // fig15: buffer per tile vs image size
+    {
+        let mut rows = Vec::new();
+        for w in [64usize, 128, 224, 256, 384, 512] {
+            let worst = nets
+                .iter()
+                .map(|n| {
+                    Mapping::build(
+                        &n.with_input_width(w),
+                        &ImaConfig::newton_default(),
+                        &p,
+                        MappingPolicy::newton(),
+                        16,
+                    )
+                    .buffer_per_tile_bytes()
+                })
+                .fold(0.0f64, f64::max);
+            rows.push(format!("{w},{:.1}", worst / 1024.0));
+        }
+        write_csv(dir, "fig15_buffer_kb.csv", "image_px,buffer_kb", &rows)?;
+        written.push("fig15_buffer_kb.csv".into());
+    }
+
+    // per-net suite metrics for isaac / newton (figs 11/12/14/21/22/23 base data)
+    for (tag, chip) in [("isaac", ChipConfig::isaac()), ("newton", ChipConfig::newton())] {
+        let mut rows = Vec::new();
+        for net in &nets {
+            let r = evaluate(net, &chip);
+            rows.push(format!(
+                "{},{:.2},{:.2},{:.4},{:.2},{:.1},{:.1},{},{}",
+                net.name,
+                r.throughput,
+                r.peak_power_w,
+                r.energy_per_image_mj,
+                r.energy_per_op_pj,
+                r.area_mm2,
+                r.ce_eff,
+                r.conv_tiles,
+                r.fc_tiles
+            ));
+        }
+        let name = format!("suite_{tag}.csv");
+        write_csv(
+            dir,
+            &name,
+            "net,throughput,peak_w,energy_mj,pj_per_op,area_mm2,ce_eff,conv_tiles,fc_tiles",
+            &rows,
+        )?;
+        written.push(name);
+    }
+
+    // fig20: incremental progression
+    {
+        let mut rows = Vec::new();
+        for r in crate::metrics::incremental_progression(&nets) {
+            rows.push(format!(
+                "{},{:.1},{:.1},{:.3}",
+                r.label, r.peak.ce_gops_mm2, r.peak.pe_gops_w, r.energy_per_op_pj
+            ));
+        }
+        write_csv(dir, "fig20_incremental.csv", "step,peak_ce,peak_pe,pj_per_op", &rows)?;
+        written.push("fig20_incremental.csv".into());
+    }
+
+    // fig24: tpu comparison
+    {
+        let tpu = crate::baselines::TpuModel::default();
+        let chip8 = {
+            let mut c = ChipConfig::newton();
+            c.xbar = XbarParams {
+                weight_bits: 8,
+                input_bits: 8,
+                out_shift: 4,
+                out_bits: 8,
+                ..c.xbar
+            };
+            c
+        };
+        let mut rows = Vec::new();
+        for net in &nets {
+            let t = tpu.evaluate(net);
+            let n = evaluate(net, &chip8);
+            rows.push(format!(
+                "{},{},{:.1},{:.1},{:.3},{:.3}",
+                net.name,
+                t.batch,
+                t.throughput,
+                n.throughput,
+                t.energy_per_image_mj,
+                n.energy_per_image_mj
+            ));
+        }
+        write_csv(
+            dir,
+            "fig24_tpu.csv",
+            "net,tpu_batch,tpu_imgs,newton_imgs,tpu_mj,newton_mj",
+            &rows,
+        )?;
+        written.push("fig24_tpu.csv".into());
+    }
+
+    // feature ablation grid: every single-feature config over the suite
+    {
+        let mut rows = Vec::new();
+        for (label, f) in NewtonFeatures::incremental() {
+            let chip = if label == "isaac" {
+                ChipConfig::isaac()
+            } else {
+                ChipConfig::newton_with(f)
+            };
+            for net in &nets {
+                let r = evaluate(net, &chip);
+                rows.push(format!(
+                    "{label},{},{:.2},{:.2},{:.1}",
+                    net.name, r.energy_per_op_pj, r.peak_power_w, r.ce_eff
+                ));
+            }
+        }
+        write_csv(dir, "ablation_grid.csv", "step,net,pj_per_op,peak_w,ce_eff", &rows)?;
+        written.push("ablation_grid.csv".into());
+    }
+
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn export_writes_all_series() {
+        let dir = std::env::temp_dir().join("newton-export-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let files = export_all(&dir).unwrap();
+        assert!(files.len() >= 7);
+        for f in &files {
+            let text = std::fs::read_to_string(dir.join(f)).unwrap();
+            assert!(text.lines().count() > 1, "{f} is empty");
+            // every row has the same number of commas as the header
+            let commas = text.lines().next().unwrap().matches(',').count();
+            for l in text.lines().skip(1) {
+                assert_eq!(l.matches(',').count(), commas, "{f}: {l}");
+            }
+        }
+    }
+}

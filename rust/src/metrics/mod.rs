@@ -1,0 +1,154 @@
+//! Efficiency metrics and report assembly (CE, PE, incremental technique
+//! stacking — the Fig 20/21/22/23 machinery).
+
+pub mod export;
+
+use crate::config::{ChipConfig, NewtonFeatures};
+use crate::energy::TileModel;
+use crate::pipeline::{evaluate, WorkloadReport};
+use crate::util::geomean;
+use crate::workloads::Network;
+
+/// Peak CE/PE of a design point (conv tile only, like Fig 20).
+#[derive(Clone, Copy, Debug)]
+pub struct PeakMetrics {
+    pub ce_gops_mm2: f64,
+    pub pe_gops_w: f64,
+    pub energy_per_op_pj: f64,
+}
+
+/// Peak metrics for a chip configuration's conv tile.
+pub fn peak_metrics(chip: &ChipConfig) -> PeakMetrics {
+    let t = TileModel::with_features(
+        chip.conv_tile,
+        chip.xbar,
+        chip.features.adaptive_adc,
+        chip.features.karatsuba,
+    );
+    PeakMetrics {
+        ce_gops_mm2: t.ce(),
+        pe_gops_w: t.pe(),
+        energy_per_op_pj: t.energy_per_op_pj(),
+    }
+}
+
+/// One row of the incremental-technique progression (Fig 20): label, peak
+/// metrics, and suite-geomean workload metrics.
+#[derive(Clone, Debug)]
+pub struct IncrementalRow {
+    pub label: &'static str,
+    pub peak: PeakMetrics,
+    /// geomean over the suite
+    pub energy_per_op_pj: f64,
+    pub ce_eff: f64,
+    pub peak_power_w: f64,
+}
+
+/// Evaluate the paper's incremental stacking of techniques over a suite.
+pub fn incremental_progression(nets: &[Network]) -> Vec<IncrementalRow> {
+    NewtonFeatures::incremental()
+        .into_iter()
+        .map(|(label, f)| {
+            let chip = if label == "isaac" {
+                ChipConfig::isaac()
+            } else {
+                ChipConfig::newton_with(f)
+            };
+            let reports: Vec<WorkloadReport> =
+                nets.iter().map(|n| evaluate(n, &chip)).collect();
+            IncrementalRow {
+                label,
+                peak: peak_metrics(&chip),
+                energy_per_op_pj: geomean(
+                    &reports.iter().map(|r| r.energy_per_op_pj).collect::<Vec<_>>(),
+                ),
+                ce_eff: geomean(&reports.iter().map(|r| r.ce_eff).collect::<Vec<_>>()),
+                peak_power_w: geomean(
+                    &reports.iter().map(|r| r.peak_power_w).collect::<Vec<_>>(),
+                ),
+            }
+        })
+        .collect()
+}
+
+/// Headline comparison (abstract): Newton vs ISAAC over a suite.
+#[derive(Clone, Copy, Debug)]
+pub struct Headline {
+    /// 1 - power(newton)/power(isaac); paper: 0.77
+    pub power_decrease: f64,
+    /// 1 - energy(newton)/energy(isaac); paper: 0.51
+    pub energy_decrease: f64,
+    /// throughput-per-area ratio; paper: 2.2x
+    pub throughput_area_ratio: f64,
+    /// newton average pJ/op; paper: 0.85
+    pub newton_pj_per_op: f64,
+    /// isaac average pJ/op; paper: 1.8
+    pub isaac_pj_per_op: f64,
+}
+
+pub fn headline(nets: &[Network]) -> Headline {
+    let isaac = ChipConfig::isaac();
+    let newton = ChipConfig::newton();
+    let mut p = vec![];
+    let mut e = vec![];
+    let mut ta = vec![];
+    let mut npj = vec![];
+    let mut ipj = vec![];
+    for net in nets {
+        let i = evaluate(net, &isaac);
+        let n = evaluate(net, &newton);
+        p.push(n.peak_power_w / i.peak_power_w);
+        e.push(n.energy_per_op_pj / i.energy_per_op_pj);
+        ta.push(n.ce_eff / i.ce_eff);
+        npj.push(n.energy_per_op_pj);
+        ipj.push(i.energy_per_op_pj);
+    }
+    Headline {
+        power_decrease: 1.0 - geomean(&p),
+        energy_decrease: 1.0 - geomean(&e),
+        throughput_area_ratio: geomean(&ta),
+        newton_pj_per_op: geomean(&npj),
+        isaac_pj_per_op: geomean(&ipj),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn progression_is_monotone_in_pe() {
+        let nets = workloads::suite();
+        let rows = incremental_progression(&nets);
+        assert_eq!(rows.len(), 7);
+        // every added technique must not hurt peak power efficiency
+        for w in rows.windows(2) {
+            assert!(
+                w[1].peak.pe_gops_w >= w[0].peak.pe_gops_w * 0.98,
+                "{} -> {}: {} vs {}",
+                w[0].label,
+                w[1].label,
+                w[0].peak.pe_gops_w,
+                w[1].peak.pe_gops_w
+            );
+        }
+    }
+
+    #[test]
+    fn headline_shape() {
+        let h = headline(&workloads::suite());
+        assert!(h.power_decrease > 0.5, "{}", h.power_decrease);
+        assert!(h.energy_decrease > 0.3, "{}", h.energy_decrease);
+        assert!(h.throughput_area_ratio > 1.5, "{}", h.throughput_area_ratio);
+        assert!(h.newton_pj_per_op < h.isaac_pj_per_op);
+    }
+
+    #[test]
+    fn newton_sits_between_isaac_and_ideal() {
+        let h = headline(&workloads::suite());
+        let ideal = crate::baselines::ideal_neuron().pj_per_op;
+        assert!(h.newton_pj_per_op > ideal);
+        assert!(h.newton_pj_per_op < h.isaac_pj_per_op);
+    }
+}

@@ -1,0 +1,129 @@
+//! Discrete-event validation of the analytic pipeline model (§IV).
+//!
+//! The paper asserts that "analytical estimates are enough to capture the
+//! behavior of cycle-accurate simulations" because the dataflow has no
+//! run-time dependencies. This module *checks* that claim: it simulates the
+//! inter-tile pipeline as a deterministic tandem queue — each mapped layer
+//! is a stage whose per-image service time is `pixels / replication * vmm`,
+//! plus a router transfer stage between layers — and compares steady-state
+//! throughput/latency against `pipeline::evaluate`.
+
+use crate::config::ChipConfig;
+use crate::karatsuba::DncSchedule;
+use crate::mapping::{Mapping, MappingPolicy};
+use crate::workloads::Network;
+
+/// DES result over `n_images` streamed back-to-back.
+#[derive(Clone, Copy, Debug)]
+pub struct DesReport {
+    pub throughput: f64,
+    pub latency_us: f64,
+    pub n_stages: usize,
+}
+
+/// Simulate `n_images` through the mapped pipeline.
+pub fn simulate(net: &Network, chip: &ChipConfig, n_images: usize) -> DesReport {
+    assert!(n_images >= 2);
+    let p = &chip.xbar;
+    let policy = if chip.features.constrained_mapping {
+        MappingPolicy::newton()
+    } else {
+        MappingPolicy::isaac()
+    };
+    let mapping = Mapping::build(net, &chip.conv_tile.ima, p, policy, chip.conv_tile.imas_per_tile);
+
+    let kara_time = if chip.features.karatsuba > 0 {
+        DncSchedule::new(chip.features.karatsuba, p).time_ratio(p)
+    } else {
+        1.0
+    };
+    let vmm_ns = p.vmm_ns() * kara_time;
+
+    // per-stage service times, ns / image
+    let routers = (mapping.conv_tiles() + mapping.fc_tiles())
+        .div_ceil(chip.tiles_per_router)
+        .max(1) as f64;
+    let noc_bytes_per_ns = routers * chip.router_gbps / 8.0;
+    let mut service: Vec<f64> = Vec::new();
+    for a in &mapping.allocs {
+        let pixels = a.layer.fires().max(1) as f64;
+        service.push(pixels * vmm_ns / a.replication as f64);
+        // transfer of this layer's outputs over the mesh
+        service.push(a.traffic_bytes as f64 / noc_bytes_per_ns);
+    }
+
+    // deterministic tandem queue: done[s] = time stage s finishes its
+    // current image
+    let n_stages = service.len();
+    let mut done = vec![0.0f64; n_stages];
+    let mut first_out = 0.0;
+    let mut last_out = 0.0;
+    for img in 0..n_images {
+        let mut t_prev = 0.0f64; // arrival into stage 0
+        for (s, &svc) in service.iter().enumerate() {
+            let start = t_prev.max(done[s]);
+            let finish = start + svc;
+            done[s] = finish;
+            t_prev = finish;
+        }
+        if img == 0 {
+            first_out = t_prev;
+        }
+        last_out = t_prev;
+    }
+    DesReport {
+        throughput: (n_images - 1) as f64 / ((last_out - first_out) * 1e-9),
+        latency_us: first_out * 1e-3,
+        n_stages,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::evaluate;
+    use crate::workloads;
+
+    #[test]
+    fn des_matches_analytic_throughput() {
+        // the §IV claim: deterministic dataflow -> analytics == simulation
+        for net in [workloads::alexnet(), workloads::vgg_a(), workloads::resnet34()] {
+            for chip in [ChipConfig::isaac(), ChipConfig::newton()] {
+                let a = evaluate(&net, &chip);
+                let d = simulate(&net, &chip, 50);
+                let ratio = d.throughput / a.throughput;
+                assert!(
+                    (0.8..1.25).contains(&ratio),
+                    "{}: DES {} vs analytic {} ({ratio})",
+                    net.name,
+                    d.throughput,
+                    a.throughput
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn des_latency_is_fill_time() {
+        let net = workloads::vgg_a();
+        let chip = ChipConfig::newton();
+        let d = simulate(&net, &chip, 10);
+        // latency must exceed the single slowest stage and be finite
+        assert!(d.latency_us > 0.0 && d.latency_us.is_finite());
+        assert!(d.n_stages >= net.layers.len());
+    }
+
+    #[test]
+    fn des_throughput_stable_in_n() {
+        let net = workloads::alexnet();
+        let chip = ChipConfig::newton();
+        let d1 = simulate(&net, &chip, 20);
+        let d2 = simulate(&net, &chip, 200);
+        assert!(
+            (d1.throughput / d2.throughput - 1.0).abs() < 0.02,
+            "{} vs {}",
+            d1.throughput,
+            d2.throughput
+        );
+    }
+}

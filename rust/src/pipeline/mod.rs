@@ -1,0 +1,310 @@
+//! Deterministic workload evaluation (paper §IV "Methodology").
+//!
+//! "Since there aren't any run-time dependencies on the control flow ... of
+//! the deep networks, analytical estimates are enough to capture the
+//! behavior of cycle-accurate simulations." This module is that analytic
+//! model: given a network, a chip configuration and a mapping, it produces
+//! throughput, latency, average power, energy per image and the
+//! per-component energy breakdown — the quantities behind Figs 11-23.
+//!
+//! Timing: the intra-tile pipeline advances one crossbar read per 100 ns;
+//! a full VMM takes `iters` reads (17 for Karatsuba k=1). Conv layers are
+//! replicated so every layer produces its share of an image in the same
+//! period; the layer with the fewest output pixels sets the period
+//! (iso-throughput, like ISAAC). The router bandwidth bounds the period
+//! from below (§IV: "we allocate enough resources till the network
+//! saturates").
+
+pub mod des;
+
+use crate::adc::{AdaptiveSchedule, SarShares};
+use crate::config::ChipConfig;
+use crate::energy::constants as k;
+use crate::energy::Component;
+use crate::karatsuba::DncSchedule;
+use crate::mapping::{Mapping, MappingPolicy};
+use crate::strassen::{self, StrassenSchedule};
+use crate::tiles::ChipPlan;
+use crate::workloads::Network;
+
+/// Evaluation result for one workload on one chip configuration.
+#[derive(Clone, Debug)]
+pub struct WorkloadReport {
+    pub net: &'static str,
+    /// Inference throughput, images/s.
+    pub throughput: f64,
+    /// Single-image latency, us.
+    pub latency_us: f64,
+    /// Peak power envelope (Fig 22), W.
+    pub peak_power_w: f64,
+    /// Average power while streaming, W.
+    pub avg_power_w: f64,
+    /// Energy per image, mJ.
+    pub energy_per_image_mj: f64,
+    /// Average energy per 16-bit op, pJ (Fig 23 / headline metric).
+    pub energy_per_op_pj: f64,
+    /// Chip area, mm² (tiles; HT excluded like Fig 20).
+    pub area_mm2: f64,
+    /// Delivered throughput per area, GOPS/mm².
+    pub ce_eff: f64,
+    /// Delivered throughput per watt, GOPS/W.
+    pub pe_eff: f64,
+    /// Dynamic-energy breakdown per image.
+    pub energy_breakdown: Vec<(Component, f64)>,
+    pub conv_tiles: usize,
+    pub fc_tiles: usize,
+}
+
+/// Fraction of peak power burned while idle (clocking, leakage, refresh).
+/// [CAL] keeps avg power between the dynamic floor and the peak envelope.
+const IDLE_POWER_FRAC: f64 = 0.10;
+
+/// Evaluate one network on one chip configuration.
+pub fn evaluate(net: &Network, chip: &ChipConfig) -> WorkloadReport {
+    let p = &chip.xbar;
+    let policy = if chip.features.constrained_mapping {
+        MappingPolicy::newton()
+    } else {
+        MappingPolicy::isaac()
+    };
+    let mapping = Mapping::build(
+        net,
+        &chip.conv_tile.ima,
+        p,
+        policy,
+        chip.conv_tile.imas_per_tile,
+    );
+    let plan = ChipPlan::new(chip, &mapping);
+
+    // ---- technique activity factors -------------------------------------
+    let adc_scale = if chip.features.adaptive_adc {
+        AdaptiveSchedule::new(p, p.input_bits, p.weight_bits).energy_scale(&SarShares::default())
+    } else {
+        1.0
+    };
+    let dnc = (chip.features.karatsuba > 0).then(|| DncSchedule::new(chip.features.karatsuba, p));
+    let (kara_work, kara_time) = match &dnc {
+        Some(d) => (d.adc_work_ratio(p), d.time_ratio(p)),
+        None => (1.0, 1.0),
+    };
+
+    // ---- timing ----------------------------------------------------------
+    let vmm_ns = p.vmm_ns() * kara_time;
+    // pipeline period per image: the slowest mapped layer after
+    // replication (FC tiles are off-path with fires = 1; recurrent layers
+    // fire once per timestep and cannot be replicated)
+    let period_fires = mapping
+        .allocs
+        .iter()
+        .map(|a| a.layer.fires() as f64 / a.replication as f64)
+        .fold(1.0, f64::max);
+    let mut t_img_ns = period_fires * vmm_ns;
+    // router bound: all inter-layer traffic must fit the mesh each period
+    let routers = (plan.total_tiles().div_ceil(chip.tiles_per_router)).max(1) as f64;
+    let noc_bytes_per_ns = routers * chip.router_gbps / 8.0; // GB/s -> B/ns
+    let traffic = mapping.traffic_per_image() as f64;
+    t_img_ns = t_img_ns.max(traffic / noc_bytes_per_ns);
+    let throughput = 1e9 / t_img_ns;
+    // latency: pipelined stages drain one period per mapped compute layer
+    let n_stages = mapping.allocs.len() as f64;
+    let latency_us = n_stages * t_img_ns * 1e-3;
+
+    // ---- per-image dynamic energy ----------------------------------------
+    let adc_pj_full = k::ADC_POWER_MW * 1e-3 / k::ADC_RATE_SPS * 1e12; // ~2.42
+    let xbar_fire_pj = (k::XBAR_POWER_MW + k::DAC_ARRAY_POWER_MW + k::SH_POWER_MW)
+        * 1e-3
+        * k::CYCLE_NS; // one crossbar read incl. DAC + S&H
+    let sa_pj_per_sample = 0.05; // [CAL] shift-and-add per digitised sample
+
+    // Strassen: fraction of conv MACs on layers big enough to decompose
+    let strassen_scale = if chip.features.strassen {
+        let total: f64 = net.conv_layers().map(|l| l.macs() as f64).sum();
+        let eligible: f64 = net
+            .conv_layers()
+            .filter(|l| {
+                let (r, c) = l.matrix().unwrap();
+                strassen::eligible(r, c, p)
+            })
+            .map(|l| l.macs() as f64)
+            .sum();
+        let s = StrassenSchedule::one_level();
+        if total > 0.0 {
+            1.0 - (eligible / total) * (1.0 - s.work_ratio)
+        } else {
+            1.0
+        }
+    } else {
+        1.0
+    };
+
+    let mut adc_pj = 0.0f64;
+    let mut xbar_pj = 0.0f64;
+    let mut sa_pj = 0.0f64;
+    let mut edram_pj = 0.0f64;
+    for l in net.layers.iter() {
+        let Some((rows, cols)) = l.matrix() else { continue };
+        let outs = l.fires() as f64;
+        let row_chunks = rows.div_ceil(p.rows) as f64;
+        let col_xbars = (cols * p.slices()).div_ceil(p.cols) as f64;
+        // one sample per column per iteration per row chunk
+        let samples = outs * row_chunks * (cols * p.slices()) as f64 * p.iters() as f64;
+        adc_pj += samples * adc_pj_full * adc_scale * kara_work * strassen_scale;
+        sa_pj += samples * sa_pj_per_sample;
+        // crossbar reads track the D&C work schedule, not the wall clock
+        let fires = outs * row_chunks * col_xbars * p.iters() as f64 * kara_work;
+        xbar_pj += fires * xbar_fire_pj * strassen_scale;
+        // inputs broadcast across all columns: read once per output position
+        // per row chunk; outputs written once
+        let in_bytes = outs * rows as f64 * 2.0;
+        let out_bytes = outs * cols as f64 * 2.0;
+        edram_pj += (in_bytes + out_bytes) * k::EDRAM_PJ_PER_BYTE;
+    }
+    let noc_pj = traffic * k::NOC_PJ_PER_BYTE;
+
+    let peak = plan.breakdown();
+    let peak_power_w = peak.power_mw() / 1000.0;
+    let idle_pj = peak_power_w * IDLE_POWER_FRAC * t_img_ns * 1e3; // W * ns -> pJ
+
+    let dynamic_pj = adc_pj + xbar_pj + sa_pj + edram_pj + noc_pj;
+    let total_pj = dynamic_pj + idle_pj;
+    let energy_per_image_mj = total_pj * 1e-9;
+    let avg_power_w = total_pj * 1e-12 / (t_img_ns * 1e-9);
+
+    let total_ops = 2.0 * net.total_macs() as f64;
+    let energy_per_op_pj = total_pj / total_ops;
+    let gops_delivered = total_ops / t_img_ns; // ops/ns = GOPS
+    let area = plan.area_mm2();
+
+    WorkloadReport {
+        net: net.name,
+        throughput,
+        latency_us,
+        peak_power_w,
+        avg_power_w,
+        energy_per_image_mj,
+        energy_per_op_pj,
+        area_mm2: area,
+        ce_eff: gops_delivered / area,
+        pe_eff: gops_delivered / avg_power_w,
+        energy_breakdown: vec![
+            (Component::Adc, adc_pj),
+            (Component::Xbar, xbar_pj),
+            (Component::ShiftAdd, sa_pj),
+            (Component::Edram, edram_pj),
+            (Component::Router, noc_pj),
+            (Component::Ctrl, idle_pj),
+        ],
+        conv_tiles: plan.conv_tiles,
+        fc_tiles: plan.fc_tiles,
+    }
+}
+
+/// Evaluate the full suite; returns one report per net.
+pub fn evaluate_suite(nets: &[Network], chip: &ChipConfig) -> Vec<WorkloadReport> {
+    nets.iter().map(|n| evaluate(n, chip)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::geomean;
+    use crate::workloads;
+
+    #[test]
+    fn isaac_energy_per_op_in_the_papers_ballpark() {
+        // paper: "An average ISAAC operation consumes 1.8 pJ"
+        let r = evaluate(&workloads::vgg_a(), &ChipConfig::isaac());
+        assert!(
+            (1.0..4.0).contains(&r.energy_per_op_pj),
+            "{}",
+            r.energy_per_op_pj
+        );
+    }
+
+    #[test]
+    fn newton_beats_isaac_on_energy_everywhere() {
+        let nets = workloads::suite();
+        for net in &nets {
+            let i = evaluate(net, &ChipConfig::isaac());
+            let n = evaluate(net, &ChipConfig::newton());
+            assert!(
+                n.energy_per_op_pj < i.energy_per_op_pj,
+                "{}: {} !< {}",
+                net.name,
+                n.energy_per_op_pj,
+                i.energy_per_op_pj
+            );
+        }
+    }
+
+    #[test]
+    fn headline_ratios_have_the_right_shape() {
+        // paper headline: -77% power, -51% energy, 2.2x throughput/area
+        let nets = workloads::suite();
+        let mut e_ratio = vec![];
+        let mut p_ratio = vec![];
+        let mut ta_ratio = vec![];
+        for net in &nets {
+            let i = evaluate(net, &ChipConfig::isaac());
+            let n = evaluate(net, &ChipConfig::newton());
+            e_ratio.push(i.energy_per_op_pj / n.energy_per_op_pj);
+            p_ratio.push(n.peak_power_w / i.peak_power_w);
+            ta_ratio.push(n.ce_eff / i.ce_eff);
+        }
+        let e = geomean(&e_ratio);
+        let p = geomean(&p_ratio);
+        let ta = geomean(&ta_ratio);
+        // generous corridors: the shape must hold (energy roughly halves,
+        // power drops by well over half, throughput/area about doubles)
+        assert!(e > 1.5, "energy ratio {e}");
+        assert!(p < 0.55, "power ratio {p}");
+        assert!(ta > 1.5, "throughput/area ratio {ta}");
+    }
+
+    #[test]
+    fn adc_dominates_isaac_dynamic_energy() {
+        let r = evaluate(&workloads::vgg_b(), &ChipConfig::isaac());
+        let adc = r
+            .energy_breakdown
+            .iter()
+            .find(|(c, _)| *c == Component::Adc)
+            .unwrap()
+            .1;
+        let total: f64 = r.energy_breakdown.iter().map(|(_, e)| e).sum();
+        assert!(adc / total > 0.4, "{}", adc / total);
+    }
+
+    #[test]
+    fn throughput_is_router_or_compute_bound() {
+        let r = evaluate(&workloads::alexnet(), &ChipConfig::newton());
+        assert!(r.throughput > 100.0, "{}", r.throughput);
+        assert!(r.latency_us > 0.0);
+    }
+
+    #[test]
+    fn resnet_gains_least_from_strassen() {
+        let mut with = ChipConfig::newton();
+        with.features.strassen = true;
+        let mut without = with.clone();
+        without.features.strassen = false;
+        let gain = |net: &Network| {
+            let w = evaluate(net, &with).energy_per_op_pj;
+            let wo = evaluate(net, &without).energy_per_op_pj;
+            wo / w
+        };
+        let g_res = gain(&workloads::resnet34());
+        let g_msra = gain(&workloads::msra_c());
+        assert!(g_msra >= g_res, "{g_msra} vs {g_res}");
+    }
+
+    #[test]
+    fn suite_evaluation_is_fast_and_total() {
+        let nets = workloads::suite();
+        let reports = evaluate_suite(&nets, &ChipConfig::newton());
+        assert_eq!(reports.len(), 9);
+        for r in &reports {
+            assert!(r.energy_per_op_pj.is_finite() && r.energy_per_op_pj > 0.0);
+            assert!(r.area_mm2 > 0.0 && r.peak_power_w > 0.0);
+        }
+    }
+}

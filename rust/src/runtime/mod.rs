@@ -1,0 +1,287 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt` + manifest),
+//! compile them once on the CPU PJRT client, and execute them from the
+//! request path. Python never runs here (DESIGN.md L3 contract).
+//!
+//! HLO *text* is the interchange format — see `python/compile/aot.py` and
+//! /opt/xla-example/README.md: jax >= 0.5 emits protos with 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Tensor shape + dtype tag from the manifest (`8x32x32x3:i32`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dims: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn parse(tag: &str) -> Result<TensorSpec> {
+        let (dims_s, dtype) = tag
+            .split_once(':')
+            .ok_or_else(|| anyhow!("bad shape tag {tag:?}"))?;
+        let dims = dims_s
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            dims,
+            dtype: dtype.to_string(),
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One artifact entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub input: TensorSpec,
+    pub output: TensorSpec,
+}
+
+/// One golden test-vector entry.
+#[derive(Clone, Debug)]
+pub struct TestVecEntry {
+    pub name: String,
+    pub file: String,
+    pub spec: TensorSpec,
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub testvecs: Vec<TestVecEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let mut m = Manifest {
+            dir: dir.to_path_buf(),
+            ..Default::default()
+        };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            match toks.as_slice() {
+                ["artifact", name, file, inp, out] => {
+                    let input = TensorSpec::parse(
+                        inp.strip_prefix("in:").ok_or_else(|| anyhow!("bad in:"))?,
+                    )?;
+                    let output = TensorSpec::parse(
+                        out.strip_prefix("out:").ok_or_else(|| anyhow!("bad out:"))?,
+                    )?;
+                    m.artifacts.push(ArtifactEntry {
+                        name: name.to_string(),
+                        file: file.to_string(),
+                        input,
+                        output,
+                    });
+                }
+                ["testvec", name, file, tag] => {
+                    m.testvecs.push(TestVecEntry {
+                        name: name.to_string(),
+                        file: file.to_string(),
+                        spec: TensorSpec::parse(tag)?,
+                    });
+                }
+                _ => bail!("manifest line {}: unrecognised: {line:?}", lineno + 1),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Load a little-endian i32 test vector by name.
+    pub fn load_testvec(&self, name: &str) -> Result<(TensorSpec, Vec<i32>)> {
+        let tv = self
+            .testvecs
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow!("testvec {name:?} not in manifest"))?;
+        let bytes = std::fs::read(self.dir.join(&tv.file))?;
+        if bytes.len() != tv.spec.elements() * 4 {
+            bail!(
+                "testvec {name}: {} bytes != {} elements * 4",
+                bytes.len(),
+                tv.spec.elements()
+            );
+        }
+        let vals = bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok((tv.spec.clone(), vals))
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct CompiledArtifact {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledArtifact {
+    /// Execute on host `i32` data shaped per the manifest entry.
+    pub fn run(&self, input: &[i32]) -> Result<Vec<i32>> {
+        if input.len() != self.entry.input.elements() {
+            bail!(
+                "{}: input has {} elements, artifact wants {:?}",
+                self.entry.name,
+                input.len(),
+                self.entry.input.dims
+            );
+        }
+        let dims: Vec<i64> = self.entry.input.dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.entry.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let out = out.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let v: Vec<i32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if v.len() != self.entry.output.elements() {
+            bail!(
+                "{}: output has {} elements, manifest says {:?}",
+                self.entry.name,
+                v.len(),
+                self.entry.output.dims
+            );
+        }
+        Ok(v)
+    }
+}
+
+/// PJRT client + compiled artifact cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: HashMap<String, CompiledArtifact>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifacts directory.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Runtime {
+            manifest,
+            client,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Compile (and cache) one artifact by manifest name.
+    pub fn compile(&mut self, name: &str) -> Result<&CompiledArtifact> {
+        if !self.compiled.contains_key(name) {
+            let entry = self.manifest.artifact(name)?.clone();
+            let path = self.manifest.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.compiled
+                .insert(name.to_string(), CompiledArtifact { entry, exe });
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Compile + run in one call.
+    pub fn run(&mut self, name: &str, input: &[i32]) -> Result<Vec<i32>> {
+        self.compile(name)?;
+        self.compiled[name].run(input)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+}
+
+/// Default artifacts directory: `$NEWTON_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("NEWTON_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parses() {
+        let t = TensorSpec::parse("8x32x32x3:i32").unwrap();
+        assert_eq!(t.dims, vec![8, 32, 32, 3]);
+        assert_eq!(t.dtype, "i32");
+        assert_eq!(t.elements(), 8 * 32 * 32 * 3);
+        assert!(TensorSpec::parse("8x32").is_err());
+        assert!(TensorSpec::parse("axb:i32").is_err());
+    }
+
+    #[test]
+    fn manifest_parses_inline() {
+        let dir = std::env::temp_dir().join("newton-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "artifact m m.hlo.txt in:2x2:i32 out:2x3:i32\ntestvec v v.bin 2x2:i32\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("v.bin"),
+            1i32.to_le_bytes()
+                .iter()
+                .chain(2i32.to_le_bytes().iter())
+                .chain(3i32.to_le_bytes().iter())
+                .chain(4i32.to_le_bytes().iter())
+                .copied()
+                .collect::<Vec<u8>>(),
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        assert_eq!(m.artifact("m").unwrap().output.dims, vec![2, 3]);
+        let (spec, vals) = m.load_testvec("v").unwrap();
+        assert_eq!(spec.dims, vec![2, 2]);
+        assert_eq!(vals, vec![1, 2, 3, 4]);
+        assert!(m.artifact("nope").is_err());
+        assert!(m.load_testvec("nope").is_err());
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        let dir = std::env::temp_dir().join("newton-manifest-bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "garbage line here\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Strassen's divide & conquer for crossbar matrix multiplication
+//! (paper §III-A2, Figs 4, 8, 19).
+//!
+//! Functional half: exact Strassen over integer matrices, verified against
+//! plain matmul. Schedule half: the 7-IMA tile mapping — a 2Rx2C layer that
+//! would occupy 8 IMAs' worth of crossbars runs as 7 sub-products P0..P6
+//! (Fig 8), freeing 1 in 8 IMAs and cutting ADC work by 1/8 for eligible
+//! layers. Pre-additions on weights happen at install time; pre-additions
+//! on inputs and the post-processing run on the tile's digital units.
+
+use crate::config::XbarParams;
+use crate::xbar::{matmul, Matrix};
+
+fn sub_block(m: &Matrix, r0: usize, c0: usize, rs: usize, cs: usize) -> Matrix {
+    Matrix::from_fn(rs, cs, |r, c| m.at(r0 + r, c0 + c))
+}
+
+fn add(a: &Matrix, b: &Matrix) -> Matrix {
+    Matrix::from_fn(a.rows, a.cols, |r, c| a.at(r, c) + b.at(r, c))
+}
+
+fn sub(a: &Matrix, b: &Matrix) -> Matrix {
+    Matrix::from_fn(a.rows, a.cols, |r, c| a.at(r, c) - b.at(r, c))
+}
+
+/// One level of Strassen on even-dimension matrices; the 7 sub-products use
+/// `mul` (so the sub-products can themselves run on the crossbar pipeline).
+pub fn strassen_with(
+    x: &Matrix,
+    w: &Matrix,
+    mul: &dyn Fn(&Matrix, &Matrix) -> Matrix,
+) -> Matrix {
+    assert!(x.rows % 2 == 0 && x.cols % 2 == 0 && w.cols % 2 == 0);
+    assert_eq!(x.cols, w.rows);
+    let (hr, hk, hc) = (x.rows / 2, x.cols / 2, w.cols / 2);
+    let a11 = sub_block(x, 0, 0, hr, hk);
+    let a12 = sub_block(x, 0, hk, hr, hk);
+    let a21 = sub_block(x, hr, 0, hr, hk);
+    let a22 = sub_block(x, hr, hk, hr, hk);
+    let b11 = sub_block(w, 0, 0, hk, hc);
+    let b12 = sub_block(w, 0, hc, hk, hc);
+    let b21 = sub_block(w, hk, 0, hk, hc);
+    let b22 = sub_block(w, hk, hc, hk, hc);
+
+    // P0..P6 (Fig 4 / Fig 8 numbering)
+    let p0 = mul(&add(&a11, &a22), &add(&b11, &b22));
+    let p1 = mul(&add(&a21, &a22), &b11);
+    let p2 = mul(&a11, &sub(&b12, &b22));
+    let p3 = mul(&a22, &sub(&b21, &b11));
+    let p4 = mul(&add(&a11, &a12), &b22);
+    let p5 = mul(&sub(&a21, &a11), &add(&b11, &b12));
+    let p6 = mul(&sub(&a12, &a22), &add(&b21, &b22));
+
+    let c11 = add(&sub(&add(&p0, &p3), &p4), &p6);
+    let c12 = add(&p2, &p4);
+    let c21 = add(&p1, &p3);
+    let c22 = add(&sub(&add(&p0, &p2), &p1), &p5);
+
+    Matrix::from_fn(x.rows, w.cols, |r, c| match (r < hr, c < hc) {
+        (true, true) => c11.at(r, c),
+        (true, false) => c12.at(r, c - hc),
+        (false, true) => c21.at(r - hr, c),
+        (false, false) => c22.at(r - hr, c - hc),
+    })
+}
+
+/// Exact Strassen with plain sub-multiplies.
+pub fn strassen(x: &Matrix, w: &Matrix) -> Matrix {
+    strassen_with(x, w, &matmul)
+}
+
+/// Whether a layer's logical matrix is eligible for the 7-IMA mapping:
+/// both halves of the reduction dim and the output dim must still fill
+/// whole crossbars, otherwise decomposition just adds fragmentation
+/// (the paper: "Resnet has high wastage ... does not benefit at all").
+pub fn eligible(rows: usize, cols: usize, p: &XbarParams) -> bool {
+    rows / 2 >= p.rows && cols / 2 >= p.cols / p.slices().max(1) * 8 / 8 && cols / 2 >= 128
+}
+
+/// Resource model for one Strassen level (Fig 8).
+#[derive(Clone, Copy, Debug)]
+pub struct StrassenSchedule {
+    /// Sub-products executed (7 instead of 8).
+    pub products: usize,
+    /// Ratio of crossbar/ADC work vs the naive 8-product split.
+    pub work_ratio: f64,
+    /// Extra digital add operations per output element (post-processing).
+    pub extra_adds_per_output: f64,
+}
+
+impl StrassenSchedule {
+    pub fn one_level() -> Self {
+        StrassenSchedule {
+            products: 7,
+            work_ratio: 7.0 / 8.0,
+            // c11 needs 3 adds, c12/c21 1 each, c22 3 -> 8 adds / 4 outputs
+            extra_adds_per_output: 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use crate::xbar::{scale_clamp, vmm_raw_signed};
+
+    #[test]
+    fn strassen_equals_matmul() {
+        let mut rng = Rng::new(4);
+        let x = Matrix::from_fn(8, 6, |_, _| rng.range_i64(-100, 100));
+        let w = Matrix::from_fn(6, 10, |_, _| rng.range_i64(-100, 100));
+        assert_eq!(strassen(&x, &w), matmul(&x, &w));
+    }
+
+    #[test]
+    fn strassen_over_crossbar_pipeline_is_exact() {
+        // Sub-products run through the full analog pipeline. Strassen's
+        // pre-subtractions (A21-A11 etc.) can be negative, so the crossbar
+        // multiply uses the signed-input offset encoding; operand ranges are
+        // halved so pre-additions stay inside the 16-bit windows.
+        let p = XbarParams::default();
+        let mut rng = Rng::new(5);
+        let x = Matrix::from_fn(4, 2 * p.rows, |_, _| rng.range_i64(0, 1 << 14));
+        let w = Matrix::from_fn(2 * p.rows, 8, |_, _| rng.range_i64(-(1 << 13), 1 << 13));
+        let crossbar_mul = |a: &Matrix, b: &Matrix| vmm_raw_signed(a, b, &p, false);
+        let got = strassen_with(&x, &w, &crossbar_mul);
+        assert_eq!(got, matmul(&x, &w));
+        // and the scaled result matches the scaled oracle
+        assert_eq!(
+            scale_clamp(&got, &p),
+            scale_clamp(&matmul(&x, &w), &p)
+        );
+    }
+
+    #[test]
+    fn schedule_frees_one_in_eight() {
+        let s = StrassenSchedule::one_level();
+        assert_eq!(s.products, 7);
+        assert!((s.work_ratio - 0.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eligibility_requires_large_matrices() {
+        let p = XbarParams::default();
+        assert!(eligible(512, 512, &p));
+        assert!(!eligible(128, 512, &p)); // reduction too small to split
+        assert!(!eligible(512, 128, &p)); // outputs too small to split
+    }
+
+    #[test]
+    fn odd_dims_panic() {
+        let x = Matrix::zeros(3, 4);
+        let w = Matrix::zeros(4, 4);
+        let r = std::panic::catch_unwind(|| strassen(&x, &w));
+        assert!(r.is_err());
+    }
+}

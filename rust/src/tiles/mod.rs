@@ -1,0 +1,189 @@
+//! Heterogeneous tile composition (paper §III-B2, Figs 17, 18).
+//!
+//! Conv tiles run their ADCs at full rate; classifier (FC) tiles are
+//! weight-capacity-bound and communication-bound, never throughput-bound,
+//! so they share one ADC among several crossbars, run it 8x-128x slower,
+//! and carry a 4 KB buffer. `ChipPlan` composes a chip for one workload
+//! from its mapping.
+
+pub mod multichip;
+
+use crate::config::{ChipConfig, TileConfig};
+use crate::energy::{CostBreakdown, TileModel};
+use crate::mapping::Mapping;
+
+/// A chip provisioned for one workload: tile counts + per-kind models.
+#[derive(Clone, Debug)]
+pub struct ChipPlan {
+    pub conv_tiles: usize,
+    pub fc_tiles: usize,
+    pub conv_model: TileModel,
+    pub fc_model: TileModel,
+}
+
+impl ChipPlan {
+    /// Compose a chip for `mapping` under `chip`'s tile configurations.
+    pub fn new(chip: &ChipConfig, mapping: &Mapping) -> ChipPlan {
+        let f = &chip.features;
+        let conv_model = TileModel::with_features(
+            chip.conv_tile,
+            chip.xbar,
+            f.adaptive_adc,
+            f.karatsuba,
+        );
+        let fc_model = TileModel::with_features(
+            chip.fc_tile,
+            chip.xbar,
+            f.adaptive_adc,
+            f.karatsuba,
+        );
+        ChipPlan {
+            conv_tiles: mapping.conv_tiles(),
+            fc_tiles: mapping.fc_tiles(),
+            conv_model,
+            fc_model,
+        }
+    }
+
+    /// Whole-chip cost (tiles only; HT is accounted per chip by callers).
+    pub fn breakdown(&self) -> CostBreakdown {
+        let mut b = self.conv_model.breakdown().scaled(self.conv_tiles as f64);
+        b.merge(&self.fc_model.breakdown().scaled(self.fc_tiles as f64));
+        b
+    }
+
+    pub fn total_tiles(&self) -> usize {
+        self.conv_tiles + self.fc_tiles
+    }
+
+    pub fn area_mm2(&self) -> f64 {
+        self.breakdown().area_mm2()
+    }
+
+    pub fn peak_power_w(&self) -> f64 {
+        self.breakdown().power_mw() / 1000.0
+    }
+}
+
+/// Fig 17 sweep: chip peak power as the FC-tile ADC slowdown varies.
+pub fn fc_slowdown_sweep(
+    chip: &ChipConfig,
+    mapping: &Mapping,
+    slowdowns: &[f64],
+) -> Vec<(f64, f64)> {
+    slowdowns
+        .iter()
+        .map(|&s| {
+            let mut c = chip.clone();
+            c.fc_tile = TileConfig {
+                ima: crate::config::ImaConfig {
+                    adc_slowdown: s,
+                    ..c.fc_tile.ima
+                },
+                ..c.fc_tile
+            };
+            (s, ChipPlan::new(&c, mapping).peak_power_w())
+        })
+        .collect()
+}
+
+/// Fig 18 sweep: chip area as FC tiles share more crossbars per ADC.
+pub fn fc_sharing_sweep(
+    chip: &ChipConfig,
+    mapping: &Mapping,
+    ratios: &[usize],
+) -> Vec<(usize, f64)> {
+    ratios
+        .iter()
+        .map(|&r| {
+            let mut c = chip.clone();
+            c.fc_tile = TileConfig {
+                ima: crate::config::ImaConfig {
+                    xbars_per_adc: r,
+                    ..c.fc_tile.ima
+                },
+                ..c.fc_tile
+            };
+            (r, ChipPlan::new(&c, mapping).area_mm2())
+        })
+        .collect()
+}
+
+/// Recommended conv:fc tile ratio for single-chip workloads ("a ratio of
+/// 1:1 is a good fit for most of our workloads").
+pub fn conv_fc_ratio(mapping: &Mapping) -> f64 {
+    mapping.conv_tiles() as f64 / mapping.fc_tiles().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChipConfig, TileKind, XbarParams};
+    use crate::mapping::{Mapping, MappingPolicy};
+    use crate::workloads;
+
+    fn plan_for(net: &crate::workloads::Network, chip: &ChipConfig) -> (ChipPlan, Mapping) {
+        let m = Mapping::build(
+            net,
+            &chip.conv_tile.ima,
+            &XbarParams::default(),
+            MappingPolicy::newton(),
+            chip.conv_tile.imas_per_tile,
+        );
+        (ChipPlan::new(chip, &m), m)
+    }
+
+    #[test]
+    fn hetero_tiles_cut_power_for_fc_heavy_nets() {
+        let net = workloads::vgg_a();
+        let hetero = ChipConfig::newton();
+        let mut homo = hetero.clone();
+        homo.fc_tile = homo.conv_tile;
+        let (ph, _) = plan_for(&net, &hetero);
+        let (pm, _) = plan_for(&net, &homo);
+        // paper Fig 17: ~50% lower peak power with 128x-slow FC tiles
+        let drop = 1.0 - ph.peak_power_w() / pm.peak_power_w();
+        assert!((0.25..0.75).contains(&drop), "{drop}");
+    }
+
+    #[test]
+    fn fc_sharing_cuts_area() {
+        let net = workloads::vgg_a();
+        let chip = ChipConfig::newton();
+        let m = plan_for(&net, &chip).1;
+        let sweep = fc_sharing_sweep(&chip, &m, &[1, 2, 4]);
+        assert!(sweep[2].1 < sweep[0].1, "{sweep:?}");
+        // paper Fig 18: ~38% average chip-area saving at 4:1 — generous
+        // corridor since it varies per net
+        let save = 1.0 - sweep[2].1 / sweep[0].1;
+        assert!((0.05..0.60).contains(&save), "{save}");
+    }
+
+    #[test]
+    fn slowdown_sweep_monotone() {
+        let net = workloads::msra_a();
+        let chip = ChipConfig::newton();
+        let m = plan_for(&net, &chip).1;
+        let sweep = fc_slowdown_sweep(&chip, &m, &[8.0, 32.0, 128.0]);
+        assert!(sweep[0].1 > sweep[1].1 && sweep[1].1 > sweep[2].1, "{sweep:?}");
+    }
+
+    #[test]
+    fn resnet_needs_few_fc_tiles() {
+        // paper: "Resnet does not gain much from the heterogeneous tiles
+        // because it needs relatively fewer FC tiles"
+        let chip = ChipConfig::newton();
+        let (pr, _) = plan_for(&workloads::resnet34(), &chip);
+        let (pv, _) = plan_for(&workloads::vgg_a(), &chip);
+        let r_frac = pr.fc_tiles as f64 / pr.total_tiles() as f64;
+        let v_frac = pv.fc_tiles as f64 / pv.total_tiles() as f64;
+        assert!(r_frac < 0.5 * v_frac, "{r_frac} vs {v_frac}");
+    }
+
+    #[test]
+    fn kind_tags_are_consistent() {
+        let chip = ChipConfig::newton();
+        assert_eq!(chip.conv_tile.kind, TileKind::Conv);
+        assert_eq!(chip.fc_tile.kind, TileKind::Fc);
+    }
+}

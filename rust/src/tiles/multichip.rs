@@ -1,0 +1,138 @@
+//! Multi-chip partitioning (paper §III-B2): "For large-scale workloads that
+//! use multiple chips, each chip can be homogeneous; we use roughly an
+//! equal number of conv-chips and classifier-chips."
+//!
+//! Partitions a workload's tiles across chips under a per-chip tile
+//! budget, splits conv tiles onto conv-chips and FC tiles onto
+//! classifier-chips, and checks the HyperTransport links can carry the
+//! inter-chip activation traffic at the pipeline's rate.
+
+use crate::config::ChipConfig;
+use crate::energy::constants as k;
+use crate::mapping::Mapping;
+use crate::tiles::ChipPlan;
+
+/// Multi-chip deployment plan for one workload.
+#[derive(Clone, Debug)]
+pub struct MultiChipPlan {
+    pub conv_chips: usize,
+    pub fc_chips: usize,
+    /// Activation bytes crossing the conv/classifier chip boundary per
+    /// image (the largest inter-chip cut).
+    pub cut_bytes_per_image: usize,
+    /// Total power across chips, W (incl. HT).
+    pub total_power_w: f64,
+    /// Total silicon, mm² (incl. HT pads).
+    pub total_area_mm2: f64,
+    /// Max images/s the HT links can sustain across the cut.
+    pub ht_bound_throughput: f64,
+}
+
+impl MultiChipPlan {
+    pub fn new(chip: &ChipConfig, mapping: &Mapping, net: &crate::workloads::Network) -> Self {
+        let plan = ChipPlan::new(chip, mapping);
+        let conv_chips = plan.conv_tiles.div_ceil(chip.max_tiles).max(1);
+        let fc_chips = if plan.fc_tiles == 0 {
+            0
+        } else {
+            plan.fc_tiles.div_ceil(chip.max_tiles).max(1)
+        };
+
+        // the conv->classifier cut: activations entering the first FC layer
+        let cut_bytes_per_image = net
+            .layers
+            .iter()
+            .find(|l| l.is_fc())
+            .map(|l| match *l {
+                crate::workloads::Layer::Fc { inputs, .. } => inputs * 2,
+                _ => 0,
+            })
+            .unwrap_or(0);
+
+        let conv_b = plan.conv_model.breakdown().scaled(plan.conv_tiles as f64);
+        let fc_b = plan.fc_model.breakdown().scaled(plan.fc_tiles as f64);
+        let chips = conv_chips + fc_chips;
+        let ht_power_w = chips as f64 * k::HT_POWER_MW / 1000.0;
+        let ht_area = chips as f64 * k::HT_AREA_MM2;
+
+        let ht_bytes_per_s = chip.ht_links as f64 * k::HT_LINK_GBPS * 1e9;
+        let ht_bound_throughput = if cut_bytes_per_image == 0 {
+            f64::INFINITY
+        } else {
+            ht_bytes_per_s / cut_bytes_per_image as f64
+        };
+
+        MultiChipPlan {
+            conv_chips,
+            fc_chips,
+            cut_bytes_per_image,
+            total_power_w: (conv_b.power_mw() + fc_b.power_mw()) / 1000.0 + ht_power_w,
+            total_area_mm2: conv_b.area_mm2() + fc_b.area_mm2() + ht_area,
+            ht_bound_throughput,
+        }
+    }
+
+    pub fn chips(&self) -> usize {
+        self.conv_chips + self.fc_chips
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::XbarParams;
+    use crate::mapping::MappingPolicy;
+    use crate::pipeline::evaluate;
+    use crate::workloads;
+
+    fn plan(net: &workloads::Network) -> MultiChipPlan {
+        let chip = ChipConfig::newton();
+        let m = Mapping::build(
+            net,
+            &chip.conv_tile.ima,
+            &XbarParams::default(),
+            MappingPolicy::newton(),
+            chip.conv_tile.imas_per_tile,
+        );
+        MultiChipPlan::new(&chip, &m, net)
+    }
+
+    #[test]
+    fn msra_c_needs_multiple_chips() {
+        // 330M weights -> far beyond one chip's in-situ capacity
+        let p = plan(&workloads::msra_c());
+        assert!(p.chips() >= 2, "{}", p.chips());
+        assert!(p.fc_chips >= 1);
+    }
+
+    #[test]
+    fn resnet_fits_fewer_chips_than_msra() {
+        let r = plan(&workloads::resnet34());
+        let m = plan(&workloads::msra_c());
+        assert!(r.chips() < m.chips(), "{} vs {}", r.chips(), m.chips());
+    }
+
+    #[test]
+    fn ht_does_not_bottleneck_the_pipeline() {
+        // §IV statically routes transfers to be conflict-free; the HT links
+        // must sustain the conv->fc cut at the pipeline's rate
+        for net in workloads::suite() {
+            let p = plan(&net);
+            let a = evaluate(&net, &ChipConfig::newton());
+            assert!(
+                p.ht_bound_throughput > a.throughput,
+                "{}: HT {} img/s < pipeline {} img/s",
+                net.name,
+                p.ht_bound_throughput,
+                a.throughput
+            );
+        }
+    }
+
+    #[test]
+    fn power_includes_ht_per_chip() {
+        let p = plan(&workloads::vgg_a());
+        assert!(p.total_power_w > p.chips() as f64 * k::HT_POWER_MW / 1000.0);
+        assert!(p.total_area_mm2 > p.chips() as f64 * k::HT_AREA_MM2);
+    }
+}

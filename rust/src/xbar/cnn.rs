@@ -1,0 +1,295 @@
+//! A small CNN forward pass over the golden crossbar model — the rust twin
+//! of `python/compile/model.py` (newton-mini), used for accuracy ablations
+//! (lossy ADCs, adaptive sampling, noise) without touching PJRT.
+//!
+//! Geometry and quantisation match model.py exactly: u8-range activations,
+//! signed-7-bit weights, per-stage scaling shifts (10, 9, 9, 8), im2col
+//! convolutions chunked into 128-row crossbar pieces with digital
+//! partial-sum reduction before a single scaling stage.
+
+use crate::config::XbarParams;
+use crate::util::Rng;
+use crate::xbar::{scale_clamp, vmm_raw, Matrix};
+
+/// An activation tensor (B, H, W, C), i64 values.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub b: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<i64>,
+}
+
+impl Tensor {
+    pub fn zeros(b: usize, h: usize, w: usize, c: usize) -> Self {
+        Tensor {
+            b,
+            h,
+            w,
+            c,
+            data: vec![0; b * h * w * c],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, b: usize, y: usize, x: usize, ch: usize) -> i64 {
+        self.data[((b * self.h + y) * self.w + x) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn set(&mut self, b: usize, y: usize, x: usize, ch: usize, v: i64) {
+        self.data[((b * self.h + y) * self.w + x) * self.c + ch] = v;
+    }
+}
+
+/// newton-mini weights: three 3x3 convs (3->32->64->128) + fc 2048->10.
+pub struct MiniCnn {
+    pub convs: Vec<Matrix>, // (9*Cin, Cout)
+    pub fc: Matrix,         // (2048, 10)
+    pub shifts: [u32; 4],
+    pub act_max: i64,
+}
+
+impl MiniCnn {
+    /// Deterministic synthetic weights (|w| < 64, like model.py).
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut mk = |rows: usize, cols: usize| {
+            Matrix::from_fn(rows, cols, |_, _| rng.range_i64(-63, 64))
+        };
+        MiniCnn {
+            convs: vec![mk(27, 32), mk(288, 64), mk(576, 128)],
+            fc: mk(2048, 10),
+            shifts: [10, 9, 9, 8],
+            act_max: 255,
+        }
+    }
+
+    /// Full forward pass: (B,32,32,3) image -> (B,10) logits, with the
+    /// crossbar pipeline parameterised by `p` (lossy/adaptive configs
+    /// change the numerics; the default config is exact).
+    pub fn forward(&self, img: &Tensor, p: &XbarParams, adaptive: bool) -> Matrix {
+        let mut act = img.clone();
+        for (i, w) in self.convs.iter().enumerate() {
+            let pp = XbarParams {
+                out_shift: self.shifts[i],
+                ..*p
+            };
+            act = conv3x3(&act, w, &pp, adaptive, self.act_max);
+            act = maxpool2(&act);
+        }
+        let flat = Matrix::from_fn(act.b, act.h * act.w * act.c, |b, i| act.data[b * act.h * act.w * act.c + i]);
+        let pp = XbarParams {
+            out_shift: self.shifts[3],
+            ..*p
+        };
+        xbar_linear(&flat, &self.fc, &pp, adaptive)
+    }
+
+    /// Argmax classes for a batch of images.
+    pub fn classify(&self, img: &Tensor, p: &XbarParams, adaptive: bool) -> Vec<usize> {
+        let logits = self.forward(img, p, adaptive);
+        (0..logits.rows)
+            .map(|r| {
+                (0..logits.cols)
+                    .max_by_key(|&c| (logits.at(r, c), std::cmp::Reverse(c)))
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+/// SAME-padded 3x3 im2col.
+pub fn im2col3(x: &Tensor) -> Matrix {
+    let k = 3usize;
+    let mut out = Matrix::zeros(x.b * x.h * x.w, k * k * x.c);
+    for b in 0..x.b {
+        for y in 0..x.h {
+            for xx in 0..x.w {
+                let row = (b * x.h + y) * x.w + xx;
+                let mut col = 0;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let sy = y as isize + dy as isize - 1;
+                        let sx = xx as isize + dx as isize - 1;
+                        for ch in 0..x.c {
+                            let v = if sy >= 0
+                                && sy < x.h as isize
+                                && sx >= 0
+                                && sx < x.w as isize
+                            {
+                                x.at(b, sy as usize, sx as usize, ch)
+                            } else {
+                                0
+                            };
+                            out.set(row, col, v);
+                            col += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Chunked crossbar linear: split the reduction dim into 128-row pieces,
+/// sum raw partials digitally, then scale once (mirrors model.py).
+pub fn xbar_linear(x: &Matrix, w: &Matrix, p: &XbarParams, adaptive: bool) -> Matrix {
+    let rows = p.rows;
+    let chunks = x.cols.div_ceil(rows);
+    let mut acc = Matrix::zeros(x.rows, w.cols);
+    for ch in 0..chunks {
+        let lo = ch * rows;
+        let hi = (lo + rows).min(x.cols);
+        let xc = Matrix::from_fn(x.rows, rows, |r, c| {
+            if lo + c < hi {
+                x.at(r, lo + c)
+            } else {
+                0
+            }
+        });
+        let wc = Matrix::from_fn(rows, w.cols, |r, c| {
+            if lo + r < hi {
+                w.at(lo + r, c)
+            } else {
+                0
+            }
+        });
+        let part = vmm_raw(&xc, &wc, p, adaptive);
+        for i in 0..acc.data.len() {
+            acc.data[i] += part.data[i];
+        }
+    }
+    scale_clamp(&acc, p)
+}
+
+fn conv3x3(x: &Tensor, w: &Matrix, p: &XbarParams, adaptive: bool, act_max: i64) -> Tensor {
+    let patches = im2col3(x);
+    let y = xbar_linear(&patches, w, p, adaptive);
+    let mut out = Tensor::zeros(x.b, x.h, x.w, w.cols);
+    for r in 0..y.rows {
+        for c in 0..y.cols {
+            out.data[r * w.cols + c] = y.at(r, c).clamp(0, act_max); // relu8
+        }
+    }
+    out
+}
+
+fn maxpool2(x: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(x.b, x.h / 2, x.w / 2, x.c);
+    for b in 0..x.b {
+        for y in 0..out.h {
+            for xx in 0..out.w {
+                for c in 0..x.c {
+                    let m = x
+                        .at(b, 2 * y, 2 * xx, c)
+                        .max(x.at(b, 2 * y + 1, 2 * xx, c))
+                        .max(x.at(b, 2 * y, 2 * xx + 1, c))
+                        .max(x.at(b, 2 * y + 1, 2 * xx + 1, c));
+                    out.set(b, y, xx, c, m);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Random u8-range test images.
+pub fn random_images(b: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut t = Tensor::zeros(b, 32, 32, 3);
+    for v in t.data.iter_mut() {
+        *v = rng.below(256) as i64;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let cnn = MiniCnn::new(0);
+        let img = random_images(1, 1);
+        let logits = cnn.forward(&img, &XbarParams::default(), false);
+        assert_eq!((logits.rows, logits.cols), (1, 10));
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release or see ablation_adc_accuracy bench")]
+    fn default_config_deterministic() {
+        let cnn = MiniCnn::new(0);
+        let img = random_images(2, 2);
+        let p = XbarParams::default();
+        assert_eq!(cnn.forward(&img, &p, false).data, cnn.forward(&img, &p, false).data);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release or see ablation_adc_accuracy bench")]
+    fn adaptive_adc_preserves_classification() {
+        // the paper's zero-accuracy-impact claim, end-to-end at model scale
+        let cnn = MiniCnn::new(0);
+        let img = random_images(4, 3);
+        let p = XbarParams::default();
+        let exact = cnn.classify(&img, &p, false);
+        let adaptive = cnn.classify(&img, &p, true);
+        assert_eq!(exact, adaptive);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release or see ablation_adc_accuracy bench")]
+    fn lossy_adc_degrades_but_deterministically() {
+        // Without ISAAC's data-encoding trick, a *truncating* 8-bit ADC
+        // accumulates a systematic rounding bias across the 128 samples per
+        // output and wrecks classification — which is exactly why the paper
+        // keeps a lossless 9-bit budget and only gates bits *outside* the
+        // kept window (the adaptive scheme, tested above, stays exact).
+        let cnn = MiniCnn::new(0);
+        let img = random_images(4, 4);
+        let lossy = XbarParams {
+            adc_bits: 8,
+            ..XbarParams::default()
+        };
+        let a = cnn.classify(&img, &lossy, false);
+        let b = cnn.classify(&img, &lossy, false);
+        assert_eq!(a, b, "lossy path must still be deterministic");
+        // 9-bit is bit-exact by construction
+        let exact = cnn.classify(&img, &XbarParams::default(), false);
+        let nine = cnn.classify(
+            &img,
+            &XbarParams {
+                adc_bits: 9,
+                ..XbarParams::default()
+            },
+            false,
+        );
+        assert_eq!(exact, nine);
+    }
+
+    #[test]
+    fn im2col_centre_tap() {
+        let mut x = Tensor::zeros(1, 4, 4, 2);
+        x.set(0, 1, 1, 0, 7);
+        x.set(0, 1, 1, 1, 9);
+        let p = im2col3(&x);
+        let row = (0 * 4 + 1) * 4 + 1;
+        // centre tap = patch position (1,1) -> columns (1*3+1)*2 ..
+        assert_eq!(p.at(row, (1 * 3 + 1) * 2), 7);
+        assert_eq!(p.at(row, (1 * 3 + 1) * 2 + 1), 9);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn relu_and_pool_ranges() {
+        let cnn = MiniCnn::new(0);
+        let img = random_images(1, 5);
+        // run one conv stage manually
+        let y = conv3x3(&img, &cnn.convs[0], &XbarParams { out_shift: 10, ..Default::default() }, false, 255);
+        assert!(y.data.iter().all(|&v| (0..=255).contains(&v)));
+        let p = maxpool2(&y);
+        assert_eq!((p.h, p.w), (16, 16));
+    }
+}

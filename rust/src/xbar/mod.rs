@@ -1,0 +1,297 @@
+//! Bit-accurate functional model of the analog crossbar pipeline — the rust
+//! twin of `python/compile/kernels/crossbar.py` (L1).
+//!
+//! Used by the coordinator's golden-model verification path, the examples
+//! that run without PJRT, and the property tests that pin down the numeric
+//! contract the artifacts must satisfy: with the default lossless ADC the
+//! whole pipeline equals `clamp(round_half_up((x @ w) >> out_shift))`.
+
+pub mod cnn;
+pub mod noise;
+
+use crate::config::XbarParams;
+
+/// A dense signed matrix in row-major order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> i64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i64) {
+        self.data[r * self.cols + c] = v;
+    }
+}
+
+/// Plain exact matmul (the oracle).
+pub fn matmul(x: &Matrix, w: &Matrix) -> Matrix {
+    assert_eq!(x.cols, w.rows);
+    let mut out = Matrix::zeros(x.rows, w.cols);
+    for r in 0..x.rows {
+        for k in 0..x.cols {
+            let xv = x.at(r, k);
+            if xv == 0 {
+                continue;
+            }
+            for c in 0..w.cols {
+                out.data[r * w.cols + c] += xv * w.at(k, c);
+            }
+        }
+    }
+    out
+}
+
+/// ADC digitisation of one analog column sum (mirrors `adc_sample`).
+fn adc_sample(col_sum: i64, place: u32, p: &XbarParams, adaptive: bool) -> i64 {
+    let mut q = col_sum;
+    let lossy = p.lossless_adc_bits() as i64 - p.adc_bits as i64;
+    if lossy > 0 {
+        let half = 1i64 << (lossy - 1);
+        q = ((q + half) >> lossy) << lossy;
+    }
+    if adaptive && place < p.out_shift {
+        let d = (p.out_shift - place) as i64;
+        let half = 1i64 << (d - 1);
+        q = ((q + half) >> d) << d;
+    }
+    q
+}
+
+/// Raw biased product `x @ wb` through the bit-serial + ADC pipeline.
+/// `x` unsigned (`in_bits` wide), `wb` unsigned (`w_bits` wide).
+///
+/// Hot-path layout (EXPERIMENTS.md §Perf): weight cell planes are sliced
+/// once into flat `slices x K x N` buffers; per (batch row, iteration) the
+/// active input bits stream through all slice planes with linear column
+/// accumulation — ~40x over the naive per-element bit-extraction loop.
+pub fn biased_product(
+    x: &Matrix,
+    wb: &Matrix,
+    in_bits: u32,
+    w_bits: u32,
+    p: &XbarParams,
+    adaptive: bool,
+) -> Matrix {
+    assert_eq!(x.cols, wb.rows);
+    assert!(x.cols <= p.rows, "reduction dim exceeds crossbar rows");
+    let iters = (in_bits as usize).div_ceil(p.dac_bits as usize);
+    let slices = (w_bits as usize).div_ceil(p.cell_bits as usize);
+    let dac_mask = (1i64 << p.dac_bits) - 1;
+    let cell_mask = (1i64 << p.cell_bits) - 1;
+    let (kdim, n) = (x.cols, wb.cols);
+
+    // install-time weight slicing: planes[s][k][c], flat
+    let mut planes = vec![0i64; slices * kdim * n];
+    for s in 0..slices {
+        let shift = s as u32 * p.cell_bits;
+        for k in 0..kdim {
+            let dst = &mut planes[(s * kdim + k) * n..(s * kdim + k) * n + n];
+            let src = &wb.data[k * n..k * n + n];
+            for c in 0..n {
+                dst[c] = (src[c] >> shift) & cell_mask;
+            }
+        }
+    }
+
+    let mut acc = Matrix::zeros(x.rows, n);
+    let mut cols = vec![0i64; slices * n]; // per-(i) analog column sums
+    for r in 0..x.rows {
+        for i in 0..iters {
+            let shift = i as u32 * p.dac_bits;
+            cols.fill(0);
+            for k in 0..kdim {
+                let xb = (x.at(r, k) >> shift) & dac_mask;
+                if xb == 0 {
+                    continue;
+                }
+                for s in 0..slices {
+                    let row = &planes[(s * kdim + k) * n..(s * kdim + k) * n + n];
+                    let dst = &mut cols[s * n..s * n + n];
+                    if xb == 1 {
+                        for c in 0..n {
+                            dst[c] += row[c];
+                        }
+                    } else {
+                        for c in 0..n {
+                            dst[c] += xb * row[c];
+                        }
+                    }
+                }
+            }
+            let lossless = p.lossless_adc_bits() <= p.adc_bits;
+            for s in 0..slices {
+                let place = i as u32 * p.dac_bits + s as u32 * p.cell_bits;
+                let out = &mut acc.data[r * n..r * n + n];
+                let src = &cols[s * n..s * n + n];
+                if lossless && (!adaptive || place >= p.out_shift) {
+                    // identity ADC: fold straight into the accumulator
+                    for c in 0..n {
+                        out[c] += src[c] << place;
+                    }
+                } else {
+                    for c in 0..n {
+                        let q = adc_sample(src[c], place, p, adaptive);
+                        out[c] += q << place;
+                    }
+                }
+            }
+        }
+    }
+    acc
+}
+
+/// Signed raw product via bias encoding (ISAAC): store `w + 2^(wb-1)`,
+/// subtract `2^(wb-1) * sum(x)` digitally.
+pub fn vmm_raw(x: &Matrix, w: &Matrix, p: &XbarParams, adaptive: bool) -> Matrix {
+    let bias = 1i64 << (p.weight_bits - 1);
+    let wb = Matrix::from_fn(w.rows, w.cols, |r, c| w.at(r, c) + bias);
+    let mut raw = biased_product(x, &wb, p.input_bits, p.weight_bits, p, adaptive);
+    for r in 0..x.rows {
+        let sx: i64 = (0..x.cols).map(|k| x.at(r, k)).sum();
+        for c in 0..w.cols {
+            raw.data[r * w.cols + c] -= bias * sx;
+        }
+    }
+    raw
+}
+
+/// Signed-input variant: offsets inputs into the unsigned DAC window and
+/// corrects digitally (both operand biases applied). Needed by Strassen's
+/// pre-subtractions, whose operands can be negative (§III-A2).
+///
+///   x@w = (X - Bi)(Wb - Bw) = X@Wb - Bw*rowsum(X) - Bi*colsum(Wb) + K*Bi*Bw
+///
+/// where X = x + Bi, Wb = w + Bw, K = reduction length. `colsum(Wb)` is
+/// known at weight-install time.
+pub fn vmm_raw_signed(x: &Matrix, w: &Matrix, p: &XbarParams, adaptive: bool) -> Matrix {
+    let bi = 1i64 << (p.input_bits - 1);
+    let bw = 1i64 << (p.weight_bits - 1);
+    let xs = Matrix::from_fn(x.rows, x.cols, |r, c| x.at(r, c) + bi);
+    let wb = Matrix::from_fn(w.rows, w.cols, |r, c| w.at(r, c) + bw);
+    let raw = biased_product(&xs, &wb, p.input_bits, p.weight_bits, p, adaptive);
+    let k = x.cols as i64;
+    Matrix::from_fn(x.rows, w.cols, |r, c| {
+        let rowsum: i64 = (0..x.cols).map(|j| xs.at(r, j)).sum();
+        let colsum: i64 = (0..w.rows).map(|j| wb.at(j, c)).sum();
+        raw.at(r, c) - bw * rowsum - bi * colsum + k * bi * bw
+    })
+}
+
+/// Scaling stage: round-half-up shift + clamp to the signed output window.
+pub fn scale_clamp(raw: &Matrix, p: &XbarParams) -> Matrix {
+    let half = if p.out_shift > 0 {
+        1i64 << (p.out_shift - 1)
+    } else {
+        0
+    };
+    let lo = -(1i64 << (p.out_bits - 1));
+    let hi = (1i64 << (p.out_bits - 1)) - 1;
+    Matrix::from_fn(raw.rows, raw.cols, |r, c| {
+        ((raw.at(r, c) + half) >> p.out_shift).clamp(lo, hi)
+    })
+}
+
+/// Full pipeline: `clamp(round((x @ w) >> out_shift))` for lossless configs.
+pub fn vmm(x: &Matrix, w: &Matrix, p: &XbarParams) -> Matrix {
+    scale_clamp(&vmm_raw(x, w, p, false), p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_xw(seed: u64, b: usize, n: usize, p: &XbarParams) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(b, p.rows, |_, _| rng.range_i64(0, 1 << p.input_bits));
+        let w = Matrix::from_fn(p.rows, n, |_, _| {
+            rng.range_i64(-(1 << (p.weight_bits - 1)), 1 << (p.weight_bits - 1))
+        });
+        (x, w)
+    }
+
+    #[test]
+    fn pipeline_is_exact_for_default_config() {
+        let p = XbarParams::default();
+        let (x, w) = rand_xw(1, 4, 16, &p);
+        let got = vmm(&x, &w, &p);
+        let want = scale_clamp(&matmul(&x, &w), &p);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn raw_matches_matmul() {
+        let p = XbarParams::default();
+        let (x, w) = rand_xw(2, 3, 8, &p);
+        assert_eq!(vmm_raw(&x, &w, &p, false), matmul(&x, &w));
+    }
+
+    #[test]
+    fn adaptive_within_one_ulp_here() {
+        let p = XbarParams::default();
+        let (x, w) = rand_xw(3, 3, 8, &p);
+        let a = scale_clamp(&vmm_raw(&x, &w, &p, true), &p);
+        let e = scale_clamp(&matmul(&x, &w), &p);
+        for (av, ev) in a.data.iter().zip(e.data.iter()) {
+            assert!((av - ev).abs() <= 2, "{av} vs {ev}");
+        }
+    }
+
+    #[test]
+    fn clamps_at_extremes() {
+        let p = XbarParams::default();
+        let x = Matrix::from_fn(1, p.rows, |_, _| (1 << p.input_bits) - 1);
+        let w = Matrix::from_fn(p.rows, 2, |_, _| (1 << (p.weight_bits - 1)) - 1);
+        assert_eq!(vmm(&x, &w, &p).at(0, 0), (1 << (p.out_bits - 1)) - 1);
+        let wn = Matrix::from_fn(p.rows, 2, |_, _| -(1 << (p.weight_bits - 1)));
+        assert_eq!(vmm(&x, &wn, &p).at(0, 0), -(1 << (p.out_bits - 1)));
+    }
+
+    #[test]
+    fn lossy_adc_deviates_but_deterministically() {
+        let p = XbarParams {
+            adc_bits: 6,
+            out_shift: 0,
+            ..XbarParams::default()
+        };
+        let (x, w) = rand_xw(5, 2, 4, &p);
+        let a = vmm_raw(&x, &w, &p, false);
+        let b = vmm_raw(&x, &w, &p, false);
+        assert_eq!(a, b);
+        assert_ne!(a, matmul(&x, &w));
+    }
+
+    #[test]
+    fn zero_in_zero_out() {
+        let p = XbarParams::default();
+        let x = Matrix::zeros(2, p.rows);
+        let w = Matrix::from_fn(p.rows, 3, |r, c| (r + c) as i64);
+        assert!(vmm(&x, &w, &p).data.iter().all(|&v| v == 0));
+    }
+}

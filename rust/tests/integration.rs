@@ -1,0 +1,162 @@
+//! Cross-module integration tests: mapping + tiles + pipeline + metrics
+//! must agree with each other and with the paper's qualitative claims.
+
+use newton::config::{ChipConfig, ImaConfig, NewtonFeatures, XbarParams};
+use newton::energy::{Component, TileModel};
+use newton::mapping::{Mapping, MappingPolicy};
+use newton::metrics;
+use newton::pipeline::{evaluate, evaluate_suite};
+use newton::tiles::ChipPlan;
+use newton::util::geomean;
+use newton::workloads;
+
+#[test]
+fn every_feature_helps_energy_on_the_suite() {
+    // Each technique, enabled alone on top of the constrained baseline,
+    // must not increase the suite's geomean energy/op.
+    let nets = workloads::suite();
+    let base_features = NewtonFeatures {
+        constrained_mapping: true,
+        ..NewtonFeatures::none()
+    };
+    let base_chip = ChipConfig::newton_with(base_features);
+    let base: Vec<f64> = evaluate_suite(&nets, &base_chip)
+        .iter()
+        .map(|r| r.energy_per_op_pj)
+        .collect();
+
+    let variants: Vec<(&str, NewtonFeatures)> = vec![
+        ("adaptive_adc", NewtonFeatures { adaptive_adc: true, ..base_features }),
+        ("karatsuba", NewtonFeatures { karatsuba: 1, ..base_features }),
+        ("small_buffers", NewtonFeatures { small_buffers: true, ..base_features }),
+        ("strassen", NewtonFeatures { strassen: true, ..base_features }),
+        ("hetero_tiles", NewtonFeatures { hetero_tiles: true, ..base_features }),
+    ];
+    for (name, f) in variants {
+        let chip = ChipConfig::newton_with(f);
+        let e: Vec<f64> = evaluate_suite(&nets, &chip)
+            .iter()
+            .map(|r| r.energy_per_op_pj)
+            .collect();
+        assert!(
+            geomean(&e) <= geomean(&base) * 1.005,
+            "{name}: {} !<= {}",
+            geomean(&e),
+            geomean(&base)
+        );
+    }
+}
+
+#[test]
+fn plan_tile_counts_match_mapping() {
+    let chip = ChipConfig::newton();
+    let p = XbarParams::default();
+    for net in workloads::suite() {
+        let m = Mapping::build(&net, &chip.conv_tile.ima, &p, MappingPolicy::newton(), 16);
+        let plan = ChipPlan::new(&chip, &m);
+        assert_eq!(plan.conv_tiles, m.conv_tiles());
+        assert_eq!(plan.fc_tiles, m.fc_tiles());
+        assert!(plan.area_mm2() > 0.0 && plan.peak_power_w() > 0.0);
+    }
+}
+
+#[test]
+fn peak_metrics_bound_delivered_metrics() {
+    // delivered CE can exceed conv-tile peak CE only via FC-tile effects;
+    // for resnet (conv-dominated, few FC tiles) delivered <= ~peak.
+    let chip = ChipConfig::newton();
+    let peak = metrics::peak_metrics(&chip);
+    let r = evaluate(&workloads::resnet34(), &chip);
+    assert!(
+        r.ce_eff <= peak.ce_gops_mm2 * 1.10,
+        "delivered {} vs peak {}",
+        r.ce_eff,
+        peak.ce_gops_mm2
+    );
+}
+
+#[test]
+fn isaac_vs_newton_area_per_throughput() {
+    // headline: 2.2x throughput/area. Also check both chips actually fit
+    // a plausible tile budget for single-image pipelines.
+    let nets = workloads::suite();
+    let mut ratios = vec![];
+    for net in &nets {
+        let i = evaluate(net, &ChipConfig::isaac());
+        let n = evaluate(net, &ChipConfig::newton());
+        ratios.push(n.ce_eff / i.ce_eff);
+    }
+    let g = geomean(&ratios);
+    assert!((1.5..3.5).contains(&g), "throughput/area ratio {g}");
+}
+
+#[test]
+fn energy_breakdown_sums_to_total() {
+    let r = evaluate(&workloads::vgg_b(), &ChipConfig::newton());
+    let sum_pj: f64 = r.energy_breakdown.iter().map(|(_, e)| e).sum();
+    let total_pj = r.energy_per_image_mj * 1e9;
+    assert!(
+        (sum_pj - total_pj).abs() / total_pj < 1e-9,
+        "{sum_pj} vs {total_pj}"
+    );
+}
+
+#[test]
+fn adaptive_adc_shifts_the_breakdown_away_from_adc() {
+    let nets = [workloads::vgg_a()];
+    let mut on = ChipConfig::newton();
+    on.features.adaptive_adc = true;
+    let mut off = on.clone();
+    off.features.adaptive_adc = false;
+    let frac = |chip: &ChipConfig| {
+        let r = evaluate(&nets[0], chip);
+        let adc = r
+            .energy_breakdown
+            .iter()
+            .find(|(c, _)| *c == Component::Adc)
+            .unwrap()
+            .1;
+        let tot: f64 = r.energy_breakdown.iter().map(|(_, e)| e).sum();
+        adc / tot
+    };
+    assert!(frac(&on) < frac(&off));
+}
+
+#[test]
+fn bigger_images_cost_proportionally_more_energy() {
+    let chip = ChipConfig::newton();
+    let n224 = evaluate(&workloads::vgg_a(), &chip);
+    let n448 = evaluate(&workloads::vgg_a().with_input_width(448), &chip);
+    let ratio = n448.energy_per_image_mj / n224.energy_per_image_mj;
+    assert!((2.5..6.0).contains(&ratio), "{ratio}");
+}
+
+#[test]
+fn isaac_model_self_consistency() {
+    // The ISAAC tile model's pJ/op at peak should sit near the pipeline
+    // model's delivered pJ/op for conv-heavy nets (same constants).
+    let tile = TileModel::new(newton::config::TileConfig::isaac(), XbarParams::default());
+    let peak_pj = tile.energy_per_op_pj();
+    let r = evaluate(&workloads::resnet34(), &ChipConfig::isaac());
+    let ratio = r.energy_per_op_pj / peak_pj;
+    assert!((0.4..3.0).contains(&ratio), "delivered/peak = {ratio}");
+}
+
+#[test]
+fn ima_shape_sweep_is_stable() {
+    // the Fig-10 sweep must run over every net without panicking and give
+    // monotonically *worse* utilisation for degenerate huge IMAs
+    let nets = workloads::suite();
+    let p = XbarParams::default();
+    let mut last = 0.0;
+    for (i, o) in [(128, 256), (512, 512), (8192, 1024)] {
+        let ima = ImaConfig {
+            inputs: i,
+            outputs: o,
+            ..ImaConfig::newton_default()
+        };
+        let u = newton::mapping::avg_underutilization(&nets, &ima, &p, 16);
+        assert!(u >= last - 0.02, "{u} vs {last}");
+        last = u;
+    }
+}

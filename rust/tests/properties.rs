@@ -1,0 +1,235 @@
+//! Property tests over the coordinator-side invariants (proptest_lite
+//! harness — proptest itself is unavailable offline, DESIGN.md
+//! §Substitutions): the numeric contract of the crossbar pipeline, the
+//! D&C equivalences, ADC schedule invariants, batcher behaviour, and
+//! mapping conservation laws.
+
+use newton::adc::{AdaptiveSchedule, SarShares};
+use newton::config::{ImaConfig, XbarParams};
+use newton::coordinator::batcher::{Batcher, PendingRequest};
+use newton::karatsuba::{karatsuba_vmm_raw, DncSchedule};
+use newton::mapping::{Mapping, MappingPolicy};
+use newton::prop_assert;
+use newton::proptest_lite::check;
+use newton::strassen::{strassen, strassen_with};
+use newton::util::Rng;
+use newton::workloads;
+use newton::xbar::{matmul, scale_clamp, vmm_raw, vmm_raw_signed, Matrix};
+
+fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize, lo: i64, hi: i64) -> Matrix {
+    Matrix::from_fn(rows, cols, |_, _| rng.range_i64(lo, hi))
+}
+
+#[test]
+fn prop_pipeline_equals_matmul() {
+    let p = XbarParams::default();
+    check("pipeline==matmul", 25, |rng| {
+        let b = 1 + rng.below(4) as usize;
+        let n = 1 + rng.below(24) as usize;
+        let x = rand_matrix(rng, b, p.rows, 0, 1 << p.input_bits);
+        let w = rand_matrix(rng, p.rows, n, -(1 << 15), 1 << 15);
+        let got = vmm_raw(&x, &w, &p, false);
+        let want = matmul(&x, &w);
+        prop_assert!(got == want, "raw mismatch at {b}x{n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_signed_inputs_equal_matmul() {
+    let p = XbarParams::default();
+    check("signed==matmul", 20, |rng| {
+        let x = rand_matrix(rng, 2, p.rows, -(1 << 15), 1 << 15);
+        let w = rand_matrix(rng, p.rows, 9, -(1 << 15), 1 << 15);
+        prop_assert!(
+            vmm_raw_signed(&x, &w, &p, false) == matmul(&x, &w),
+            "signed-input encoding mismatch"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_karatsuba_equals_plain() {
+    let p = XbarParams::default();
+    check("karatsuba==plain", 20, |rng| {
+        let x = rand_matrix(rng, 2, p.rows, 0, 1 << 16);
+        let w = rand_matrix(rng, p.rows, 7, -(1 << 15), 1 << 15);
+        prop_assert!(
+            karatsuba_vmm_raw(&x, &w, &p) == vmm_raw(&x, &w, &p, false),
+            "karatsuba != plain"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_strassen_equals_matmul_any_even_shape() {
+    check("strassen==matmul", 20, |rng| {
+        let r = 2 * (1 + rng.below(5) as usize);
+        let k = 2 * (1 + rng.below(5) as usize);
+        let c = 2 * (1 + rng.below(5) as usize);
+        let x = rand_matrix(rng, r, k, -1000, 1000);
+        let w = rand_matrix(rng, k, c, -1000, 1000);
+        prop_assert!(strassen(&x, &w) == matmul(&x, &w), "{r}x{k}x{c}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_strassen_is_recursive() {
+    // strassen_with(strassen) == matmul: composability of the mul hook
+    check("strassen-recursive", 10, |rng| {
+        let x = rand_matrix(rng, 4, 4, -50, 50);
+        let w = rand_matrix(rng, 4, 4, -50, 50);
+        let nested = strassen_with(&x, &w, &|a, b| strassen(a, b));
+        prop_assert!(nested == matmul(&x, &w), "nested strassen mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scale_clamp_monotone() {
+    let p = XbarParams::default();
+    check("scale-clamp-monotone", 20, |rng| {
+        let a = rng.range_i64(-(1 << 30), 1 << 30);
+        let b = rng.range_i64(-(1 << 30), 1 << 30);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let m = |v: i64| {
+            scale_clamp(
+                &Matrix {
+                    rows: 1,
+                    cols: 1,
+                    data: vec![v],
+                },
+                &p,
+            )
+            .at(0, 0)
+        };
+        prop_assert!(m(lo) <= m(hi), "monotonicity violated: {lo} {hi}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adc_schedule_energy_scale_bounds() {
+    check("adc-energy-bounds", 30, |rng| {
+        let p = XbarParams {
+            out_shift: rng.below(16) as u32,
+            ..XbarParams::default()
+        };
+        let s = AdaptiveSchedule::new(&p, 16, 16);
+        let e = s.energy_scale(&SarShares::default());
+        prop_assert!(e > 0.0 && e <= 1.0 + 1e-9, "scale {e} out of range");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adc_tests_never_exceed_full_resolution() {
+    check("adc-tests-bounded", 20, |rng| {
+        let p = XbarParams {
+            out_shift: rng.below(20) as u32,
+            out_bits: 8 + rng.below(12) as u32,
+            ..XbarParams::default()
+        };
+        let s = AdaptiveSchedule::new(&p, 16, 16);
+        for w in &s.samples {
+            prop_assert!(w.tests <= p.adc_bits, "{} > {}", w.tests, p.adc_bits);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dnc_schedule_invariants() {
+    let p = XbarParams::default();
+    check("dnc-invariants", 3, |rng| {
+        let k = rng.below(3) as u32;
+        let s = DncSchedule::new(k, &p);
+        prop_assert!(s.adc_samples <= 128, "samples grew: {}", s.adc_samples);
+        prop_assert!(s.xbars_used <= s.xbars_allocated, "used > allocated");
+        let t: usize = s.phases.iter().map(|ph| ph.iters).sum();
+        prop_assert!(t == s.time_iters, "phase time mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    check("batcher-conservation", 20, |rng| {
+        let cap = 1 + rng.below(8) as usize;
+        let n = rng.below(40) as usize;
+        let mut b = Batcher::new(cap, 4, std::time::Duration::from_secs(0));
+        for i in 0..n {
+            b.push(PendingRequest {
+                id: i as u64,
+                image: vec![i as i32; 4],
+                enqueued: std::time::Instant::now(),
+            });
+        }
+        let mut seen = Vec::new();
+        while let Some(batch) = b.take_batch() {
+            prop_assert!(batch.n_real <= cap, "overfull batch");
+            prop_assert!(
+                batch.data.len() == cap * 4,
+                "batch not padded to capacity"
+            );
+            seen.extend(batch.ids);
+        }
+        let want: Vec<u64> = (0..n as u64).collect();
+        prop_assert!(seen == want, "requests lost or reordered: {seen:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mapping_conservation() {
+    // allocated capacity always covers used capacity; utilisation in (0,1]
+    let p = XbarParams::default();
+    let nets = workloads::suite();
+    check("mapping-conservation", 9, |rng| {
+        let net = &nets[rng.below(nets.len() as u64) as usize];
+        let ima = ImaConfig {
+            inputs: 128 << rng.below(3),
+            outputs: 64 << rng.below(4),
+            ..ImaConfig::newton_default()
+        };
+        let m = Mapping::build(net, &ima, &p, MappingPolicy::newton(), 16);
+        for a in &m.allocs {
+            prop_assert!(
+                a.utilization > 0.0 && a.utilization <= 1.0 + 1e-9,
+                "{}: util {}",
+                net.name,
+                a.utilization
+            );
+        }
+        prop_assert!(
+            m.conv_imas + m.fc_imas == m.allocs.iter().map(|a| a.imas).sum::<usize>(),
+            "ima counts disagree"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adaptive_within_bound_of_exact() {
+    // the adaptive ADC's rounding never moves a scaled output by more than
+    // the analytic bound (0.5 ulp per rounded partial + scaling round)
+    let p = XbarParams::default();
+    let n_rounded = (0..p.iters())
+        .flat_map(|i| (0..p.slices()).map(move |s| (i, s)))
+        .filter(|(i, s)| (i * p.dac_bits as usize + s * p.cell_bits as usize) < p.out_shift as usize)
+        .count() as i64;
+    let bound = n_rounded / 2 + 2;
+    check("adaptive-bounded", 10, |rng| {
+        let x = rand_matrix(rng, 2, p.rows, 0, 1 << 16);
+        let w = rand_matrix(rng, p.rows, 8, -(1 << 15), 1 << 15);
+        let a = scale_clamp(&vmm_raw(&x, &w, &p, true), &p);
+        let e = scale_clamp(&matmul(&x, &w), &p);
+        for (av, ev) in a.data.iter().zip(e.data.iter()) {
+            prop_assert!((av - ev).abs() <= bound, "{av} vs {ev} (bound {bound})");
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,177 @@
+//! End-to-end serving tests over the real PJRT runtime + AOT artifacts.
+//! These need `make artifacts` to have run; they skip (with a loud note)
+//! when the artifacts directory is absent so `cargo test` stays usable in
+//! a fresh checkout.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use newton::coordinator::{argmax, PipelineServer, ServerConfig};
+use newton::runtime::{Manifest, Runtime};
+use newton::util::Rng;
+use newton::xbar::{scale_clamp, vmm_raw, Matrix};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = newton::runtime::default_artifacts_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for name in [
+        "model_b1",
+        "model_b8",
+        "stage0_b8",
+        "stage1_b8",
+        "stage2_b8",
+        "stage3_b8",
+        "vmm_plain",
+        "vmm_karatsuba",
+    ] {
+        assert!(m.artifact(name).is_ok(), "missing {name}");
+    }
+}
+
+#[test]
+fn fused_model_matches_golden_logits() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let (_, input) = rt.manifest.load_testvec("input_b8").unwrap();
+    let (_, want) = rt.manifest.load_testvec("logits_b8").unwrap();
+    let got = rt.run("model_b8", &input).unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn staged_pipeline_equals_fused_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let (_, input) = rt.manifest.load_testvec("input_b8").unwrap();
+    let fused = rt.run("model_b8", &input).unwrap();
+    let mut act = input;
+    for s in 0..4 {
+        act = rt.run(&format!("stage{s}_b8"), &act).unwrap();
+    }
+    assert_eq!(act, fused);
+}
+
+#[test]
+fn batch1_and_batch8_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let (_, input) = rt.manifest.load_testvec("input_b8").unwrap();
+    let per = input.len() / 8;
+    let b8 = rt.run("model_b8", &input).unwrap();
+    for i in [0usize, 3, 7] {
+        let one = rt.run("model_b1", &input[i * per..(i + 1) * per]).unwrap();
+        assert_eq!(one, &b8[i * 10..(i + 1) * 10], "image {i}");
+    }
+}
+
+#[test]
+fn vmm_artifact_matches_rust_golden_model() {
+    // The L1 Pallas kernel (through PJRT) and the rust golden model must be
+    // bit-identical — the cross-language contract.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let (ispec, vin) = rt.manifest.load_testvec("vmm_in").unwrap();
+    let got = rt.run("vmm_plain", &vin).unwrap();
+
+    // reconstruct the same weights aot.py generated (numpy default_rng is
+    // not replicated here; instead solve via the golden testvec)
+    let (_, want) = rt.manifest.load_testvec("vmm_out").unwrap();
+    assert_eq!(got, want);
+    assert_eq!(ispec.dims, vec![8, 128]);
+
+    // karatsuba artifact: same numbers
+    let gk = rt.run("vmm_karatsuba", &vin).unwrap();
+    assert_eq!(gk, want);
+}
+
+#[test]
+fn rust_golden_model_agrees_with_python_kernel_semantics() {
+    // Same contract, checked constructively: random inputs through the rust
+    // golden model equal clamp(round(x@w >> 10)) — the exact semantics the
+    // python tests pin for the Pallas kernel. (Direct x-language equality
+    // is covered by vmm_artifact_matches_rust_golden_model.)
+    let p = newton::config::XbarParams::default();
+    let mut rng = Rng::new(123);
+    let x = Matrix::from_fn(4, 128, |_, _| rng.range_i64(0, 1 << 16));
+    let w = Matrix::from_fn(128, 32, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
+    let got = scale_clamp(&vmm_raw(&x, &w, &p, false), &p);
+    let want = scale_clamp(&newton::xbar::matmul(&x, &w), &p);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn wrong_input_shape_is_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let err = rt.run("vmm_plain", &vec![0i32; 7]).unwrap_err();
+    assert!(err.to_string().contains("elements"), "{err}");
+}
+
+#[test]
+fn corrupted_artifact_fails_to_compile() {
+    let Some(dir) = artifacts_dir() else { return };
+    // copy the artifacts dir metadata, point one entry at a corrupt file
+    let tmp = std::env::temp_dir().join("newton-corrupt-artifacts");
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::write(tmp.join("bad.hlo.txt"), "HloModule not really hlo {{{").unwrap();
+    std::fs::write(
+        tmp.join("manifest.txt"),
+        "artifact bad bad.hlo.txt in:2x2:i32 out:2x2:i32\n",
+    )
+    .unwrap();
+    let mut rt = Runtime::new(&tmp).unwrap();
+    let err = rt.run("bad", &vec![0i32; 4]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad.hlo.txt") || msg.contains("parse"), "{msg}");
+}
+
+#[test]
+fn missing_stage_fails_fast_at_start() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = ServerConfig::newton_mini(dir);
+    cfg.stages.push("no_such_stage".into());
+    let Err(err) = PipelineServer::start(cfg) else {
+        panic!("server started with a missing stage artifact");
+    };
+    assert!(format!("{err}").contains("no_such_stage"));
+}
+
+#[test]
+fn pipeline_server_serves_and_matches_fused() {
+    let Some(dir) = artifacts_dir() else { return };
+    let n_req = 12; // 1.5 batches: exercises padding
+    let mut server = PipelineServer::start(ServerConfig::newton_mini(dir.clone())).unwrap();
+    let mut rng = Rng::new(99);
+    let images: Vec<Vec<i32>> = (0..n_req)
+        .map(|_| (0..3072).map(|_| rng.below(256) as i32).collect())
+        .collect();
+    let t0 = Instant::now();
+    for img in &images {
+        server.submit(img.clone()).unwrap();
+    }
+    let mut results = server.collect(n_req).unwrap();
+    let report = server.shutdown(&results, t0.elapsed());
+    assert_eq!(report.completed, n_req);
+    results.sort_by_key(|r| r.id);
+
+    // cross-check against the fused model
+    let mut rt = Runtime::new(&dir).unwrap();
+    let fused_in: Vec<i32> = images.iter().take(8).flatten().copied().collect();
+    let fused = rt.run("model_b8", &fused_in).unwrap();
+    for i in 0..8 {
+        assert_eq!(results[i].logits, &fused[i * 10..(i + 1) * 10], "req {i}");
+        assert!(argmax(&results[i].logits) < 10);
+    }
+    assert!(report.throughput_rps > 0.0);
+}
