@@ -1,0 +1,26 @@
+.PHONY: verify build test fmt bench-smoke artifacts
+
+# Tier-1 verification + formatting check + perf smoke (scripts/verify.sh).
+verify:
+	./scripts/verify.sh
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt --all -- --check
+
+# Quick hot-path bench; writes BENCH_hotpath.json for the perf trajectory.
+bench-smoke:
+	cargo bench --bench perf_hotpath -- --smoke
+
+# AOT artifacts need the python build toolchain (jax + xla_extension),
+# which the offline image does not ship; the rust side degrades gracefully
+# (PJRT benches/tests skip, serving falls back to the golden model).
+artifacts:
+	@echo "artifacts require the python compile toolchain (jax + xla_extension):"
+	@echo "  python3 python/compile/aot.py"
+	@echo "then point NEWTON_ARTIFACTS at the output directory (default ./artifacts)."

@@ -3,13 +3,20 @@
 //! CE/PE frontiers — the exploration that led the paper to the 16-IMA,
 //! 128x256, 16 KB design point.
 //!
+//! The full-pipeline sweeps run through `pipeline::evaluate_grid`, which
+//! fans the `(chip × net)` grid out across every core — the whole design
+//! space evaluates in roughly the wall time of its slowest cell.
+//!
 //! Run: `cargo run --release --example design_space`
 
-use newton::config::{ChipConfig, ImaConfig, TileConfig, XbarParams};
+use std::time::Instant;
+
+use newton::config::{ChipConfig, ImaConfig, NewtonFeatures, TileConfig, XbarParams};
 use newton::energy::TileModel;
 use newton::mapping::{self, Mapping, MappingPolicy};
+use newton::pipeline::evaluate_grid;
 use newton::tiles::ChipPlan;
-use newton::util::{f1, f2, Table};
+use newton::util::{f1, f2, geomean, Table};
 use newton::workloads;
 
 fn main() {
@@ -74,28 +81,58 @@ fn main() {
     t.print();
     println!("-> layer spreading keeps 224-256 px images within a 16 KB tile buffer\n");
 
-    // ---- heterogeneous-tile knobs ------------------------------------------
-    println!("FC-tile knobs (chip peak power / area, geometric mean over suite):");
-    let mut t = Table::new(&["fc adc slowdown", "xbars/adc", "peak W", "area mm²"]);
-    for (slow, share) in [(1.0, 1), (8.0, 1), (32.0, 2), (128.0, 4)] {
-        let mut chip = ChipConfig::newton();
-        chip.fc_tile.ima.adc_slowdown = slow;
-        chip.fc_tile.ima.xbars_per_adc = share;
-        let (mut pw, mut ar) = (1.0f64, 1.0f64);
-        for n in &nets {
-            let m = Mapping::build(n, &chip.conv_tile.ima, &p, MappingPolicy::newton(), 16);
-            let plan = ChipPlan::new(&chip, &m);
-            pw *= plan.peak_power_w();
-            ar *= plan.area_mm2();
-        }
-        let k = 1.0 / nets.len() as f64;
+    // ---- heterogeneous-tile knobs (full-pipeline grid) ---------------------
+    println!("FC-tile knobs (chip peak power / area / delivered pJ per op, geomean over suite):");
+    let knobs = [(1.0, 1usize), (8.0, 1), (32.0, 2), (128.0, 4)];
+    let chips: Vec<ChipConfig> = knobs
+        .iter()
+        .map(|&(slow, share)| {
+            let mut chip = ChipConfig::newton();
+            chip.fc_tile.ima.adc_slowdown = slow;
+            chip.fc_tile.ima.xbars_per_adc = share;
+            chip
+        })
+        .collect();
+    let t0 = Instant::now();
+    let grid = evaluate_grid(&nets, &chips);
+    let grid_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut t = Table::new(&["fc adc slowdown", "xbars/adc", "peak W", "area mm²", "pJ/op"]);
+    for ((slow, share), row) in knobs.iter().zip(&grid) {
+        let pw = geomean(&row.iter().map(|r| r.peak_power_w).collect::<Vec<_>>());
+        let ar = geomean(&row.iter().map(|r| r.area_mm2).collect::<Vec<_>>());
+        let pj = geomean(&row.iter().map(|r| r.energy_per_op_pj).collect::<Vec<_>>());
         t.row(&[
             format!("{slow}x"),
             share.to_string(),
-            f2(pw.powf(k)),
-            f1(ar.powf(k)),
+            f2(pw),
+            f1(ar),
+            f2(pj),
         ]);
     }
     t.print();
     println!("-> 128x slowdown + 4:1 sharing is the paper's FC-tile design point");
+    println!("   ({} chip configs x {} nets evaluated in {grid_ms:.0} ms)\n", chips.len(), nets.len());
+
+    // ---- incremental technique stack (full-pipeline grid) ------------------
+    println!("Technique stack frontier (pipeline model, geomean over suite):");
+    let steps = NewtonFeatures::incremental();
+    let chips: Vec<ChipConfig> = steps.iter().map(|&(_, f)| ChipConfig::newton_with(f)).collect();
+    let t0 = Instant::now();
+    let grid = evaluate_grid(&nets, &chips);
+    let grid_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut t = Table::new(&["design point", "pJ/op", "peak W", "CE GOPS/mm²"]);
+    for ((label, _), row) in steps.iter().zip(&grid) {
+        let pj = geomean(&row.iter().map(|r| r.energy_per_op_pj).collect::<Vec<_>>());
+        let pw = geomean(&row.iter().map(|r| r.peak_power_w).collect::<Vec<_>>());
+        let ce = geomean(&row.iter().map(|r| r.ce_eff).collect::<Vec<_>>());
+        t.row(&[label.to_string(), f2(pj), f2(pw), f1(ce)]);
+    }
+    t.print();
+    println!("   ({} design points x {} nets evaluated in {grid_ms:.0} ms)", steps.len(), nets.len());
+
+    // ---- sanity: plan-level power for the chosen point ---------------------
+    let chip = ChipConfig::newton();
+    let m = Mapping::build(&workloads::vgg_a(), &chip.conv_tile.ima, &p, MappingPolicy::newton(), 16);
+    let plan = ChipPlan::new(&chip, &m);
+    println!("\nchosen design point on vgg-a: {:.2} W peak, {:.1} mm²", plan.peak_power_w(), plan.area_mm2());
 }

@@ -1,18 +1,25 @@
 //! End-to-end serving driver (EXPERIMENTS.md §End-to-end).
 //!
-//! Loads the newton-mini stage artifacts, spins up the coordinator's
-//! inter-tile-style pipeline (leader -> 4 stage threads -> completion
-//! router), serves batched inference requests with real numerics, verifies
-//! a sample against the fused-model artifact, and reports wallclock
-//! latency/throughput next to the simulated Newton-hardware metrics.
+//! With artifacts present (`make artifacts`): loads the newton-mini stage
+//! artifacts, spins up the coordinator's inter-tile-style pipeline (leader
+//! -> 4 stage threads -> completion router), serves batched inference with
+//! real numerics, and verifies a sample against the fused-model artifact.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_inference -- [--requests 64]`
+//! Without artifacts: falls back to the coordinator's golden-model path —
+//! newton-mini weights installed once into the crossbar engine
+//! (`ProgrammedCnn`), batches streamed through `run`, and the first batch
+//! re-verified against the legacy per-call engine bit-for-bit.
+//!
+//! Either way it reports wallclock latency/throughput next to the simulated
+//! Newton-hardware metrics.
+//!
+//! Run: `cargo run --release --example serve_inference -- [--requests 64]`
 
 use std::time::Instant;
 
 use newton::cli::Args;
 use newton::config::ChipConfig;
-use newton::coordinator::{argmax, newton_mini, PipelineServer, ServerConfig};
+use newton::coordinator::{argmax, newton_mini, GoldenServer, PipelineServer, ServerConfig};
 use newton::pipeline::evaluate;
 use newton::runtime::{default_artifacts_dir, Runtime};
 use newton::util::Rng;
@@ -23,15 +30,39 @@ fn main() -> anyhow::Result<()> {
     let seed = args.get_usize("seed", 42) as u64;
     let dir = default_artifacts_dir();
 
-    // ---- serve -----------------------------------------------------------
-    let mut server = PipelineServer::start(ServerConfig::newton_mini(dir.clone()))?;
     let mut rng = Rng::new(seed);
     let images: Vec<Vec<i32>> = (0..n_req)
         .map(|_| (0..32 * 32 * 3).map(|_| rng.below(256) as i32).collect())
         .collect();
 
+    match PipelineServer::start(ServerConfig::newton_mini(dir.clone())) {
+        Ok(server) => serve_pjrt(server, &images, n_req, &dir)?,
+        Err(e) => {
+            println!("PJRT serving unavailable ({e:#});");
+            println!("falling back to the golden-model path (installed crossbar weights)\n");
+            serve_golden(&images);
+        }
+    }
+
+    // ---- simulated hardware-side metrics ----------------------------------
+    let sim = evaluate(&newton_mini(), &ChipConfig::newton());
+    println!("\nsimulated Newton hardware serving newton-mini:");
+    println!("  throughput  : {:8.0} images/s", sim.throughput);
+    println!("  latency     : {:8.1} us", sim.latency_us);
+    println!("  energy/image: {:8.4} mJ", sim.energy_per_image_mj);
+    println!("  energy/op   : {:8.2} pJ", sim.energy_per_op_pj);
+    println!("  tiles       : {} conv + {} fc", sim.conv_tiles, sim.fc_tiles);
+    Ok(())
+}
+
+fn serve_pjrt(
+    mut server: PipelineServer,
+    images: &[Vec<i32>],
+    n_req: usize,
+    dir: &std::path::Path,
+) -> anyhow::Result<()> {
     let t0 = Instant::now();
-    for img in &images {
+    for img in images {
         server.submit(img.clone())?;
     }
     let mut results = server.collect(n_req)?;
@@ -46,7 +77,7 @@ fn main() -> anyhow::Result<()> {
     println!("  batches     : {} (fill {:.0}%)", report.batches, report.batch_fill * 100.0);
 
     // ---- verify a batch against the fused-model artifact ------------------
-    let mut rt = Runtime::new(&dir)?;
+    let mut rt = Runtime::new(dir)?;
     let fused_in: Vec<i32> = images.iter().take(8).flatten().copied().collect();
     let fused_out = rt.run("model_b8", &fused_in)?;
     for i in 0..8.min(n_req) {
@@ -58,14 +89,32 @@ fn main() -> anyhow::Result<()> {
 
     let classes: Vec<usize> = results.iter().take(8).map(|r| argmax(&r.logits)).collect();
     println!("sample predictions: {classes:?}");
-
-    // ---- simulated hardware-side metrics ----------------------------------
-    let sim = evaluate(&newton_mini(), &ChipConfig::newton());
-    println!("\nsimulated Newton hardware serving newton-mini:");
-    println!("  throughput  : {:8.0} images/s", sim.throughput);
-    println!("  latency     : {:8.1} us", sim.latency_us);
-    println!("  energy/image: {:8.4} mJ", sim.energy_per_image_mj);
-    println!("  energy/op   : {:8.2} pJ", sim.energy_per_op_pj);
-    println!("  tiles       : {} conv + {} fc", sim.conv_tiles, sim.fc_tiles);
     Ok(())
+}
+
+fn serve_golden(images: &[Vec<i32>]) {
+    let t_install = Instant::now();
+    let server = GoldenServer::newton_mini_default();
+    println!(
+        "installed newton-mini weights into crossbar chunks in {:.1} ms",
+        t_install.elapsed().as_secs_f64() * 1e3
+    );
+
+    let t0 = Instant::now();
+    let logits = server.infer(images);
+    let wall = t0.elapsed();
+    let n = images.len();
+    println!("served {n} requests in {:.2}s (golden model, install-once weights)", wall.as_secs_f64());
+    println!("  throughput  : {:6.1} req/s", n as f64 / wall.as_secs_f64());
+    println!("  batches     : {}", n.div_ceil(server.batch()));
+
+    // ---- golden-model verification path -----------------------------------
+    assert!(
+        server.verify_head(images),
+        "installed-crossbar forward diverged from the legacy engine"
+    );
+    println!("verified: first batch bit-identical to the legacy per-call engine ✓");
+
+    let classes: Vec<usize> = logits.iter().take(8).map(|l| argmax(l)).collect();
+    println!("sample predictions: {classes:?}");
 }

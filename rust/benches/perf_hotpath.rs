@@ -1,54 +1,122 @@
 //! Hot-path timing microbenchmarks (EXPERIMENTS.md §Perf, L3).
 //!
 //! Times the coordinator-side hot paths with a median-of-N harness
-//! (criterion is unavailable offline): the analytic suite evaluation (inner
-//! loop of every design-space sweep), the rust golden-model VMM, the
-//! batcher, and — when artifacts exist — the PJRT VMM/stage/model execute
-//! path used at serve time.
+//! (criterion is unavailable offline): the analytic suite evaluation —
+//! sequential vs the parallel `evaluate_grid` engine — the rust golden
+//! model VMM through the legacy per-call engine vs the install-once
+//! `ProgrammedXbar` (per-call and amortised), the programmed CNN forward,
+//! the batcher, and — when artifacts exist — the PJRT execute path.
+//!
+//! Alongside the human table it emits `BENCH_hotpath.json` (median µs per
+//! case plus derived speedups) so future PRs have a perf trajectory to
+//! compare against. `--smoke` shrinks the run counts for CI.
+//!
+//! Run: `cargo bench --bench perf_hotpath [-- --smoke]`
 
 use std::time::Instant;
 
-use newton::config::{ChipConfig, XbarParams};
+use newton::cli::Args;
+use newton::config::{ChipConfig, NewtonFeatures, XbarParams};
 use newton::coordinator::batcher::{Batcher, PendingRequest};
-use newton::pipeline::evaluate_suite;
+use newton::pipeline::{evaluate, evaluate_grid, evaluate_suite};
 use newton::runtime::{default_artifacts_dir, Runtime};
 use newton::util::{median, Rng};
 use newton::workloads;
-use newton::xbar::{vmm, Matrix};
+use newton::xbar::cnn::{random_images, MiniCnn};
+use newton::xbar::{reference, scale_clamp, Matrix, ProgrammedXbar};
 
-/// Median wall time of `f` over `n` runs, after one warmup, in microseconds.
-fn bench<T>(name: &str, n: usize, mut f: impl FnMut() -> T) {
-    let _ = f();
-    let mut times = Vec::with_capacity(n);
-    for _ in 0..n {
-        let t0 = Instant::now();
-        std::hint::black_box(f());
-        times.push(t0.elapsed().as_secs_f64() * 1e6);
+struct Harness {
+    results: Vec<(String, f64, usize)>,
+    scale: usize,
+}
+
+impl Harness {
+    /// Median wall time of `f` over `n/scale` runs, after one warmup, in µs.
+    fn bench<T>(&mut self, name: &str, n: usize, mut f: impl FnMut() -> T) -> f64 {
+        let n = (n / self.scale).max(3);
+        let _ = f();
+        let mut times = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        let med = median(&times);
+        println!("{name:52} {med:12.1} us (median of {n})");
+        self.results.push((name.to_string(), med, n));
+        med
     }
-    println!("{name:44} {:12.1} us (median of {n})", median(&times));
 }
 
 fn main() {
-    println!("=== L3 hot-path microbenchmarks ===");
+    let args = Args::parse(std::env::args().skip(1));
+    let smoke = args.has_flag("smoke");
+    let mut h = Harness {
+        results: Vec::new(),
+        scale: if smoke { 5 } else { 1 },
+    };
+    println!("=== L3 hot-path microbenchmarks{} ===", if smoke { " (smoke)" } else { "" });
+
+    // ---- analytic sweeps: sequential vs parallel ---------------------------
     let nets = workloads::suite();
     let newton_chip = ChipConfig::newton();
     let isaac_chip = ChipConfig::isaac();
-    bench("analytic: evaluate_suite(newton)", 20, || {
+    let seq = h.bench("analytic: suite sequential (9 nets)", 20, || {
+        nets.iter().map(|n| evaluate(n, &newton_chip)).collect::<Vec<_>>()
+    });
+    let par = h.bench("analytic: evaluate_suite parallel (9 nets)", 20, || {
         evaluate_suite(&nets, &newton_chip)
     });
-    bench("analytic: evaluate_suite(isaac)", 20, || {
+    h.bench("analytic: evaluate_suite(isaac)", 20, || {
         evaluate_suite(&nets, &isaac_chip)
     });
+    let grid_chips: Vec<ChipConfig> = NewtonFeatures::incremental()
+        .into_iter()
+        .map(|(_, f)| ChipConfig::newton_with(f))
+        .collect();
+    h.bench("analytic: evaluate_grid 7 designs x 9 nets", 10, || {
+        evaluate_grid(&nets, &grid_chips)
+    });
 
+    // ---- golden-model VMM: legacy per-call vs install-once -----------------
     let p = XbarParams::default();
     let mut rng = Rng::new(3);
     let x = Matrix::from_fn(8, p.rows, |_, _| rng.range_i64(0, 1 << 16));
     let w = Matrix::from_fn(p.rows, 256, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
-    bench("golden model: 8x128x256 bit-serial VMM", 10, || {
-        vmm(&x, &w, &p)
+    let legacy = h.bench("golden: 8x128x256 VMM, legacy per-call engine", 16, || {
+        scale_clamp(&reference::vmm_raw_reference(&x, &w, &p, false), &p)
+    });
+    h.bench("golden: 8x128x256 VMM, install+run per call", 16, || {
+        let programmed = ProgrammedXbar::install(&w, &p, false);
+        scale_clamp(&programmed.run(&x), &p)
+    });
+    let programmed = ProgrammedXbar::install(&w, &p, false);
+    let amortised = h.bench("golden: 8x128x256 VMM, installed (amortised)", 16, || {
+        scale_clamp(&programmed.run(&x), &p)
     });
 
-    bench("batcher: 1024 requests through batches of 8", 50, || {
+    // the slice engine without the fused identity-ADC shortcut (adaptive)
+    let legacy_adaptive = h.bench("golden: 8x128x256 VMM, legacy adaptive", 10, || {
+        reference::vmm_raw_reference(&x, &w, &p, true)
+    });
+    let programmed_adaptive = ProgrammedXbar::install(&w, &p, true);
+    let amortised_adaptive = h.bench("golden: 8x128x256 VMM, installed adaptive", 10, || {
+        programmed_adaptive.run(&x)
+    });
+
+    // ---- programmed CNN forward -------------------------------------------
+    let cnn = MiniCnn::new(0);
+    let img = random_images(2, 7);
+    let legacy_cnn = h.bench("cnn: newton-mini forward b2, per-call weights", 5, || {
+        cnn.forward(&img, &p, false)
+    });
+    let programmed_cnn = cnn.program(&p, false);
+    let amortised_cnn = h.bench("cnn: newton-mini forward b2, installed", 5, || {
+        programmed_cnn.forward(&img)
+    });
+
+    // ---- batcher -----------------------------------------------------------
+    h.bench("batcher: 1024 requests through batches of 8", 50, || {
         let mut b = Batcher::new(8, 4, std::time::Duration::from_secs(0));
         let mut taken = 0;
         for i in 0..1024u64 {
@@ -64,24 +132,51 @@ fn main() {
         taken
     });
 
+    // ---- PJRT (artifact-gated) --------------------------------------------
     let dir = default_artifacts_dir();
     match Runtime::new(&dir) {
         Ok(mut rt) => {
             let (_, vin) = rt.manifest.load_testvec("vmm_in").unwrap();
             rt.compile("vmm_plain").unwrap();
-            bench("pjrt: vmm_plain (8x128 -> 8x256)", 20, || {
+            h.bench("pjrt: vmm_plain (8x128 -> 8x256)", 20, || {
                 rt.run("vmm_plain", &vin).unwrap()
             });
             let (_, input) = rt.manifest.load_testvec("input_b8").unwrap();
             rt.compile("stage0_b8").unwrap();
-            bench("pjrt: stage0 conv (8x32x32x3)", 5, || {
+            h.bench("pjrt: stage0 conv (8x32x32x3)", 5, || {
                 rt.run("stage0_b8", &input).unwrap()
             });
             rt.compile("model_b8").unwrap();
-            bench("pjrt: fused model (batch 8)", 3, || {
+            h.bench("pjrt: fused model (batch 8)", 3, || {
                 rt.run("model_b8", &input).unwrap()
             });
         }
         Err(_) => println!("pjrt benches skipped (run `make artifacts`)"),
+    }
+
+    // ---- derived speedups + machine-readable artifact ----------------------
+    let vmm_speedup = legacy / amortised.max(1e-9);
+    let vmm_slice_speedup = legacy_adaptive / amortised_adaptive.max(1e-9);
+    let suite_speedup = seq / par.max(1e-9);
+    let cnn_speedup = legacy_cnn / amortised_cnn.max(1e-9);
+    println!("\nderived:");
+    println!("  amortised VMM speedup (installed vs legacy) : {vmm_speedup:7.1}x (target >= 5x)");
+    println!("  slice-engine speedup (adaptive, amortised)  : {vmm_slice_speedup:7.1}x");
+    println!("  evaluate_suite parallel speedup             : {suite_speedup:7.1}x over sequential");
+    println!("  programmed CNN forward speedup              : {cnn_speedup:7.1}x");
+
+    let mut json = String::from("{\n  \"cases\": [\n");
+    for (i, (name, med, n)) in h.results.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"median_us\": {med:.3}, \"runs\": {n}}}{}\n",
+            if i + 1 < h.results.len() { "," } else { "" }
+        ));
+    }
+    json.push_str(&format!(
+        "  ],\n  \"derived\": {{\n    \"vmm_amortised_speedup\": {vmm_speedup:.2},\n    \"vmm_slice_engine_speedup\": {vmm_slice_speedup:.2},\n    \"suite_parallel_speedup\": {suite_speedup:.2},\n    \"cnn_programmed_speedup\": {cnn_speedup:.2}\n  }}\n}}\n"
+    ));
+    match std::fs::write("BENCH_hotpath.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
+        Err(e) => println!("\ncould not write BENCH_hotpath.json: {e}"),
     }
 }

@@ -1,0 +1,125 @@
+//! Golden-model serving path: batched newton-mini inference through the
+//! install-once crossbar engine, used (a) as the coordinator's fallback
+//! when the PJRT artifacts are absent — the serve example stays usable in
+//! a fresh checkout — and (b) as the golden-model verification path: the
+//! same batch re-executed through the legacy per-call engine must match
+//! bit-for-bit, which pins the install/run refactor at model scale on the
+//! real serving geometry.
+
+use crate::config::XbarParams;
+use crate::xbar::cnn::{MiniCnn, ProgrammedCnn, Tensor};
+
+/// Batched golden-model inference over installed crossbar weights.
+pub struct GoldenServer {
+    cnn: MiniCnn,
+    programmed: ProgrammedCnn,
+    p: XbarParams,
+    adaptive: bool,
+    batch: usize,
+}
+
+/// Flat `32*32*3` i32 images -> a (B,32,32,3) activation tensor, zero-padded
+/// to `batch` rows.
+fn tensor_from(images: &[Vec<i32>], batch: usize) -> Tensor {
+    let mut t = Tensor::zeros(batch, 32, 32, 3);
+    let per = 32 * 32 * 3;
+    for (i, img) in images.iter().enumerate() {
+        assert_eq!(img.len(), per, "image {i}: want {per} elements");
+        for (j, &v) in img.iter().enumerate() {
+            t.data[i * per + j] = v as i64;
+        }
+    }
+    t
+}
+
+impl GoldenServer {
+    /// Install the newton-mini weights once for the given pipeline config.
+    pub fn new(seed: u64, p: &XbarParams, adaptive: bool, batch: usize) -> Self {
+        assert!(batch > 0);
+        let cnn = MiniCnn::new(seed);
+        let programmed = cnn.program(p, adaptive);
+        GoldenServer {
+            cnn,
+            programmed,
+            p: *p,
+            adaptive,
+            batch,
+        }
+    }
+
+    /// The standard fallback configuration shared by `newton serve` and the
+    /// serve example: seed-0 newton-mini weights, exact pipeline, batch 8.
+    pub fn newton_mini_default() -> Self {
+        Self::new(0, &XbarParams::default(), false, 8)
+    }
+
+    /// Batch capacity per forward pass.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Verification of the head batch (or every image if fewer): true when
+    /// the installed-crossbar forward matches the per-call engine, or when
+    /// there is nothing to check.
+    pub fn verify_head(&self, images: &[Vec<i32>]) -> bool {
+        let head = &images[..self.batch.min(images.len())];
+        head.is_empty() || self.verify_batch(head)
+    }
+
+    /// Serve a request list: chunks into batches (padding the tail), runs
+    /// each through the installed weights, returns per-request logits.
+    pub fn infer(&self, images: &[Vec<i32>]) -> Vec<Vec<i32>> {
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in images.chunks(self.batch) {
+            let t = tensor_from(chunk, self.batch);
+            let logits = self.programmed.forward(&t);
+            for i in 0..chunk.len() {
+                out.push((0..logits.cols).map(|c| logits.at(i, c) as i32).collect());
+            }
+        }
+        out
+    }
+
+    /// Verification path: the installed-crossbar forward must equal the
+    /// legacy per-call engine bit-for-bit on this batch.
+    pub fn verify_batch(&self, images: &[Vec<i32>]) -> bool {
+        let t = tensor_from(images, images.len().max(1));
+        let installed = self.programmed.forward(&t);
+        let legacy = self.cnn.forward(&t, &self.p, self.adaptive);
+        installed.data == legacy.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn images(n: usize, seed: u64) -> Vec<Vec<i32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..32 * 32 * 3).map(|_| rng.below(256) as i32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn construction_installs_weights() {
+        let s = GoldenServer::newton_mini_default();
+        assert_eq!(s.batch(), 8);
+        assert!(s.verify_head(&[])); // nothing to check is vacuously true
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn serves_and_verifies_against_legacy_engine() {
+        let s = GoldenServer::new(0, &XbarParams::default(), false, 2);
+        let imgs = images(3, 4); // 1.5 batches: exercises tail padding
+        let logits = s.infer(&imgs);
+        assert_eq!(logits.len(), 3);
+        assert!(logits.iter().all(|l| l.len() == 10));
+        assert!(s.verify_batch(&imgs[..2]));
+        // a lone image padded into a full batch must match its solo run
+        let solo = s.infer(&imgs[2..3]);
+        assert_eq!(solo[0], logits[2]);
+    }
+}

@@ -14,9 +14,11 @@
 //! used for the paper's figures on the newton-mini geometry.
 
 pub mod batcher;
+pub mod golden;
 pub mod server;
 
 pub use batcher::{Batch, Batcher};
+pub use golden::GoldenServer;
 pub use server::{PipelineServer, ServerConfig, ServerReport};
 
 use crate::workloads::{Layer, Network};

@@ -12,6 +12,7 @@ use crate::config::ChipConfig;
 use crate::karatsuba::DncSchedule;
 use crate::mapping::{Mapping, MappingPolicy};
 use crate::workloads::Network;
+use crate::xbar::{reference, Matrix, ProgrammedXbar};
 
 /// DES result over `n_images` streamed back-to-back.
 #[derive(Clone, Copy, Debug)]
@@ -78,6 +79,44 @@ pub fn simulate(net: &Network, chip: &ChipConfig, n_images: usize) -> DesReport 
     }
 }
 
+/// Simulate every `(chip × net)` pair in parallel — the DES face of
+/// `pipeline::evaluate_grid`, with the same contiguous work split over
+/// `std::thread::scope`. Returns `out[chip][net]`.
+pub fn simulate_grid(
+    nets: &[Network],
+    chips: &[ChipConfig],
+    n_images: usize,
+) -> Vec<Vec<DesReport>> {
+    crate::util::grid_par(chips.len(), nets.len(), |ci, ni| {
+        simulate(&nets[ni], &chips[ci], n_images)
+    })
+}
+
+/// Functional spot-check behind the DES timing model: the per-VMM service
+/// time charged above is `p.vmm_ns() = read_ns × iters`, so the crossbar
+/// reads being timed must really behave like the installed engine.
+/// Installs one representative crossbar, confirms its logical schedule
+/// (`iters × slices` ADC samples) matches what the timing model charges,
+/// and that a real read is bit-identical to the reference bit-serial
+/// engine. Returns the number of 100 ns reads one VMM costs.
+pub fn golden_read_probe(chip: &ChipConfig) -> usize {
+    let p = &chip.xbar;
+    let mut rng = crate::util::Rng::new(0xDE5);
+    let x = Matrix::from_fn(1, p.rows, |_, _| rng.range_i64(0, 1 << p.input_bits));
+    let w = Matrix::from_fn(p.rows, 4, |_, _| {
+        rng.range_i64(-(1 << (p.weight_bits - 1)), 1 << (p.weight_bits - 1))
+    });
+    let programmed = ProgrammedXbar::install(&w, p, chip.features.adaptive_adc);
+    assert_eq!(programmed.iters(), p.iters(), "timing model iters drifted");
+    assert_eq!(programmed.slices(), p.slices(), "timing model slices drifted");
+    assert_eq!(
+        programmed.run(&x),
+        reference::vmm_raw_reference(&x, &w, p, chip.features.adaptive_adc),
+        "DES times crossbar reads that mismatch the golden engine"
+    );
+    programmed.iters()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +150,29 @@ mod tests {
         // latency must exceed the single slowest stage and be finite
         assert!(d.latency_us > 0.0 && d.latency_us.is_finite());
         assert!(d.n_stages >= net.layers.len());
+    }
+
+    #[test]
+    fn simulate_grid_matches_pointwise() {
+        let nets = [workloads::alexnet(), workloads::vgg_a()];
+        let chips = [ChipConfig::isaac(), ChipConfig::newton()];
+        let grid = simulate_grid(&nets, &chips, 20);
+        assert_eq!(grid.len(), 2);
+        for (ci, chip) in chips.iter().enumerate() {
+            for (ni, net) in nets.iter().enumerate() {
+                let want = simulate(net, chip, 20);
+                assert_eq!(grid[ci][ni].throughput, want.throughput);
+                assert_eq!(grid[ci][ni].latency_us, want.latency_us);
+                assert_eq!(grid[ci][ni].n_stages, want.n_stages);
+            }
+        }
+    }
+
+    #[test]
+    fn golden_probe_agrees_with_timing_model() {
+        for chip in [ChipConfig::isaac(), ChipConfig::newton()] {
+            assert_eq!(golden_read_probe(&chip), chip.xbar.iters());
+        }
     }
 
     #[test]

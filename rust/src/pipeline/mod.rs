@@ -199,9 +199,26 @@ pub fn evaluate(net: &Network, chip: &ChipConfig) -> WorkloadReport {
     }
 }
 
-/// Evaluate the full suite; returns one report per net.
+/// Evaluate the full suite; returns one report per net. Runs the nets in
+/// parallel across available cores (see [`evaluate_grid`]); `evaluate` is
+/// pure, so the reports are identical to the sequential ones.
 pub fn evaluate_suite(nets: &[Network], chip: &ChipConfig) -> Vec<WorkloadReport> {
-    nets.iter().map(|n| evaluate(n, chip)).collect()
+    evaluate_grid(nets, std::slice::from_ref(chip))
+        .pop()
+        .unwrap_or_default()
+}
+
+/// Parallel sweep driver over the `(chip × net)` design grid — the inner
+/// loop of every design-space exploration (Figs 10/15/17/18, the
+/// incremental stack, CI sweeps). Returns `out[chip][net]`, row-major and
+/// deterministic regardless of the worker count.
+///
+/// Work is split contiguously over `std::thread::scope` workers sized by
+/// `std::thread::available_parallelism`; each cell is an independent
+/// analytic evaluation, so scaling is near-linear until the grid is
+/// smaller than the core count.
+pub fn evaluate_grid(nets: &[Network], chips: &[ChipConfig]) -> Vec<Vec<WorkloadReport>> {
+    crate::util::grid_par(chips.len(), nets.len(), |ci, ni| evaluate(&nets[ni], &chips[ci]))
 }
 
 #[cfg(test)]
@@ -295,6 +312,34 @@ mod tests {
         let g_res = gain(&workloads::resnet34());
         let g_msra = gain(&workloads::msra_c());
         assert!(g_msra >= g_res, "{g_msra} vs {g_res}");
+    }
+
+    #[test]
+    fn evaluate_grid_matches_pointwise() {
+        // parallel grid cells must be exactly the sequential evaluations
+        let nets = workloads::suite();
+        let chips = [ChipConfig::isaac(), ChipConfig::newton()];
+        let grid = evaluate_grid(&nets[..3], &chips);
+        assert_eq!(grid.len(), 2);
+        for (ci, row) in grid.iter().enumerate() {
+            assert_eq!(row.len(), 3);
+            for (ni, report) in row.iter().enumerate() {
+                let want = evaluate(&nets[ni], &chips[ci]);
+                assert_eq!(report.net, want.net);
+                assert_eq!(report.energy_per_op_pj, want.energy_per_op_pj);
+                assert_eq!(report.throughput, want.throughput);
+                assert_eq!(report.area_mm2, want.area_mm2);
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_grid_handles_empty_axes() {
+        let nets = workloads::suite();
+        assert!(evaluate_grid(&nets, &[]).is_empty());
+        let grid = evaluate_grid(&[], &[ChipConfig::newton()]);
+        assert_eq!(grid.len(), 1);
+        assert!(grid[0].is_empty());
     }
 
     #[test]

@@ -6,10 +6,16 @@
 //! /opt/xla-example/README.md: jax >= 0.5 emits protos with 64-bit ids that
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids.
 
+pub mod xla_stub;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
+
+// The real PJRT bindings are unavailable offline; the stub has identical
+// call shapes and fails at client creation (see xla_stub.rs to swap back).
+use self::xla_stub as xla;
 
 /// Tensor shape + dtype tag from the manifest (`8x32x32x3:i32`).
 #[derive(Clone, Debug, PartialEq, Eq)]

@@ -127,6 +127,65 @@ pub fn ceil_div(a: usize, b: usize) -> usize {
     a.div_ceil(b)
 }
 
+/// Worker-thread count for a parallel region with `jobs` independent units:
+/// `min(jobs, available_parallelism)`, never zero. Centralised so every
+/// `std::thread::scope` fan-out (ProgrammedXbar batches, evaluate_grid,
+/// DES sweeps) sizes itself the same way.
+pub fn worker_count(jobs: usize) -> usize {
+    if jobs <= 1 {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(jobs)
+}
+
+/// Evaluate an `outer × inner` grid of independent cells in parallel and
+/// return `out[outer][inner]` — the shared engine behind
+/// `pipeline::evaluate_grid` and `pipeline::des::simulate_grid`. Jobs are
+/// split contiguously across `worker_count` scoped threads; results are
+/// deterministic regardless of the split.
+pub fn grid_par<T, F>(n_outer: usize, n_inner: usize, cell: F) -> Vec<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    let n_jobs = n_outer * n_inner;
+    let mut slots: Vec<Option<T>> = Vec::new();
+    slots.resize_with(n_jobs, || None);
+    let workers = worker_count(n_jobs);
+    if workers <= 1 {
+        for (job, slot) in slots.iter_mut().enumerate() {
+            *slot = Some(cell(job / n_inner, job % n_inner));
+        }
+    } else {
+        let per = n_jobs.div_ceil(workers);
+        let cell = &cell;
+        std::thread::scope(|s| {
+            for (ci, chunk) in slots.chunks_mut(per).enumerate() {
+                let base = ci * per;
+                s.spawn(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        let job = base + j;
+                        *slot = Some(cell(job / n_inner, job % n_inner));
+                    }
+                });
+            }
+        });
+    }
+    let mut grid = Vec::with_capacity(n_outer);
+    let mut cells = slots.into_iter();
+    for _ in 0..n_outer {
+        grid.push(
+            (0..n_inner)
+                .map(|_| cells.next().unwrap().expect("grid cell computed"))
+                .collect(),
+        );
+    }
+    grid
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,5 +245,30 @@ mod tests {
         assert_eq!(ceil_div(10, 3), 4);
         assert_eq!(ceil_div(9, 3), 3);
         assert_eq!(ceil_div(0, 3), 0);
+    }
+
+    #[test]
+    fn worker_count_bounds() {
+        assert_eq!(worker_count(0), 1);
+        assert_eq!(worker_count(1), 1);
+        let w = worker_count(1000);
+        assert!(w >= 1 && w <= 1000);
+        assert!(worker_count(2) <= 2);
+    }
+
+    #[test]
+    fn grid_par_orders_cells_deterministically() {
+        let grid = grid_par(3, 5, |o, i| o * 100 + i);
+        assert_eq!(grid.len(), 3);
+        for (o, row) in grid.iter().enumerate() {
+            assert_eq!(row.len(), 5);
+            for (i, v) in row.iter().enumerate() {
+                assert_eq!(*v, o * 100 + i);
+            }
+        }
+        assert!(grid_par(0, 5, |_, _| 0).is_empty());
+        let empty_rows = grid_par(2, 0, |_, _| 0);
+        assert_eq!(empty_rows.len(), 2);
+        assert!(empty_rows[0].is_empty());
     }
 }

@@ -9,7 +9,7 @@
 
 use crate::config::XbarParams;
 use crate::util::Rng;
-use crate::xbar::{scale_clamp, vmm_raw, Matrix};
+use crate::xbar::{scale_clamp, Matrix, ProgrammedXbar};
 
 /// An activation tensor (B, H, W, C), i64 values.
 #[derive(Clone, Debug)]
@@ -87,6 +87,34 @@ impl MiniCnn {
         xbar_linear(&flat, &self.fc, &pp, adaptive)
     }
 
+    /// Install every layer's weights once for the given pipeline config,
+    /// with the per-stage scaling shifts baked in. The returned
+    /// [`ProgrammedCnn`] forwards bit-identically to
+    /// `self.forward(img, p, adaptive)` without re-touching weights.
+    pub fn program(&self, p: &XbarParams, adaptive: bool) -> ProgrammedCnn {
+        let convs = self
+            .convs
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let pp = XbarParams {
+                    out_shift: self.shifts[i],
+                    ..*p
+                };
+                ProgrammedLinear::install(w, &pp, adaptive)
+            })
+            .collect();
+        let pp = XbarParams {
+            out_shift: self.shifts[3],
+            ..*p
+        };
+        ProgrammedCnn {
+            convs,
+            fc: ProgrammedLinear::install(&self.fc, &pp, adaptive),
+            act_max: self.act_max,
+        }
+    }
+
     /// Argmax classes for a batch of images.
     pub fn classify(&self, img: &Tensor, p: &XbarParams, adaptive: bool) -> Vec<usize> {
         let logits = self.forward(img, p, adaptive);
@@ -134,35 +162,122 @@ pub fn im2col3(x: &Tensor) -> Matrix {
     out
 }
 
-/// Chunked crossbar linear: split the reduction dim into 128-row pieces,
-/// sum raw partials digitally, then scale once (mirrors model.py).
-pub fn xbar_linear(x: &Matrix, w: &Matrix, p: &XbarParams, adaptive: bool) -> Matrix {
-    let rows = p.rows;
-    let chunks = x.cols.div_ceil(rows);
-    let mut acc = Matrix::zeros(x.rows, w.cols);
-    for ch in 0..chunks {
-        let lo = ch * rows;
-        let hi = (lo + rows).min(x.cols);
-        let xc = Matrix::from_fn(x.rows, rows, |r, c| {
-            if lo + c < hi {
-                x.at(r, lo + c)
-            } else {
-                0
-            }
-        });
-        let wc = Matrix::from_fn(rows, w.cols, |r, c| {
-            if lo + r < hi {
-                w.at(lo + r, c)
-            } else {
-                0
-            }
-        });
-        let part = vmm_raw(&xc, &wc, p, adaptive);
-        for i in 0..acc.data.len() {
-            acc.data[i] += part.data[i];
+/// A weight matrix of arbitrary reduction length, installed once across as
+/// many 128-row crossbar chunks as it needs. Raw chunk partials are summed
+/// digitally and scaled once, exactly mirroring `xbar_linear` / model.py.
+pub struct ProgrammedLinear {
+    chunks: Vec<ProgrammedXbar>,
+    /// Column-window start of each chunk within the input activations.
+    offsets: Vec<usize>,
+    in_cols: usize,
+    out_cols: usize,
+    p: XbarParams,
+}
+
+impl ProgrammedLinear {
+    /// Install `w` (signed, `(K, N)` with any `K`) against crossbars of
+    /// `p.rows` wordlines. Chunks are installed unpadded: zero-padded rows
+    /// carry `x = 0` in the legacy path and contribute nothing, so the
+    /// shorter reduction is bit-identical.
+    pub fn install(w: &Matrix, p: &XbarParams, adaptive: bool) -> Self {
+        let rows = p.rows;
+        let n_chunks = w.rows.div_ceil(rows).max(1);
+        let mut chunks = Vec::with_capacity(n_chunks);
+        let mut offsets = Vec::with_capacity(n_chunks);
+        for ch in 0..n_chunks {
+            let lo = ch * rows;
+            let hi = (lo + rows).min(w.rows);
+            let wc = Matrix::from_fn(hi - lo, w.cols, |r, c| w.at(lo + r, c));
+            chunks.push(ProgrammedXbar::install(&wc, p, adaptive));
+            offsets.push(lo);
+        }
+        ProgrammedLinear {
+            chunks,
+            offsets,
+            in_cols: w.rows,
+            out_cols: w.cols,
+            p: *p,
         }
     }
-    scale_clamp(&acc, p)
+
+    pub fn in_cols(&self) -> usize {
+        self.in_cols
+    }
+
+    pub fn out_cols(&self) -> usize {
+        self.out_cols
+    }
+
+    /// Crossbar chunks this layer occupies.
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Raw (pre-scaling) product: digital sum of per-chunk raw partials.
+    pub fn run_raw(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.in_cols);
+        let mut acc = Matrix::zeros(x.rows, self.out_cols);
+        for (xbar, &lo) in self.chunks.iter().zip(&self.offsets) {
+            let part = xbar.run_window(x, lo);
+            for (a, v) in acc.data.iter_mut().zip(part.data) {
+                *a += v;
+            }
+        }
+        acc
+    }
+
+    /// Full layer: raw partial sum, then one scale/clamp stage.
+    pub fn run(&self, x: &Matrix) -> Matrix {
+        scale_clamp(&self.run_raw(x), &self.p)
+    }
+}
+
+/// Chunked crossbar linear: split the reduction dim into 128-row pieces,
+/// sum raw partials digitally, then scale once (mirrors model.py).
+///
+/// Thin wrapper installing a [`ProgrammedLinear`] for one call; reuse the
+/// installed form when the weights serve more than one batch.
+pub fn xbar_linear(x: &Matrix, w: &Matrix, p: &XbarParams, adaptive: bool) -> Matrix {
+    assert_eq!(x.cols, w.rows);
+    ProgrammedLinear::install(w, p, adaptive).run(x)
+}
+
+/// The install-once CNN: every layer's weights programmed into crossbar
+/// chunks with the per-stage scaling shifts baked in. Produced by
+/// [`MiniCnn::program`]; `forward` is bit-identical to [`MiniCnn::forward`]
+/// with the same `(p, adaptive)` but does no weight work per call — the
+/// serving analogue of the paper's in-situ weights.
+pub struct ProgrammedCnn {
+    convs: Vec<ProgrammedLinear>,
+    fc: ProgrammedLinear,
+    act_max: i64,
+}
+
+impl ProgrammedCnn {
+    /// Full forward pass: (B,32,32,3) image -> (B,10) logits.
+    pub fn forward(&self, img: &Tensor) -> Matrix {
+        let mut act = img.clone();
+        for conv in &self.convs {
+            act = conv3x3_programmed(&act, conv, self.act_max);
+            act = maxpool2(&act);
+        }
+        let flat = Matrix::from_fn(act.b, act.h * act.w * act.c, |b, i| {
+            act.data[b * act.h * act.w * act.c + i]
+        });
+        self.fc.run(&flat)
+    }
+
+    /// Argmax classes for a batch of images.
+    pub fn classify(&self, img: &Tensor) -> Vec<usize> {
+        let logits = self.forward(img);
+        (0..logits.rows)
+            .map(|r| {
+                (0..logits.cols)
+                    .max_by_key(|&c| (logits.at(r, c), std::cmp::Reverse(c)))
+                    .unwrap()
+            })
+            .collect()
+    }
 }
 
 fn conv3x3(x: &Tensor, w: &Matrix, p: &XbarParams, adaptive: bool, act_max: i64) -> Tensor {
@@ -172,6 +287,19 @@ fn conv3x3(x: &Tensor, w: &Matrix, p: &XbarParams, adaptive: bool, act_max: i64)
     for r in 0..y.rows {
         for c in 0..y.cols {
             out.data[r * w.cols + c] = y.at(r, c).clamp(0, act_max); // relu8
+        }
+    }
+    out
+}
+
+fn conv3x3_programmed(x: &Tensor, conv: &ProgrammedLinear, act_max: i64) -> Tensor {
+    let patches = im2col3(x);
+    let y = conv.run(&patches);
+    let n = conv.out_cols();
+    let mut out = Tensor::zeros(x.b, x.h, x.w, n);
+    for r in 0..y.rows {
+        for c in 0..y.cols {
+            out.data[r * n + c] = y.at(r, c).clamp(0, act_max); // relu8
         }
     }
     out
@@ -267,6 +395,77 @@ mod tests {
             false,
         );
         assert_eq!(exact, nine);
+    }
+
+    #[test]
+    fn programmed_linear_matches_legacy_chunking() {
+        // reduction dim 200 spans two crossbar chunks (128 + 72); the
+        // installed form must match the padded per-call path bit-for-bit
+        // across exact, lossy and adaptive configs
+        let mut rng = Rng::new(9);
+        let x = Matrix::from_fn(3, 200, |_, _| rng.range_i64(0, 1 << 16));
+        let w = Matrix::from_fn(200, 10, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
+        for (adc_bits, adaptive) in [(9, false), (9, true), (8, false)] {
+            let p = XbarParams {
+                adc_bits,
+                ..XbarParams::default()
+            };
+            let installed = ProgrammedLinear::install(&w, &p, adaptive);
+            assert_eq!(installed.n_chunks(), 2);
+            let legacy = legacy_xbar_linear(&x, &w, &p, adaptive);
+            assert_eq!(
+                installed.run(&x),
+                legacy,
+                "adc={adc_bits} adaptive={adaptive}"
+            );
+        }
+    }
+
+    /// The pre-refactor chunking (padded copies + per-call vmm), kept as
+    /// the oracle for `programmed_linear_matches_legacy_chunking`.
+    fn legacy_xbar_linear(x: &Matrix, w: &Matrix, p: &XbarParams, adaptive: bool) -> Matrix {
+        use crate::xbar::reference::vmm_raw_reference;
+        let rows = p.rows;
+        let chunks = x.cols.div_ceil(rows);
+        let mut acc = Matrix::zeros(x.rows, w.cols);
+        for ch in 0..chunks {
+            let lo = ch * rows;
+            let hi = (lo + rows).min(x.cols);
+            let xc = Matrix::from_fn(x.rows, rows, |r, c| {
+                if lo + c < hi {
+                    x.at(r, lo + c)
+                } else {
+                    0
+                }
+            });
+            let wc = Matrix::from_fn(rows, w.cols, |r, c| {
+                if lo + r < hi {
+                    w.at(lo + r, c)
+                } else {
+                    0
+                }
+            });
+            let part = vmm_raw_reference(&xc, &wc, p, adaptive);
+            for i in 0..acc.data.len() {
+                acc.data[i] += part.data[i];
+            }
+        }
+        scale_clamp(&acc, p)
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn programmed_cnn_matches_legacy_forward() {
+        let cnn = MiniCnn::new(0);
+        let img = random_images(1, 8);
+        for (p, adaptive) in [
+            (XbarParams::default(), false),
+            (XbarParams::default(), true),
+        ] {
+            let programmed = cnn.program(&p, adaptive);
+            assert_eq!(programmed.forward(&img).data, cnn.forward(&img, &p, adaptive).data);
+            assert_eq!(programmed.classify(&img), cnn.classify(&img, &p, adaptive));
+        }
     }
 
     #[test]

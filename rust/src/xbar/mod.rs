@@ -5,9 +5,22 @@
 //! that run without PJRT, and the property tests that pin down the numeric
 //! contract the artifacts must satisfy: with the default lossless ADC the
 //! whole pipeline equals `clamp(round_half_up((x @ w) >> out_shift))`.
+//!
+//! Hot-path layout (rust/PERF.md): weights are *installed once* into a
+//! [`ProgrammedXbar`] — bias encoding, cell-plane slicing into flat
+//! `slices × K × N` buffers, the per-column `colsum(Wb)` correction, and
+//! the lossless/adaptive ADC decision all happen at install time, mirroring
+//! the paper's in-situ premise that a crossbar is programmed once and read
+//! many times. `run(&x)` then streams input bits through the pre-sliced
+//! planes with a reusable scratch buffer, parallelising across batch rows.
+//! The historical free functions ([`biased_product`], [`vmm_raw`],
+//! [`vmm_raw_signed`], [`vmm`]) are thin install-and-run wrappers; the
+//! pre-refactor per-call engine survives verbatim in [`reference`] as the
+//! oracle the property tests compare against.
 
 pub mod cnn;
 pub mod noise;
+pub mod reference;
 
 use crate::config::XbarParams;
 
@@ -83,55 +96,354 @@ fn adc_sample(col_sum: i64, place: u32, p: &XbarParams, adaptive: bool) -> i64 {
     q
 }
 
-/// Raw biased product `x @ wb` through the bit-serial + ADC pipeline.
-/// `x` unsigned (`in_bits` wide), `wb` unsigned (`w_bits` wide).
+/// All-ones mask over the low `bits` bits (saturating below the sign bit).
+fn mask_bits(bits: u32) -> i64 {
+    if bits >= 63 {
+        i64::MAX
+    } else {
+        (1i64 << bits) - 1
+    }
+}
+
+/// Reusable per-thread scratch for [`ProgrammedXbar::run_with_scratch`]:
+/// holds the `slices × N` analog column sums of one bit-serial iteration,
+/// so steady-state runs allocate nothing but their output.
+pub struct RunScratch {
+    cols: Vec<i64>,
+}
+
+/// A crossbar with weights installed once and read many times — the
+/// in-situ compute model of the paper made literal in software.
 ///
-/// Hot-path layout (EXPERIMENTS.md §Perf): weight cell planes are sliced
-/// once into flat `slices x K x N` buffers; per (batch row, iteration) the
-/// active input bits stream through all slice planes with linear column
-/// accumulation — ~40x over the naive per-element bit-extraction loop.
-pub fn biased_product(
-    x: &Matrix,
-    wb: &Matrix,
+/// Install time does all data-independent work: ISAAC bias encoding
+/// (`Wb = w + 2^(wb-1)`), slicing `Wb` into `slices × K × N` cell planes,
+/// the per-column `colsum(Wb)` needed by the signed-input correction, and
+/// the lossless/adaptive ADC decision. When every ADC sample is an identity
+/// (lossless config, non-adaptive), install also selects a fused fast path
+/// that is algebraically — and therefore bit — identical to the bit-serial
+/// sweep: the place-value sums telescope back into a plain masked matmul,
+/// so no cell planes are materialised at all.
+///
+/// `run` borrows `&self` and is thread-safe; large batches are split across
+/// `std::thread::available_parallelism()` worker threads, each with its own
+/// [`RunScratch`].
+pub struct ProgrammedXbar {
+    p: XbarParams,
     in_bits: u32,
     w_bits: u32,
-    p: &XbarParams,
     adaptive: bool,
-) -> Matrix {
-    assert_eq!(x.cols, wb.rows);
-    assert!(x.cols <= p.rows, "reduction dim exceeds crossbar rows");
-    let iters = (in_bits as usize).div_ceil(p.dac_bits as usize);
-    let slices = (w_bits as usize).div_ceil(p.cell_bits as usize);
-    let dac_mask = (1i64 << p.dac_bits) - 1;
-    let cell_mask = (1i64 << p.cell_bits) - 1;
-    let (kdim, n) = (x.cols, wb.cols);
+    kdim: usize,
+    n: usize,
+    slices: usize,
+    iters: usize,
+    /// Identity-ADC config (install-time hoist of the per-iteration check).
+    lossless: bool,
+    /// Fused masked-matmul path: lossless and non-adaptive.
+    fast: bool,
+    /// `2^(weight_bits-1)` when installed from signed weights, else 0.
+    w_bias: i64,
+    /// Mask reconstructing exactly the bits the DAC sweep would stream.
+    in_mask: i64,
+    dac_mask: i64,
+    /// Flat `slices × K × N` cell planes (empty on the fast path).
+    planes: Vec<i64>,
+    /// Biased weight matrix, masked to the bits the cell planes hold.
+    wb: Vec<i64>,
+    /// Per-column sum of the (unmasked) biased weights, for `run_signed`.
+    colsum_wb: Vec<i64>,
+}
 
-    // install-time weight slicing: planes[s][k][c], flat
-    let mut planes = vec![0i64; slices * kdim * n];
-    for s in 0..slices {
-        let shift = s as u32 * p.cell_bits;
+impl ProgrammedXbar {
+    /// Install signed weights (ISAAC bias encoding applied here, once).
+    pub fn install(w: &Matrix, p: &XbarParams, adaptive: bool) -> Self {
+        let bias = 1i64 << (p.weight_bits - 1);
+        let wb = Matrix::from_fn(w.rows, w.cols, |r, c| w.at(r, c) + bias);
+        let mut programmed = Self::install_biased(&wb, p.input_bits, p.weight_bits, p, adaptive);
+        programmed.w_bias = bias;
+        programmed
+    }
+
+    /// Install an already-biased (unsigned) weight matrix with explicit
+    /// streaming widths — the programmed form of [`biased_product`].
+    pub fn install_biased(
+        wb: &Matrix,
+        in_bits: u32,
+        w_bits: u32,
+        p: &XbarParams,
+        adaptive: bool,
+    ) -> Self {
+        assert!(wb.rows <= p.rows, "reduction dim exceeds crossbar rows");
+        let iters = (in_bits as usize).div_ceil(p.dac_bits as usize);
+        let slices = (w_bits as usize).div_ceil(p.cell_bits as usize);
+        let (kdim, n) = (wb.rows, wb.cols);
+        let lossless = p.lossless_adc_bits() <= p.adc_bits;
+        let fast = lossless && !adaptive;
+        let in_mask = mask_bits(iters as u32 * p.dac_bits);
+        let w_mask = mask_bits(slices as u32 * p.cell_bits);
+        let cell_mask = (1i64 << p.cell_bits) - 1;
+
+        let wb_masked: Vec<i64> = wb.data.iter().map(|&v| v & w_mask).collect();
+        let mut colsum_wb = vec![0i64; n];
         for k in 0..kdim {
-            let dst = &mut planes[(s * kdim + k) * n..(s * kdim + k) * n + n];
-            let src = &wb.data[k * n..k * n + n];
             for c in 0..n {
-                dst[c] = (src[c] >> shift) & cell_mask;
+                colsum_wb[c] += wb.data[k * n + c];
             }
+        }
+
+        // install-time weight slicing: planes[s][k][c], flat. The fast path
+        // reads the fused `wb` buffer instead, so skip the planes entirely.
+        let planes = if fast {
+            Vec::new()
+        } else {
+            let mut planes = vec![0i64; slices * kdim * n];
+            for s in 0..slices {
+                let shift = s as u32 * p.cell_bits;
+                for k in 0..kdim {
+                    let dst = &mut planes[(s * kdim + k) * n..(s * kdim + k) * n + n];
+                    let src = &wb.data[k * n..k * n + n];
+                    for c in 0..n {
+                        dst[c] = (src[c] >> shift) & cell_mask;
+                    }
+                }
+            }
+            planes
+        };
+
+        ProgrammedXbar {
+            p: *p,
+            in_bits,
+            w_bits,
+            adaptive,
+            kdim,
+            n,
+            slices,
+            iters,
+            lossless,
+            fast,
+            w_bias: 0,
+            in_mask,
+            dac_mask: (1i64 << p.dac_bits) - 1,
+            planes,
+            wb: wb_masked,
+            colsum_wb,
         }
     }
 
-    let mut acc = Matrix::zeros(x.rows, n);
-    let mut cols = vec![0i64; slices * n]; // per-(i) analog column sums
-    for r in 0..x.rows {
-        for i in 0..iters {
-            let shift = i as u32 * p.dac_bits;
+    /// Reduction length (crossbar rows in use).
+    pub fn kdim(&self) -> usize {
+        self.kdim
+    }
+
+    /// Output columns.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// DAC iterations one VMM streams.
+    pub fn iters(&self) -> usize {
+        self.iters
+    }
+
+    /// Weight cell planes (crossbar slices) one VMM reads.
+    pub fn slices(&self) -> usize {
+        self.slices
+    }
+
+    /// Logical ADC samples one VMM digitises per output column.
+    pub fn adc_samples_per_column(&self) -> usize {
+        self.iters * self.slices
+    }
+
+    /// `(input, weight)` streaming widths the installation was built for.
+    pub fn stream_widths(&self) -> (u32, u32) {
+        (self.in_bits, self.w_bits)
+    }
+
+    /// Whether install selected the fused identity-ADC fast path.
+    pub fn is_fused(&self) -> bool {
+        self.fast
+    }
+
+    /// Fresh scratch sized for this installation.
+    pub fn scratch(&self) -> RunScratch {
+        RunScratch {
+            cols: if self.fast {
+                Vec::new()
+            } else {
+                vec![0i64; self.slices * self.n]
+            },
+        }
+    }
+
+    /// Raw product for unsigned inputs against the installed weights;
+    /// equals `vmm_raw(x, w, ..)` when installed via [`Self::install`], or
+    /// `biased_product(x, wb, ..)` when installed via
+    /// [`Self::install_biased`].
+    pub fn run(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.kdim);
+        self.run_window(x, 0)
+    }
+
+    /// Like [`Self::run`], but reads the reduction slice
+    /// `x[:, x_col0 .. x_col0 + kdim]` in place — chunked layers stream one
+    /// wide activation matrix through several installed crossbars without
+    /// copying column windows out.
+    pub fn run_window(&self, x: &Matrix, x_col0: usize) -> Matrix {
+        let mut raw = self.raw_product(x, x_col0, 0);
+        if self.w_bias != 0 {
+            // signed-weight correction: subtract Bw * rowsum(x) digitally
+            for r in 0..x.rows {
+                let sx: i64 = (0..self.kdim).map(|k| x.at(r, x_col0 + k)).sum();
+                let out = &mut raw.data[r * self.n..(r + 1) * self.n];
+                for v in out.iter_mut() {
+                    *v -= self.w_bias * sx;
+                }
+            }
+        }
+        raw
+    }
+
+    /// Signed-input raw product (both operand biases corrected digitally,
+    /// §III-A2); equals `vmm_raw_signed(x, w, ..)`. Uses the install-time
+    /// `colsum(Wb)`.
+    pub fn run_signed(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.kdim);
+        assert!(
+            self.w_bias != 0,
+            "run_signed needs signed-weight installation (ProgrammedXbar::install)"
+        );
+        let bi = 1i64 << (self.in_bits - 1);
+        let bw = self.w_bias;
+        let k = self.kdim as i64;
+        let mut raw = self.raw_product(x, 0, bi);
+        for r in 0..x.rows {
+            let rowsum: i64 = (0..self.kdim).map(|j| x.at(r, j) + bi).sum();
+            let out = &mut raw.data[r * self.n..(r + 1) * self.n];
+            for (c, v) in out.iter_mut().enumerate() {
+                *v += k * bi * bw - bw * rowsum - bi * self.colsum_wb[c];
+            }
+        }
+        raw
+    }
+
+    /// Full pipeline against the installed weights:
+    /// `clamp(round((x @ w) >> out_shift))` for lossless configs.
+    pub fn vmm(&self, x: &Matrix) -> Matrix {
+        scale_clamp(&self.run(x), &self.p)
+    }
+
+    /// Sequential run reusing caller-owned scratch: zero allocation beyond
+    /// the output once the scratch exists. Bit-identical to [`Self::run`].
+    pub fn run_with_scratch(&self, x: &Matrix, scratch: &mut RunScratch) -> Matrix {
+        assert_eq!(x.cols, self.kdim);
+        let n = self.n;
+        let mut acc = Matrix::zeros(x.rows, n);
+        if n == 0 {
+            return acc;
+        }
+        for (r, out) in acc.data.chunks_mut(n).enumerate() {
+            self.run_row(x, r, 0, 0, out, scratch);
+        }
+        if self.w_bias != 0 {
+            for r in 0..x.rows {
+                let sx: i64 = (0..self.kdim).map(|k| x.at(r, k)).sum();
+                for v in acc.data[r * n..(r + 1) * n].iter_mut() {
+                    *v -= self.w_bias * sx;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Approximate i64 ops per batch row, for the parallel-split decision.
+    fn work_per_row(&self) -> usize {
+        if self.fast {
+            self.kdim * self.n
+        } else {
+            self.iters * self.kdim * self.slices.max(1) * self.n
+        }
+    }
+
+    /// Biased product of `(x[:, x_col0..] + x_off)` against the planes.
+    fn raw_product(&self, x: &Matrix, x_col0: usize, x_off: i64) -> Matrix {
+        assert!(x_col0 + self.kdim <= x.cols, "window exceeds input columns");
+        let n = self.n;
+        let mut acc = Matrix::zeros(x.rows, n);
+        if n == 0 || x.rows == 0 {
+            return acc;
+        }
+        // split across cores only when the work dwarfs thread spawn cost
+        let workers = if x.rows >= 2 && x.rows * self.work_per_row() >= 1 << 20 {
+            crate::util::worker_count(x.rows)
+        } else {
+            1
+        };
+        if workers <= 1 {
+            let mut scratch = self.scratch();
+            for (r, out) in acc.data.chunks_mut(n).enumerate() {
+                self.run_row(x, r, x_col0, x_off, out, &mut scratch);
+            }
+        } else {
+            let rows_per = x.rows.div_ceil(workers);
+            std::thread::scope(|s| {
+                for (ci, chunk) in acc.data.chunks_mut(rows_per * n).enumerate() {
+                    s.spawn(move || {
+                        let mut scratch = self.scratch();
+                        for (j, out) in chunk.chunks_mut(n).enumerate() {
+                            self.run_row(x, ci * rows_per + j, x_col0, x_off, out, &mut scratch);
+                        }
+                    });
+                }
+            });
+        }
+        acc
+    }
+
+    /// One batch row through the pipeline, accumulating into `out`.
+    fn run_row(
+        &self,
+        x: &Matrix,
+        r: usize,
+        x_col0: usize,
+        x_off: i64,
+        out: &mut [i64],
+        scratch: &mut RunScratch,
+    ) {
+        let n = self.n;
+        if self.fast {
+            // identity-ADC configs telescope back into a masked matmul:
+            // sum_i sum_s (x_bits_i @ w_slice_s) << place == (x & m) @ (Wb & m')
+            for k in 0..self.kdim {
+                let xv = (x.at(r, x_col0 + k) + x_off) & self.in_mask;
+                if xv == 0 {
+                    continue;
+                }
+                let row = &self.wb[k * n..k * n + n];
+                if xv == 1 {
+                    for c in 0..n {
+                        out[c] += row[c];
+                    }
+                } else {
+                    for c in 0..n {
+                        out[c] += xv * row[c];
+                    }
+                }
+            }
+            return;
+        }
+
+        let cols = &mut scratch.cols;
+        for i in 0..self.iters {
+            let shift = i as u32 * self.p.dac_bits;
             cols.fill(0);
-            for k in 0..kdim {
-                let xb = (x.at(r, k) >> shift) & dac_mask;
+            for k in 0..self.kdim {
+                let xb = ((x.at(r, x_col0 + k) + x_off) >> shift) & self.dac_mask;
                 if xb == 0 {
                     continue;
                 }
-                for s in 0..slices {
-                    let row = &planes[(s * kdim + k) * n..(s * kdim + k) * n + n];
+                let base = k * n;
+                for s in 0..self.slices {
+                    let row = &self.planes[s * self.kdim * n + base..s * self.kdim * n + base + n];
                     let dst = &mut cols[s * n..s * n + n];
                     if xb == 1 {
                         for c in 0..n {
@@ -144,41 +456,47 @@ pub fn biased_product(
                     }
                 }
             }
-            let lossless = p.lossless_adc_bits() <= p.adc_bits;
-            for s in 0..slices {
-                let place = i as u32 * p.dac_bits + s as u32 * p.cell_bits;
-                let out = &mut acc.data[r * n..r * n + n];
+            for s in 0..self.slices {
+                let place = i as u32 * self.p.dac_bits + s as u32 * self.p.cell_bits;
                 let src = &cols[s * n..s * n + n];
-                if lossless && (!adaptive || place >= p.out_shift) {
+                if self.lossless && (!self.adaptive || place >= self.p.out_shift) {
                     // identity ADC: fold straight into the accumulator
                     for c in 0..n {
                         out[c] += src[c] << place;
                     }
                 } else {
                     for c in 0..n {
-                        let q = adc_sample(src[c], place, p, adaptive);
+                        let q = adc_sample(src[c], place, &self.p, self.adaptive);
                         out[c] += q << place;
                     }
                 }
             }
         }
     }
-    acc
+}
+
+/// Raw biased product `x @ wb` through the bit-serial + ADC pipeline.
+/// `x` unsigned (`in_bits` wide), `wb` unsigned (`w_bits` wide).
+///
+/// Thin wrapper: installs a [`ProgrammedXbar`] and runs once. Call sites
+/// that reuse one weight matrix should install once and call `run` per
+/// batch instead (rust/PERF.md).
+pub fn biased_product(
+    x: &Matrix,
+    wb: &Matrix,
+    in_bits: u32,
+    w_bits: u32,
+    p: &XbarParams,
+    adaptive: bool,
+) -> Matrix {
+    assert_eq!(x.cols, wb.rows);
+    ProgrammedXbar::install_biased(wb, in_bits, w_bits, p, adaptive).run(x)
 }
 
 /// Signed raw product via bias encoding (ISAAC): store `w + 2^(wb-1)`,
-/// subtract `2^(wb-1) * sum(x)` digitally.
+/// subtract `2^(wb-1) * sum(x)` digitally. Install-and-run wrapper.
 pub fn vmm_raw(x: &Matrix, w: &Matrix, p: &XbarParams, adaptive: bool) -> Matrix {
-    let bias = 1i64 << (p.weight_bits - 1);
-    let wb = Matrix::from_fn(w.rows, w.cols, |r, c| w.at(r, c) + bias);
-    let mut raw = biased_product(x, &wb, p.input_bits, p.weight_bits, p, adaptive);
-    for r in 0..x.rows {
-        let sx: i64 = (0..x.cols).map(|k| x.at(r, k)).sum();
-        for c in 0..w.cols {
-            raw.data[r * w.cols + c] -= bias * sx;
-        }
-    }
-    raw
+    ProgrammedXbar::install(w, p, adaptive).run(x)
 }
 
 /// Signed-input variant: offsets inputs into the unsigned DAC window and
@@ -188,19 +506,9 @@ pub fn vmm_raw(x: &Matrix, w: &Matrix, p: &XbarParams, adaptive: bool) -> Matrix
 ///   x@w = (X - Bi)(Wb - Bw) = X@Wb - Bw*rowsum(X) - Bi*colsum(Wb) + K*Bi*Bw
 ///
 /// where X = x + Bi, Wb = w + Bw, K = reduction length. `colsum(Wb)` is
-/// known at weight-install time.
+/// computed at weight-install time. Install-and-run wrapper.
 pub fn vmm_raw_signed(x: &Matrix, w: &Matrix, p: &XbarParams, adaptive: bool) -> Matrix {
-    let bi = 1i64 << (p.input_bits - 1);
-    let bw = 1i64 << (p.weight_bits - 1);
-    let xs = Matrix::from_fn(x.rows, x.cols, |r, c| x.at(r, c) + bi);
-    let wb = Matrix::from_fn(w.rows, w.cols, |r, c| w.at(r, c) + bw);
-    let raw = biased_product(&xs, &wb, p.input_bits, p.weight_bits, p, adaptive);
-    let k = x.cols as i64;
-    Matrix::from_fn(x.rows, w.cols, |r, c| {
-        let rowsum: i64 = (0..x.cols).map(|j| xs.at(r, j)).sum();
-        let colsum: i64 = (0..w.rows).map(|j| wb.at(j, c)).sum();
-        raw.at(r, c) - bw * rowsum - bi * colsum + k * bi * bw
-    })
+    ProgrammedXbar::install(w, p, adaptive).run_signed(x)
 }
 
 /// Scaling stage: round-half-up shift + clamp to the signed output window.
@@ -293,5 +601,101 @@ mod tests {
         let x = Matrix::zeros(2, p.rows);
         let w = Matrix::from_fn(p.rows, 3, |r, c| (r + c) as i64);
         assert!(vmm(&x, &w, &p).data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn installed_run_is_bit_identical_to_reference_engine() {
+        // the install/run refactor (and the install-time hoist of the
+        // lossless flag) must not move a single bit, in any ADC regime
+        for (adc_bits, out_shift, adaptive) in
+            [(9, 10, false), (9, 10, true), (6, 0, false), (7, 4, true)]
+        {
+            let p = XbarParams {
+                adc_bits,
+                out_shift,
+                ..XbarParams::default()
+            };
+            let (x, w) = rand_xw(11 + adc_bits as u64, 5, 12, &p);
+            let programmed = ProgrammedXbar::install(&w, &p, adaptive);
+            assert_eq!(
+                programmed.run(&x),
+                reference::vmm_raw_reference(&x, &w, &p, adaptive),
+                "adc={adc_bits} shift={out_shift} adaptive={adaptive}"
+            );
+        }
+    }
+
+    #[test]
+    fn signed_run_is_bit_identical_to_reference_engine() {
+        let p = XbarParams::default();
+        let mut rng = Rng::new(77);
+        let x = Matrix::from_fn(3, p.rows, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
+        let w = Matrix::from_fn(p.rows, 6, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
+        for adaptive in [false, true] {
+            let programmed = ProgrammedXbar::install(&w, &p, adaptive);
+            assert_eq!(
+                programmed.run_signed(&x),
+                reference::vmm_raw_signed_reference(&x, &w, &p, adaptive)
+            );
+        }
+    }
+
+    #[test]
+    fn repeated_runs_on_one_install_do_not_interfere() {
+        // scratch reuse must be observationally pure, across both engines
+        let p = XbarParams {
+            adc_bits: 7,
+            ..XbarParams::default()
+        };
+        let (x1, w) = rand_xw(21, 4, 10, &p);
+        let (x2, _) = rand_xw(22, 4, 10, &p);
+        let programmed = ProgrammedXbar::install(&w, &p, true);
+        let first = programmed.run(&x1);
+        let _ = programmed.run(&x2); // interleave a different batch
+        let again = programmed.run(&x1);
+        assert_eq!(first, again);
+        let mut scratch = programmed.scratch();
+        assert_eq!(programmed.run_with_scratch(&x1, &mut scratch), first);
+        let _ = programmed.run_with_scratch(&x2, &mut scratch);
+        assert_eq!(programmed.run_with_scratch(&x1, &mut scratch), first);
+    }
+
+    #[test]
+    fn run_window_matches_column_slice() {
+        let p = XbarParams::default();
+        let mut rng = Rng::new(31);
+        let wide = Matrix::from_fn(3, 2 * p.rows, |_, _| rng.range_i64(0, 1 << 16));
+        let w = Matrix::from_fn(p.rows, 5, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
+        let programmed = ProgrammedXbar::install(&w, &p, false);
+        let sliced = Matrix::from_fn(3, p.rows, |r, c| wide.at(r, p.rows + c));
+        assert_eq!(programmed.run_window(&wide, p.rows), programmed.run(&sliced));
+    }
+
+    #[test]
+    fn fused_fast_path_engages_only_when_lossless() {
+        let p = XbarParams::default();
+        let w = Matrix::zeros(p.rows, 2);
+        assert!(ProgrammedXbar::install(&w, &p, false).is_fused());
+        assert!(!ProgrammedXbar::install(&w, &p, true).is_fused());
+        let lossy = XbarParams {
+            adc_bits: 8,
+            ..XbarParams::default()
+        };
+        assert!(!ProgrammedXbar::install(&w, &lossy, false).is_fused());
+    }
+
+    #[test]
+    fn parallel_batch_split_matches_sequential() {
+        // large enough to cross the parallel-split threshold
+        let p = XbarParams {
+            adc_bits: 8, // lossy: exercises the slice engine in parallel
+            ..XbarParams::default()
+        };
+        let (x, w) = rand_xw(41, 16, 64, &p);
+        let programmed = ProgrammedXbar::install(&w, &p, false);
+        let parallel = programmed.run(&x);
+        let mut scratch = programmed.scratch();
+        let sequential = programmed.run_with_scratch(&x, &mut scratch);
+        assert_eq!(parallel, sequential);
     }
 }

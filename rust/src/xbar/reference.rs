@@ -1,0 +1,123 @@
+//! Reference implementation of the bit-serial crossbar pipeline — the
+//! pre-install/run engine, kept verbatim as (a) the independent oracle the
+//! property tests pin [`super::ProgrammedXbar`] against, and (b) the
+//! "before" side of the `perf_hotpath` install-once comparison.
+//!
+//! Everything here re-slices the weight cell planes on every call, exactly
+//! like the original `biased_product` hot path did.
+
+use crate::config::XbarParams;
+
+use super::{adc_sample, Matrix};
+
+/// Raw biased product `x @ wb` through the bit-serial + ADC pipeline,
+/// re-slicing the weight planes on every call (the legacy per-call layout).
+pub fn biased_product_reference(
+    x: &Matrix,
+    wb: &Matrix,
+    in_bits: u32,
+    w_bits: u32,
+    p: &XbarParams,
+    adaptive: bool,
+) -> Matrix {
+    assert_eq!(x.cols, wb.rows);
+    assert!(x.cols <= p.rows, "reduction dim exceeds crossbar rows");
+    let iters = (in_bits as usize).div_ceil(p.dac_bits as usize);
+    let slices = (w_bits as usize).div_ceil(p.cell_bits as usize);
+    let dac_mask = (1i64 << p.dac_bits) - 1;
+    let cell_mask = (1i64 << p.cell_bits) - 1;
+    let (kdim, n) = (x.cols, wb.cols);
+
+    // per-call weight slicing: planes[s][k][c], flat
+    let mut planes = vec![0i64; slices * kdim * n];
+    for s in 0..slices {
+        let shift = s as u32 * p.cell_bits;
+        for k in 0..kdim {
+            let dst = &mut planes[(s * kdim + k) * n..(s * kdim + k) * n + n];
+            let src = &wb.data[k * n..k * n + n];
+            for c in 0..n {
+                dst[c] = (src[c] >> shift) & cell_mask;
+            }
+        }
+    }
+
+    let mut acc = Matrix::zeros(x.rows, n);
+    let mut cols = vec![0i64; slices * n]; // per-(i) analog column sums
+    for r in 0..x.rows {
+        for i in 0..iters {
+            let shift = i as u32 * p.dac_bits;
+            cols.fill(0);
+            for k in 0..kdim {
+                let xb = (x.at(r, k) >> shift) & dac_mask;
+                if xb == 0 {
+                    continue;
+                }
+                for s in 0..slices {
+                    let row = &planes[(s * kdim + k) * n..(s * kdim + k) * n + n];
+                    let dst = &mut cols[s * n..s * n + n];
+                    if xb == 1 {
+                        for c in 0..n {
+                            dst[c] += row[c];
+                        }
+                    } else {
+                        for c in 0..n {
+                            dst[c] += xb * row[c];
+                        }
+                    }
+                }
+            }
+            let lossless = p.lossless_adc_bits() <= p.adc_bits;
+            for s in 0..slices {
+                let place = i as u32 * p.dac_bits + s as u32 * p.cell_bits;
+                let out = &mut acc.data[r * n..r * n + n];
+                let src = &cols[s * n..s * n + n];
+                if lossless && (!adaptive || place >= p.out_shift) {
+                    // identity ADC: fold straight into the accumulator
+                    for c in 0..n {
+                        out[c] += src[c] << place;
+                    }
+                } else {
+                    for c in 0..n {
+                        let q = adc_sample(src[c], place, p, adaptive);
+                        out[c] += q << place;
+                    }
+                }
+            }
+        }
+    }
+    acc
+}
+
+/// Reference signed-weight raw product (ISAAC bias encoding), per-call.
+pub fn vmm_raw_reference(x: &Matrix, w: &Matrix, p: &XbarParams, adaptive: bool) -> Matrix {
+    let bias = 1i64 << (p.weight_bits - 1);
+    let wb = Matrix::from_fn(w.rows, w.cols, |r, c| w.at(r, c) + bias);
+    let mut raw = biased_product_reference(x, &wb, p.input_bits, p.weight_bits, p, adaptive);
+    for r in 0..x.rows {
+        let sx: i64 = (0..x.cols).map(|k| x.at(r, k)).sum();
+        for c in 0..w.cols {
+            raw.data[r * w.cols + c] -= bias * sx;
+        }
+    }
+    raw
+}
+
+/// Reference signed-input variant (both operand biases applied digitally).
+pub fn vmm_raw_signed_reference(
+    x: &Matrix,
+    w: &Matrix,
+    p: &XbarParams,
+    adaptive: bool,
+) -> Matrix {
+    let bi = 1i64 << (p.input_bits - 1);
+    let bw = 1i64 << (p.weight_bits - 1);
+    let xs = Matrix::from_fn(x.rows, x.cols, |r, c| x.at(r, c) + bi);
+    let wb = Matrix::from_fn(w.rows, w.cols, |r, c| w.at(r, c) + bw);
+    let raw = biased_product_reference(&xs, &wb, p.input_bits, p.weight_bits, p, adaptive);
+    let k = x.cols as i64;
+    Matrix::from_fn(x.rows, w.cols, |r, c| {
+        let rowsum: i64 = (0..x.cols).map(|j| xs.at(r, j)).sum();
+        let colsum: i64 = (0..w.rows).map(|j| wb.at(j, c)).sum();
+        raw.at(r, c) - bw * rowsum - bi * colsum + k * bi * bw
+    })
+}

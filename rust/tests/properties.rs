@@ -14,7 +14,10 @@ use newton::proptest_lite::check;
 use newton::strassen::{strassen, strassen_with};
 use newton::util::Rng;
 use newton::workloads;
-use newton::xbar::{matmul, scale_clamp, vmm_raw, vmm_raw_signed, Matrix};
+use newton::xbar::reference::{
+    biased_product_reference, vmm_raw_reference, vmm_raw_signed_reference,
+};
+use newton::xbar::{matmul, scale_clamp, vmm_raw, vmm_raw_signed, Matrix, ProgrammedXbar};
 
 fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize, lo: i64, hi: i64) -> Matrix {
     Matrix::from_fn(rows, cols, |_, _| rng.range_i64(lo, hi))
@@ -207,6 +210,124 @@ fn prop_mapping_conservation() {
         prop_assert!(
             m.conv_imas + m.fc_imas == m.allocs.iter().map(|a| a.imas).sum::<usize>(),
             "ima counts disagree"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_programmed_xbar_equals_reference_engine() {
+    // the install-once engine must be bit-identical to the legacy per-call
+    // engine across random shapes, streaming widths, and ADC regimes
+    // (lossless-fused, lossy, adaptive, lossy+adaptive)
+    check("programmed==reference", 30, |rng| {
+        let p = XbarParams {
+            dac_bits: 1 + rng.below(2) as u32,
+            cell_bits: 1 + rng.below(2) as u32,
+            adc_bits: 5 + rng.below(6) as u32,
+            out_shift: rng.below(12) as u32,
+            ..XbarParams::default()
+        };
+        let adaptive = rng.below(2) == 1;
+        let in_bits = 4 + rng.below(13) as u32;
+        let w_bits = 4 + rng.below(13) as u32;
+        let b = 1 + rng.below(4) as usize;
+        let k = 1 + rng.below(p.rows as u64) as usize;
+        let n = 1 + rng.below(16) as usize;
+        let x = rand_matrix(rng, b, k, 0, 1 << in_bits);
+        let wb = rand_matrix(rng, k, n, 0, 1 << w_bits);
+        let programmed = ProgrammedXbar::install_biased(&wb, in_bits, w_bits, &p, adaptive);
+        let want = biased_product_reference(&x, &wb, in_bits, w_bits, &p, adaptive);
+        prop_assert!(
+            programmed.run(&x) == want,
+            "mismatch b={b} k={k} n={n} in={in_bits} w={w_bits} adc={} shift={} adaptive={adaptive}",
+            p.adc_bits,
+            p.out_shift
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_programmed_signed_paths_equal_reference() {
+    check("programmed-signed==reference", 15, |rng| {
+        let p = XbarParams {
+            adc_bits: 6 + rng.below(4) as u32,
+            out_shift: rng.below(12) as u32,
+            ..XbarParams::default()
+        };
+        let adaptive = rng.below(2) == 1;
+        let b = 1 + rng.below(3) as usize;
+        let n = 1 + rng.below(10) as usize;
+        let w = rand_matrix(rng, p.rows, n, -(1 << 15), 1 << 15);
+        let programmed = ProgrammedXbar::install(&w, &p, adaptive);
+        let xu = rand_matrix(rng, b, p.rows, 0, 1 << 16);
+        prop_assert!(
+            programmed.run(&xu) == vmm_raw_reference(&xu, &w, &p, adaptive),
+            "vmm_raw path diverged (adc={} adaptive={adaptive})",
+            p.adc_bits
+        );
+        let xs = rand_matrix(rng, b, p.rows, -(1 << 15), 1 << 15);
+        prop_assert!(
+            programmed.run_signed(&xs) == vmm_raw_signed_reference(&xs, &w, &p, adaptive),
+            "signed-input path diverged (adc={} adaptive={adaptive})",
+            p.adc_bits
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wrappers_preserve_legacy_contract() {
+    // the free functions are install-and-run wrappers now; they must keep
+    // returning exactly what the pre-refactor engine returned
+    check("wrappers==reference", 10, |rng| {
+        let p = XbarParams {
+            adc_bits: 7 + rng.below(3) as u32,
+            ..XbarParams::default()
+        };
+        let adaptive = rng.below(2) == 1;
+        let x = rand_matrix(rng, 2, p.rows, 0, 1 << 16);
+        let w = rand_matrix(rng, p.rows, 6, -(1 << 15), 1 << 15);
+        prop_assert!(
+            vmm_raw(&x, &w, &p, adaptive) == vmm_raw_reference(&x, &w, &p, adaptive),
+            "vmm_raw wrapper drifted"
+        );
+        let xs = rand_matrix(rng, 2, p.rows, -(1 << 15), 1 << 15);
+        prop_assert!(
+            vmm_raw_signed(&xs, &w, &p, adaptive)
+                == vmm_raw_signed_reference(&xs, &w, &p, adaptive),
+            "vmm_raw_signed wrapper drifted"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_installed_runs_are_observationally_pure() {
+    // scratch-buffer reuse across runs (and interleaved batches) must not
+    // leak state: every re-run of the same input is bit-identical
+    check("install-run-pure", 10, |rng| {
+        let p = XbarParams {
+            adc_bits: 6 + rng.below(3) as u32,
+            ..XbarParams::default()
+        };
+        let w = rand_matrix(rng, p.rows, 8, -(1 << 15), 1 << 15);
+        let programmed = ProgrammedXbar::install(&w, &p, true);
+        let x1 = rand_matrix(rng, 3, p.rows, 0, 1 << 16);
+        let x2 = rand_matrix(rng, 3, p.rows, 0, 1 << 16);
+        let first = programmed.run(&x1);
+        let _ = programmed.run(&x2);
+        prop_assert!(programmed.run(&x1) == first, "second run diverged");
+        let mut scratch = programmed.scratch();
+        prop_assert!(
+            programmed.run_with_scratch(&x1, &mut scratch) == first,
+            "scratch run diverged from fresh run"
+        );
+        let _ = programmed.run_with_scratch(&x2, &mut scratch);
+        prop_assert!(
+            programmed.run_with_scratch(&x1, &mut scratch) == first,
+            "reused scratch leaked state"
         );
         Ok(())
     });

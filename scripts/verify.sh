@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Repo verification: tier-1 build + tests, advisory formatting check, and
+# the hot-path perf smoke (writes BENCH_hotpath.json for the trajectory).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo
+echo "== cargo test -q =="
+cargo test -q
+
+echo
+echo "== cargo fmt --check (advisory) =="
+if cargo fmt --version >/dev/null 2>&1; then
+  if ! cargo fmt --all -- --check; then
+    echo "WARN: formatting drift (advisory; seed code predates rustfmt adoption)"
+  fi
+else
+  echo "rustfmt unavailable; skipped"
+fi
+
+echo
+echo "== perf smoke: cargo bench --bench perf_hotpath -- --smoke =="
+cargo bench --bench perf_hotpath -- --smoke
+
+echo
+echo "verify OK"
