@@ -14,9 +14,10 @@ use std::time::Instant;
 use newton::config::{ChipConfig, ImaConfig, NewtonFeatures, TileConfig, XbarParams};
 use newton::energy::TileModel;
 use newton::mapping::{self, Mapping, MappingPolicy};
-use newton::pipeline::evaluate_grid;
+use newton::pipeline::{evaluate_grid, evaluate_grid_on};
+use newton::sched::Executor;
 use newton::tiles::ChipPlan;
-use newton::util::{f1, f2, geomean, Table};
+use newton::util::{f1, f2, geomean, worker_count, Table};
 use newton::workloads;
 
 fn main() {
@@ -129,6 +130,32 @@ fn main() {
     }
     t.print();
     println!("   ({} design points x {} nets evaluated in {grid_ms:.0} ms)", steps.len(), nets.len());
+
+    // ---- executor scaling: 1 worker vs contiguous vs stealing --------------
+    // the technique-stack grid is skewed (resnet34 cells cost ~10x the
+    // mlp-class cells), exactly the case the work-stealing executor exists
+    // for; one job per cell, results bit-identical for every configuration
+    println!("\nExecutor scaling on the technique-stack grid ({} designs x {} nets):", chips.len(), nets.len());
+    let pool = worker_count(chips.len() * nets.len());
+    let timed = |exec: &Executor| {
+        let t0 = Instant::now();
+        let g = evaluate_grid_on(&nets, &chips, exec);
+        (t0.elapsed().as_secs_f64() * 1e3, g)
+    };
+    let (ms_one, g_one) = timed(&Executor::new(1));
+    let (ms_contig, g_contig) = timed(&Executor::contiguous(pool));
+    let (ms_steal, g_steal) = timed(&Executor::new(pool));
+    let mut t = Table::new(&["executor", "workers", "ms"]);
+    t.row(&["1 worker (sequential)".to_string(), "1".to_string(), f1(ms_one)]);
+    t.row(&["contiguous split".to_string(), pool.to_string(), f1(ms_contig)]);
+    t.row(&["work-stealing".to_string(), pool.to_string(), f1(ms_steal)]);
+    t.print();
+    for ((a, b), c) in g_one.iter().flatten().zip(g_contig.iter().flatten()).zip(g_steal.iter().flatten()) {
+        assert_eq!(a.energy_per_op_pj, b.energy_per_op_pj);
+        assert_eq!(a.energy_per_op_pj, c.energy_per_op_pj);
+        assert_eq!(a.throughput, c.throughput);
+    }
+    println!("-> identical numbers from every executor; stealing only changes wall time");
 
     // ---- sanity: plan-level power for the chosen point ---------------------
     let chip = ChipConfig::newton();

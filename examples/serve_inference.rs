@@ -13,6 +13,11 @@
 //! Either way it reports wallclock latency/throughput next to the simulated
 //! Newton-hardware metrics.
 //!
+//! For the multi-replica serving path with adaptive/lossy ADC configs and
+//! per-batch deviation reporting, use the CLI — that surface is the single
+//! owner of the flag plumbing: `newton serve --adc adaptive|lossy:<bits>
+//! [--replicas N]`.
+//!
 //! Run: `cargo run --release --example serve_inference -- [--requests 64]`
 
 use std::time::Instant;

@@ -20,7 +20,8 @@ use newton::config::{ChipConfig, NewtonFeatures, XbarParams};
 use newton::coordinator::batcher::{Batcher, PendingRequest};
 use newton::pipeline::{evaluate, evaluate_grid, evaluate_suite};
 use newton::runtime::{default_artifacts_dir, Runtime};
-use newton::util::{median, Rng};
+use newton::sched::{self, Executor};
+use newton::util::{median, worker_count, Rng};
 use newton::workloads;
 use newton::xbar::cnn::{random_images, MiniCnn};
 use newton::xbar::{reference, scale_clamp, Matrix, ProgrammedXbar};
@@ -115,6 +116,42 @@ fn main() {
         programmed_cnn.forward(&img)
     });
 
+    // serving batch, before/after this PR's split: the whole-batch pass
+    // (PR 1's engine — parallel only inside each chunked VMM via the
+    // batch-row fan-out) vs the per-image split across the pool
+    // (bit-identical by property test)
+    let img8 = random_images(8, 13);
+    let cnn_seq_b8 = h.bench("cnn: newton-mini forward b8, whole-batch (VMM rows)", 3, || {
+        programmed_cnn.forward_seq(&img8)
+    });
+    let cnn_par_b8 = h.bench("cnn: newton-mini forward b8, per-image sched", 3, || {
+        programmed_cnn.forward(&img8)
+    });
+
+    // ---- sched executor: contiguous vs stealing on a skewed mix ------------
+    // first eighth of the jobs cost 10x (a resnet column on a design grid):
+    // the contiguous split strands every other worker behind worker 0
+    let skew_jobs = 256usize;
+    let heavy_spins = if smoke { 60_000 } else { 300_000 };
+    let cost = move |i: usize| {
+        if i < skew_jobs / 8 {
+            heavy_spins
+        } else {
+            heavy_spins / 10
+        }
+    };
+    let skewed = |exec: &Executor| exec.map(skew_jobs, |i| sched::spin_job(i as u64, cost(i)));
+    let pool = worker_count(skew_jobs);
+    let sched_one = h.bench("sched: skewed 256 jobs, 1 worker", 8, || {
+        skewed(&Executor::new(1))
+    });
+    let sched_contig = h.bench("sched: skewed 256 jobs, N workers contiguous", 8, || {
+        skewed(&Executor::contiguous(pool))
+    });
+    let sched_steal = h.bench("sched: skewed 256 jobs, N workers stealing", 8, || {
+        skewed(&Executor::new(pool))
+    });
+
     // ---- batcher -----------------------------------------------------------
     h.bench("batcher: 1024 requests through batches of 8", 50, || {
         let mut b = Batcher::new(8, 4, std::time::Duration::from_secs(0));
@@ -159,11 +196,17 @@ fn main() {
     let vmm_slice_speedup = legacy_adaptive / amortised_adaptive.max(1e-9);
     let suite_speedup = seq / par.max(1e-9);
     let cnn_speedup = legacy_cnn / amortised_cnn.max(1e-9);
+    let sched_scaling_speedup = sched_one / sched_steal.max(1e-9);
+    let sched_steal_speedup = sched_contig / sched_steal.max(1e-9);
+    let cnn_image_split_speedup = cnn_seq_b8 / cnn_par_b8.max(1e-9);
     println!("\nderived:");
     println!("  amortised VMM speedup (installed vs legacy) : {vmm_speedup:7.1}x (target >= 5x)");
     println!("  slice-engine speedup (adaptive, amortised)  : {vmm_slice_speedup:7.1}x");
     println!("  evaluate_suite parallel speedup             : {suite_speedup:7.1}x over sequential");
     println!("  programmed CNN forward speedup              : {cnn_speedup:7.1}x");
+    println!("  sched scaling (1 worker vs {pool} stealing)     : {sched_scaling_speedup:7.1}x");
+    println!("  sched stealing vs contiguous (skewed mix)   : {sched_steal_speedup:7.1}x");
+    println!("  cnn b8 per-image split vs sequential        : {cnn_image_split_speedup:7.1}x");
 
     let mut json = String::from("{\n  \"cases\": [\n");
     for (i, (name, med, n)) in h.results.iter().enumerate() {
@@ -173,7 +216,7 @@ fn main() {
         ));
     }
     json.push_str(&format!(
-        "  ],\n  \"derived\": {{\n    \"vmm_amortised_speedup\": {vmm_speedup:.2},\n    \"vmm_slice_engine_speedup\": {vmm_slice_speedup:.2},\n    \"suite_parallel_speedup\": {suite_speedup:.2},\n    \"cnn_programmed_speedup\": {cnn_speedup:.2}\n  }}\n}}\n"
+        "  ],\n  \"derived\": {{\n    \"vmm_amortised_speedup\": {vmm_speedup:.2},\n    \"vmm_slice_engine_speedup\": {vmm_slice_speedup:.2},\n    \"suite_parallel_speedup\": {suite_speedup:.2},\n    \"cnn_programmed_speedup\": {cnn_speedup:.2},\n    \"sched_scaling_speedup\": {sched_scaling_speedup:.2},\n    \"sched_steal_speedup\": {sched_steal_speedup:.2},\n    \"cnn_image_split_speedup\": {cnn_image_split_speedup:.2}\n  }}\n}}\n"
     ));
     match std::fs::write("BENCH_hotpath.json", &json) {
         Ok(()) => println!("\nwrote BENCH_hotpath.json"),

@@ -78,6 +78,72 @@ impl XbarParams {
     }
 }
 
+/// ADC operating mode for a served pipeline — the fidelity-vs-cost knob the
+/// serving stack plumbs end-to-end (`newton serve --adc ...`), so the
+/// sweeps in the spirit of arXiv:2109.01262 / arXiv:2403.13082 can run
+/// against served traffic instead of only the analytic model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdcKind {
+    /// Lossless full-resolution ADC (the paper's default 9-bit budget).
+    Exact,
+    /// Adaptive SAR scheme (§III-A3): bits outside the kept output window
+    /// are gated; numerics stay within the analytic rounding bound.
+    Adaptive,
+    /// Truncating lossy ADC at the given resolution (bits).
+    Lossy(u32),
+}
+
+impl AdcKind {
+    /// Parse a `--adc` flag value: `exact` (alias `lossless`), `adaptive`,
+    /// `lossy` (8-bit default) or `lossy:<bits>`.
+    pub fn parse(s: &str) -> Result<AdcKind, String> {
+        match s {
+            "exact" | "lossless" => Ok(AdcKind::Exact),
+            "adaptive" => Ok(AdcKind::Adaptive),
+            "lossy" => Ok(AdcKind::Lossy(8)),
+            other => match other.strip_prefix("lossy:") {
+                Some(bits) => {
+                    let b: u32 = bits
+                        .parse()
+                        .map_err(|_| format!("bad --adc lossy resolution {bits:?}"))?;
+                    if !(1..=16).contains(&b) {
+                        return Err(format!("--adc lossy:{b}: resolution must be 1..=16 bits"));
+                    }
+                    Ok(AdcKind::Lossy(b))
+                }
+                None => Err(format!(
+                    "unknown --adc kind {other:?}; try exact|adaptive|lossy:<bits>"
+                )),
+            },
+        }
+    }
+
+    /// Apply the kind to base pipeline parameters, returning the effective
+    /// `(XbarParams, adaptive)` pair every crossbar entry point takes.
+    pub fn apply(&self, base: &XbarParams) -> (XbarParams, bool) {
+        match *self {
+            AdcKind::Exact => (*base, false),
+            AdcKind::Adaptive => (*base, true),
+            AdcKind::Lossy(bits) => (
+                XbarParams {
+                    adc_bits: bits,
+                    ..*base
+                },
+                false,
+            ),
+        }
+    }
+
+    /// Human label for tables and serve output.
+    pub fn label(&self) -> String {
+        match *self {
+            AdcKind::Exact => "exact".to_string(),
+            AdcKind::Adaptive => "adaptive".to_string(),
+            AdcKind::Lossy(bits) => format!("lossy:{bits}"),
+        }
+    }
+}
+
 /// In-situ multiply-accumulate unit: a group of crossbars sharing an input
 /// HTree, their ADCs, and shift-and-add reduction.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -335,6 +401,30 @@ impl ChipConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn adc_kind_parses_and_applies() {
+        assert_eq!(AdcKind::parse("exact"), Ok(AdcKind::Exact));
+        assert_eq!(AdcKind::parse("lossless"), Ok(AdcKind::Exact));
+        assert_eq!(AdcKind::parse("adaptive"), Ok(AdcKind::Adaptive));
+        assert_eq!(AdcKind::parse("lossy"), Ok(AdcKind::Lossy(8)));
+        assert_eq!(AdcKind::parse("lossy:7"), Ok(AdcKind::Lossy(7)));
+        assert!(AdcKind::parse("lossy:0").is_err());
+        assert!(AdcKind::parse("lossy:17").is_err());
+        assert!(AdcKind::parse("lossy:x").is_err());
+        assert!(AdcKind::parse("nope").is_err());
+
+        let base = XbarParams::default();
+        let (p, a) = AdcKind::Exact.apply(&base);
+        assert_eq!((p, a), (base, false));
+        let (p, a) = AdcKind::Adaptive.apply(&base);
+        assert_eq!((p, a), (base, true));
+        let (p, a) = AdcKind::Lossy(7).apply(&base);
+        assert_eq!(p.adc_bits, 7);
+        assert!(!a);
+        assert_eq!(AdcKind::Lossy(7).label(), "lossy:7");
+        assert_eq!(AdcKind::Adaptive.label(), "adaptive");
+    }
 
     #[test]
     fn default_xbar_matches_paper() {

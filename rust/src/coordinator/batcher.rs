@@ -148,6 +148,38 @@ mod tests {
     }
 
     #[test]
+    fn empty_flush_yields_nothing_even_past_deadline() {
+        // zero deadline + nothing pending: an idle flush loop must neither
+        // report ready nor fabricate a batch, including after a drain
+        let mut b = Batcher::new(4, 2, Duration::from_millis(0));
+        assert!(!b.ready(Instant::now() + Duration::from_secs(1)));
+        assert!(b.take_batch().is_none());
+        b.push(req(1, 2));
+        assert!(b.take_batch().is_some());
+        assert!(!b.ready(Instant::now()));
+        assert!(b.take_batch().is_none());
+    }
+
+    #[test]
+    fn exact_capacity_closes_without_waiting_for_deadline() {
+        // exactly `capacity` requests close immediately under an hour-long
+        // deadline, drain completely, and leave the batcher not-ready
+        let mut b = Batcher::new(4, 1, Duration::from_secs(3600));
+        for i in 0..3 {
+            b.push(req(i, 1));
+            assert!(!b.ready(Instant::now()), "ready below capacity");
+        }
+        b.push(req(3, 1));
+        assert!(b.ready(Instant::now()));
+        let batch = b.take_batch().unwrap();
+        assert_eq!(batch.n_real, 4);
+        assert_eq!(batch.ids, vec![0, 1, 2, 3]);
+        assert_eq!(b.pending_len(), 0);
+        assert!(!b.ready(Instant::now()));
+        assert!(b.take_batch().is_none());
+    }
+
+    #[test]
     #[should_panic(expected = "bad image shape")]
     fn rejects_wrong_shape() {
         let mut b = Batcher::new(2, 4, Duration::from_secs(1));

@@ -5,46 +5,148 @@
 //! same batch re-executed through the legacy per-call engine must match
 //! bit-for-bit, which pins the install/run refactor at model scale on the
 //! real serving geometry.
+//!
+//! Multi-replica mode (`GoldenServer::replicated`): N copies of the model
+//! installed once each — the software analogue of provisioning N crossbar
+//! chip instances — fed fixed-shape batches from the [`Batcher`] through
+//! the work-stealing executor ([`crate::sched`]), one job per batch with
+//! round-robin replica affinity. Adaptive/lossy ADC configs ([`AdcKind`])
+//! are served next to a lossless golden install, and every batch reports
+//! its max-abs-error against that golden reference — fidelity-vs-cost
+//! sweeps (arXiv:2109.01262 / 2403.13082) against served traffic.
 
-use crate::config::XbarParams;
+use std::time::{Duration, Instant};
+
+use crate::config::{AdcKind, XbarParams};
+use crate::coordinator::batcher::{Batch, Batcher, PendingRequest};
+use crate::sched::Executor;
 use crate::xbar::cnn::{MiniCnn, ProgrammedCnn, Tensor};
+
+/// Elements in one newton-mini input image.
+const IMAGE_ELEMS: usize = 32 * 32 * 3;
 
 /// Batched golden-model inference over installed crossbar weights.
 pub struct GoldenServer {
     cnn: MiniCnn,
-    programmed: ProgrammedCnn,
+    /// Installed serving replicas (>= 1), all with the serving ADC config.
+    replicas: Vec<ProgrammedCnn>,
+    /// Lossless reference install, present whenever the serving config can
+    /// deviate from it (adaptive or lossy ADC).
+    golden: Option<ProgrammedCnn>,
+    kind: AdcKind,
     p: XbarParams,
     adaptive: bool,
     batch: usize,
+}
+
+/// One served batch from [`GoldenServer::serve_batches`].
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    /// Batch index in submission order (reports come back in this order).
+    pub index: usize,
+    /// Replica that executed the batch (round-robin affinity).
+    pub replica: usize,
+    /// Request ids of the real rows.
+    pub ids: Vec<u64>,
+    /// Real images in the batch (the rest was padding).
+    pub n_real: usize,
+    /// Per-request logits, real rows only.
+    pub logits: Vec<Vec<i32>>,
+    /// Max |served - golden| over the real logits of this batch; 0 when
+    /// the serving config is itself lossless.
+    pub max_abs_err: i64,
+}
+
+/// Aggregate a serve run's per-batch reports into
+/// `(requests_served, worst_deviation)` — the summary `newton serve
+/// --adc` prints and tests assert against.
+pub fn serve_totals(reports: &[BatchReport]) -> (usize, i64) {
+    (
+        reports.iter().map(|r| r.n_real).sum(),
+        reports.iter().map(|r| r.max_abs_err).max().unwrap_or(0),
+    )
 }
 
 /// Flat `32*32*3` i32 images -> a (B,32,32,3) activation tensor, zero-padded
 /// to `batch` rows.
 fn tensor_from(images: &[Vec<i32>], batch: usize) -> Tensor {
     let mut t = Tensor::zeros(batch, 32, 32, 3);
-    let per = 32 * 32 * 3;
     for (i, img) in images.iter().enumerate() {
-        assert_eq!(img.len(), per, "image {i}: want {per} elements");
+        assert_eq!(img.len(), IMAGE_ELEMS, "image {i}: want {IMAGE_ELEMS} elements");
         for (j, &v) in img.iter().enumerate() {
-            t.data[i * per + j] = v as i64;
+            t.data[i * IMAGE_ELEMS + j] = v as i64;
         }
     }
     t
 }
 
+/// A batcher-padded flat batch -> a (batch,32,32,3) tensor.
+fn tensor_from_flat(data: &[i32], batch: usize) -> Tensor {
+    assert_eq!(data.len(), batch * IMAGE_ELEMS, "bad batch shape");
+    let mut t = Tensor::zeros(batch, 32, 32, 3);
+    for (d, &v) in t.data.iter_mut().zip(data) {
+        *d = v as i64;
+    }
+    t
+}
+
 impl GoldenServer {
-    /// Install the newton-mini weights once for the given pipeline config.
-    pub fn new(seed: u64, p: &XbarParams, adaptive: bool, batch: usize) -> Self {
+    /// `kind`: the caller's constructed [`AdcKind`] when there is one
+    /// (`replicated`), else derived from the raw `(p, adaptive)` pair.
+    fn build(
+        seed: u64,
+        p: XbarParams,
+        adaptive: bool,
+        n_replicas: usize,
+        batch: usize,
+        kind: Option<AdcKind>,
+    ) -> Self {
         assert!(batch > 0);
+        assert!(n_replicas > 0);
         let cnn = MiniCnn::new(seed);
-        let programmed = cnn.program(p, adaptive);
+        let replicas: Vec<ProgrammedCnn> =
+            (0..n_replicas).map(|_| cnn.program(&p, adaptive)).collect();
+        // the golden install is numerics-driven: present iff the serving
+        // config can actually deviate (e.g. Lossy(10) at a 9-bit lossless
+        // budget is exact and needs no reference, whatever its label)
+        let lossless = !adaptive && p.adc_bits >= p.lossless_adc_bits();
+        let golden = (!lossless).then(|| {
+            cnn.program(
+                &XbarParams {
+                    adc_bits: p.lossless_adc_bits(),
+                    ..p
+                },
+                false,
+            )
+        });
+        let kind = kind.unwrap_or(if adaptive {
+            AdcKind::Adaptive
+        } else if lossless {
+            AdcKind::Exact
+        } else {
+            AdcKind::Lossy(p.adc_bits)
+        });
         GoldenServer {
             cnn,
-            programmed,
-            p: *p,
+            replicas,
+            golden,
+            kind,
+            p,
             adaptive,
             batch,
         }
+    }
+
+    /// Install the newton-mini weights once for the given pipeline config.
+    pub fn new(seed: u64, p: &XbarParams, adaptive: bool, batch: usize) -> Self {
+        Self::build(seed, *p, adaptive, 1, batch, None)
+    }
+
+    /// Multi-replica serving: `n_replicas` installs of the `kind` serving
+    /// config (plus a lossless golden install when `kind` can deviate).
+    pub fn replicated(seed: u64, kind: AdcKind, n_replicas: usize, batch: usize) -> Self {
+        let (p, adaptive) = kind.apply(&XbarParams::default());
+        Self::build(seed, p, adaptive, n_replicas, batch, Some(kind))
     }
 
     /// The standard fallback configuration shared by `newton serve` and the
@@ -56,6 +158,22 @@ impl GoldenServer {
     /// Batch capacity per forward pass.
     pub fn batch(&self) -> usize {
         self.batch
+    }
+
+    /// Installed serving replicas.
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The serving ADC mode.
+    pub fn adc_kind(&self) -> AdcKind {
+        self.kind
+    }
+
+    /// True when a lossless golden install rides along for per-batch
+    /// deviation reporting.
+    pub fn has_golden_reference(&self) -> bool {
+        self.golden.is_some()
     }
 
     /// Verification of the head batch (or every image if fewer): true when
@@ -72,7 +190,7 @@ impl GoldenServer {
         let mut out = Vec::with_capacity(images.len());
         for chunk in images.chunks(self.batch) {
             let t = tensor_from(chunk, self.batch);
-            let logits = self.programmed.forward(&t);
+            let logits = self.replicas[0].forward(&t);
             for i in 0..chunk.len() {
                 out.push((0..logits.cols).map(|c| logits.at(i, c) as i32).collect());
             }
@@ -80,11 +198,82 @@ impl GoldenServer {
         out
     }
 
+    /// Multi-replica serving path: requests flow through the [`Batcher`]
+    /// into fixed-shape batches, each batch is one work-stealing job with
+    /// round-robin replica affinity, and every batch's real logits are
+    /// compared against the lossless golden install. Reports come back in
+    /// submission order regardless of worker count. The pool is sized by
+    /// the total image count, so spare capacity beyond the batch-level
+    /// fan-out flows into per-image splits inside each batch.
+    pub fn serve_batches(&self, images: &[Vec<i32>]) -> Vec<BatchReport> {
+        self.serve_batches_on(images, &Executor::for_jobs(images.len()))
+    }
+
+    /// [`Self::serve_batches`] on a caller-sized executor, which bounds
+    /// the total sched-level fan-out: batch jobs run on it, and the pool's
+    /// capacity is divided across in-flight batches for the per-image
+    /// split inside each one (the per-VMM fan-out stays sequential inside
+    /// pool workers — see `sched::in_worker` — so compute threads stay
+    /// ~`exec.workers()` rather than multiplying per layer). With a
+    /// 1-worker executor everything runs sequentially on the caller
+    /// thread, like [`Self::infer`].
+    pub fn serve_batches_on(&self, images: &[Vec<i32>], exec: &Executor) -> Vec<BatchReport> {
+        let mut batcher = Batcher::new(self.batch, IMAGE_ELEMS, Duration::from_millis(0));
+        for (i, img) in images.iter().enumerate() {
+            batcher.push(PendingRequest {
+                id: i as u64,
+                image: img.clone(),
+                enqueued: Instant::now(),
+            });
+        }
+        let mut batches: Vec<Batch> = Vec::new();
+        while let Some(b) = batcher.take_batch() {
+            batches.push(b);
+        }
+        // divide the pool: in-flight batch jobs × per-image workers ≈ pool
+        // (ceil so an uneven batch count never idles cores)
+        let in_flight = exec.workers().min(batches.len()).max(1);
+        let image_workers = exec.workers().div_ceil(in_flight);
+        exec.map(batches.len(), |bi| self.run_batch(bi, &batches[bi], image_workers))
+    }
+
+    fn run_batch(&self, index: usize, b: &Batch, image_workers: usize) -> BatchReport {
+        let replica = index % self.replicas.len();
+        let t = tensor_from_flat(&b.data, self.batch);
+        let image_exec = Executor::new(image_workers);
+        let fwd = |cnn: &ProgrammedCnn| cnn.forward_on(&t, &image_exec);
+        let served = fwd(&self.replicas[replica]);
+        let max_abs_err = match &self.golden {
+            Some(g) => {
+                let want = fwd(g);
+                let mut worst = 0i64;
+                for r in 0..b.n_real {
+                    for c in 0..served.cols {
+                        worst = worst.max((served.at(r, c) - want.at(r, c)).abs());
+                    }
+                }
+                worst
+            }
+            None => 0,
+        };
+        let logits = (0..b.n_real)
+            .map(|r| (0..served.cols).map(|c| served.at(r, c) as i32).collect())
+            .collect();
+        BatchReport {
+            index,
+            replica,
+            ids: b.ids.clone(),
+            n_real: b.n_real,
+            logits,
+            max_abs_err,
+        }
+    }
+
     /// Verification path: the installed-crossbar forward must equal the
     /// legacy per-call engine bit-for-bit on this batch.
     pub fn verify_batch(&self, images: &[Vec<i32>]) -> bool {
         let t = tensor_from(images, images.len().max(1));
-        let installed = self.programmed.forward(&t);
+        let installed = self.replicas[0].forward(&t);
         let legacy = self.cnn.forward(&t, &self.p, self.adaptive);
         installed.data == legacy.data
     }
@@ -106,7 +295,26 @@ mod tests {
     fn construction_installs_weights() {
         let s = GoldenServer::newton_mini_default();
         assert_eq!(s.batch(), 8);
+        assert_eq!(s.n_replicas(), 1);
+        assert_eq!(s.adc_kind(), AdcKind::Exact);
+        assert!(!s.has_golden_reference()); // exact config is its own golden
         assert!(s.verify_head(&[])); // nothing to check is vacuously true
+    }
+
+    #[test]
+    fn replicated_kinds_carry_a_golden_reference() {
+        let s = GoldenServer::replicated(0, AdcKind::Adaptive, 2, 2);
+        assert_eq!(s.n_replicas(), 2);
+        assert_eq!(s.adc_kind(), AdcKind::Adaptive);
+        assert!(s.has_golden_reference());
+        let s = GoldenServer::replicated(0, AdcKind::Lossy(8), 3, 2);
+        assert_eq!(s.adc_kind(), AdcKind::Lossy(8));
+        assert!(s.has_golden_reference());
+        // a lossy resolution at/above the lossless budget keeps its label
+        // but is exact numerically: no golden reference needed
+        let s = GoldenServer::replicated(0, AdcKind::Lossy(10), 1, 2);
+        assert_eq!(s.adc_kind(), AdcKind::Lossy(10));
+        assert!(!s.has_golden_reference());
     }
 
     #[test]
@@ -121,5 +329,55 @@ mod tests {
         // a lone image padded into a full batch must match its solo run
         let solo = s.infer(&imgs[2..3]);
         assert_eq!(solo[0], logits[2]);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn multi_replica_serving_matches_single_replica_infer() {
+        // replica fan-out must not change the numbers: serve_batches on an
+        // exact config returns the same logits as the sequential infer path
+        let s = GoldenServer::replicated(0, AdcKind::Exact, 3, 2);
+        let imgs = images(5, 9); // 2.5 batches across 3 replicas
+        let want = s.infer(&imgs);
+        let reports = s.serve_batches(&imgs);
+        assert_eq!(reports.len(), 3);
+        let mut got: Vec<Vec<i32>> = Vec::new();
+        for (bi, r) in reports.iter().enumerate() {
+            assert_eq!(r.index, bi);
+            assert_eq!(r.replica, bi % 3);
+            assert_eq!(r.max_abs_err, 0, "exact serving deviated from itself");
+            got.extend(r.logits.iter().cloned());
+        }
+        assert_eq!(got, want);
+        let ids: Vec<u64> = reports.iter().flat_map(|r| r.ids.clone()).collect();
+        assert_eq!(ids, (0..5u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn adaptive_serving_reports_exact_deviation() {
+        // per-batch max-abs-error must equal an independently computed
+        // served-vs-lossless comparison, bit for bit
+        let s = GoldenServer::replicated(0, AdcKind::Adaptive, 2, 2);
+        let imgs = images(4, 12); // 2 full batches, no padding
+        let reports = s.serve_batches(&imgs);
+        assert_eq!(reports.len(), 2);
+        let cnn = MiniCnn::new(0);
+        let p = XbarParams::default();
+        let served_prog = cnn.program(&p, true);
+        let golden_prog = cnn.program(&p, false);
+        for (bi, r) in reports.iter().enumerate() {
+            let t = tensor_from(&imgs[bi * 2..bi * 2 + 2], 2);
+            let a = served_prog.forward(&t);
+            let g = golden_prog.forward(&t);
+            let want = a
+                .data
+                .iter()
+                .zip(g.data.iter())
+                .map(|(x, y)| (x - y).abs())
+                .max()
+                .unwrap();
+            assert_eq!(r.max_abs_err, want, "batch {bi}");
+        }
     }
 }

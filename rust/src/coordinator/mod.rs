@@ -18,7 +18,7 @@ pub mod golden;
 pub mod server;
 
 pub use batcher::{Batch, Batcher};
-pub use golden::GoldenServer;
+pub use golden::{serve_totals, BatchReport, GoldenServer};
 pub use server::{PipelineServer, ServerConfig, ServerReport};
 
 use crate::workloads::{Layer, Network};

@@ -29,6 +29,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod proptest_lite;
 pub mod runtime;
+pub mod sched;
 pub mod strassen;
 pub mod tiles;
 pub mod util;

@@ -7,12 +7,16 @@
 //!   sweep --what ima|buffer|fc design-space sweeps (Figs 10/15/17/18)
 //!   verify                     run artifacts against golden test vectors
 //!   serve --requests N         batched serving demo over the PJRT runtime
+//!     --adc exact|adaptive|lossy:<bits>  multi-replica golden serving with
+//!                              per-batch deviation vs the lossless golden
+//!     --replicas N             installed replicas for the --adc path
+//!   sched-stress               work-stealing executor stress smoke (CI)
 //!   list                       workloads and artifacts available
 
 use anyhow::{anyhow, bail, Result};
 
 use newton::cli::Args;
-use newton::config::{ChipConfig, ImaConfig, XbarParams};
+use newton::config::{AdcKind, ChipConfig, ImaConfig, XbarParams};
 use newton::coordinator::{newton_mini, GoldenServer, PipelineServer, ServerConfig};
 use newton::mapping::{self, Mapping, MappingPolicy};
 use newton::metrics;
@@ -32,10 +36,11 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
+        "sched-stress" => cmd_sched_stress(&args),
         "export" => cmd_export(&args),
         "list" => cmd_list(),
         other => Err(anyhow!(
-            "unknown command {other:?}; try report|simulate|incremental|sweep|verify|serve|export|list"
+            "unknown command {other:?}; try report|simulate|incremental|sweep|verify|serve|sched-stress|export|list"
         )),
     };
     if let Err(e) = r {
@@ -216,6 +221,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map(|_| (0..32 * 32 * 3).map(|_| rng.below(256) as i32).collect())
         .collect();
 
+    // --adc selects the multi-replica golden path: N installed replicas fed
+    // from the batcher through the work-stealing executor, every batch
+    // checked against the lossless golden reference. Runs in a fresh
+    // checkout — no PJRT artifacts involved.
+    if let Some(kind) = args.get("adc") {
+        let kind = AdcKind::parse(kind).map_err(|e| anyhow!("{e}"))?;
+        serve_replicated(&images, kind, args)?;
+        print_simulated_hw();
+        return Ok(());
+    }
+
     match PipelineServer::start(cfg) {
         Ok(mut server) => {
             let t0 = std::time::Instant::now();
@@ -247,10 +263,94 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
 
-    // simulated hardware-side metrics for the served model
+    print_simulated_hw();
+    Ok(())
+}
+
+/// Simulated hardware-side metrics for the served model.
+fn print_simulated_hw() {
     let sim = evaluate(&newton_mini(), &ChipConfig::newton());
     println!("simulated newton hardware for newton-mini:");
     println!("  throughput : {:.0} images/s   energy/op: {:.2} pJ", sim.throughput, sim.energy_per_op_pj);
+}
+
+/// Multi-replica golden serving with per-batch deviation reporting.
+fn serve_replicated(images: &[Vec<i32>], kind: AdcKind, args: &Args) -> Result<()> {
+    let n_rep = args.get_usize("replicas", 2);
+    let batch = args.get_usize("batch", 8);
+    if n_rep == 0 {
+        bail!("--replicas must be >= 1");
+    }
+    if batch == 0 {
+        bail!("--batch must be >= 1");
+    }
+    let t0 = std::time::Instant::now();
+    let server = GoldenServer::replicated(0, kind, n_rep, batch);
+    println!(
+        "multi-replica golden serving: {} replicas{}, batch {}, adc {}",
+        server.n_replicas(),
+        if server.has_golden_reference() { " + 1 lossless golden" } else { "" },
+        server.batch(),
+        kind.label()
+    );
+    println!("  installed in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+
+    let t0 = std::time::Instant::now();
+    let reports = server.serve_batches(images);
+    let wall = t0.elapsed();
+
+    let mut t = Table::new(&["batch", "replica", "real", "max|err| vs golden"]);
+    for r in &reports {
+        t.row(&[
+            r.index.to_string(),
+            r.replica.to_string(),
+            r.n_real.to_string(),
+            r.max_abs_err.to_string(),
+        ]);
+    }
+    t.print();
+
+    let (served, worst) = newton::coordinator::serve_totals(&reports);
+    println!(
+        "served {} requests / {} batches in {:.2}s ({:.1} req/s)",
+        served,
+        reports.len(),
+        wall.as_secs_f64(),
+        served as f64 / wall.as_secs_f64().max(1e-9)
+    );
+    println!("  worst per-batch deviation vs lossless golden: {worst}");
+    if !server.verify_head(images) {
+        bail!("golden-model verification failed: installed != per-call engine");
+    }
+    println!("  verified   : head batch bit-identical to the per-call engine ✓");
+    Ok(())
+}
+
+/// Work-stealing executor stress smoke (scripts/verify.sh): oversubscribed
+/// pool, 10x-skewed job mix, asserts completion + bit-determinism inside
+/// `sched::stress`, and that stealing actually moved work.
+fn cmd_sched_stress(args: &Args) -> Result<()> {
+    let jobs = args.get_usize("jobs", 512);
+    let oversub = args.get_usize("oversub", 4);
+    let heavy = args.get_usize("heavy-spins", 2_000_000);
+    println!(
+        "sched stress: {jobs} jobs (front-loaded first tenth cost 10x), {oversub}x oversubscribed pool"
+    );
+    let t0 = std::time::Instant::now();
+    let stats = newton::sched::stress(jobs, oversub, heavy);
+    let wall = t0.elapsed();
+    let min = stats.executed.iter().min().copied().unwrap_or(0);
+    let max = stats.executed.iter().max().copied().unwrap_or(0);
+    println!("  workers  : {}", stats.workers);
+    println!("  steals   : {}", stats.steals);
+    println!(
+        "  executed : {min}..{max} jobs per worker (imbalance {:.2}x)",
+        stats.imbalance()
+    );
+    if stats.steals == 0 {
+        bail!("stress run saw zero steals on a 10x-skewed mix");
+    }
+    println!("sched stress OK ({:.2}s): deterministic, all jobs completed", wall.as_secs_f64());
     Ok(())
 }
 

@@ -80,14 +80,30 @@ pub fn simulate(net: &Network, chip: &ChipConfig, n_images: usize) -> DesReport 
 }
 
 /// Simulate every `(chip × net)` pair in parallel — the DES face of
-/// `pipeline::evaluate_grid`, with the same contiguous work split over
-/// `std::thread::scope`. Returns `out[chip][net]`.
+/// `pipeline::evaluate_grid`: one work-stealing job per grid cell on the
+/// `crate::sched` executor. Returns `out[chip][net]`.
 pub fn simulate_grid(
     nets: &[Network],
     chips: &[ChipConfig],
     n_images: usize,
 ) -> Vec<Vec<DesReport>> {
-    crate::util::grid_par(chips.len(), nets.len(), |ci, ni| {
+    simulate_grid_on(
+        nets,
+        chips,
+        n_images,
+        &crate::sched::Executor::for_jobs(chips.len() * nets.len()),
+    )
+}
+
+/// [`simulate_grid`] on a caller-sized executor (worker-count sweeps in
+/// tests and benches).
+pub fn simulate_grid_on(
+    nets: &[Network],
+    chips: &[ChipConfig],
+    n_images: usize,
+    exec: &crate::sched::Executor,
+) -> Vec<Vec<DesReport>> {
+    exec.grid(chips.len(), nets.len(), |ci, ni| {
         simulate(&nets[ni], &chips[ci], n_images)
     })
 }

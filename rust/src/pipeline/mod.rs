@@ -213,12 +213,27 @@ pub fn evaluate_suite(nets: &[Network], chip: &ChipConfig) -> Vec<WorkloadReport
 /// incremental stack, CI sweeps). Returns `out[chip][net]`, row-major and
 /// deterministic regardless of the worker count.
 ///
-/// Work is split contiguously over `std::thread::scope` workers sized by
-/// `std::thread::available_parallelism`; each cell is an independent
-/// analytic evaluation, so scaling is near-linear until the grid is
-/// smaller than the core count.
+/// One work-stealing job per grid cell on the [`crate::sched`] executor:
+/// skewed nets (a resnet34 cell costs ~10x an mlp-class cell) no longer
+/// strand workers the way the old contiguous split did, so scaling stays
+/// near-linear even on lopsided grids.
 pub fn evaluate_grid(nets: &[Network], chips: &[ChipConfig]) -> Vec<Vec<WorkloadReport>> {
-    crate::util::grid_par(chips.len(), nets.len(), |ci, ni| evaluate(&nets[ni], &chips[ci]))
+    evaluate_grid_on(
+        nets,
+        chips,
+        &crate::sched::Executor::for_jobs(chips.len() * nets.len()),
+    )
+}
+
+/// [`evaluate_grid`] on a caller-sized executor — the property tests pin
+/// bit-identity to the sequential reference across worker counts, and the
+/// perf bench contrasts stealing against the contiguous baseline.
+pub fn evaluate_grid_on(
+    nets: &[Network],
+    chips: &[ChipConfig],
+    exec: &crate::sched::Executor,
+) -> Vec<Vec<WorkloadReport>> {
+    exec.grid(chips.len(), nets.len(), |ci, ni| evaluate(&nets[ni], &chips[ci]))
 }
 
 #[cfg(test)]

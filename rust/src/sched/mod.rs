@@ -1,0 +1,516 @@
+//! Work-stealing executor — the repo's single parallel driver.
+//!
+//! Newton's thesis is heterogeneity: resources sized per sub-computation
+//! instead of worst-case provisioning. The execution layer mirrors that.
+//! A contiguous split (the pre-sched `util::grid_par`) provisions every
+//! worker an equal *count* of jobs, which strands cores when job costs are
+//! skewed — resnet34 grid cells cost ~10x mlp-class cells, so on a wide
+//! design grid the worker that drew the resnet column finishes last while
+//! the rest idle. The executor here sizes work to workers dynamically:
+//!
+//! * **per-worker deques** (mutex-protected; no external crates offline,
+//!   DESIGN.md §Substitutions — a Chase-Lev array would need atomics+unsafe
+//!   for little gain at these job granularities): the owner pops from the
+//!   front of its deque, preserving the contiguous seed order and its cache
+//!   locality;
+//! * **steal-half**: an idle worker takes the *back* half of a victim's
+//!   deque in one lock acquisition, so a loaded victim loses future work,
+//!   not the job it is about to run, and steal traffic is O(log jobs);
+//! * **injector queue**: a shared overflow queue seeded with the jobs that
+//!   don't divide evenly across workers; any idle worker drains it before
+//!   stealing. It is also the hook later PRs (pipelined stage scheduling)
+//!   use to submit work from outside the pool;
+//! * **deterministic results**: every job writes to its own index slot, so
+//!   `map(n, f)[i] == f(i)` bit-for-bit regardless of worker count, steal
+//!   schedule, or OS timing. Parallelism here is a pure wall-clock
+//!   optimisation, never a numerics change.
+//!
+//! Everything parallel in the repo rides on this pool:
+//! `pipeline::evaluate_grid` and `pipeline::des::simulate_grid` submit one
+//! job per grid cell, `xbar::ProgrammedXbar` fans batch rows out through
+//! it, `xbar::cnn::ProgrammedCnn::forward` splits per image, and
+//! `coordinator::GoldenServer` feeds batches to installed replicas
+//! through it.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::worker_count;
+
+thread_local! {
+    /// Set for the lifetime of a pool worker thread (never cleared: worker
+    /// threads are born and die inside one `map_stats` scope).
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True while the current thread is a sched pool worker. Lower layers
+/// (`xbar::ProgrammedXbar::raw_product`) consult this to stay sequential
+/// inside an executor job: the outer job decomposition owns the pool, so
+/// nesting another per-VMM fan-out would only thrash threads (~cores² per
+/// crossbar read). Nested `Executor::map` calls are still fine — their
+/// workers are fresh threads with their own flag.
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|f| f.get())
+}
+
+/// A mutex-protected job deque. The owning worker pops from the front
+/// (contiguous seed order => cache locality); thieves split off the back
+/// half. Job handles are plain indices into the caller's job space.
+struct Deque {
+    jobs: Mutex<VecDeque<usize>>,
+}
+
+impl Deque {
+    fn new() -> Self {
+        Deque {
+            jobs: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    fn seed(&self, idxs: std::ops::Range<usize>) {
+        self.jobs.lock().unwrap().extend(idxs);
+    }
+
+    /// Owner-side pop (front).
+    fn pop(&self) -> Option<usize> {
+        self.jobs.lock().unwrap().pop_front()
+    }
+
+    /// Thief-side steal: take the back ceil(half) in one lock acquisition.
+    fn steal_half(&self) -> VecDeque<usize> {
+        let mut q = self.jobs.lock().unwrap();
+        let n = q.len();
+        if n == 0 {
+            return VecDeque::new();
+        }
+        q.split_off(n - n.div_ceil(2))
+    }
+
+    /// Append a stolen batch into this (own) deque.
+    fn give(&self, mut batch: VecDeque<usize>) {
+        self.jobs.lock().unwrap().append(&mut batch);
+    }
+}
+
+/// Unwind-safe decrement of the pending-jobs counter: dropped after the
+/// job runs, *including* when the job panics — otherwise the surviving
+/// workers would spin forever waiting for a count that can no longer
+/// reach zero, and the panic would never propagate out of the scope join.
+struct PendingGuard<'a>(&'a AtomicUsize);
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// Scheduling statistics from one `map_stats` run — the observability the
+/// stress smoke and the perf benches assert against.
+#[derive(Clone, Debug, Default)]
+pub struct SchedStats {
+    /// Workers actually spawned (after clamping to the job count).
+    pub workers: usize,
+    /// Total jobs submitted.
+    pub jobs: usize,
+    /// Successful steal-half operations across the run.
+    pub steals: usize,
+    /// Jobs executed by each worker; sums to `jobs`.
+    pub executed: Vec<usize>,
+}
+
+impl SchedStats {
+    /// Max/min executed-jobs imbalance, 1.0 = perfectly even.
+    pub fn imbalance(&self) -> f64 {
+        let max = self.executed.iter().copied().max().unwrap_or(0);
+        let min = self.executed.iter().copied().min().unwrap_or(0);
+        max as f64 / min.max(1) as f64
+    }
+}
+
+/// A sized executor. `Executor::new(w)` steals; `Executor::contiguous(w)`
+/// pins the legacy contiguous split (each worker runs exactly its seeded
+/// chunk) — kept as the measurable baseline for the scheduler win.
+#[derive(Clone, Copy, Debug)]
+pub struct Executor {
+    workers: usize,
+    steal: bool,
+}
+
+impl Executor {
+    /// Work-stealing pool of `workers` threads (clamped to >= 1). Workers
+    /// beyond `available_parallelism` are allowed — oversubscription is a
+    /// correctness-neutral stress configuration.
+    pub fn new(workers: usize) -> Self {
+        Executor {
+            workers: workers.max(1),
+            steal: true,
+        }
+    }
+
+    /// Contiguous-split baseline: same pool, stealing disabled.
+    pub fn contiguous(workers: usize) -> Self {
+        Executor {
+            workers: workers.max(1),
+            steal: false,
+        }
+    }
+
+    /// Stealing pool sized like every fan-out in the repo:
+    /// `min(jobs, available_parallelism)`.
+    pub fn for_jobs(n_jobs: usize) -> Self {
+        Self::new(worker_count(n_jobs))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `job(0..n_jobs)` across the pool; `out[i] == job(i)` regardless
+    /// of worker count or steal schedule.
+    pub fn map<T, F>(&self, n_jobs: usize, job: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.map_stats(n_jobs, job).0
+    }
+
+    /// Like [`Self::map`], also returning scheduling statistics.
+    pub fn map_stats<T, F>(&self, n_jobs: usize, job: F) -> (Vec<T>, SchedStats)
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let workers = self.workers.min(n_jobs.max(1));
+        if workers <= 1 {
+            let out: Vec<T> = (0..n_jobs).map(&job).collect();
+            return (
+                out,
+                SchedStats {
+                    workers: 1,
+                    jobs: n_jobs,
+                    steals: 0,
+                    executed: vec![n_jobs],
+                },
+            );
+        }
+
+        // Seed: each worker gets a contiguous base chunk; the indivisible
+        // tail goes to the injector, where any idle worker grabs it.
+        let deques: Vec<Deque> = (0..workers).map(|_| Deque::new()).collect();
+        let injector = Deque::new();
+        let base = n_jobs / workers;
+        for (w, d) in deques.iter().enumerate() {
+            d.seed(w * base..(w + 1) * base);
+        }
+        injector.seed(workers * base..n_jobs);
+
+        let steals = AtomicUsize::new(0);
+        let pending = AtomicUsize::new(n_jobs);
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n_jobs);
+        slots.resize_with(n_jobs, || None);
+        let mut executed = vec![0usize; workers];
+        {
+            let job = &job;
+            let deques = &deques;
+            let injector = &injector;
+            let steals = &steals;
+            let pending = &pending;
+            let steal_mode = self.steal;
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|me| {
+                        s.spawn(move || {
+                            IN_WORKER.with(|f| f.set(true));
+                            let mut done: Vec<(usize, T)> = Vec::new();
+                            let mut idle_rounds = 0u32;
+                            loop {
+                                let next = deques[me]
+                                    .pop()
+                                    .or_else(|| injector.pop())
+                                    .or_else(|| {
+                                        if !steal_mode {
+                                            return None;
+                                        }
+                                        for k in 1..deques.len() {
+                                            let victim = (me + k) % deques.len();
+                                            let mut batch = deques[victim].steal_half();
+                                            if let Some(first) = batch.pop_front() {
+                                                steals.fetch_add(1, Ordering::Relaxed);
+                                                if !batch.is_empty() {
+                                                    deques[me].give(batch);
+                                                }
+                                                return Some(first);
+                                            }
+                                        }
+                                        None
+                                    });
+                                match next {
+                                    Some(i) => {
+                                        let _dec = PendingGuard(pending);
+                                        done.push((i, job(i)));
+                                        idle_rounds = 0;
+                                    }
+                                    None => {
+                                        // contiguous mode: static chunks, a
+                                        // drained worker is finished. In
+                                        // steal mode a thief may hold jobs
+                                        // in flight between steal_half and
+                                        // give, so only the pending counter
+                                        // (0 = every job *executed*) may
+                                        // retire a worker; until then spin
+                                        // politely and rescan.
+                                        if !steal_mode
+                                            || pending.load(Ordering::Acquire) == 0
+                                        {
+                                            break;
+                                        }
+                                        // back off while the tail drains:
+                                        // yield a few rounds, then sleep
+                                        // with a growing, capped interval
+                                        // so big idle pools don't hammer
+                                        // the deque locks
+                                        idle_rounds += 1;
+                                        if idle_rounds < 8 {
+                                            std::thread::yield_now();
+                                        } else {
+                                            let us =
+                                                (50 * (idle_rounds - 7) as u64).min(2000);
+                                            std::thread::sleep(
+                                                std::time::Duration::from_micros(us),
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                            done
+                        })
+                    })
+                    .collect();
+                for (w, h) in handles.into_iter().enumerate() {
+                    let list = h.join().expect("sched worker panicked");
+                    executed[w] = list.len();
+                    for (i, t) in list {
+                        slots[i] = Some(t);
+                    }
+                }
+            });
+        }
+        let out: Vec<T> = slots
+            .into_iter()
+            .map(|s| s.expect("sched job completed"))
+            .collect();
+        (
+            out,
+            SchedStats {
+                workers,
+                jobs: n_jobs,
+                steals: steals.load(Ordering::Relaxed),
+                executed,
+            },
+        )
+    }
+
+    /// Evaluate an `outer × inner` grid, one job per cell, returning
+    /// `out[outer][inner]` — the engine behind `pipeline::evaluate_grid`
+    /// and `pipeline::des::simulate_grid`.
+    pub fn grid<T, F>(&self, n_outer: usize, n_inner: usize, cell: F) -> Vec<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize, usize) -> T + Sync,
+    {
+        if n_inner == 0 {
+            return (0..n_outer).map(|_| Vec::new()).collect();
+        }
+        let flat = self.map(n_outer * n_inner, |j| cell(j / n_inner, j % n_inner));
+        let mut grid = Vec::with_capacity(n_outer);
+        let mut cells = flat.into_iter();
+        for _ in 0..n_outer {
+            grid.push((0..n_inner).map(|_| cells.next().unwrap()).collect());
+        }
+        grid
+    }
+}
+
+/// Auto-sized stealing map: `out[i] == job(i)`.
+pub fn map<T, F>(n_jobs: usize, job: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    Executor::for_jobs(n_jobs).map(n_jobs, job)
+}
+
+/// Auto-sized stealing grid: one job per cell, `out[outer][inner]`.
+pub fn grid<T, F>(n_outer: usize, n_inner: usize, cell: F) -> Vec<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    Executor::for_jobs(n_outer * n_inner).grid(n_outer, n_inner, cell)
+}
+
+/// Deterministic synthetic job used by the stress smoke and the perf
+/// bench: `spins` xorshift64* steps folded into a checksum. Cost scales
+/// linearly in `spins`, result depends only on `(seed, spins)`.
+pub fn spin_job(seed: u64, spins: usize) -> u64 {
+    let mut r = crate::util::Rng::new(seed);
+    let mut acc = 0u64;
+    for _ in 0..spins {
+        acc = acc.wrapping_add(r.next_u64());
+    }
+    acc
+}
+
+/// The stress configuration `scripts/verify.sh` smokes: an oversubscribed
+/// pool (`oversub × available_parallelism` workers) over a 10x-skewed job
+/// mix — the first tenth of the jobs cost 10x, *front-loaded* so the
+/// contiguous seeding lands all heavy work on the leading workers and
+/// stealing is structurally required (an evenly interleaved mix would
+/// cost-balance the chunks and leave steals to OS jitter). Asserts
+/// completion and bit-determinism against the sequential reference;
+/// returns the stats so callers can assert on steal counts.
+pub fn stress(n_jobs: usize, oversub: usize, heavy_spins: usize) -> SchedStats {
+    let cost = move |i: usize| {
+        if i * 10 < n_jobs {
+            heavy_spins
+        } else {
+            heavy_spins / 10
+        }
+    };
+    let want: Vec<u64> = (0..n_jobs).map(|i| spin_job(i as u64, cost(i))).collect();
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        * oversub.max(1);
+    let (got, stats) = Executor::new(workers).map_stats(n_jobs, |i| spin_job(i as u64, cost(i)));
+    assert_eq!(got, want, "oversubscribed stealing run diverged from sequential");
+    let total: usize = stats.executed.iter().sum();
+    assert_eq!(total, n_jobs, "executed-job count does not cover the job set");
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_matches_sequential_for_any_worker_count() {
+        let want: Vec<usize> = (0..97).map(|i| i * i + 1).collect();
+        for workers in [1, 2, 3, 7, 16, 64] {
+            let got = Executor::new(workers).map(97, |i| i * i + 1);
+            assert_eq!(got, want, "workers={workers}");
+            let got = Executor::contiguous(workers).map(97, |i| i * i + 1);
+            assert_eq!(got, want, "contiguous workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_job_maps() {
+        let empty: Vec<u32> = Executor::new(8).map(0, |_| 7u32);
+        assert!(empty.is_empty());
+        assert_eq!(Executor::new(8).map(1, |i| i + 41), vec![41]);
+        assert_eq!(map(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn stats_conserve_jobs() {
+        for workers in [1, 3, 5] {
+            let (out, stats) = Executor::new(workers).map_stats(23, |i| i as u64);
+            assert_eq!(out.len(), 23);
+            assert_eq!(stats.jobs, 23);
+            assert_eq!(stats.executed.len(), stats.workers);
+            assert_eq!(stats.executed.iter().sum::<usize>(), 23);
+        }
+    }
+
+    #[test]
+    fn contiguous_mode_never_steals() {
+        let (_, stats) = Executor::contiguous(4).map_stats(64, |i| spin_job(i as u64, 50));
+        assert_eq!(stats.steals, 0);
+        // contiguous split: every worker executes exactly its seeded chunk
+        assert_eq!(stats.executed, vec![16, 16, 16, 16]);
+    }
+
+    #[test]
+    fn stealing_rebalances_a_skewed_front_chunk() {
+        // jobs 0..4 (worker 0's whole seed chunk) cost ~100x the rest;
+        // idle workers must steal from worker 0's deque. Heavy jobs span
+        // several OS timeslices so even a single-core box interleaves the
+        // thieves before worker 0 can drain its own chunk.
+        let heavy = 4_000_000;
+        let cost = |i: usize| if i < 4 { heavy } else { heavy / 100 };
+        let want: Vec<u64> = (0..16).map(|i| spin_job(i as u64, cost(i))).collect();
+        let (got, stats) = Executor::new(4).map_stats(16, |i| spin_job(i as u64, cost(i)));
+        assert_eq!(got, want);
+        assert!(stats.steals > 0, "no steals on a 100x-skewed front chunk");
+        // worker 0 cannot have run its whole chunk alone
+        assert!(stats.executed[0] < 16, "{:?}", stats.executed);
+    }
+
+    #[test]
+    fn grid_orders_cells_row_major() {
+        let g = Executor::new(3).grid(3, 5, |o, i| o * 100 + i);
+        for (o, row) in g.iter().enumerate() {
+            assert_eq!(row.len(), 5);
+            for (i, v) in row.iter().enumerate() {
+                assert_eq!(*v, o * 100 + i);
+            }
+        }
+        assert!(grid(0, 5, |_, _| 0).is_empty());
+        let empty_rows = grid(2, 0, |_, _| 0);
+        assert_eq!(empty_rows.len(), 2);
+        assert!(empty_rows[0].is_empty());
+    }
+
+    #[test]
+    fn injector_serves_the_indivisible_tail() {
+        // 4 workers, 7 jobs: base chunk 1 each, 3 jobs through the injector
+        let (out, stats) = Executor::new(4).map_stats(7, |i| i * 2);
+        assert_eq!(out, vec![0, 2, 4, 6, 8, 10, 12]);
+        assert_eq!(stats.executed.iter().sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn stress_smoke_completes_and_is_deterministic() {
+        let stats = stress(120, 2, 5_000);
+        assert_eq!(stats.executed.iter().sum::<usize>(), 120);
+        assert!(stats.workers >= 2);
+    }
+
+    #[test]
+    fn panicking_job_propagates_instead_of_hanging() {
+        // a job panic must not strand the surviving workers on the pending
+        // counter: the guard decrements on unwind, the pool drains, and the
+        // panic resurfaces at the scope join
+        let result = std::panic::catch_unwind(|| {
+            Executor::new(4).map(16, |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+                spin_job(i as u64, 10_000)
+            })
+        });
+        assert!(result.is_err(), "job panic was swallowed");
+    }
+
+    #[test]
+    fn worker_flag_marks_pool_threads_only() {
+        assert!(!in_worker());
+        let flags = Executor::new(4).map(8, |_| in_worker());
+        assert!(flags.iter().all(|&f| f), "jobs on spawned workers");
+        assert!(!in_worker(), "caller thread is not a worker");
+        // a 1-worker map runs inline on the caller thread
+        let flags = Executor::new(1).map(3, |_| in_worker());
+        assert!(flags.iter().all(|&f| !f), "inline jobs are not workers");
+    }
+
+    #[test]
+    fn spin_job_is_deterministic_and_cost_monotone() {
+        assert_eq!(spin_job(7, 100), spin_job(7, 100));
+        assert_ne!(spin_job(7, 100), spin_job(8, 100));
+        assert_ne!(spin_job(7, 100), spin_job(7, 101));
+    }
+}

@@ -129,8 +129,8 @@ pub fn ceil_div(a: usize, b: usize) -> usize {
 
 /// Worker-thread count for a parallel region with `jobs` independent units:
 /// `min(jobs, available_parallelism)`, never zero. Centralised so every
-/// `std::thread::scope` fan-out (ProgrammedXbar batches, evaluate_grid,
-/// DES sweeps) sizes itself the same way.
+/// executor fan-out (`sched::Executor::for_jobs`: ProgrammedXbar batches,
+/// evaluate_grid, DES sweeps, replica serving) sizes itself the same way.
 pub fn worker_count(jobs: usize) -> usize {
     if jobs <= 1 {
         return 1;
@@ -142,48 +142,15 @@ pub fn worker_count(jobs: usize) -> usize {
 }
 
 /// Evaluate an `outer × inner` grid of independent cells in parallel and
-/// return `out[outer][inner]` — the shared engine behind
-/// `pipeline::evaluate_grid` and `pipeline::des::simulate_grid`. Jobs are
-/// split contiguously across `worker_count` scoped threads; results are
-/// deterministic regardless of the split.
+/// return `out[outer][inner]`. Thin compatibility wrapper over
+/// [`crate::sched::grid`] — one work-stealing job per cell, results
+/// deterministic regardless of worker count or steal schedule.
 pub fn grid_par<T, F>(n_outer: usize, n_inner: usize, cell: F) -> Vec<Vec<T>>
 where
     T: Send,
     F: Fn(usize, usize) -> T + Sync,
 {
-    let n_jobs = n_outer * n_inner;
-    let mut slots: Vec<Option<T>> = Vec::new();
-    slots.resize_with(n_jobs, || None);
-    let workers = worker_count(n_jobs);
-    if workers <= 1 {
-        for (job, slot) in slots.iter_mut().enumerate() {
-            *slot = Some(cell(job / n_inner, job % n_inner));
-        }
-    } else {
-        let per = n_jobs.div_ceil(workers);
-        let cell = &cell;
-        std::thread::scope(|s| {
-            for (ci, chunk) in slots.chunks_mut(per).enumerate() {
-                let base = ci * per;
-                s.spawn(move || {
-                    for (j, slot) in chunk.iter_mut().enumerate() {
-                        let job = base + j;
-                        *slot = Some(cell(job / n_inner, job % n_inner));
-                    }
-                });
-            }
-        });
-    }
-    let mut grid = Vec::with_capacity(n_outer);
-    let mut cells = slots.into_iter();
-    for _ in 0..n_outer {
-        grid.push(
-            (0..n_inner)
-                .map(|_| cells.next().unwrap().expect("grid cell computed"))
-                .collect(),
-        );
-    }
-    grid
+    crate::sched::grid(n_outer, n_inner, cell)
 }
 
 #[cfg(test)]

@@ -41,6 +41,20 @@ impl Tensor {
     pub fn set(&mut self, b: usize, y: usize, x: usize, ch: usize, v: i64) {
         self.data[((b * self.h + y) * self.w + x) * self.c + ch] = v;
     }
+
+    /// Copy out one image of the batch as a `b = 1` tensor (the unit the
+    /// per-image forward split works on).
+    pub fn image(&self, b: usize) -> Tensor {
+        assert!(b < self.b);
+        let per = self.h * self.w * self.c;
+        Tensor {
+            b: 1,
+            h: self.h,
+            w: self.w,
+            c: self.c,
+            data: self.data[b * per..(b + 1) * per].to_vec(),
+        }
+    }
 }
 
 /// newton-mini weights: three 3x3 convs (3->32->64->128) + fc 2048->10.
@@ -255,7 +269,51 @@ pub struct ProgrammedCnn {
 
 impl ProgrammedCnn {
     /// Full forward pass: (B,32,32,3) image -> (B,10) logits.
+    ///
+    /// Batches split per image across the work-stealing executor
+    /// ([`crate::sched`]) when the batch can fill the pool: every layer of
+    /// the stack is row-independent (im2col rows never mix batch entries,
+    /// VMMs and the scaling stage are per-row, pooling is per-image), so
+    /// each image runs the whole conv stack as one job, bit-identical to
+    /// the sequential pass for any worker count. With fewer images than
+    /// cores the whole-batch pass wins instead — its per-VMM batch-row
+    /// fan-out parallelises across all im2col rows, not just `B` jobs —
+    /// so this entry point picks whichever covers the machine.
     pub fn forward(&self, img: &Tensor) -> Matrix {
+        if crate::sched::in_worker() {
+            // already inside a pool job: the outer decomposition owns the
+            // pool (callers that want nested fan-out use forward_on)
+            return self.forward_seq(img);
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        if img.b >= cores {
+            self.forward_on(img, &crate::sched::Executor::new(cores))
+        } else {
+            self.forward_seq(img)
+        }
+    }
+
+    /// [`Self::forward`] on a caller-sized executor — the property tests
+    /// sweep worker counts against [`Self::forward_seq`].
+    pub fn forward_on(&self, img: &Tensor, exec: &crate::sched::Executor) -> Matrix {
+        if img.b <= 1 || exec.workers() <= 1 {
+            return self.forward_seq(img);
+        }
+        let rows = exec.map(img.b, |i| self.forward_seq(&img.image(i)).data);
+        let cols = self.fc.out_cols();
+        let mut out = Matrix::zeros(img.b, cols);
+        for (r, row) in rows.into_iter().enumerate() {
+            debug_assert_eq!(row.len(), cols);
+            out.data[r * cols..(r + 1) * cols].copy_from_slice(&row);
+        }
+        out
+    }
+
+    /// Sequential whole-batch forward — the reference the parallel split
+    /// is pinned against.
+    pub fn forward_seq(&self, img: &Tensor) -> Matrix {
         let mut act = img.clone();
         for conv in &self.convs {
             act = conv3x3_programmed(&act, conv, self.act_max);
@@ -466,6 +524,38 @@ mod tests {
             assert_eq!(programmed.forward(&img).data, cnn.forward(&img, &p, adaptive).data);
             assert_eq!(programmed.classify(&img), cnn.classify(&img, &p, adaptive));
         }
+    }
+
+    #[test]
+    fn tensor_image_slices_one_batch_entry() {
+        let t = random_images(3, 6);
+        for b in 0..3 {
+            let one = t.image(b);
+            assert_eq!((one.b, one.h, one.w, one.c), (1, 32, 32, 3));
+            for y in 0..32 {
+                for x in 0..32 {
+                    for c in 0..3 {
+                        assert_eq!(one.at(0, y, x, c), t.at(b, y, x, c));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn parallel_forward_matches_sequential() {
+        // per-image sched split must be bit-identical to the sequential
+        // whole-batch pass for any worker count
+        let cnn = MiniCnn::new(0);
+        let img = random_images(3, 11);
+        let programmed = cnn.program(&XbarParams::default(), false);
+        let want = programmed.forward_seq(&img);
+        for workers in [1, 2, 5] {
+            let got = programmed.forward_on(&img, &crate::sched::Executor::new(workers));
+            assert_eq!(got.data, want.data, "workers={workers}");
+        }
+        assert_eq!(programmed.forward(&img).data, want.data);
     }
 
     #[test]

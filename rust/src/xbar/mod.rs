@@ -372,8 +372,14 @@ impl ProgrammedXbar {
         if n == 0 || x.rows == 0 {
             return acc;
         }
-        // split across cores only when the work dwarfs thread spawn cost
-        let workers = if x.rows >= 2 && x.rows * self.work_per_row() >= 1 << 20 {
+        // split across cores only when the work dwarfs thread spawn cost —
+        // and never from inside a sched worker: the outer job decomposition
+        // (per-image forward, batch serving) owns the pool, and nesting a
+        // per-VMM fan-out under it would thrash ~cores² threads per read
+        let workers = if x.rows >= 2
+            && x.rows * self.work_per_row() >= 1 << 20
+            && !crate::sched::in_worker()
+        {
             crate::util::worker_count(x.rows)
         } else {
             1
@@ -384,15 +390,27 @@ impl ProgrammedXbar {
                 self.run_row(x, r, x_col0, x_off, out, &mut scratch);
             }
         } else {
-            let rows_per = x.rows.div_ceil(workers);
-            std::thread::scope(|s| {
-                for (ci, chunk) in acc.data.chunks_mut(rows_per * n).enumerate() {
-                    s.spawn(move || {
-                        let mut scratch = self.scratch();
-                        for (j, out) in chunk.chunks_mut(n).enumerate() {
-                            self.run_row(x, ci * rows_per + j, x_col0, x_off, out, &mut scratch);
-                        }
-                    });
+            // batch rows fan out through the work-stealing executor
+            // (crate::sched), ~2 row-chunk jobs per worker so stealing can
+            // even out OS-timing skew. Each job claims its disjoint &mut
+            // chunk of the output (one uncontended lock per chunk) and
+            // writes rows in place — no per-call buffers or copy-back —
+            // with a private scratch, bit-identical to the sequential loop.
+            let rows_per = x.rows.div_ceil(workers * 2).max(1);
+            let chunk_slots: Vec<std::sync::Mutex<Option<&mut [i64]>>> = acc
+                .data
+                .chunks_mut(rows_per * n)
+                .map(|c| std::sync::Mutex::new(Some(c)))
+                .collect();
+            crate::sched::Executor::new(workers).map(chunk_slots.len(), |ci| {
+                let chunk = chunk_slots[ci]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("output chunk claimed exactly once");
+                let mut scratch = self.scratch();
+                for (j, out) in chunk.chunks_mut(n).enumerate() {
+                    self.run_row(x, ci * rows_per + j, x_col0, x_off, out, &mut scratch);
                 }
             });
         }

@@ -187,6 +187,46 @@ fn prop_batcher_conserves_requests() {
 }
 
 #[test]
+fn prop_batcher_deadline_edge_cases() {
+    // the deadline edges the serving loop leans on: an empty batcher never
+    // flushes, and an exactly-full batch closes without waiting
+    check("batcher-deadline-edges", 20, |rng| {
+        let cap = 1 + rng.below(8) as usize;
+        let mut b = Batcher::new(cap, 3, std::time::Duration::from_millis(0));
+        prop_assert!(
+            !b.ready(std::time::Instant::now()),
+            "empty batcher ready at zero deadline"
+        );
+        prop_assert!(b.take_batch().is_none(), "empty flush produced a batch");
+
+        let mut b = Batcher::new(cap, 3, std::time::Duration::from_secs(3600));
+        for i in 0..cap {
+            prop_assert!(
+                !b.ready(std::time::Instant::now()),
+                "ready below capacity (cap {cap}, {i} queued)"
+            );
+            b.push(PendingRequest {
+                id: i as u64,
+                image: vec![i as i32; 3],
+                enqueued: std::time::Instant::now(),
+            });
+        }
+        prop_assert!(
+            b.ready(std::time::Instant::now()),
+            "exact-capacity batch not ready (cap {cap})"
+        );
+        let Some(batch) = b.take_batch() else {
+            return Err("exact-capacity close yielded no batch".to_string());
+        };
+        prop_assert!(batch.n_real == cap, "n_real {} != cap {cap}", batch.n_real);
+        prop_assert!(b.pending_len() == 0, "leftover pending after exact close");
+        prop_assert!(!b.ready(std::time::Instant::now()), "drained batcher still ready");
+        prop_assert!(b.take_batch().is_none(), "drained batcher flushed again");
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_mapping_conservation() {
     // allocated capacity always covers used capacity; utilisation in (0,1]
     let p = XbarParams::default();

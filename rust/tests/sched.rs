@@ -1,0 +1,111 @@
+//! Integration tests for the work-stealing executor subsystem: every
+//! sched-backed driver (`evaluate_grid`, `simulate_grid`,
+//! `ProgrammedCnn::forward`, raw `Executor::map`) must be bit-identical to
+//! its sequential reference across worker counts and seeds — the executor
+//! is a wall-clock optimisation, never a numerics change.
+
+use newton::config::{ChipConfig, XbarParams};
+use newton::pipeline::{des, evaluate, evaluate_grid_on};
+use newton::prop_assert;
+use newton::proptest_lite::check;
+use newton::sched::{self, Executor};
+use newton::workloads;
+use newton::xbar::cnn::{random_images, MiniCnn};
+
+#[test]
+fn prop_executor_map_bit_identical_across_worker_counts() {
+    check("sched-map-identity", 12, |rng| {
+        let n = rng.below(200) as usize;
+        let seed = rng.next_u64();
+        let spins = 10 + rng.below(300) as usize;
+        let want: Vec<u64> = (0..n)
+            .map(|i| sched::spin_job(seed ^ i as u64, spins))
+            .collect();
+        for workers in [1usize, 2, 3, 8, 17] {
+            let got =
+                Executor::new(workers).map(n, |i| sched::spin_job(seed ^ i as u64, spins));
+            prop_assert!(got == want, "stealing workers={workers} n={n}");
+            let got = Executor::contiguous(workers)
+                .map(n, |i| sched::spin_job(seed ^ i as u64, spins));
+            prop_assert!(got == want, "contiguous workers={workers} n={n}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_evaluate_grid_bit_identical_to_sequential() {
+    let nets = workloads::suite();
+    let chips = [ChipConfig::isaac(), ChipConfig::newton()];
+    check("sched-evaluate-grid", 4, |rng| {
+        let nn = 1 + rng.below(4) as usize;
+        let start = rng.below((nets.len() - nn) as u64 + 1) as usize;
+        let sub = &nets[start..start + nn];
+        let workers = 1 + rng.below(12) as usize;
+        let grid = evaluate_grid_on(sub, &chips, &Executor::new(workers));
+        prop_assert!(grid.len() == chips.len(), "grid rows");
+        for (ci, row) in grid.iter().enumerate() {
+            prop_assert!(row.len() == sub.len(), "grid cols");
+            for (ni, got) in row.iter().enumerate() {
+                let want = evaluate(&sub[ni], &chips[ci]);
+                prop_assert!(
+                    got.net == want.net
+                        && got.energy_per_op_pj == want.energy_per_op_pj
+                        && got.throughput == want.throughput
+                        && got.latency_us == want.latency_us
+                        && got.area_mm2 == want.area_mm2,
+                    "cell ({ci},{ni}) diverged at workers={workers}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulate_grid_bit_identical_to_sequential() {
+    let nets = [workloads::alexnet(), workloads::vgg_a(), workloads::resnet34()];
+    let chips = [ChipConfig::isaac(), ChipConfig::newton()];
+    check("sched-simulate-grid", 4, |rng| {
+        let workers = 1 + rng.below(12) as usize;
+        let n_images = 5 + rng.below(20) as usize;
+        let grid = des::simulate_grid_on(&nets, &chips, n_images, &Executor::new(workers));
+        for (ci, chip) in chips.iter().enumerate() {
+            for (ni, net) in nets.iter().enumerate() {
+                let want = des::simulate(net, chip, n_images);
+                prop_assert!(
+                    grid[ci][ni].throughput == want.throughput
+                        && grid[ci][ni].latency_us == want.latency_us
+                        && grid[ci][ni].n_stages == want.n_stages,
+                    "cell ({ci},{ni}) diverged at workers={workers} n_images={n_images}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+fn prop_programmed_cnn_forward_bit_identical_across_workers() {
+    check("sched-cnn-forward", 2, |rng| {
+        let cnn = MiniCnn::new(rng.next_u64());
+        let img = random_images(3, rng.next_u64());
+        let programmed = cnn.program(&XbarParams::default(), false);
+        let want = programmed.forward_seq(&img);
+        for workers in [1usize, 2, 4, 9] {
+            let got = programmed.forward_on(&img, &Executor::new(workers));
+            prop_assert!(got.data == want.data, "workers={workers}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn oversubscribed_stress_is_deterministic() {
+    // small in-test twin of the `newton sched-stress` CI smoke: correctness
+    // asserts (completion + determinism) live inside sched::stress
+    let stats = sched::stress(96, 3, 20_000);
+    assert_eq!(stats.executed.iter().sum::<usize>(), 96);
+    assert!(stats.workers >= 3);
+}

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Repo verification: tier-1 build + tests, advisory formatting check, and
-# the hot-path perf smoke (writes BENCH_hotpath.json for the trajectory).
+# Repo verification: tier-1 build + tests, advisory formatting check, the
+# sched executor stress smoke, the multi-replica serving smoke, and the
+# hot-path perf smoke (writes BENCH_hotpath.json for the trajectory).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,6 +11,13 @@ cargo build --release
 echo
 echo "== cargo test -q =="
 cargo test -q
+
+echo
+echo "== cargo test --release -q (release-gated suites) =="
+# the bit-identity tests for the per-image forward split and the
+# multi-replica serving path are #[cfg_attr(debug_assertions, ignore)];
+# the release build is already warm from the first step
+cargo test --release -q
 
 echo
 echo "== cargo fmt --check (advisory) =="
@@ -22,8 +30,36 @@ else
 fi
 
 echo
+echo "== sched stress smoke: oversubscribed pool, 10x-skewed mix =="
+# asserts completion, bit-determinism vs the sequential reference, and
+# that stealing moved work (exits non-zero otherwise)
+cargo run --release --bin newton -- sched-stress --jobs 512 --oversub 4
+
+echo
+echo "== serving smoke: multi-replica adaptive ADC vs lossless golden =="
+cargo run --release --bin newton -- serve --adc adaptive --replicas 2 --requests 16
+
+echo
 echo "== perf smoke: cargo bench --bench perf_hotpath -- --smoke =="
 cargo bench --bench perf_hotpath -- --smoke
+
+echo
+echo "== perf trajectory: amortised-VMM target =="
+if [ -f BENCH_hotpath.json ]; then
+  speedup=$(awk -F': ' '/"vmm_amortised_speedup"/ {gsub(/[,[:space:]]/, "", $2); print $2}' BENCH_hotpath.json)
+  if [ -n "${speedup}" ]; then
+    if awk "BEGIN { exit !(${speedup} >= 5.0) }"; then
+      echo "amortised VMM speedup: ${speedup}x (target >= 5x) OK"
+    else
+      echo "FAIL: amortised VMM speedup ${speedup}x below the 5x target"
+      exit 1
+    fi
+  else
+    echo "WARN: BENCH_hotpath.json carries no vmm_amortised_speedup baseline; skipped"
+  fi
+else
+  echo "WARN: BENCH_hotpath.json absent; perf-target assert skipped"
+fi
 
 echo
 echo "verify OK"
