@@ -18,6 +18,16 @@
 //! owner of the flag plumbing: `newton serve --adc adaptive|lossy:<bits>
 //! [--replicas N]`.
 //!
+//! For serving over a socket instead of in-process, the same engine sits
+//! behind the `rust/src/net/` TCP endpoint (frame layout and semantics in
+//! rust/PERF.md §Network serving):
+//!
+//! ```text
+//! newton serve-net --addr 127.0.0.1:0 --adc exact --replicas 2
+//! newton bench-net --addr <printed addr> --requests 64 --concurrency 8 \
+//!     --expect-exact --shutdown
+//! ```
+//!
 //! Run: `cargo run --release --example serve_inference -- [--requests 64]`
 
 use std::time::Instant;

@@ -4,6 +4,33 @@
 
 use std::collections::HashMap;
 
+/// Every `newton` subcommand with a one-line description — the single
+/// source for `newton list`, `newton help`, and the unknown-command hint,
+/// so the three can never drift apart again.
+pub const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("report", "headline Newton-vs-ISAAC comparison"),
+    ("simulate", "analytic evaluation of one workload (--net, --isaac)"),
+    ("incremental", "Fig-20-style technique stacking table"),
+    ("sweep", "design-space sweeps (--what ima|buffer|fc)"),
+    ("verify", "run artifacts against golden test vectors"),
+    ("serve", "in-process batched serving demo (--adc, --replicas)"),
+    ("serve-net", "TCP serving endpoint (--addr, --adc, --replicas)"),
+    ("bench-net", "load-generate against a serve-net endpoint (--addr)"),
+    ("sched-stress", "work-stealing executor stress smoke (CI)"),
+    ("export", "write every figure's data series as CSV (--out)"),
+    ("list", "workloads, artifacts, and subcommands"),
+    ("help", "this command table"),
+];
+
+/// `report|simulate|...` — the hint appended to unknown-command errors.
+pub fn command_summary() -> String {
+    SUBCOMMANDS
+        .iter()
+        .map(|(name, _)| *name)
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub positional: Vec<String>,
@@ -97,5 +124,22 @@ mod tests {
     fn trailing_flag() {
         let a = parse(&["--fast"]);
         assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn command_table_is_complete_and_unique() {
+        let names: Vec<&str> = SUBCOMMANDS.iter().map(|(n, _)| *n).collect();
+        for want in ["serve", "serve-net", "bench-net", "export", "sched-stress", "list"] {
+            assert!(names.contains(&want), "missing {want}");
+        }
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate subcommand names");
+        let summary = command_summary();
+        for n in names {
+            assert!(summary.contains(n), "summary omits {n}");
+        }
+        assert!(SUBCOMMANDS.iter().all(|(_, d)| !d.is_empty()));
     }
 }

@@ -95,9 +95,17 @@ pub enum AdcKind {
 
 impl AdcKind {
     /// Parse a `--adc` flag value: `exact` (alias `lossless`), `adaptive`,
-    /// `lossy` (8-bit default) or `lossy:<bits>`.
+    /// `lossy` or `lossy:<bits>`. Matching is case-insensitive and ignores
+    /// surrounding whitespace.
+    ///
+    /// Bare `lossy` means **`lossy:8`** — 8 bits is one below the default
+    /// geometry's 9-bit lossless budget ([`XbarParams::lossless_adc_bits`]),
+    /// i.e. the cheapest resolution that actually truncates, which is the
+    /// interesting starting point for a fidelity sweep. Spell out
+    /// `lossy:<bits>` to pick any other resolution.
     pub fn parse(s: &str) -> Result<AdcKind, String> {
-        match s {
+        let norm = s.trim().to_ascii_lowercase();
+        match norm.as_str() {
             "exact" | "lossless" => Ok(AdcKind::Exact),
             "adaptive" => Ok(AdcKind::Adaptive),
             "lossy" => Ok(AdcKind::Lossy(8)),
@@ -134,12 +142,20 @@ impl AdcKind {
         }
     }
 
-    /// Human label for tables and serve output.
+    /// Human label for tables and serve output (same as [`Display`]).
     pub fn label(&self) -> String {
+        self.to_string()
+    }
+}
+
+/// Renders in the exact syntax [`AdcKind::parse`] accepts, so every kind
+/// round-trips: `parse(&k.to_string()) == Ok(k)`.
+impl std::fmt::Display for AdcKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match *self {
-            AdcKind::Exact => "exact".to_string(),
-            AdcKind::Adaptive => "adaptive".to_string(),
-            AdcKind::Lossy(bits) => format!("lossy:{bits}"),
+            AdcKind::Exact => f.write_str("exact"),
+            AdcKind::Adaptive => f.write_str("adaptive"),
+            AdcKind::Lossy(bits) => write!(f, "lossy:{bits}"),
         }
     }
 }
@@ -424,6 +440,46 @@ mod tests {
         assert!(!a);
         assert_eq!(AdcKind::Lossy(7).label(), "lossy:7");
         assert_eq!(AdcKind::Adaptive.label(), "adaptive");
+    }
+
+    #[test]
+    fn adc_kind_parse_edge_cases() {
+        // bare `lossy` is the documented 8-bit default
+        assert_eq!(AdcKind::parse("lossy"), Ok(AdcKind::Lossy(8)));
+        // `lossy:` with nothing / zero / oversized / overflowing bits
+        assert!(AdcKind::parse("lossy:").is_err());
+        assert!(AdcKind::parse("lossy:0").is_err());
+        assert!(AdcKind::parse("lossy:00").is_err());
+        assert!(AdcKind::parse("lossy:17").is_err());
+        assert!(AdcKind::parse("lossy:4294967296").is_err());
+        assert!(AdcKind::parse("lossy:8.0").is_err());
+        assert!(AdcKind::parse("lossy:-3").is_err());
+        // boundary resolutions are accepted
+        assert_eq!(AdcKind::parse("lossy:1"), Ok(AdcKind::Lossy(1)));
+        assert_eq!(AdcKind::parse("lossy:16"), Ok(AdcKind::Lossy(16)));
+        // case and surrounding whitespace are ignored
+        assert_eq!(AdcKind::parse("Exact"), Ok(AdcKind::Exact));
+        assert_eq!(AdcKind::parse("LOSSLESS"), Ok(AdcKind::Exact));
+        assert_eq!(AdcKind::parse("ADAPTIVE"), Ok(AdcKind::Adaptive));
+        assert_eq!(AdcKind::parse("LoSsY:8"), Ok(AdcKind::Lossy(8)));
+        assert_eq!(AdcKind::parse("  exact  "), Ok(AdcKind::Exact));
+        // interior whitespace is not tolerated
+        assert!(AdcKind::parse("lossy : 8").is_err());
+        assert!(AdcKind::parse("").is_err());
+    }
+
+    #[test]
+    fn adc_kind_round_trips_via_display() {
+        for k in [
+            AdcKind::Exact,
+            AdcKind::Adaptive,
+            AdcKind::Lossy(1),
+            AdcKind::Lossy(8),
+            AdcKind::Lossy(16),
+        ] {
+            assert_eq!(AdcKind::parse(&k.to_string()), Ok(k), "{k}");
+            assert_eq!(k.label(), k.to_string());
+        }
     }
 
     #[test]

@@ -22,8 +22,9 @@ use crate::coordinator::batcher::{Batch, Batcher, PendingRequest};
 use crate::sched::Executor;
 use crate::xbar::cnn::{MiniCnn, ProgrammedCnn, Tensor};
 
-/// Elements in one newton-mini input image.
-const IMAGE_ELEMS: usize = 32 * 32 * 3;
+/// Elements in one newton-mini input image — the request shape every
+/// serving surface (CLI, example, network endpoint) validates against.
+pub const IMAGE_ELEMS: usize = 32 * 32 * 3;
 
 /// Batched golden-model inference over installed crossbar weights.
 pub struct GoldenServer {
@@ -237,6 +238,16 @@ impl GoldenServer {
         exec.map(batches.len(), |bi| self.run_batch(bi, &batches[bi], image_workers))
     }
 
+    /// Run one batcher-shaped (padded) batch through replica
+    /// `index % n_replicas` — the network serving entry point
+    /// ([`crate::net::Engine`]). The per-image split inside the batch gets
+    /// the whole pool: the network dispatcher executes batches one at a
+    /// time, unlike [`Self::serve_batches_on`] which divides the pool
+    /// across in-flight batches.
+    pub fn run_one(&self, index: usize, b: &Batch) -> BatchReport {
+        self.run_batch(index, b, crate::util::worker_count(self.batch))
+    }
+
     fn run_batch(&self, index: usize, b: &Batch, image_workers: usize) -> BatchReport {
         let replica = index % self.replicas.len();
         let t = tensor_from_flat(&b.data, self.batch);
@@ -276,6 +287,60 @@ impl GoldenServer {
         let installed = self.replicas[0].forward(&t);
         let legacy = self.cnn.forward(&t, &self.p, self.adaptive);
         installed.data == legacy.data
+    }
+}
+
+/// The golden crossbar engine is the network endpoint's default backend:
+/// batches arrive from the server's `Batcher`, run on round-robin replicas
+/// through the work-stealing executor, and report deviation vs the
+/// lossless golden install. PJRT (or any heterogeneous replica pool) can
+/// implement the same trait later without touching the wire layer.
+impl crate::net::Engine for GoldenServer {
+    fn image_elems(&self) -> usize {
+        IMAGE_ELEMS
+    }
+
+    fn batch_capacity(&self) -> usize {
+        self.batch
+    }
+
+    fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "golden newton-mini · adc {} · {} replica(s){} · batch {}",
+            self.kind.label(),
+            self.replicas.len(),
+            if self.golden.is_some() { " + lossless golden" } else { "" },
+            self.batch
+        )
+    }
+
+    fn run(&self, index: usize, batch: &Batch) -> crate::net::EngineBatch {
+        let r = self.run_one(index, batch);
+        crate::net::EngineBatch {
+            replica: r.replica,
+            n_real: r.n_real,
+            logits: r.logits,
+            max_abs_err: r.max_abs_err,
+        }
+    }
+}
+
+#[cfg(test)]
+mod engine_trait_tests {
+    use crate::net::Engine;
+
+    #[test]
+    fn golden_server_exposes_its_geometry_through_the_engine_trait() {
+        let s = super::GoldenServer::newton_mini_default();
+        let e: &dyn Engine = &s;
+        assert_eq!(e.image_elems(), super::IMAGE_ELEMS);
+        assert_eq!(e.batch_capacity(), 8);
+        assert_eq!(e.n_replicas(), 1);
+        assert!(e.describe().contains("exact"));
     }
 }
 

@@ -13,7 +13,8 @@
 //! * L1 — `python/compile/kernels/crossbar.py` (Pallas, build-time); its
 //!   bit-exact twin lives in [`xbar`] so the rust side can verify artifacts.
 //! * L2 — `python/compile/model.py` (JAX, build-time).
-//! * L3 — this crate: [`coordinator`] + [`runtime`] on the request path,
+//! * L3 — this crate: [`coordinator`] + [`runtime`] on the request path
+//!   (exposed over TCP by [`net`]: `newton serve-net` / `bench-net`),
 //!   everything else is the architecture model regenerating the paper's
 //!   tables and figures (see `rust/benches/`).
 
@@ -26,6 +27,7 @@ pub mod energy;
 pub mod karatsuba;
 pub mod mapping;
 pub mod metrics;
+pub mod net;
 pub mod pipeline;
 pub mod proptest_lite;
 pub mod runtime;

@@ -1,6 +1,7 @@
 //! `newton` CLI — leader entrypoint.
 //!
-//! Subcommands:
+//! Subcommands (the authoritative table is [`newton::cli::SUBCOMMANDS`];
+//! `newton help` prints it):
 //!   report                     headline Newton-vs-ISAAC comparison
 //!   simulate --net <name>      analytic evaluation of one workload
 //!   incremental                Fig-20-style technique stacking table
@@ -10,16 +11,31 @@
 //!     --adc exact|adaptive|lossy:<bits>  multi-replica golden serving with
 //!                              per-batch deviation vs the lossless golden
 //!     --replicas N             installed replicas for the --adc path
+//!   serve-net                  TCP serving endpoint (rust/src/net/)
+//!     --addr HOST:PORT         bind address (port 0 = ephemeral)
+//!     --adc / --replicas / --batch   engine config, as for `serve`
+//!     --max-inflight N         admission limit (Busy beyond it)
+//!     --port-file PATH         write the bound address for scripts
+//!   bench-net --addr HOST:PORT multi-threaded load generator
+//!     --requests N --concurrency C   writes BENCH_net.json
+//!     --expect-exact           assert bit-identity vs in-process golden
+//!     --engine-seed N          seed of the server's install (default 0)
+//!     --shutdown               drain the server after the run
 //!   sched-stress               work-stealing executor stress smoke (CI)
-//!   list                       workloads and artifacts available
+//!   export --out DIR           every figure's data series as CSV
+//!   list                       workloads, artifacts, and subcommands
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use newton::cli::Args;
+use newton::cli::{self, Args};
 use newton::config::{AdcKind, ChipConfig, ImaConfig, XbarParams};
 use newton::coordinator::{newton_mini, GoldenServer, PipelineServer, ServerConfig};
 use newton::mapping::{self, Mapping, MappingPolicy};
 use newton::metrics;
+use newton::net::{self, BenchConfig, NetServer, ServeConfig};
 use newton::pipeline::evaluate;
 use newton::runtime::{default_artifacts_dir, Runtime};
 use newton::tiles;
@@ -36,12 +52,13 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
+        "serve-net" => cmd_serve_net(&args),
+        "bench-net" => cmd_bench_net(&args),
         "sched-stress" => cmd_sched_stress(&args),
         "export" => cmd_export(&args),
         "list" => cmd_list(),
-        other => Err(anyhow!(
-            "unknown command {other:?}; try report|simulate|incremental|sweep|verify|serve|sched-stress|export|list"
-        )),
+        "help" => cmd_help(),
+        other => Err(anyhow!("unknown command {other:?}; try {}", cli::command_summary())),
     };
     if let Err(e) = r {
         eprintln!("error: {e:#}");
@@ -326,6 +343,221 @@ fn serve_replicated(images: &[Vec<i32>], kind: AdcKind, args: &Args) -> Result<(
     Ok(())
 }
 
+/// TCP serving endpoint: the `serve --adc` engine behind `rust/src/net/`.
+/// Blocks until a client sends a `Shutdown` frame, then drains and prints
+/// the final stats.
+fn cmd_serve_net(args: &Args) -> Result<()> {
+    let kind = AdcKind::parse(args.get_or("adc", "exact")).map_err(|e| anyhow!("{e}"))?;
+    let replicas = args.get_usize("replicas", 2);
+    let batch = args.get_usize("batch", 8);
+    let seed = args.get_usize("seed", 0) as u64;
+    let max_inflight = args.get_usize("max-inflight", 64);
+    let wait_ms = args.get_usize("batch-wait-ms", 2);
+    if replicas == 0 {
+        bail!("--replicas must be >= 1");
+    }
+    if batch == 0 {
+        bail!("--batch must be >= 1");
+    }
+    if max_inflight == 0 {
+        bail!("--max-inflight must be >= 1");
+    }
+
+    let t0 = std::time::Instant::now();
+    let engine = Arc::new(GoldenServer::replicated(seed, kind, replicas, batch));
+    println!(
+        "installed engine in {:.1} ms: {}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        newton::net::Engine::describe(engine.as_ref())
+    );
+
+    let server = NetServer::start(
+        engine,
+        ServeConfig {
+            addr: args.get_or("addr", "127.0.0.1:0").to_string(),
+            max_inflight,
+            batch_wait: Duration::from_millis(wait_ms as u64),
+        },
+    )?;
+    let addr = server.local_addr();
+    println!("serve-net listening on {addr} (max {max_inflight} in flight)");
+    if let Some(pf) = args.get("port-file") {
+        std::fs::write(pf, addr.to_string())?;
+        println!("  bound address written to {pf}");
+    }
+    println!("  drain with: newton bench-net --addr {addr} --shutdown");
+
+    let stats = server.join();
+    print_net_stats(&stats);
+    if let Some(dir) = args.get("export") {
+        let f = metrics::export::export_net_summary(std::path::Path::new(dir), &stats)?;
+        println!("wrote {dir}/{f}");
+    }
+    Ok(())
+}
+
+fn print_net_stats(s: &net::StatsSnapshot) {
+    println!(
+        "drained: {} served / {} busy-rejected / {} protocol errors",
+        s.served, s.busy, s.proto_errors
+    );
+    println!(
+        "  batches    : {} (fill {:.0}%)   latency p50 {:.1} ms  p99 {:.1} ms",
+        s.batches,
+        s.batch_fill * 100.0,
+        s.p50_us as f64 / 1e3,
+        s.p99_us as f64 / 1e3
+    );
+    println!("  worst batch deviation vs lossless golden: {}", s.worst_abs_err);
+    let mut t = Table::new(&["replica", "requests"]);
+    for (i, n) in s.per_replica.iter().enumerate() {
+        t.row(&[i.to_string(), n.to_string()]);
+    }
+    t.print();
+}
+
+/// Multi-threaded load generator against a `serve-net` endpoint. Writes
+/// `BENCH_net.json`; `--expect-exact` additionally re-runs the identical
+/// request stream through an in-process `GoldenServer` and asserts
+/// bit-identity plus zero deviation; `--shutdown` drains the server.
+fn cmd_bench_net(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow!("--addr is required (serve-net prints the bound address)"))?;
+    let mut cfg = BenchConfig::new(addr);
+    cfg.requests = args.get_usize("requests", 64);
+    cfg.concurrency = args.get_usize("concurrency", 8);
+    cfg.seed = args.get_usize("seed", 0) as u64;
+    if cfg.requests == 0 || cfg.concurrency == 0 {
+        bail!("--requests and --concurrency must be >= 1");
+    }
+
+    println!(
+        "bench-net: {} requests x {} lanes against {addr}",
+        cfg.requests, cfg.concurrency
+    );
+    let mut report = net::load_generate(&cfg)?;
+    println!(
+        "completed {} requests in {:.2}s ({:.1} req/s, {} busy retries)",
+        report.requests, report.wall_s, report.throughput_rps, report.busy_retries
+    );
+    println!(
+        "  latency p50 : {:.1} ms   p99: {:.1} ms   max: {:.1} ms",
+        report.p50_ms, report.p99_ms, report.max_ms
+    );
+    println!("  worst batch deviation vs lossless golden: {}", report.worst_abs_err);
+
+    // server-side view of the same run
+    let mut ctl = net::Client::connect(addr)?;
+    let stats = ctl.stats()?;
+    // the client only sees replicas that replied; pad with the server's
+    // replica count so idle replicas show as explicit zeros
+    if report.per_replica.len() < stats.per_replica.len() {
+        report.per_replica.resize(stats.per_replica.len(), 0);
+    }
+    let mut t = Table::new(&["replica", "replies"]);
+    for (i, n) in report.per_replica.iter().enumerate() {
+        t.row(&[i.to_string(), n.to_string()]);
+    }
+    t.print();
+    println!(
+        "server: {} served / {} busy / {} batches (fill {:.0}%)",
+        stats.served,
+        stats.busy,
+        stats.batches,
+        stats.batch_fill * 100.0
+    );
+
+    let verified = if args.has_flag("expect-exact") {
+        // the in-process reference must install the same weights the
+        // server did: --engine-seed mirrors serve-net's --seed (default 0)
+        let engine_seed = args.get_usize("engine-seed", 0) as u64;
+        let images: Vec<Vec<i32>> =
+            (0..cfg.requests).map(|i| net::bench_image(cfg.seed, i)).collect();
+        let want = GoldenServer::replicated(engine_seed, AdcKind::Exact, 1, 8).infer(&images);
+        if report.logits != want {
+            bail!("--expect-exact: served logits are NOT bit-identical to the in-process GoldenServer");
+        }
+        if report.worst_abs_err != 0 {
+            bail!(
+                "--expect-exact: server reported a nonzero deviation ({}) under an exact config",
+                report.worst_abs_err
+            );
+        }
+        println!(
+            "  verified   : {} responses bit-identical to the in-process path, zero deviation ✓",
+            cfg.requests
+        );
+        Some(true)
+    } else {
+        None
+    };
+
+    write_bench_net_json(&report, &stats, verified);
+
+    if args.has_flag("shutdown") {
+        ctl.shutdown()?;
+        println!("sent shutdown; server drained and acked");
+    }
+    Ok(())
+}
+
+fn write_bench_net_json(
+    r: &net::BenchReport,
+    server: &net::StatsSnapshot,
+    verified: Option<bool>,
+) {
+    let per_replica = r
+        .per_replica
+        .iter()
+        .map(|n| n.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
+    let json = format!(
+        "{{\n  \"requests\": {},\n  \"concurrency\": {},\n  \"wall_s\": {:.6},\n  \
+         \"throughput_rps\": {:.3},\n  \"p50_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \
+         \"max_ms\": {:.3},\n  \"busy_retries\": {},\n  \"worst_abs_err\": {},\n  \
+         \"verified_exact\": {},\n  \"per_replica\": [{}],\n  \"server\": {{\n    \
+         \"served\": {},\n    \"busy\": {},\n    \"proto_errors\": {},\n    \
+         \"batches\": {},\n    \"batch_fill\": {:.4},\n    \"p50_us\": {},\n    \
+         \"p99_us\": {}\n  }}\n}}\n",
+        r.requests,
+        r.concurrency,
+        r.wall_s,
+        r.throughput_rps,
+        r.p50_ms,
+        r.p99_ms,
+        r.max_ms,
+        r.busy_retries,
+        r.worst_abs_err,
+        match verified {
+            Some(true) => "true",
+            Some(false) => "false",
+            None => "null",
+        },
+        per_replica,
+        server.served,
+        server.busy,
+        server.proto_errors,
+        server.batches,
+        server.batch_fill,
+        server.p50_us,
+        server.p99_us,
+    );
+    match std::fs::write("BENCH_net.json", &json) {
+        Ok(()) => println!("wrote BENCH_net.json"),
+        Err(e) => println!("could not write BENCH_net.json: {e}"),
+    }
+}
+
+fn cmd_help() -> Result<()> {
+    println!("newton <command> [--flags]");
+    for (name, desc) in cli::SUBCOMMANDS {
+        println!("  {name:12} {desc}");
+    }
+    Ok(())
+}
+
 /// Work-stealing executor stress smoke (scripts/verify.sh): oversubscribed
 /// pool, 10x-skewed job mix, asserts completion + bit-determinism inside
 /// `sched::stress`, and that stealing actually moved work.
@@ -365,6 +597,10 @@ fn cmd_export(args: &Args) -> Result<()> {
 }
 
 fn cmd_list() -> Result<()> {
+    println!("subcommands:");
+    for (name, desc) in cli::SUBCOMMANDS {
+        println!("  {name:12} {desc}");
+    }
     println!("workloads:");
     for n in workloads::suite() {
         println!(

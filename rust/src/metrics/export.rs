@@ -8,6 +8,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{ChipConfig, ImaConfig, NewtonFeatures, XbarParams};
 use crate::mapping::{self, Mapping, MappingPolicy};
+use crate::net::StatsSnapshot;
 use crate::pipeline::evaluate;
 use crate::workloads;
 
@@ -178,7 +179,39 @@ pub fn export_all(dir: &Path) -> Result<Vec<String>> {
         written.push("ablation_grid.csv".into());
     }
 
+    // net serving summary: a live run writes the real drained snapshot via
+    // `newton serve-net --export <dir>` (export_net_summary) — never
+    // clobber that with zeros; only a fresh directory gets the zero-filled
+    // placeholder so the artifact set is complete
+    if !dir.join("net_summary.csv").exists() {
+        export_net_summary(dir, &StatsSnapshot::default())?;
+    }
+    written.push("net_summary.csv".into());
+
     Ok(written)
+}
+
+/// Serialize a `serve-net` [`StatsSnapshot`] as `net_summary.csv` next to
+/// the figure exports: one `metric,value` row per counter plus a
+/// `replica_<i>_requests` row per installed replica.
+pub fn export_net_summary(dir: &Path, s: &StatsSnapshot) -> Result<String> {
+    std::fs::create_dir_all(dir)?;
+    let mut rows = vec![
+        format!("served,{}", s.served),
+        format!("busy_rejections,{}", s.busy),
+        format!("protocol_errors,{}", s.proto_errors),
+        format!("batches,{}", s.batches),
+        format!("batch_fill,{:.4}", s.batch_fill),
+        format!("worst_abs_err,{}", s.worst_abs_err),
+        format!("latency_p50_us,{}", s.p50_us),
+        format!("latency_p99_us,{}", s.p99_us),
+        format!("replicas,{}", s.per_replica.len()),
+    ];
+    for (i, n) in s.per_replica.iter().enumerate() {
+        rows.push(format!("replica_{i}_requests,{n}"));
+    }
+    write_csv(dir, "net_summary.csv", "metric,value", &rows)?;
+    Ok("net_summary.csv".into())
 }
 
 #[cfg(test)]
@@ -186,11 +219,57 @@ mod tests {
     use super::*;
 
     #[test]
+    fn net_summary_serializes_a_populated_snapshot() {
+        let dir = std::env::temp_dir().join("newton-net-summary-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let snap = StatsSnapshot {
+            served: 64,
+            busy: 3,
+            proto_errors: 1,
+            batches: 9,
+            batch_fill: 0.8889,
+            worst_abs_err: 0,
+            p50_us: 1500,
+            p99_us: 9000,
+            per_replica: vec![33, 31],
+        };
+        let name = export_net_summary(&dir, &snap).unwrap();
+        assert_eq!(name, "net_summary.csv");
+        let text = std::fs::read_to_string(dir.join(&name)).unwrap();
+        assert_eq!(text.lines().next(), Some("metric,value"));
+        for want in [
+            "served,64",
+            "busy_rejections,3",
+            "protocol_errors,1",
+            "batches,9",
+            "batch_fill,0.8889",
+            "worst_abs_err,0",
+            "latency_p50_us,1500",
+            "latency_p99_us,9000",
+            "replicas,2",
+            "replica_0_requests,33",
+            "replica_1_requests,31",
+        ] {
+            assert!(text.lines().any(|l| l == want), "missing row {want:?} in:\n{text}");
+        }
+        // every data row is exactly metric,value
+        for l in text.lines().skip(1) {
+            assert_eq!(l.matches(',').count(), 1, "{l}");
+        }
+        // a subsequent offline export_all must not clobber the live summary
+        let files = export_all(&dir).unwrap();
+        assert!(files.iter().any(|f| f == "net_summary.csv"));
+        let text2 = std::fs::read_to_string(dir.join("net_summary.csv")).unwrap();
+        assert_eq!(text, text2, "export_all clobbered a live net summary");
+    }
+
+    #[test]
     fn export_writes_all_series() {
         let dir = std::env::temp_dir().join("newton-export-test");
         let _ = std::fs::remove_dir_all(&dir);
         let files = export_all(&dir).unwrap();
-        assert!(files.len() >= 7);
+        assert!(files.len() >= 8);
+        assert!(files.iter().any(|f| f == "net_summary.csv"));
         for f in &files {
             let text = std::fs::read_to_string(dir.join(f)).unwrap();
             assert!(text.lines().count() > 1, "{f} is empty");

@@ -1,0 +1,332 @@
+//! Blocking client for the serving endpoint, plus the multi-threaded load
+//! generator behind `newton bench-net`.
+//!
+//! One [`Client`] is one TCP connection with one request outstanding at a
+//! time (the protocol is strict request/response per connection);
+//! concurrency comes from opening more connections, which is exactly what
+//! [`load_generate`] does — one lane per connection, fanned out on the
+//! work-stealing executor ([`crate::sched`]).
+
+use std::fmt;
+use std::io;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::golden::IMAGE_ELEMS;
+use crate::net::percentile_us;
+use crate::net::proto::{self, InferReply, InferRequest, Msg, ProtoError, StatsSnapshot, WireError};
+use crate::sched::Executor;
+use crate::util::Rng;
+
+/// Client-side failure.
+#[derive(Debug)]
+pub enum NetError {
+    /// Transport or framing failure.
+    Proto(ProtoError),
+    /// The server replied with an error frame.
+    Server(WireError),
+    /// The server replied with a frame that makes no sense here.
+    Unexpected(&'static str),
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetError::Proto(e) => write!(f, "wire protocol: {e}"),
+            NetError::Server(e) => write!(f, "server error (code {}): {}", e.code, e.message),
+            NetError::Unexpected(m) => write!(f, "unexpected server reply: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<ProtoError> for NetError {
+    fn from(e: ProtoError) -> Self {
+        NetError::Proto(e)
+    }
+}
+
+impl From<io::Error> for NetError {
+    fn from(e: io::Error) -> Self {
+        NetError::Proto(ProtoError::Io(e))
+    }
+}
+
+/// Outcome of one inference attempt: a reply, or explicit backpressure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InferOutcome {
+    Ok(InferReply),
+    /// Admission limit hit; the caller decides when to retry.
+    Busy,
+}
+
+/// A blocking connection to a `serve-net` endpoint.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream })
+    }
+
+    fn request(&mut self, msg: &Msg) -> Result<Msg, NetError> {
+        proto::write_msg(&mut self.stream, msg)?;
+        Ok(proto::read_msg(&mut self.stream)?)
+    }
+
+    /// One inference request. `id` is opaque and echoed in the reply.
+    pub fn infer(&mut self, id: u64, image: &[i32]) -> Result<InferOutcome, NetError> {
+        if image.len() > proto::MAX_IMAGE_ELEMS {
+            // fail locally instead of emitting a frame every receiver is
+            // required to reject
+            return Err(NetError::Proto(ProtoError::Oversized {
+                len: 12 + image.len() * 4,
+            }));
+        }
+        let msg = Msg::Infer(InferRequest {
+            id,
+            image: image.to_vec(),
+        });
+        match self.request(&msg)? {
+            Msg::Reply(r) if r.id == id => Ok(InferOutcome::Ok(r)),
+            Msg::Reply(_) => Err(NetError::Unexpected("reply id does not echo the request")),
+            Msg::Busy => Ok(InferOutcome::Busy),
+            Msg::Error(e) => Err(NetError::Server(e)),
+            _ => Err(NetError::Unexpected("non-reply frame to an inference request")),
+        }
+    }
+
+    /// Inference with bounded busy-retry. Returns the reply plus how many
+    /// `Busy` rejections were absorbed.
+    pub fn infer_retry(
+        &mut self,
+        id: u64,
+        image: &[i32],
+        max_retries: usize,
+        backoff: Duration,
+    ) -> Result<(InferReply, usize), NetError> {
+        let mut retries = 0usize;
+        loop {
+            match self.infer(id, image)? {
+                InferOutcome::Ok(r) => return Ok((r, retries)),
+                InferOutcome::Busy => {
+                    retries += 1;
+                    if retries > max_retries {
+                        return Err(NetError::Unexpected(
+                            "server stayed busy past the retry budget",
+                        ));
+                    }
+                    std::thread::sleep(backoff);
+                }
+            }
+        }
+    }
+
+    /// Fetch the server's statistics snapshot.
+    pub fn stats(&mut self) -> Result<StatsSnapshot, NetError> {
+        match self.request(&Msg::StatsReq)? {
+            Msg::Stats(s) => Ok(s),
+            Msg::Error(e) => Err(NetError::Server(e)),
+            _ => Err(NetError::Unexpected("non-stats frame to a stats request")),
+        }
+    }
+
+    /// Ask the server to drain and exit; returns once the drain is acked.
+    pub fn shutdown(&mut self) -> Result<(), NetError> {
+        match self.request(&Msg::Shutdown)? {
+            Msg::ShutdownAck => Ok(()),
+            Msg::Error(e) => Err(NetError::Server(e)),
+            _ => Err(NetError::Unexpected("non-ack frame to a shutdown request")),
+        }
+    }
+}
+
+// ---- load generator ------------------------------------------------------
+
+/// Deterministic bench image `index` for `seed` — the shared contract
+/// between `bench-net` and its in-process verification: both sides
+/// regenerate the same request stream from `(seed, index)` alone.
+pub fn bench_image(seed: u64, index: usize) -> Vec<i32> {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(index as u64));
+    (0..IMAGE_ELEMS).map(|_| rng.below(256) as i32).collect()
+}
+
+/// Load-generator configuration (`newton bench-net`).
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub addr: String,
+    /// Total requests across all lanes.
+    pub requests: usize,
+    /// Concurrent lanes; each lane is one connection issuing requests
+    /// back-to-back.
+    pub concurrency: usize,
+    /// Seed for the deterministic request stream.
+    pub seed: u64,
+    /// Sleep between busy-retries.
+    pub busy_backoff: Duration,
+    /// Busy-retry budget per request.
+    pub max_busy_retries: usize,
+}
+
+impl BenchConfig {
+    pub fn new(addr: &str) -> Self {
+        BenchConfig {
+            addr: addr.to_string(),
+            requests: 64,
+            concurrency: 8,
+            seed: 0,
+            busy_backoff: Duration::from_millis(2),
+            max_busy_retries: 10_000,
+        }
+    }
+}
+
+/// Aggregated load-generation results.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub requests: usize,
+    /// Lanes actually run (clamped to the request count).
+    pub concurrency: usize,
+    /// Busy rejections absorbed across all requests.
+    pub busy_retries: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    /// Per-request service latency (successful attempt only), ms.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    /// Worst batch deviation vs the lossless golden observed in replies.
+    pub worst_abs_err: i64,
+    /// Replies per replica, indexed by replica id. Sized by the highest
+    /// replica that actually replied — trailing idle replicas are absent
+    /// unless the caller pads from the server's stats (bench-net does).
+    pub per_replica: Vec<u64>,
+    /// Logits per request, ordered by request index — the caller's hook
+    /// for bit-identity verification against an in-process run.
+    pub logits: Vec<Vec<i32>>,
+}
+
+struct LaneResult {
+    index: usize,
+    us: u64,
+    replica: u32,
+    max_abs_err: i64,
+    logits: Vec<i32>,
+}
+
+#[derive(Default)]
+struct LaneOut {
+    results: Vec<LaneResult>,
+    busy: usize,
+}
+
+fn run_lane(cfg: &BenchConfig, next: &AtomicUsize) -> Result<LaneOut, NetError> {
+    let mut client = Client::connect(cfg.addr.as_str())?;
+    let mut out = LaneOut::default();
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= cfg.requests {
+            return Ok(out);
+        }
+        let image = bench_image(cfg.seed, i);
+        // time each attempt separately so the reported latency is the
+        // successful attempt's service time, not busy-retry queueing
+        let mut retries = 0usize;
+        let (reply, us) = loop {
+            let t0 = Instant::now();
+            match client.infer(i as u64, &image)? {
+                InferOutcome::Ok(r) => break (r, t0.elapsed().as_micros() as u64),
+                InferOutcome::Busy => {
+                    retries += 1;
+                    if retries > cfg.max_busy_retries {
+                        return Err(NetError::Unexpected(
+                            "server stayed busy past the retry budget",
+                        ));
+                    }
+                    std::thread::sleep(cfg.busy_backoff);
+                }
+            }
+        };
+        out.busy += retries;
+        out.results.push(LaneResult {
+            index: i,
+            us,
+            replica: reply.replica,
+            max_abs_err: reply.max_abs_err,
+            logits: reply.logits,
+        });
+    }
+}
+
+/// Drive `cfg.requests` inference requests through `cfg.concurrency`
+/// concurrent connections (lanes ride the work-stealing executor) and
+/// aggregate throughput/latency/deviation. The request stream is
+/// deterministic — [`bench_image`]`(seed, i)` for `i in 0..requests` —
+/// so callers can re-run the exact workload in-process and compare
+/// logits bit-for-bit.
+pub fn load_generate(cfg: &BenchConfig) -> Result<BenchReport, NetError> {
+    assert!(cfg.requests > 0, "requests must be >= 1");
+    assert!(cfg.concurrency > 0, "concurrency must be >= 1");
+    let lanes = cfg.concurrency.min(cfg.requests);
+    let next = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    let lane_outs = Executor::new(lanes).map(lanes, |_| run_lane(cfg, &next));
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut results: Vec<LaneResult> = Vec::with_capacity(cfg.requests);
+    let mut busy_retries = 0usize;
+    for lo in lane_outs {
+        let lo = lo?;
+        busy_retries += lo.busy;
+        results.extend(lo.results);
+    }
+    results.sort_by_key(|r| r.index);
+    // every index exactly once — lanes abort on error, so a gap means a bug
+    assert_eq!(results.len(), cfg.requests, "lost responses");
+    for (want, r) in results.iter().enumerate() {
+        assert_eq!(r.index, want, "duplicate or missing request index");
+    }
+
+    let mut lat: Vec<u64> = results.iter().map(|r| r.us).collect();
+    lat.sort_unstable();
+    let n_replicas = results.iter().map(|r| r.replica as usize + 1).max().unwrap_or(1);
+    let mut per_replica = vec![0u64; n_replicas];
+    for r in &results {
+        per_replica[r.replica as usize] += 1;
+    }
+    let worst_abs_err = results.iter().map(|r| r.max_abs_err).max().unwrap_or(0);
+    let logits = results.into_iter().map(|r| r.logits).collect();
+    Ok(BenchReport {
+        requests: cfg.requests,
+        concurrency: lanes,
+        busy_retries,
+        wall_s: wall,
+        throughput_rps: cfg.requests as f64 / wall.max(1e-9),
+        p50_ms: percentile_us(&lat, 0.50) as f64 / 1e3,
+        p99_ms: percentile_us(&lat, 0.99) as f64 / 1e3,
+        max_ms: lat.last().copied().unwrap_or(0) as f64 / 1e3,
+        worst_abs_err,
+        per_replica,
+        logits,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_images_are_deterministic_and_distinct() {
+        let a = bench_image(0, 3);
+        assert_eq!(a.len(), IMAGE_ELEMS);
+        assert!(a.iter().all(|&v| (0..256).contains(&v)));
+        assert_eq!(a, bench_image(0, 3));
+        assert_ne!(a, bench_image(0, 4));
+        assert_ne!(a, bench_image(1, 3));
+    }
+}

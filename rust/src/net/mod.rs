@@ -1,0 +1,100 @@
+//! Network serving subsystem: a std-only TCP endpoint in front of the
+//! crossbar serving stack.
+//!
+//! PR 2 made the ADC/replica knobs (`--adc exact|adaptive|lossy:<bits>`,
+//! `--replicas N`) servable in-process; this layer exposes the same path
+//! over a socket, which is what an analog accelerator's coordinator
+//! actually looks like in deployment: requests must keep flowing into the
+//! installed crossbar replicas at line rate without unbounded queueing
+//! (the fidelity/deployment concerns of arXiv:2109.01262), and
+//! heterogeneous-replica routing (arXiv:1906.09395) needs a transport
+//! before it can exist.
+//!
+//! Three pieces, all on `std::net`:
+//!
+//! * [`proto`] — the framed wire protocol (versioned header, checksummed
+//!   payloads, pure encode/decode — unit-testable without sockets);
+//! * [`server`] — [`NetServer`]: accepts connections, enforces an
+//!   admission limit with explicit [`proto::Msg::Busy`] backpressure,
+//!   routes requests through the existing `Batcher` -> `sched::Executor`
+//!   -> engine path, serves [`proto::StatsSnapshot`] requests, and drains
+//!   cleanly on `Shutdown`;
+//! * [`client`] — [`Client`]: a blocking client library, plus the
+//!   multi-threaded load generator behind `newton bench-net`.
+//!
+//! The server is generic over [`Engine`], the seam between transport and
+//! compute: `coordinator::GoldenServer` implements it today (golden
+//! crossbar numerics, multi-replica, deviation-vs-lossless reporting);
+//! the PJRT runtime or any heterogeneous replica pool can slot in later
+//! without touching the wire layer (ROADMAP: multi-backend execution).
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::{bench_image, load_generate, BenchConfig, BenchReport, Client, InferOutcome, NetError};
+pub use proto::StatsSnapshot;
+pub use server::{NetServer, ServeConfig};
+
+use crate::coordinator::Batch;
+
+/// One executed batch, as the transport layer sees it: which replica ran
+/// it, the per-real-row logits, and the batch's deviation vs the lossless
+/// golden reference (0 for lossless configs).
+#[derive(Clone, Debug)]
+pub struct EngineBatch {
+    pub replica: usize,
+    pub n_real: usize,
+    /// Per-request logits, one row per real request, in `Batch::ids` order.
+    pub logits: Vec<Vec<i32>>,
+    pub max_abs_err: i64,
+}
+
+/// A batched inference backend the [`NetServer`] can route to.
+///
+/// Implementations must be callable from the dispatcher thread while
+/// connection handlers run concurrently (`Send + Sync`); determinism is
+/// the implementor's contract (the golden engine is bit-deterministic
+/// regardless of worker count — see `sched`).
+pub trait Engine: Send + Sync {
+    /// Elements in one flat request image (requests with any other length
+    /// are rejected at the protocol edge with `ERR_BAD_SHAPE`).
+    fn image_elems(&self) -> usize;
+    /// Fixed batch capacity the engine's installed pipeline works on.
+    fn batch_capacity(&self) -> usize;
+    /// Installed serving replicas (for stats sizing).
+    fn n_replicas(&self) -> usize;
+    /// Human description for logs (`serve-net` startup line).
+    fn describe(&self) -> String;
+    /// Run one batcher-shaped (padded) batch; `index` provides the
+    /// round-robin replica affinity.
+    fn run(&self, index: usize, batch: &Batch) -> EngineBatch;
+}
+
+/// Nearest-rank percentile over an ascending-sorted latency sample.
+pub fn percentile_us(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_picks_nearest_rank() {
+        assert_eq!(percentile_us(&[], 0.5), 0);
+        assert_eq!(percentile_us(&[7], 0.5), 7);
+        assert_eq!(percentile_us(&[7], 0.99), 7);
+        let xs: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_us(&xs, 0.0), 1);
+        assert_eq!(percentile_us(&xs, 1.0), 100);
+        let p50 = percentile_us(&xs, 0.5);
+        assert!((50..=51).contains(&p50));
+        let p99 = percentile_us(&xs, 0.99);
+        assert!((98..=100).contains(&p99));
+    }
+}

@@ -1,0 +1,614 @@
+//! Length-prefixed binary wire protocol for the TCP serving endpoint.
+//!
+//! Every message travels as one **frame**: a fixed 16-byte header followed
+//! by a checksummed payload. The header carries a magic, a protocol
+//! version, the message type, the payload length, and an FNV-1a checksum
+//! of the payload, so a receiver can reject garbage *before* trusting the
+//! length prefix and can detect corruption without decoding:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"NWT0"
+//! 4       1     version (1)
+//! 5       1     message type (TY_*)
+//! 6       2     reserved (0)
+//! 8       4     payload length, LE u32 (<= MAX_PAYLOAD)
+//! 12      4     FNV-1a-32 checksum of the payload, LE
+//! 16      len   payload
+//! ```
+//!
+//! All integers are little-endian. Encoding and decoding are pure
+//! functions over byte slices ([`encode_frame`] / [`decode_frame`] /
+//! [`decode_payload`]) so the protocol is unit-testable without opening a
+//! socket; [`read_msg`] / [`write_msg`] adapt them to `Read`/`Write`
+//! streams for the client and server.
+//!
+//! A framed stream cannot be resynchronised after a bad frame (the length
+//! prefix is untrusted from that point on), so every protocol error is
+//! fatal to its connection: the server replies with an [`Msg::Error`]
+//! frame where possible and closes.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// Frame magic: rejects non-protocol peers before the length is trusted.
+pub const MAGIC: [u8; 4] = *b"NWT0";
+/// Protocol version carried in every frame header.
+pub const VERSION: u8 = 1;
+/// Fixed frame-header size in bytes.
+pub const HEADER_LEN: usize = 16;
+/// Hard payload ceiling; an oversized header is rejected before any
+/// payload allocation happens, and [`encode_frame`] refuses to build a
+/// frame above it (so a sender can never emit what every receiver must
+/// reject).
+pub const MAX_PAYLOAD: usize = 4 << 20;
+/// Largest image an `Infer` frame can carry under [`MAX_PAYLOAD`]
+/// (payload = 8-byte id + 4-byte count + 4 bytes per element).
+pub const MAX_IMAGE_ELEMS: usize = (MAX_PAYLOAD - 12) / 4;
+
+/// Message types (header byte 5).
+pub const TY_INFER: u8 = 1;
+pub const TY_REPLY: u8 = 2;
+pub const TY_BUSY: u8 = 3;
+pub const TY_ERROR: u8 = 4;
+pub const TY_STATS_REQ: u8 = 5;
+pub const TY_STATS: u8 = 6;
+pub const TY_SHUTDOWN: u8 = 7;
+pub const TY_SHUTDOWN_ACK: u8 = 8;
+
+/// [`WireError`] codes.
+pub const ERR_MALFORMED: u16 = 1;
+pub const ERR_BAD_SHAPE: u16 = 2;
+pub const ERR_DRAINING: u16 = 3;
+pub const ERR_INTERNAL: u16 = 4;
+
+/// Decode/IO failure for one frame.
+#[derive(Debug)]
+pub enum ProtoError {
+    Io(io::Error),
+    BadMagic([u8; 4]),
+    BadVersion(u8),
+    BadType(u8),
+    /// Header declared a payload above [`MAX_PAYLOAD`].
+    Oversized { len: usize },
+    Checksum { want: u32, got: u32 },
+    Malformed(&'static str),
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "io: {e}"),
+            ProtoError::BadMagic(m) => write!(f, "bad magic {m:02x?}"),
+            ProtoError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            ProtoError::BadType(t) => write!(f, "unknown message type {t}"),
+            ProtoError::Oversized { len } => {
+                write!(f, "payload length {len} exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            ProtoError::Checksum { want, got } => {
+                write!(f, "payload checksum mismatch (header {want:#010x}, computed {got:#010x})")
+            }
+            ProtoError::Malformed(m) => write!(f, "malformed payload: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl From<io::Error> for ProtoError {
+    fn from(e: io::Error) -> Self {
+        ProtoError::Io(e)
+    }
+}
+
+/// An inference request: opaque client-chosen `id` echoed in the reply,
+/// plus the flat image (the server validates the element count against
+/// its engine).
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferRequest {
+    pub id: u64,
+    pub image: Vec<i32>,
+}
+
+/// A served inference result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferReply {
+    /// Echo of the request id.
+    pub id: u64,
+    /// Replica that executed the batch carrying this request.
+    pub replica: u32,
+    /// Max |served - golden| over the whole batch this request rode in
+    /// (0 when the serving config is lossless).
+    pub max_abs_err: i64,
+    pub logits: Vec<i32>,
+}
+
+/// A server-side failure bound to one request/connection.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireError {
+    /// One of the `ERR_*` codes.
+    pub code: u16,
+    pub message: String,
+}
+
+/// Server statistics snapshot — served over the wire (`Msg::StatsReq` ->
+/// `Msg::Stats`) and exported by `metrics::export::export_net_summary`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsSnapshot {
+    /// Requests served to completion.
+    pub served: u64,
+    /// Requests rejected with `Busy` (admission limit hit).
+    pub busy: u64,
+    /// Connections dropped for protocol violations.
+    pub proto_errors: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Mean batch occupancy (real rows / capacity), 0 when no batch ran.
+    pub batch_fill: f64,
+    /// Worst per-batch max-abs-error vs the lossless golden install.
+    pub worst_abs_err: i64,
+    /// Request latency percentiles (admission -> reply written), µs.
+    pub p50_us: u64,
+    pub p99_us: u64,
+    /// Requests served per replica (round-robin batch affinity).
+    pub per_replica: Vec<u64>,
+}
+
+/// One protocol message. Client-to-server: `Infer`, `StatsReq`,
+/// `Shutdown`. Server-to-client: `Reply`, `Busy`, `Error`, `Stats`,
+/// `ShutdownAck`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    Infer(InferRequest),
+    Reply(InferReply),
+    /// Explicit backpressure: the admission limit is reached; retry later.
+    Busy,
+    Error(WireError),
+    StatsReq,
+    Stats(StatsSnapshot),
+    /// Ask the server to drain in-flight work and exit.
+    Shutdown,
+    ShutdownAck,
+}
+
+/// FNV-1a 32-bit checksum (std-only; no CRC crate offline).
+pub fn checksum(data: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in data {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+// ---- encoding ------------------------------------------------------------
+
+fn put_i32s(out: &mut Vec<u8>, vs: &[i32]) {
+    out.extend_from_slice(&(vs.len() as u32).to_le_bytes());
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize a message payload; returns `(type byte, payload)`.
+pub fn encode_payload(m: &Msg) -> (u8, Vec<u8>) {
+    let mut p = Vec::new();
+    let ty = match m {
+        Msg::Infer(r) => {
+            p.extend_from_slice(&r.id.to_le_bytes());
+            put_i32s(&mut p, &r.image);
+            TY_INFER
+        }
+        Msg::Reply(r) => {
+            p.extend_from_slice(&r.id.to_le_bytes());
+            p.extend_from_slice(&r.replica.to_le_bytes());
+            p.extend_from_slice(&r.max_abs_err.to_le_bytes());
+            put_i32s(&mut p, &r.logits);
+            TY_REPLY
+        }
+        Msg::Busy => TY_BUSY,
+        Msg::Error(e) => {
+            p.extend_from_slice(&e.code.to_le_bytes());
+            // cap the message so an error can never itself be oversized
+            let bytes = e.message.as_bytes();
+            let n = bytes.len().min(512);
+            p.extend_from_slice(&(n as u16).to_le_bytes());
+            p.extend_from_slice(&bytes[..n]);
+            TY_ERROR
+        }
+        Msg::StatsReq => TY_STATS_REQ,
+        Msg::Stats(s) => {
+            p.extend_from_slice(&s.served.to_le_bytes());
+            p.extend_from_slice(&s.busy.to_le_bytes());
+            p.extend_from_slice(&s.proto_errors.to_le_bytes());
+            p.extend_from_slice(&s.batches.to_le_bytes());
+            p.extend_from_slice(&s.batch_fill.to_le_bytes());
+            p.extend_from_slice(&s.worst_abs_err.to_le_bytes());
+            p.extend_from_slice(&s.p50_us.to_le_bytes());
+            p.extend_from_slice(&s.p99_us.to_le_bytes());
+            p.extend_from_slice(&(s.per_replica.len() as u32).to_le_bytes());
+            for r in &s.per_replica {
+                p.extend_from_slice(&r.to_le_bytes());
+            }
+            TY_STATS
+        }
+        Msg::Shutdown => TY_SHUTDOWN,
+        Msg::ShutdownAck => TY_SHUTDOWN_ACK,
+    };
+    (ty, p)
+}
+
+/// Serialize a full frame (header + payload).
+///
+/// Panics if the message payload exceeds [`MAX_PAYLOAD`] — every receiver
+/// is required to reject such a frame, so emitting one is a caller bug
+/// (the client library bounds-checks images before encoding; server-built
+/// replies are structurally small).
+pub fn encode_frame(m: &Msg) -> Vec<u8> {
+    let (ty, payload) = encode_payload(m);
+    assert!(
+        payload.len() <= MAX_PAYLOAD,
+        "message payload {} exceeds the {MAX_PAYLOAD}-byte protocol cap",
+        payload.len()
+    );
+    let mut f = Vec::with_capacity(HEADER_LEN + payload.len());
+    f.extend_from_slice(&MAGIC);
+    f.push(VERSION);
+    f.push(ty);
+    f.extend_from_slice(&[0u8, 0u8]); // reserved
+    f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    f.extend_from_slice(&checksum(&payload).to_le_bytes());
+    f.extend_from_slice(&payload);
+    f
+}
+
+// ---- decoding ------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Cur<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.b.len() - self.at < n {
+            return Err(ProtoError::Malformed("truncated payload"));
+        }
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, ProtoError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32, ProtoError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64, ProtoError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtoError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u32`-prefixed i32 list; the count is validated against the bytes
+    /// actually present before any allocation is sized from it (division
+    /// keeps the check overflow-free on 32-bit targets).
+    fn i32s(&mut self) -> Result<Vec<i32>, ProtoError> {
+        let n = self.u32()? as usize;
+        if (self.b.len() - self.at) / 4 < n {
+            return Err(ProtoError::Malformed("element count exceeds payload"));
+        }
+        (0..n).map(|_| self.i32()).collect()
+    }
+
+    fn done(&self) -> bool {
+        self.at == self.b.len()
+    }
+}
+
+/// Decode a payload of the given type. Rejects trailing bytes — a frame
+/// must be exactly one message.
+pub fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
+    let mut c = Cur { b: payload, at: 0 };
+    let msg = match ty {
+        TY_INFER => {
+            let id = c.u64()?;
+            let image = c.i32s()?;
+            Msg::Infer(InferRequest { id, image })
+        }
+        TY_REPLY => {
+            let id = c.u64()?;
+            let replica = c.u32()?;
+            let max_abs_err = c.i64()?;
+            let logits = c.i32s()?;
+            Msg::Reply(InferReply {
+                id,
+                replica,
+                max_abs_err,
+                logits,
+            })
+        }
+        TY_BUSY => Msg::Busy,
+        TY_ERROR => {
+            let code = c.u16()?;
+            let n = c.u16()? as usize;
+            let message = String::from_utf8_lossy(c.take(n)?).into_owned();
+            Msg::Error(WireError { code, message })
+        }
+        TY_STATS_REQ => Msg::StatsReq,
+        TY_STATS => {
+            let served = c.u64()?;
+            let busy = c.u64()?;
+            let proto_errors = c.u64()?;
+            let batches = c.u64()?;
+            let batch_fill = c.f64()?;
+            let worst_abs_err = c.i64()?;
+            let p50_us = c.u64()?;
+            let p99_us = c.u64()?;
+            let n = c.u32()? as usize;
+            if (payload.len() - c.at) / 8 < n {
+                return Err(ProtoError::Malformed("replica count exceeds payload"));
+            }
+            let per_replica = (0..n).map(|_| c.u64()).collect::<Result<_, _>>()?;
+            Msg::Stats(StatsSnapshot {
+                served,
+                busy,
+                proto_errors,
+                batches,
+                batch_fill,
+                worst_abs_err,
+                p50_us,
+                p99_us,
+                per_replica,
+            })
+        }
+        TY_SHUTDOWN => Msg::Shutdown,
+        TY_SHUTDOWN_ACK => Msg::ShutdownAck,
+        other => return Err(ProtoError::BadType(other)),
+    };
+    if !c.done() {
+        return Err(ProtoError::Malformed("trailing bytes after message"));
+    }
+    Ok(msg)
+}
+
+/// Validate a frame header; returns `(type, payload length, checksum)`.
+/// An oversized length is rejected *here*, before the caller allocates.
+pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize, u32), ProtoError> {
+    if h[0..4] != MAGIC {
+        return Err(ProtoError::BadMagic([h[0], h[1], h[2], h[3]]));
+    }
+    if h[4] != VERSION {
+        return Err(ProtoError::BadVersion(h[4]));
+    }
+    let ty = h[5];
+    let len = u32::from_le_bytes(h[8..12].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(ProtoError::Oversized { len });
+    }
+    let sum = u32::from_le_bytes(h[12..16].try_into().unwrap());
+    Ok((ty, len, sum))
+}
+
+/// Decode one complete in-memory frame (header + payload, no extra bytes).
+pub fn decode_frame(buf: &[u8]) -> Result<Msg, ProtoError> {
+    if buf.len() < HEADER_LEN {
+        return Err(ProtoError::Malformed("frame shorter than its header"));
+    }
+    let h: [u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().unwrap();
+    let (ty, len, sum) = parse_header(&h)?;
+    let payload = &buf[HEADER_LEN..];
+    if payload.len() != len {
+        return Err(ProtoError::Malformed("frame length disagrees with header"));
+    }
+    let got = checksum(payload);
+    if got != sum {
+        return Err(ProtoError::Checksum { want: sum, got });
+    }
+    decode_payload(ty, payload)
+}
+
+/// Read one message from a blocking stream.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg, ProtoError> {
+    let mut h = [0u8; HEADER_LEN];
+    r.read_exact(&mut h)?;
+    let (ty, len, sum) = parse_header(&h)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let got = checksum(&payload);
+    if got != sum {
+        return Err(ProtoError::Checksum { want: sum, got });
+    }
+    decode_payload(ty, &payload)
+}
+
+/// Write one message to a stream and flush it.
+pub fn write_msg<W: Write>(w: &mut W, m: &Msg) -> io::Result<()> {
+    w.write_all(&encode_frame(m))?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_messages() -> Vec<Msg> {
+        vec![
+            Msg::Infer(InferRequest {
+                id: 7,
+                image: vec![0, -1, 255, i32::MAX, i32::MIN],
+            }),
+            Msg::Infer(InferRequest { id: 0, image: vec![] }),
+            Msg::Reply(InferReply {
+                id: 7,
+                replica: 3,
+                max_abs_err: 12,
+                logits: vec![10, -20, 30],
+            }),
+            Msg::Reply(InferReply {
+                id: u64::MAX,
+                replica: 0,
+                max_abs_err: i64::MAX,
+                logits: vec![],
+            }),
+            Msg::Busy,
+            Msg::Error(WireError {
+                code: ERR_BAD_SHAPE,
+                message: "want 3072 elements, got 7".into(),
+            }),
+            Msg::StatsReq,
+            Msg::Stats(StatsSnapshot {
+                served: 64,
+                busy: 3,
+                proto_errors: 1,
+                batches: 9,
+                batch_fill: 0.875,
+                worst_abs_err: 12,
+                p50_us: 1500,
+                p99_us: 9000,
+                per_replica: vec![33, 31],
+            }),
+            Msg::Stats(StatsSnapshot::default()),
+            Msg::Shutdown,
+            Msg::ShutdownAck,
+        ]
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        for m in sample_messages() {
+            let frame = encode_frame(&m);
+            assert_eq!(decode_frame(&frame).unwrap(), m, "{m:?}");
+            // and through the stream adapters
+            let mut cur = std::io::Cursor::new(frame);
+            assert_eq!(read_msg(&mut cur).unwrap(), m, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn corrupted_payload_fails_checksum() {
+        let mut f = encode_frame(&Msg::Infer(InferRequest {
+            id: 1,
+            image: vec![1, 2, 3],
+        }));
+        let last = f.len() - 1;
+        f[last] ^= 0x40;
+        match decode_frame(&f) {
+            Err(ProtoError::Checksum { .. }) => {}
+            other => panic!("want checksum error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupted_header_fields_are_rejected() {
+        let good = encode_frame(&Msg::Busy);
+
+        let mut f = good.clone();
+        f[0] = b'X';
+        assert!(matches!(decode_frame(&f), Err(ProtoError::BadMagic(_))));
+
+        let mut f = good.clone();
+        f[4] = 9;
+        assert!(matches!(decode_frame(&f), Err(ProtoError::BadVersion(9))));
+
+        let mut f = good.clone();
+        f[5] = 200;
+        assert!(matches!(decode_frame(&f), Err(ProtoError::BadType(200))));
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_at_the_header() {
+        let mut f = encode_frame(&Msg::Busy);
+        f[8..12].copy_from_slice(&((MAX_PAYLOAD as u32) + 1).to_le_bytes());
+        assert!(matches!(decode_frame(&f), Err(ProtoError::Oversized { .. })));
+        // and through parse_header directly (the pre-allocation gate)
+        let h: [u8; HEADER_LEN] = f[..HEADER_LEN].try_into().unwrap();
+        assert!(matches!(parse_header(&h), Err(ProtoError::Oversized { .. })));
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let m = Msg::Infer(InferRequest { id: 2, image: vec![5] });
+        let (ty, mut payload) = encode_payload(&m);
+        payload.push(0xAB);
+        assert!(matches!(
+            decode_payload(ty, &payload),
+            Err(ProtoError::Malformed("trailing bytes after message"))
+        ));
+    }
+
+    #[test]
+    fn truncated_payload_is_rejected() {
+        let (ty, payload) = encode_payload(&Msg::Reply(InferReply {
+            id: 3,
+            replica: 1,
+            max_abs_err: 0,
+            logits: vec![1, 2, 3, 4],
+        }));
+        for cut in [0, 1, payload.len() - 1] {
+            assert!(
+                decode_payload(ty, &payload[..cut]).is_err(),
+                "cut at {cut} decoded"
+            );
+        }
+    }
+
+    #[test]
+    fn lying_element_count_is_rejected_before_allocation() {
+        // a 4-byte payload claiming u32::MAX elements must fail the bounds
+        // check, not try to allocate 16 GiB
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&77u64.to_le_bytes());
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_payload(TY_INFER, &payload),
+            Err(ProtoError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn truncated_stream_reads_are_io_errors() {
+        let frame = encode_frame(&Msg::Shutdown);
+        let mut cur = std::io::Cursor::new(&frame[..HEADER_LEN - 3]);
+        assert!(matches!(read_msg(&mut cur), Err(ProtoError::Io(_))));
+        let long = encode_frame(&Msg::Infer(InferRequest { id: 1, image: vec![9; 16] }));
+        let mut cur = std::io::Cursor::new(&long[..HEADER_LEN + 5]);
+        assert!(matches!(read_msg(&mut cur), Err(ProtoError::Io(_))));
+    }
+
+    #[test]
+    fn checksum_is_fnv1a() {
+        assert_eq!(checksum(b""), 0x811c_9dc5);
+        // FNV-1a test vector: "a" -> 0xe40c292c
+        assert_eq!(checksum(b"a"), 0xe40c_292c);
+        assert_ne!(checksum(b"ab"), checksum(b"ba"));
+    }
+
+    #[test]
+    fn long_error_messages_are_capped() {
+        let m = Msg::Error(WireError {
+            code: ERR_INTERNAL,
+            message: "x".repeat(4000),
+        });
+        let frame = encode_frame(&m);
+        assert!(frame.len() < 600);
+        match decode_frame(&frame).unwrap() {
+            Msg::Error(e) => assert_eq!(e.message.len(), 512),
+            other => panic!("{other:?}"),
+        }
+    }
+}

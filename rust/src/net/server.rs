@@ -1,0 +1,604 @@
+//! TCP serving endpoint: admission-limited, batched, drain-on-shutdown.
+//!
+//! Topology (one [`NetServer`]):
+//!
+//! * an **accept loop** thread takes connections off the `TcpListener`
+//!   and spawns one handler thread per connection;
+//! * **handler** threads decode frames, enforce the admission limit
+//!   (explicit [`Msg::Busy`] backpressure — never unbounded queueing),
+//!   push admitted requests into the shared [`Batcher`], and block on a
+//!   per-request channel for the result;
+//! * one **dispatcher** thread closes batches (full, or the batching
+//!   deadline passed), runs each through the [`Engine`] — for the golden
+//!   engine that is the `Batcher` -> `sched::Executor` ->
+//!   `GoldenServer::replicated` path with round-robin replica affinity —
+//!   and routes per-row results back to the waiting handlers.
+//!
+//! Shutdown is a drain, not an abort: a `Shutdown` frame (or
+//! [`NetServer::shutdown`]) flips the draining flag, the listener closes,
+//! new inference requests are refused with `ERR_DRAINING`, the dispatcher
+//! flushes every pending batch (including a partial tail), every blocked
+//! handler receives and writes its reply, and all threads join. Stats
+//! survive the drain and are returned from `join`/`shutdown`.
+//!
+//! A protocol error on a connection is fatal to that connection only (a
+//! framed stream cannot be resynced past a bad frame); the server itself
+//! keeps serving, and abrupt client disconnects are routine, not errors.
+
+use std::collections::HashMap;
+use std::io::{self, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batcher, PendingRequest};
+use crate::coordinator::Batch;
+use crate::net::proto::{
+    self, InferReply, InferRequest, Msg, ProtoError, StatsSnapshot, WireError,
+};
+use crate::net::{percentile_us, Engine};
+use crate::util::Rng;
+
+/// Read-timeout tick: handlers wake this often to notice a drain.
+const READ_TICK: Duration = Duration::from_millis(100);
+/// Write timeout: a dead client cannot wedge a handler forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Ticks a handler keeps waiting for the rest of a half-received frame
+/// once draining started, before giving the connection up.
+const DRAIN_GRACE_TICKS: u32 = 25;
+/// Ticks an *idle* connection stays open once draining started, so a
+/// request crossing the drain on the wire still gets its `ERR_DRAINING`
+/// reply instead of a bare EOF.
+const DRAIN_IDLE_TICKS: u32 = 2;
+
+/// Server knobs. The batch shape itself comes from the [`Engine`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`NetServer::local_addr`]).
+    pub addr: String,
+    /// Admission limit: requests in flight (admitted, not yet replied)
+    /// beyond this are refused with [`Msg::Busy`]. Must be >= 1.
+    pub max_inflight: usize,
+    /// vLLM-style batching deadline: a partial batch closes once its
+    /// oldest request has waited this long.
+    pub batch_wait: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_inflight: 64,
+            batch_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// What the dispatcher hands back to a blocked handler.
+type RouteReply = (u32, i64, Vec<i32>);
+
+/// Batcher plus the routing table, under one lock so an admission check,
+/// route registration, and push are atomic against the dispatcher's
+/// empty-and-draining exit check.
+struct Queue {
+    batcher: Batcher,
+    routes: HashMap<u64, Sender<RouteReply>>,
+}
+
+/// Latency samples kept for percentile estimation. Below this count the
+/// percentiles are exact; past it, a uniform reservoir (Algorithm R) over
+/// the whole request stream keeps memory and snapshot cost bounded for a
+/// long-lived endpoint.
+const LATENCY_RESERVOIR: usize = 8192;
+
+struct StatsInner {
+    served: u64,
+    busy: u64,
+    proto_errors: u64,
+    batches: u64,
+    fill_sum: f64,
+    worst_abs_err: i64,
+    latencies_us: Vec<u64>,
+    /// Total latency samples observed (>= latencies_us.len()).
+    latency_count: u64,
+    per_replica: Vec<u64>,
+    /// Drives the reservoir replacement choice only — no numerics ride on
+    /// it, so a fixed seed keeps the server deterministic to construct.
+    rng: Rng,
+}
+
+impl StatsInner {
+    fn new(n_replicas: usize) -> Self {
+        StatsInner {
+            served: 0,
+            busy: 0,
+            proto_errors: 0,
+            batches: 0,
+            fill_sum: 0.0,
+            worst_abs_err: 0,
+            latencies_us: Vec::new(),
+            latency_count: 0,
+            per_replica: vec![0; n_replicas],
+            rng: Rng::new(0x6e65_7473),
+        }
+    }
+
+    fn record_latency(&mut self, us: u64) {
+        self.latency_count += 1;
+        if self.latencies_us.len() < LATENCY_RESERVOIR {
+            self.latencies_us.push(us);
+        } else {
+            let j = self.rng.below(self.latency_count) as usize;
+            if j < LATENCY_RESERVOIR {
+                self.latencies_us[j] = us;
+            }
+        }
+    }
+}
+
+struct Shared {
+    engine: Arc<dyn Engine>,
+    local_addr: SocketAddr,
+    batch_wait: Duration,
+    max_inflight: usize,
+    inflight: AtomicUsize,
+    draining: AtomicBool,
+    next_id: AtomicU64,
+    queue: Mutex<Queue>,
+    work_cv: Condvar,
+    stats: Mutex<StatsInner>,
+}
+
+/// A running TCP serving endpoint.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind and start serving `engine` with `cfg`. Returns once the
+    /// listener is bound (the actual address is [`Self::local_addr`]).
+    pub fn start(engine: Arc<dyn Engine>, cfg: ServeConfig) -> io::Result<NetServer> {
+        assert!(cfg.max_inflight >= 1, "max_inflight must be >= 1");
+        let listener = TcpListener::bind(cfg.addr.as_str())?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            local_addr,
+            batch_wait: cfg.batch_wait,
+            max_inflight: cfg.max_inflight,
+            inflight: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+            queue: Mutex::new(Queue {
+                batcher: Batcher::new(engine.batch_capacity(), engine.image_elems(), cfg.batch_wait),
+                routes: HashMap::new(),
+            }),
+            work_cv: Condvar::new(),
+            stats: Mutex::new(StatsInner::new(engine.n_replicas())),
+            engine,
+        });
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let dispatcher = {
+            let shared = shared.clone();
+            std::thread::spawn(move || dispatch_loop(&shared))
+        };
+        let accept = {
+            let shared = shared.clone();
+            let handlers = handlers.clone();
+            std::thread::spawn(move || accept_loop(&shared, listener, &handlers))
+        };
+        Ok(NetServer {
+            shared,
+            accept: Some(accept),
+            dispatcher: Some(dispatcher),
+            handlers,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.local_addr
+    }
+
+    /// True once a drain started (client `Shutdown` frame or
+    /// [`Self::shutdown`]).
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::Acquire)
+    }
+
+    /// Current statistics snapshot.
+    pub fn stats(&self) -> StatsSnapshot {
+        snapshot(&self.shared)
+    }
+
+    /// Block until a client-initiated `Shutdown` drains the server, then
+    /// join every thread and return the final stats.
+    pub fn join(mut self) -> StatsSnapshot {
+        self.join_all();
+        snapshot(&self.shared)
+    }
+
+    /// Server-side shutdown: initiate the drain locally and join.
+    pub fn shutdown(mut self) -> StatsSnapshot {
+        self.shared.draining.store(true, Ordering::Release);
+        self.shared.work_cv.notify_all();
+        wake_accept(&self.shared);
+        self.join_all();
+        snapshot(&self.shared)
+    }
+
+    fn join_all(&mut self) {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // accept loop is gone, so no new handlers appear; drain the list
+        // (handlers exit within a read tick of the drain flag)
+        loop {
+            let hs: Vec<JoinHandle<()>> =
+                std::mem::take(&mut *self.handlers.lock().unwrap());
+            if hs.is_empty() {
+                break;
+            }
+            for h in hs {
+                let _ = h.join();
+            }
+        }
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+/// Dial the listener to pop its accept loop out of `incoming()`. A
+/// wildcard bind (0.0.0.0 / ::) is not dialable on every platform, so the
+/// wake-up targets loopback at the bound port, with a timeout so a
+/// pathological network setup can never wedge the caller.
+fn wake_accept(shared: &Shared) {
+    let mut addr = shared.local_addr;
+    if addr.ip().is_unspecified() {
+        addr.set_ip(match addr.ip() {
+            std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+        });
+    }
+    let _ = TcpStream::connect_timeout(&addr, Duration::from_secs(1));
+}
+
+fn snapshot(shared: &Shared) -> StatsSnapshot {
+    let s = shared.stats.lock().unwrap();
+    let mut lat = s.latencies_us.clone();
+    lat.sort_unstable();
+    StatsSnapshot {
+        served: s.served,
+        busy: s.busy,
+        proto_errors: s.proto_errors,
+        batches: s.batches,
+        batch_fill: if s.batches > 0 {
+            s.fill_sum / s.batches as f64
+        } else {
+            0.0
+        },
+        worst_abs_err: s.worst_abs_err,
+        p50_us: percentile_us(&lat, 0.50),
+        p99_us: percentile_us(&lat, 0.99),
+        per_replica: s.per_replica.clone(),
+    }
+}
+
+// ---- accept + dispatch ---------------------------------------------------
+
+fn accept_loop(
+    shared: &Arc<Shared>,
+    listener: TcpListener,
+    handlers: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    for conn in listener.incoming() {
+        if shared.draining.load(Ordering::Acquire) {
+            break; // the wake-up connection (or any late dial) during drain
+        }
+        let Ok(stream) = conn else {
+            // transient accept failures (EMFILE under fd exhaustion, ...)
+            // must not busy-spin the accept thread
+            std::thread::sleep(Duration::from_millis(10));
+            continue;
+        };
+        let sh = shared.clone();
+        let h = std::thread::spawn(move || handle_conn(&sh, stream));
+        let mut hs = handlers.lock().unwrap();
+        // reap finished handlers so a long-lived endpoint with many
+        // short-lived connections doesn't accrete JoinHandles
+        let mut i = 0;
+        while i < hs.len() {
+            if hs[i].is_finished() {
+                let _ = hs.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+        hs.push(h);
+    }
+    // listener drops here: further connects are refused
+}
+
+/// Close and return the next batch, or `None` once draining and empty.
+fn next_batch(shared: &Shared) -> Option<Batch> {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if q.batcher.ready(Instant::now()) {
+            if let Some(b) = q.batcher.take_batch() {
+                return Some(b);
+            }
+        }
+        if shared.draining.load(Ordering::Acquire) {
+            // flush the partial tail before retiring
+            return q.batcher.take_batch();
+        }
+        // pushes and drains notify the condvar, so an idle dispatcher can
+        // sleep long (the timeout is only a safety backstop); with work
+        // pending it wakes at batching-deadline granularity instead
+        let timeout = if q.batcher.pending_len() > 0 {
+            shared.batch_wait.max(Duration::from_millis(1))
+        } else {
+            Duration::from_millis(500)
+        };
+        let (guard, _) = shared.work_cv.wait_timeout(q, timeout).unwrap();
+        q = guard;
+    }
+}
+
+fn dispatch_loop(shared: &Arc<Shared>) {
+    let mut batch_index = 0usize;
+    while let Some(b) = next_batch(shared) {
+        let out = shared.engine.run(batch_index, &b);
+        batch_index += 1;
+        debug_assert_eq!(out.logits.len(), b.n_real, "engine row count");
+        // account the batch *before* releasing replies: a client that has
+        // its reply in hand must see it reflected in a stats request
+        {
+            let mut s = shared.stats.lock().unwrap();
+            s.served += b.n_real as u64;
+            s.batches += 1;
+            s.fill_sum += b.n_real as f64 / shared.engine.batch_capacity() as f64;
+            s.worst_abs_err = s.worst_abs_err.max(out.max_abs_err);
+            if out.replica < s.per_replica.len() {
+                s.per_replica[out.replica] += b.n_real as u64;
+            }
+        }
+        let senders: Vec<Option<Sender<RouteReply>>> = {
+            let mut q = shared.queue.lock().unwrap();
+            b.ids.iter().map(|id| q.routes.remove(id)).collect()
+        };
+        for (tx, logits) in senders.into_iter().zip(out.logits.into_iter()) {
+            if let Some(tx) = tx {
+                // a handler that died mid-wait just drops the receiver
+                let _ = tx.send((out.replica as u32, out.max_abs_err, logits));
+            }
+        }
+    }
+}
+
+// ---- per-connection handling ---------------------------------------------
+
+fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    loop {
+        match read_msg_idle(&mut stream, shared) {
+            Ok(Some(msg)) => {
+                if !serve_msg(shared, &mut stream, msg) {
+                    break;
+                }
+                // once draining, finish the message in hand and close:
+                // a client polling stats or retrying infers must not be
+                // able to keep its handler alive past the drain
+                if shared.draining.load(Ordering::Acquire) {
+                    break;
+                }
+            }
+            Ok(None) => break, // clean close, or idle connection at drain
+            Err(e) => {
+                shared.stats.lock().unwrap().proto_errors += 1;
+                // best-effort: tell the peer why before closing — the
+                // stream cannot be resynced past a bad frame
+                let _ = proto::write_msg(
+                    &mut stream,
+                    &Msg::Error(WireError {
+                        code: proto::ERR_MALFORMED,
+                        message: format!("protocol error: {e}"),
+                    }),
+                );
+                break;
+            }
+        }
+    }
+}
+
+/// `read_exact` that tolerates the handler's read-timeout ticks. Returns
+/// `Ok(false)` for a clean stop (EOF or drain-idle, only possible at a
+/// frame boundary with nothing consumed), `Ok(true)` when `buf` is full.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    shared: &Shared,
+    frame_start: bool,
+) -> Result<bool, ProtoError> {
+    let mut off = 0;
+    let mut drain_ticks = 0u32;
+    while off < buf.len() {
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => {
+                if off == 0 && frame_start {
+                    return Ok(false);
+                }
+                return Err(ProtoError::Malformed("connection closed mid-frame"));
+            }
+            Ok(n) => off += n,
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                if shared.draining.load(Ordering::Acquire) {
+                    drain_ticks += 1;
+                    if off == 0 && frame_start {
+                        if drain_ticks > DRAIN_IDLE_TICKS {
+                            return Ok(false);
+                        }
+                    } else if drain_ticks > DRAIN_GRACE_TICKS {
+                        return Err(ProtoError::Malformed("drain deadline passed mid-frame"));
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+/// Server-side frame read with drain awareness. `Ok(None)` means the
+/// connection is done (peer closed, or idle while draining).
+fn read_msg_idle(stream: &mut TcpStream, shared: &Shared) -> Result<Option<Msg>, ProtoError> {
+    let mut h = [0u8; proto::HEADER_LEN];
+    if !read_full(stream, &mut h, shared, true)? {
+        return Ok(None);
+    }
+    let (ty, len, sum) = proto::parse_header(&h)?;
+    let mut payload = vec![0u8; len];
+    if len > 0 && !read_full(stream, &mut payload, shared, false)? {
+        return Err(ProtoError::Malformed("connection closed mid-frame"));
+    }
+    let got = proto::checksum(&payload);
+    if got != sum {
+        return Err(ProtoError::Checksum { want: sum, got });
+    }
+    proto::decode_payload(ty, &payload).map(Some)
+}
+
+/// Handle one decoded message; returns false when the connection should
+/// close.
+fn serve_msg(shared: &Arc<Shared>, stream: &mut TcpStream, msg: Msg) -> bool {
+    match msg {
+        Msg::Infer(req) => serve_infer(shared, stream, req),
+        Msg::StatsReq => proto::write_msg(stream, &Msg::Stats(snapshot(shared))).is_ok(),
+        Msg::Shutdown => {
+            shared.draining.store(true, Ordering::Release);
+            shared.work_cv.notify_all();
+            let _ = proto::write_msg(stream, &Msg::ShutdownAck);
+            wake_accept(shared);
+            false
+        }
+        // server-to-client message types arriving at the server are a
+        // protocol violation
+        Msg::Reply(_) | Msg::Busy | Msg::Error(_) | Msg::Stats(_) | Msg::ShutdownAck => {
+            shared.stats.lock().unwrap().proto_errors += 1;
+            let _ = proto::write_msg(
+                stream,
+                &Msg::Error(WireError {
+                    code: proto::ERR_MALFORMED,
+                    message: "client sent a server-side message type".to_string(),
+                }),
+            );
+            false
+        }
+    }
+}
+
+/// CAS admission against the in-flight ceiling.
+fn try_admit(shared: &Shared) -> bool {
+    let mut cur = shared.inflight.load(Ordering::Acquire);
+    loop {
+        if cur >= shared.max_inflight {
+            return false;
+        }
+        match shared.inflight.compare_exchange_weak(
+            cur,
+            cur + 1,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => return true,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) -> bool {
+    let want = shared.engine.image_elems();
+    if req.image.len() != want {
+        return proto::write_msg(
+            stream,
+            &Msg::Error(WireError {
+                code: proto::ERR_BAD_SHAPE,
+                message: format!("want {want} image elements, got {}", req.image.len()),
+            }),
+        )
+        .is_ok();
+    }
+    let draining_err = Msg::Error(WireError {
+        code: proto::ERR_DRAINING,
+        message: "server is draining".to_string(),
+    });
+    if shared.draining.load(Ordering::Acquire) {
+        return proto::write_msg(stream, &draining_err).is_ok();
+    }
+    if !try_admit(shared) {
+        shared.stats.lock().unwrap().busy += 1;
+        return proto::write_msg(stream, &Msg::Busy).is_ok();
+    }
+
+    let sid = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let (tx, rx) = mpsc::channel::<RouteReply>();
+    let t0 = Instant::now();
+    {
+        let mut q = shared.queue.lock().unwrap();
+        // re-check under the queue lock: the dispatcher's exit check holds
+        // the same lock, so a request admitted here is guaranteed to be
+        // flushed by the drain
+        if shared.draining.load(Ordering::Acquire) {
+            drop(q);
+            shared.inflight.fetch_sub(1, Ordering::AcqRel);
+            return proto::write_msg(stream, &draining_err).is_ok();
+        }
+        q.routes.insert(sid, tx);
+        q.batcher.push(PendingRequest {
+            id: sid,
+            image: req.image,
+            enqueued: Instant::now(),
+        });
+    }
+    shared.work_cv.notify_one();
+
+    let reply = rx.recv();
+    shared.inflight.fetch_sub(1, Ordering::AcqRel);
+    match reply {
+        Ok((replica, max_abs_err, logits)) => {
+            let ok = proto::write_msg(
+                stream,
+                &Msg::Reply(InferReply {
+                    id: req.id,
+                    replica,
+                    max_abs_err,
+                    logits,
+                }),
+            )
+            .is_ok();
+            let us = t0.elapsed().as_micros() as u64;
+            shared.stats.lock().unwrap().record_latency(us);
+            ok
+        }
+        // dispatcher gone without replying: only possible if it panicked
+        Err(_) => proto::write_msg(
+            stream,
+            &Msg::Error(WireError {
+                code: proto::ERR_INTERNAL,
+                message: "dispatcher terminated before replying".to_string(),
+            }),
+        )
+        .is_ok(),
+    }
+}

@@ -1,0 +1,399 @@
+//! Loopback integration tests for the TCP serving subsystem
+//! (`rust/src/net/`): an in-process `NetServer` on an ephemeral port,
+//! driven by real sockets.
+//!
+//! Protocol-edge tests (malformed frames, oversized payloads, abrupt
+//! disconnects, backpressure, drain) run against cheap stub engines so
+//! they stay fast in debug builds; the bit-identity test against the real
+//! golden crossbar engine is release-gated like the other heavy serving
+//! tests.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use newton::config::AdcKind;
+use newton::coordinator::{Batch, GoldenServer};
+use newton::net::proto::{self, Msg, StatsSnapshot};
+use newton::net::{
+    bench_image, load_generate, BenchConfig, Client, Engine, EngineBatch, InferOutcome, NetError,
+    NetServer, ServeConfig,
+};
+
+/// Cheap deterministic engine: per real row, logits are
+/// `[sum(row), first element]`.
+#[derive(Clone)]
+struct EchoEngine {
+    elems: usize,
+    capacity: usize,
+    replicas: usize,
+}
+
+impl EchoEngine {
+    /// 4-element requests, capacity-2 batches, one replica — the shape
+    /// most protocol-edge tests use.
+    fn small() -> Self {
+        EchoEngine {
+            elems: 4,
+            capacity: 2,
+            replicas: 1,
+        }
+    }
+
+    /// newton-mini request shape, so the real `bench-net` load generator
+    /// can drive it without the golden engine's compute cost.
+    fn wide() -> Self {
+        EchoEngine {
+            elems: newton::coordinator::golden::IMAGE_ELEMS,
+            capacity: 4,
+            replicas: 2,
+        }
+    }
+}
+
+fn echo_logits(row: &[i32]) -> Vec<i32> {
+    vec![row.iter().sum::<i32>(), row[0]]
+}
+
+impl Engine for EchoEngine {
+    fn image_elems(&self) -> usize {
+        self.elems
+    }
+
+    fn batch_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn n_replicas(&self) -> usize {
+        self.replicas
+    }
+
+    fn describe(&self) -> String {
+        "echo stub".to_string()
+    }
+
+    fn run(&self, index: usize, b: &Batch) -> EngineBatch {
+        let logits = (0..b.n_real)
+            .map(|r| echo_logits(&b.data[r * self.elems..(r + 1) * self.elems]))
+            .collect();
+        EngineBatch {
+            replica: index % self.replicas,
+            n_real: b.n_real,
+            logits,
+            max_abs_err: 0,
+        }
+    }
+}
+
+/// Echo engine that also sleeps, to hold requests in flight while a test
+/// probes the admission limit. Capacity 1 so every request is its own
+/// batch.
+struct SlowEngine(Duration);
+
+impl Engine for SlowEngine {
+    fn image_elems(&self) -> usize {
+        4
+    }
+
+    fn batch_capacity(&self) -> usize {
+        1
+    }
+
+    fn n_replicas(&self) -> usize {
+        1
+    }
+
+    fn describe(&self) -> String {
+        "slow echo stub".to_string()
+    }
+
+    fn run(&self, index: usize, b: &Batch) -> EngineBatch {
+        std::thread::sleep(self.0);
+        EchoEngine {
+            elems: 4,
+            capacity: 1,
+            replicas: 1,
+        }
+        .run(index, b)
+    }
+}
+
+fn start(engine: Arc<dyn Engine>, max_inflight: usize) -> NetServer {
+    NetServer::start(
+        engine,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_inflight,
+            batch_wait: Duration::from_millis(1),
+        },
+    )
+    .expect("bind ephemeral port")
+}
+
+#[test]
+fn stub_loopback_roundtrip_and_stats() {
+    let server = start(Arc::new(EchoEngine::small()), 16);
+    let addr = server.local_addr();
+
+    let mut c = Client::connect(addr).unwrap();
+    for i in 0..5u64 {
+        let img = [i as i32, 2, 3, 4];
+        match c.infer(i, &img).unwrap() {
+            InferOutcome::Ok(r) => {
+                assert_eq!(r.id, i);
+                assert_eq!(r.logits, echo_logits(&img));
+                assert_eq!(r.max_abs_err, 0);
+                assert_eq!(r.replica, 0);
+            }
+            InferOutcome::Busy => panic!("busy under a 16-deep limit"),
+        }
+    }
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.served, 5);
+    assert_eq!(stats.busy, 0);
+    assert_eq!(stats.per_replica, vec![5]);
+    assert!(stats.batches >= 3, "capacity 2, 5 sequential requests");
+    assert!(stats.batch_fill > 0.0 && stats.batch_fill <= 1.0);
+    assert!(stats.p50_us <= stats.p99_us);
+
+    c.shutdown().unwrap();
+    let final_stats = server.join();
+    assert_eq!(final_stats.served, 5);
+    // the listener is gone after the drain
+    assert!(TcpStream::connect(addr).is_err());
+}
+
+#[test]
+fn wrong_shape_gets_a_typed_error_and_connection_survives() {
+    let server = start(Arc::new(EchoEngine::small()), 16);
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    match c.infer(1, &[1, 2, 3]) {
+        Err(NetError::Server(e)) => {
+            assert_eq!(e.code, proto::ERR_BAD_SHAPE);
+            assert!(e.message.contains('4'), "{}", e.message);
+        }
+        other => panic!("want shape error, got {other:?}"),
+    }
+    // same connection still serves
+    match c.infer(2, &[5, 6, 7, 8]).unwrap() {
+        InferOutcome::Ok(r) => assert_eq!(r.logits, echo_logits(&[5, 6, 7, 8])),
+        InferOutcome::Busy => panic!("busy"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn malformed_frame_is_fatal_to_its_connection_only() {
+    let server = start(Arc::new(EchoEngine::small()), 16);
+    let addr = server.local_addr();
+
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.write_all(b"GARBAGEGARBAGEGA").unwrap(); // 16 junk bytes = one bad header
+    // the server replies with an Error frame, then closes
+    match proto::read_msg(&mut raw) {
+        Ok(Msg::Error(e)) => {
+            assert_eq!(e.code, proto::ERR_MALFORMED);
+            assert!(e.message.contains("magic"), "{}", e.message);
+        }
+        other => panic!("want error frame, got {other:?}"),
+    }
+    let mut tail = Vec::new();
+    raw.read_to_end(&mut tail).unwrap();
+    assert!(tail.is_empty(), "server kept talking after a fatal error");
+
+    // a fresh, well-behaved connection is unaffected
+    let mut c = Client::connect(addr).unwrap();
+    assert!(matches!(c.infer(9, &[1, 1, 1, 1]), Ok(InferOutcome::Ok(_))));
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.proto_errors, 1);
+    server.shutdown();
+}
+
+#[test]
+fn oversized_payload_is_rejected_at_the_header() {
+    let server = start(Arc::new(EchoEngine::small()), 16);
+    let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+    // hand-craft a header lying about a huge payload
+    let mut h = Vec::new();
+    h.extend_from_slice(&proto::MAGIC);
+    h.push(proto::VERSION);
+    h.push(proto::TY_INFER);
+    h.extend_from_slice(&[0, 0]);
+    h.extend_from_slice(&((proto::MAX_PAYLOAD as u32) + 1).to_le_bytes());
+    h.extend_from_slice(&0u32.to_le_bytes());
+    raw.write_all(&h).unwrap();
+    match proto::read_msg(&mut raw) {
+        Ok(Msg::Error(e)) => assert!(e.message.contains("exceeds"), "{}", e.message),
+        other => panic!("want error frame, got {other:?}"),
+    }
+    let mut tail = Vec::new();
+    raw.read_to_end(&mut tail).unwrap();
+    assert!(tail.is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn abrupt_disconnect_mid_frame_leaves_the_server_serving() {
+    let server = start(Arc::new(EchoEngine::small()), 16);
+    let addr = server.local_addr();
+    {
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(&proto::MAGIC).unwrap(); // half a header
+        // dropped here: abrupt disconnect mid-frame
+    }
+    {
+        // clean immediate disconnect (no bytes at all) is not an error
+        let _ = TcpStream::connect(addr).unwrap();
+    }
+    // give the handler a moment to observe both sockets
+    std::thread::sleep(Duration::from_millis(300));
+    let mut c = Client::connect(addr).unwrap();
+    assert!(matches!(c.infer(1, &[2, 2, 2, 2]), Ok(InferOutcome::Ok(_))));
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.proto_errors, 1, "mid-frame cut counts, clean close does not");
+    server.shutdown();
+}
+
+#[test]
+fn admission_limit_returns_busy_not_queueing() {
+    let server = start(Arc::new(SlowEngine(Duration::from_millis(500))), 1);
+    let addr = server.local_addr();
+
+    let blocker = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.infer(1, &[1, 0, 0, 0]).unwrap()
+    });
+    // let the blocker get admitted and into the engine
+    std::thread::sleep(Duration::from_millis(150));
+    let mut c = Client::connect(addr).unwrap();
+    match c.infer(2, &[2, 0, 0, 0]).unwrap() {
+        InferOutcome::Busy => {}
+        InferOutcome::Ok(_) => panic!("second request admitted past a 1-deep limit"),
+    }
+    assert!(matches!(blocker.join().unwrap(), InferOutcome::Ok(_)));
+    // once the slot frees, the same connection gets served
+    let (reply, _retries) = c
+        .infer_retry(3, &[3, 0, 0, 0], 1000, Duration::from_millis(5))
+        .unwrap();
+    assert_eq!(reply.logits, echo_logits(&[3, 0, 0, 0]));
+    let stats = server.stats();
+    assert!(stats.busy >= 1, "no Busy recorded");
+    assert_eq!(stats.served, 2);
+    server.shutdown();
+}
+
+#[test]
+fn drain_refuses_new_work_flushes_inflight_and_acks() {
+    let server = start(Arc::new(SlowEngine(Duration::from_millis(300))), 16);
+    let addr = server.local_addr();
+
+    // a request that is mid-engine when the drain starts must complete
+    let inflight = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.infer(1, &[7, 0, 0, 0]).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(100));
+
+    // pre-connected bystander, used after the drain starts
+    let mut bystander = Client::connect(addr).unwrap();
+
+    let mut ctl = Client::connect(addr).unwrap();
+    ctl.shutdown().unwrap(); // acked once the drain flag is set
+
+    match bystander.infer(2, &[8, 0, 0, 0]) {
+        Err(NetError::Server(e)) => assert_eq!(e.code, proto::ERR_DRAINING),
+        other => panic!("want draining error, got {other:?}"),
+    }
+
+    match inflight.join().unwrap() {
+        InferOutcome::Ok(r) => assert_eq!(r.logits, echo_logits(&[7, 0, 0, 0])),
+        InferOutcome::Busy => panic!("in-flight request bounced by the drain"),
+    }
+    let stats = server.join();
+    assert_eq!(stats.served, 1);
+    assert!(TcpStream::connect(addr).is_err(), "listener survived the drain");
+}
+
+#[test]
+fn client_refuses_oversized_images_locally() {
+    let server = start(Arc::new(EchoEngine::small()), 16);
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let huge = vec![0i32; proto::MAX_IMAGE_ELEMS + 1];
+    // fails client-side, before any frame reaches the wire
+    assert!(matches!(c.infer(1, &huge), Err(NetError::Proto(_))));
+    // the connection was never touched, so it still serves
+    assert!(matches!(c.infer(2, &[1, 1, 1, 1]), Ok(InferOutcome::Ok(_))));
+    server.shutdown();
+}
+
+#[test]
+fn server_rejects_client_sent_server_frames() {
+    let server = start(Arc::new(EchoEngine::small()), 16);
+    // a "client" that speaks a server-only frame gets a malformed error
+    let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+    proto::write_msg(&mut raw, &Msg::Stats(StatsSnapshot::default())).unwrap();
+    match proto::read_msg(&mut raw) {
+        Ok(Msg::Error(e)) => assert_eq!(e.code, proto::ERR_MALFORMED),
+        other => panic!("want error, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn load_generator_covers_every_request_exactly_once() {
+    // the wide echo engine takes newton-mini-shaped bench images, so this
+    // drives the real bench-net load generator end to end cheaply
+    let server = start(Arc::new(EchoEngine::wide()), 32);
+    let mut cfg = BenchConfig::new(&server.local_addr().to_string());
+    cfg.requests = 40;
+    cfg.concurrency = 6;
+    cfg.seed = 3;
+    let report = load_generate(&cfg).unwrap();
+    assert_eq!(report.requests, 40);
+    assert_eq!(report.logits.len(), 40);
+    for (i, logits) in report.logits.iter().enumerate() {
+        assert_eq!(logits, &echo_logits(&bench_image(cfg.seed, i)), "request {i}");
+    }
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.p50_ms <= report.p99_ms + 1e-9);
+    assert_eq!(report.per_replica.iter().sum::<u64>(), 40);
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 40);
+    assert_eq!(stats.per_replica.len(), 2);
+    assert_eq!(stats.per_replica.iter().sum::<u64>(), 40);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+fn concurrent_clients_bit_identical_to_in_process_golden() {
+    // the acceptance gate: the socket path must not change a single bit
+    // vs the in-process GoldenServer under an exact ADC config
+    let engine = Arc::new(GoldenServer::replicated(0, AdcKind::Exact, 2, 4));
+    let server = NetServer::start(
+        engine,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_inflight: 32,
+            batch_wait: Duration::from_millis(2),
+        },
+    )
+    .unwrap();
+
+    let mut cfg = BenchConfig::new(&server.local_addr().to_string());
+    cfg.requests = 16;
+    cfg.concurrency = 4;
+    cfg.seed = 11;
+    let report = load_generate(&cfg).unwrap();
+    assert_eq!(report.worst_abs_err, 0, "exact serving deviated");
+
+    let images: Vec<Vec<i32>> = (0..cfg.requests).map(|i| bench_image(cfg.seed, i)).collect();
+    let golden = GoldenServer::replicated(0, AdcKind::Exact, 1, 4);
+    assert_eq!(report.logits, golden.infer(&images), "socket path changed the numbers");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 16);
+    assert_eq!(stats.per_replica.len(), 2);
+    assert_eq!(stats.per_replica.iter().sum::<u64>(), 16);
+    assert_eq!(stats.worst_abs_err, 0);
+}

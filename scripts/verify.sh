@@ -40,6 +40,41 @@ echo "== serving smoke: multi-replica adaptive ADC vs lossless golden =="
 cargo run --release --bin newton -- serve --adc adaptive --replicas 2 --requests 16
 
 echo
+echo "== serve-net loopback smoke: 64 concurrent requests, exact ADC =="
+# ephemeral port; the server writes its bound address to a temp file.
+# bench-net --expect-exact asserts every response is bit-identical to the
+# in-process GoldenServer with zero deviation; --shutdown drains the
+# server, and `wait` surfaces any worker panic / unclean exit.
+portfile=$(mktemp)
+rm -f BENCH_net.json
+# run the release binary directly (built above), not via `cargo run`: the
+# trap must kill the server itself, and cargo does not forward signals
+newton_bin="${CARGO_TARGET_DIR:-target}/release/newton"
+"$newton_bin" serve-net --adc exact --replicas 2 \
+  --addr 127.0.0.1:0 --port-file "$portfile" &
+srv_pid=$!
+trap 'kill "$srv_pid" 2>/dev/null || true' EXIT
+for _ in $(seq 1 150); do
+  [ -s "$portfile" ] && break
+  sleep 0.2
+done
+if ! [ -s "$portfile" ]; then
+  echo "FAIL: serve-net never wrote its bound address"
+  exit 1
+fi
+addr=$(cat "$portfile")
+"$newton_bin" bench-net --addr "$addr" \
+  --requests 64 --concurrency 8 --expect-exact --shutdown
+wait "$srv_pid"
+trap - EXIT
+rm -f "$portfile"
+if ! [ -f BENCH_net.json ]; then
+  echo "FAIL: bench-net wrote no BENCH_net.json"
+  exit 1
+fi
+echo "serve-net smoke OK (bit-identical, clean drain)"
+
+echo
 echo "== perf smoke: cargo bench --bench perf_hotpath -- --smoke =="
 cargo bench --bench perf_hotpath -- --smoke
 
