@@ -1,4 +1,4 @@
-.PHONY: verify build test fmt bench-smoke artifacts
+.PHONY: verify build test fmt bench bench-smoke artifacts
 
 # Tier-1 verification + formatting check + perf smoke (scripts/verify.sh).
 verify:
@@ -13,9 +13,14 @@ test:
 fmt:
 	cargo fmt --all -- --check
 
-# Quick hot-path bench; writes BENCH_hotpath.json for the perf trajectory.
-bench-smoke:
+# One-command reproducible speedup numbers: writes BENCH_hotpath.json,
+# which scripts/verify.sh asserts the amortised-VMM (>=5x) and
+# slice-engine (>=2x) targets against.
+bench:
 	cargo bench --bench perf_hotpath -- --smoke
+
+# Alias kept for older docs/scripts.
+bench-smoke: bench
 
 # AOT artifacts need the python build toolchain (jax + xla_extension),
 # which the offline image does not ship; the rust side degrades gracefully

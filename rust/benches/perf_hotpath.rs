@@ -96,13 +96,41 @@ fn main() {
         scale_clamp(&programmed.run(&x), &p)
     });
 
-    // the slice engine without the fused identity-ADC shortcut (adaptive)
+    // ---- digit-major slice engine (adaptive / lossy, b=1 and b=8) ----------
+    // the configs the fused shortcut cannot serve: legacy slice-major
+    // per-call sweep vs the installed digit-major engine. b=1 isolates the
+    // layout + install amortisation (no batch fan-out); b=8 stacks the
+    // batch-row parallelism on top.
+    let x1 = Matrix::from_fn(1, p.rows, |_, _| rng.range_i64(0, 1 << 16));
+    let legacy_adaptive_b1 = h.bench("golden: 1x128x256 VMM, legacy adaptive", 12, || {
+        reference::vmm_raw_reference(&x1, &w, &p, true)
+    });
+    let programmed_adaptive = ProgrammedXbar::install(&w, &p, true);
+    let slice_adaptive_b1 = h.bench("golden: 1x128x256 VMM, installed adaptive (slice)", 12, || {
+        programmed_adaptive.run(&x1)
+    });
     let legacy_adaptive = h.bench("golden: 8x128x256 VMM, legacy adaptive", 10, || {
         reference::vmm_raw_reference(&x, &w, &p, true)
     });
-    let programmed_adaptive = ProgrammedXbar::install(&w, &p, true);
-    let amortised_adaptive = h.bench("golden: 8x128x256 VMM, installed adaptive", 10, || {
+    let amortised_adaptive = h.bench("golden: 8x128x256 VMM, installed adaptive (slice)", 10, || {
         programmed_adaptive.run(&x)
+    });
+    let lossy_p = XbarParams {
+        adc_bits: 8,
+        ..p
+    };
+    let legacy_lossy_b1 = h.bench("golden: 1x128x256 VMM, legacy lossy:8", 12, || {
+        reference::vmm_raw_reference(&x1, &w, &lossy_p, false)
+    });
+    let programmed_lossy = ProgrammedXbar::install(&w, &lossy_p, false);
+    let slice_lossy_b1 = h.bench("golden: 1x128x256 VMM, installed lossy:8 (slice)", 12, || {
+        programmed_lossy.run(&x1)
+    });
+    let legacy_lossy_b8 = h.bench("golden: 8x128x256 VMM, legacy lossy:8", 10, || {
+        reference::vmm_raw_reference(&x, &w, &lossy_p, false)
+    });
+    let slice_lossy_b8 = h.bench("golden: 8x128x256 VMM, installed lossy:8 (slice)", 10, || {
+        programmed_lossy.run(&x)
     });
 
     // ---- programmed CNN forward -------------------------------------------
@@ -194,6 +222,9 @@ fn main() {
     // ---- derived speedups + machine-readable artifact ----------------------
     let vmm_speedup = legacy / amortised.max(1e-9);
     let vmm_slice_speedup = legacy_adaptive / amortised_adaptive.max(1e-9);
+    let slice_adaptive_b1_speedup = legacy_adaptive_b1 / slice_adaptive_b1.max(1e-9);
+    let slice_lossy_b1_speedup = legacy_lossy_b1 / slice_lossy_b1.max(1e-9);
+    let slice_lossy_b8_speedup = legacy_lossy_b8 / slice_lossy_b8.max(1e-9);
     let suite_speedup = seq / par.max(1e-9);
     let cnn_speedup = legacy_cnn / amortised_cnn.max(1e-9);
     let sched_scaling_speedup = sched_one / sched_steal.max(1e-9);
@@ -201,7 +232,10 @@ fn main() {
     let cnn_image_split_speedup = cnn_seq_b8 / cnn_par_b8.max(1e-9);
     println!("\nderived:");
     println!("  amortised VMM speedup (installed vs legacy) : {vmm_speedup:7.1}x (target >= 5x)");
-    println!("  slice-engine speedup (adaptive, amortised)  : {vmm_slice_speedup:7.1}x");
+    println!("  slice-engine speedup (adaptive b8)          : {vmm_slice_speedup:7.1}x (target >= 2x)");
+    println!("  slice-engine speedup (adaptive b1)          : {slice_adaptive_b1_speedup:7.1}x");
+    println!("  slice-engine speedup (lossy:8 b1)           : {slice_lossy_b1_speedup:7.1}x");
+    println!("  slice-engine speedup (lossy:8 b8)           : {slice_lossy_b8_speedup:7.1}x");
     println!("  evaluate_suite parallel speedup             : {suite_speedup:7.1}x over sequential");
     println!("  programmed CNN forward speedup              : {cnn_speedup:7.1}x");
     println!("  sched scaling (1 worker vs {pool} stealing)     : {sched_scaling_speedup:7.1}x");
@@ -216,7 +250,7 @@ fn main() {
         ));
     }
     json.push_str(&format!(
-        "  ],\n  \"derived\": {{\n    \"vmm_amortised_speedup\": {vmm_speedup:.2},\n    \"vmm_slice_engine_speedup\": {vmm_slice_speedup:.2},\n    \"suite_parallel_speedup\": {suite_speedup:.2},\n    \"cnn_programmed_speedup\": {cnn_speedup:.2},\n    \"sched_scaling_speedup\": {sched_scaling_speedup:.2},\n    \"sched_steal_speedup\": {sched_steal_speedup:.2},\n    \"cnn_image_split_speedup\": {cnn_image_split_speedup:.2}\n  }}\n}}\n"
+        "  ],\n  \"derived\": {{\n    \"vmm_amortised_speedup\": {vmm_speedup:.2},\n    \"vmm_slice_engine_speedup\": {vmm_slice_speedup:.2},\n    \"slice_speedup_adaptive_b1\": {slice_adaptive_b1_speedup:.2},\n    \"slice_speedup_adaptive_b8\": {vmm_slice_speedup:.2},\n    \"slice_speedup_lossy_b1\": {slice_lossy_b1_speedup:.2},\n    \"slice_speedup_lossy_b8\": {slice_lossy_b8_speedup:.2},\n    \"suite_parallel_speedup\": {suite_speedup:.2},\n    \"cnn_programmed_speedup\": {cnn_speedup:.2},\n    \"sched_scaling_speedup\": {sched_scaling_speedup:.2},\n    \"sched_steal_speedup\": {sched_steal_speedup:.2},\n    \"cnn_image_split_speedup\": {cnn_image_split_speedup:.2}\n  }}\n}}\n"
     ));
     match std::fs::write("BENCH_hotpath.json", &json) {
         Ok(()) => println!("\nwrote BENCH_hotpath.json"),

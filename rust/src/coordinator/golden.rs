@@ -15,12 +15,13 @@
 //! its max-abs-error against that golden reference — fidelity-vs-cost
 //! sweeps (arXiv:2109.01262 / 2403.13082) against served traffic.
 
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::config::{AdcKind, XbarParams};
 use crate::coordinator::batcher::{Batch, Batcher, PendingRequest};
 use crate::sched::Executor;
-use crate::xbar::cnn::{MiniCnn, ProgrammedCnn, Tensor};
+use crate::xbar::cnn::{ForwardScratch, MiniCnn, ProgrammedCnn, Tensor};
 
 /// Elements in one newton-mini input image — the request shape every
 /// serving surface (CLI, example, network endpoint) validates against.
@@ -38,6 +39,11 @@ pub struct GoldenServer {
     p: XbarParams,
     adaptive: bool,
     batch: usize,
+    /// Forward scratch reused across sequentially served batches (the
+    /// net dispatcher and single-worker serving paths). `try_lock` only:
+    /// concurrent batch jobs fall back to a fresh scratch instead of
+    /// serialising on the lock.
+    scratch: Mutex<ForwardScratch>,
 }
 
 /// One served batch from [`GoldenServer::serve_batches`].
@@ -135,6 +141,7 @@ impl GoldenServer {
             p,
             adaptive,
             batch,
+            scratch: Mutex::new(ForwardScratch::new()),
         }
     }
 
@@ -251,12 +258,31 @@ impl GoldenServer {
     fn run_batch(&self, index: usize, b: &Batch, image_workers: usize) -> BatchReport {
         let replica = index % self.replicas.len();
         let t = tensor_from_flat(&b.data, self.batch);
-        let image_exec = Executor::new(image_workers);
-        let fwd = |cnn: &ProgrammedCnn| cnn.forward_on(&t, &image_exec);
-        let served = fwd(&self.replicas[replica]);
-        let max_abs_err = match &self.golden {
-            Some(g) => {
-                let want = fwd(g);
+        let (served, want) = if image_workers <= 1 || self.batch <= 1 {
+            // sequential forward: reuse the server-owned scratch across
+            // served batches (im2col patches + raw accumulators survive
+            // between batches). try_lock so concurrent sequential batch
+            // jobs degrade to a fresh scratch, never to lock convoy.
+            let mut owned: Option<ForwardScratch> = None;
+            let mut guard = self.scratch.try_lock();
+            let scratch = match guard {
+                Ok(ref mut g) => &mut **g,
+                Err(_) => owned.get_or_insert_with(ForwardScratch::new),
+            };
+            let served = self.replicas[replica].forward_seq_with(&t, scratch);
+            let want = self
+                .golden
+                .as_ref()
+                .map(|g| g.forward_seq_with(&t, scratch));
+            (served, want)
+        } else {
+            let image_exec = Executor::new(image_workers);
+            let served = self.replicas[replica].forward_on(&t, &image_exec);
+            let want = self.golden.as_ref().map(|g| g.forward_on(&t, &image_exec));
+            (served, want)
+        };
+        let max_abs_err = match &want {
+            Some(want) => {
                 let mut worst = 0i64;
                 for r in 0..b.n_real {
                     for c in 0..served.cols {

@@ -9,7 +9,7 @@
 
 use crate::config::XbarParams;
 use crate::util::Rng;
-use crate::xbar::{scale_clamp, Matrix, ProgrammedXbar};
+use crate::xbar::{scale_clamp, Matrix, ProgrammedXbar, RunScratch};
 
 /// An activation tensor (B, H, W, C), i64 values.
 #[derive(Clone, Debug)]
@@ -142,38 +142,75 @@ impl MiniCnn {
     }
 }
 
-/// SAME-padded 3x3 im2col.
+/// SAME-padded 3x3 im2col. Allocating wrapper over [`im2col3_into`] for
+/// external callers; the programmed forward path reuses one patch matrix
+/// through a [`ForwardScratch`] instead.
 pub fn im2col3(x: &Tensor) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    im2col3_into(x, &mut out);
+    out
+}
+
+/// SAME-padded 3x3 im2col into a caller-owned matrix: `out` is reshaped
+/// (reusing its allocation) and zero-filled, then only in-bounds taps are
+/// written — the zero padding of the SAME border is the fill itself.
+pub fn im2col3_into(x: &Tensor, out: &mut Matrix) {
     let k = 3usize;
-    let mut out = Matrix::zeros(x.b * x.h * x.w, k * k * x.c);
+    out.reset_zeroed(x.b * x.h * x.w, k * k * x.c);
     for b in 0..x.b {
         for y in 0..x.h {
             for xx in 0..x.w {
                 let row = (b * x.h + y) * x.w + xx;
-                let mut col = 0;
                 for dy in 0..k {
+                    let sy = y as isize + dy as isize - 1;
+                    if sy < 0 || sy >= x.h as isize {
+                        continue;
+                    }
                     for dx in 0..k {
-                        let sy = y as isize + dy as isize - 1;
                         let sx = xx as isize + dx as isize - 1;
+                        if sx < 0 || sx >= x.w as isize {
+                            continue;
+                        }
+                        let col = (dy * k + dx) * x.c;
                         for ch in 0..x.c {
-                            let v = if sy >= 0
-                                && sy < x.h as isize
-                                && sx >= 0
-                                && sx < x.w as isize
-                            {
-                                x.at(b, sy as usize, sx as usize, ch)
-                            } else {
-                                0
-                            };
-                            out.set(row, col, v);
-                            col += 1;
+                            out.set(row, col + ch, x.at(b, sy as usize, sx as usize, ch));
                         }
                     }
                 }
             }
         }
     }
-    out
+}
+
+/// Reusable buffers for one sequential CNN forward pass: the im2col patch
+/// matrix and the raw pre-scaling accumulator, grown to the largest layer
+/// once and reused across layers, calls, and served batches. One scratch
+/// serves one forward at a time; parallel per-image jobs each own one
+/// (allocated per image, still shared by every layer of that image).
+pub struct ForwardScratch {
+    /// im2col patch matrix (`B·H·W × 9·Cin`), reused by every conv layer.
+    patches: Matrix,
+    /// Raw (pre-scaling) chunk accumulator for the linear layers.
+    raw: Matrix,
+    /// Engine scratch (digit plane + column sums), grown to each chunk's
+    /// geometry in place — the sequential VMM path allocates nothing.
+    xbar: RunScratch,
+}
+
+impl ForwardScratch {
+    pub fn new() -> Self {
+        ForwardScratch {
+            patches: Matrix::zeros(0, 0),
+            raw: Matrix::zeros(0, 0),
+            xbar: RunScratch::empty(),
+        }
+    }
+}
+
+impl Default for ForwardScratch {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// A weight matrix of arbitrary reduction length, installed once across as
@@ -228,21 +265,38 @@ impl ProgrammedLinear {
     }
 
     /// Raw (pre-scaling) product: digital sum of per-chunk raw partials.
+    /// Allocating wrapper over [`Self::run_raw_into`].
     pub fn run_raw(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols, self.in_cols);
-        let mut acc = Matrix::zeros(x.rows, self.out_cols);
-        for (xbar, &lo) in self.chunks.iter().zip(&self.offsets) {
-            let part = xbar.run_window(x, lo);
-            for (a, v) in acc.data.iter_mut().zip(part.data) {
-                *a += v;
-            }
-        }
+        let mut acc = Matrix::zeros(0, 0);
+        self.run_raw_into(x, &mut acc, &mut RunScratch::empty());
         acc
+    }
+
+    /// Raw product into a caller-owned accumulator: `out` is reshaped in
+    /// place (reusing its allocation) and every chunk's partial is summed
+    /// straight into it via [`ProgrammedXbar::run_window_acc_with`] — no
+    /// per-chunk partial matrix is allocated, and the shared engine
+    /// scratch is regrown in place per chunk (sequential sweeps allocate
+    /// nothing at all).
+    pub fn run_raw_into(&self, x: &Matrix, out: &mut Matrix, scratch: &mut RunScratch) {
+        assert_eq!(x.cols, self.in_cols);
+        out.reset_zeroed(x.rows, self.out_cols);
+        for (xbar, &lo) in self.chunks.iter().zip(&self.offsets) {
+            xbar.run_window_acc_with(x, lo, out, scratch);
+        }
     }
 
     /// Full layer: raw partial sum, then one scale/clamp stage.
     pub fn run(&self, x: &Matrix) -> Matrix {
         scale_clamp(&self.run_raw(x), &self.p)
+    }
+
+    /// [`Self::run`] with the raw accumulator and engine scratch in
+    /// caller-owned buffers — only the scaled output matrix allocates.
+    /// Bit-identical to `run`.
+    pub fn run_with(&self, x: &Matrix, raw: &mut Matrix, scratch: &mut RunScratch) -> Matrix {
+        self.run_raw_into(x, raw, scratch);
+        scale_clamp(raw, &self.p)
     }
 }
 
@@ -312,17 +366,29 @@ impl ProgrammedCnn {
     }
 
     /// Sequential whole-batch forward — the reference the parallel split
-    /// is pinned against.
+    /// is pinned against. Allocates one [`ForwardScratch`] per call; reuse
+    /// one across calls via [`Self::forward_seq_with`] on serving paths.
     pub fn forward_seq(&self, img: &Tensor) -> Matrix {
+        self.forward_seq_with(img, &mut ForwardScratch::new())
+    }
+
+    /// [`Self::forward_seq`] reusing a caller-owned scratch: the im2col
+    /// patch matrix and the raw accumulator are shared by every layer of
+    /// the pass and survive across calls, so steady-state serving stops
+    /// allocating them per layer per batch. Bit-identical to
+    /// [`Self::forward_seq`] with a fresh scratch (pinned by the
+    /// scratch-purity property tests).
+    pub fn forward_seq_with(&self, img: &Tensor, scratch: &mut ForwardScratch) -> Matrix {
         let mut act = img.clone();
         for conv in &self.convs {
-            act = conv3x3_programmed(&act, conv, self.act_max);
+            act = conv3x3_programmed(&act, conv, self.act_max, scratch);
             act = maxpool2(&act);
         }
         let flat = Matrix::from_fn(act.b, act.h * act.w * act.c, |b, i| {
             act.data[b * act.h * act.w * act.c + i]
         });
-        self.fc.run(&flat)
+        let ForwardScratch { raw, xbar, .. } = scratch;
+        self.fc.run_with(&flat, raw, xbar)
     }
 
     /// Argmax classes for a batch of images.
@@ -350,9 +416,17 @@ fn conv3x3(x: &Tensor, w: &Matrix, p: &XbarParams, adaptive: bool, act_max: i64)
     out
 }
 
-fn conv3x3_programmed(x: &Tensor, conv: &ProgrammedLinear, act_max: i64) -> Tensor {
-    let patches = im2col3(x);
-    let y = conv.run(&patches);
+fn conv3x3_programmed(
+    x: &Tensor,
+    conv: &ProgrammedLinear,
+    act_max: i64,
+    scratch: &mut ForwardScratch,
+) -> Tensor {
+    // split the scratch borrows: patches feeds the layer while raw/xbar
+    // accumulate its chunk partials and digit planes
+    let ForwardScratch { patches, raw, xbar } = scratch;
+    im2col3_into(x, patches);
+    let y = conv.run_with(patches, raw, xbar);
     let n = conv.out_cols();
     let mut out = Tensor::zeros(x.b, x.h, x.w, n);
     for r in 0..y.rows {
@@ -556,6 +630,73 @@ mod tests {
             assert_eq!(got.data, want.data, "workers={workers}");
         }
         assert_eq!(programmed.forward(&img).data, want.data);
+    }
+
+    #[test]
+    fn im2col3_into_matches_allocating_and_reuses_buffers() {
+        let a = random_images(2, 17);
+        let b = random_images(1, 18);
+        let want_a = im2col3(&a);
+        let want_b = im2col3(&b);
+        // one reused matrix across differently-shaped calls, including a
+        // shrink, must reproduce the fresh result exactly
+        let mut out = Matrix::zeros(0, 0);
+        im2col3_into(&a, &mut out);
+        assert_eq!(out, want_a);
+        im2col3_into(&b, &mut out);
+        assert_eq!(out, want_b);
+        im2col3_into(&a, &mut out);
+        assert_eq!(out, want_a, "stale data leaked through buffer reuse");
+    }
+
+    #[test]
+    fn linear_run_with_reused_raw_matches_run() {
+        // chunked layer (200 rows = 2 chunks) on the slice engine: the
+        // caller-owned raw accumulator must not change a bit, even when
+        // reused across interleaved inputs
+        let mut rng = Rng::new(23);
+        let x1 = Matrix::from_fn(2, 200, |_, _| rng.range_i64(0, 1 << 16));
+        let x2 = Matrix::from_fn(3, 200, |_, _| rng.range_i64(0, 1 << 16));
+        let w = Matrix::from_fn(200, 7, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
+        let p = XbarParams {
+            adc_bits: 8,
+            ..XbarParams::default()
+        };
+        let layer = ProgrammedLinear::install(&w, &p, false);
+        let want1 = layer.run(&x1);
+        let want2 = layer.run(&x2);
+        let mut raw = Matrix::zeros(0, 0);
+        let mut xs = RunScratch::empty();
+        assert_eq!(layer.run_with(&x1, &mut raw, &mut xs), want1);
+        assert_eq!(layer.run_with(&x2, &mut raw, &mut xs), want2);
+        assert_eq!(layer.run_with(&x1, &mut raw, &mut xs), want1);
+        assert_eq!(layer.run_raw(&x1), {
+            let mut out = Matrix::zeros(0, 0);
+            layer.run_raw_into(&x1, &mut out, &mut xs);
+            out
+        });
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn forward_scratch_reuse_is_bit_identical() {
+        // one ForwardScratch reused across interleaved forward passes must
+        // equal fresh-scratch runs bit-for-bit, in the adaptive regime the
+        // slice engine serves
+        let cnn = MiniCnn::new(0);
+        let a = random_images(1, 21);
+        let b = random_images(1, 22);
+        let programmed = cnn.program(&XbarParams::default(), true);
+        let want_a = programmed.forward_seq(&a);
+        let want_b = programmed.forward_seq(&b);
+        let mut scratch = ForwardScratch::new();
+        assert_eq!(programmed.forward_seq_with(&a, &mut scratch).data, want_a.data);
+        assert_eq!(programmed.forward_seq_with(&b, &mut scratch).data, want_b.data);
+        assert_eq!(
+            programmed.forward_seq_with(&a, &mut scratch).data,
+            want_a.data,
+            "reused forward scratch leaked state"
+        );
     }
 
     #[test]

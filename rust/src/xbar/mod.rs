@@ -7,16 +7,20 @@
 //! whole pipeline equals `clamp(round_half_up((x @ w) >> out_shift))`.
 //!
 //! Hot-path layout (rust/PERF.md): weights are *installed once* into a
-//! [`ProgrammedXbar`] — bias encoding, cell-plane slicing into flat
-//! `slices × K × N` buffers, the per-column `colsum(Wb)` correction, and
-//! the lossless/adaptive ADC decision all happen at install time, mirroring
-//! the paper's in-situ premise that a crossbar is programmed once and read
-//! many times. `run(&x)` then streams input bits through the pre-sliced
-//! planes with a reusable scratch buffer, parallelising across batch rows.
-//! The historical free functions ([`biased_product`], [`vmm_raw`],
-//! [`vmm_raw_signed`], [`vmm`]) are thin install-and-run wrappers; the
-//! pre-refactor per-call engine survives verbatim in [`reference`] as the
-//! oracle the property tests compare against.
+//! [`ProgrammedXbar`] — bias encoding, cell-plane slicing, the per-column
+//! `colsum(Wb)` correction, and the lossless/adaptive ADC decision all
+//! happen at install time, mirroring the paper's in-situ premise that a
+//! crossbar is programmed once and read many times. Identity-ADC configs
+//! take a fused masked-matmul path; everything else (adaptive, lossy —
+//! the configurations the paper's fidelity sweeps live in) runs the
+//! **digit-major slice engine**: cell planes stored k-major (`K × slices
+//! × N`, one contiguous block per input digit), per-slice zero/uniform
+//! classification at install, and per-row DAC digits extracted once into
+//! a [`RunScratch`]-owned digit plane. `run(&x)` parallelises across
+//! batch rows. The historical free functions ([`biased_product`],
+//! [`vmm_raw`], [`vmm_raw_signed`], [`vmm`]) are thin install-and-run
+//! wrappers; the pre-refactor per-call engine survives verbatim in
+//! [`reference`] as the oracle the property tests compare against.
 
 pub mod cnn;
 pub mod noise;
@@ -49,6 +53,16 @@ impl Matrix {
             }
         }
         m
+    }
+
+    /// Reshape in place to an all-zero `rows × cols` matrix, keeping the
+    /// allocation when capacity suffices — the scratch-reuse primitive the
+    /// forward buffers (`cnn::ForwardScratch`) are built on.
+    pub fn reset_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0);
     }
 
     #[inline]
@@ -106,27 +120,68 @@ fn mask_bits(bits: u32) -> i64 {
 }
 
 /// Reusable per-thread scratch for [`ProgrammedXbar::run_with_scratch`]:
-/// holds the `slices × N` analog column sums of one bit-serial iteration,
-/// so steady-state runs allocate nothing but their output.
+/// the `dense × N` analog column sums of one DAC iteration plus the
+/// current row's digit plane (`iters × K` DAC digits, extracted once per
+/// row) and per-iteration digit sums — so steady-state runs allocate
+/// nothing but their output. Sized by [`ProgrammedXbar::scratch`] for one
+/// installation; do not share across installs.
 pub struct RunScratch {
     cols: Vec<i64>,
+    digits: Vec<i64>,
+    digit_sums: Vec<i64>,
+}
+
+impl RunScratch {
+    /// Empty scratch: any engine grows it to its own geometry on use
+    /// (`ProgrammedXbar::ensure_scratch`), so one scratch can serve
+    /// several installations — e.g. every chunk of a [`cnn::ProgrammedLinear`].
+    pub fn empty() -> Self {
+        RunScratch {
+            cols: Vec::new(),
+            digits: Vec::new(),
+            digit_sums: Vec::new(),
+        }
+    }
+}
+
+impl Default for RunScratch {
+    fn default() -> Self {
+        Self::empty()
+    }
 }
 
 /// A crossbar with weights installed once and read many times — the
 /// in-situ compute model of the paper made literal in software.
 ///
 /// Install time does all data-independent work: ISAAC bias encoding
-/// (`Wb = w + 2^(wb-1)`), slicing `Wb` into `slices × K × N` cell planes,
-/// the per-column `colsum(Wb)` needed by the signed-input correction, and
-/// the lossless/adaptive ADC decision. When every ADC sample is an identity
-/// (lossless config, non-adaptive), install also selects a fused fast path
-/// that is algebraically — and therefore bit — identical to the bit-serial
-/// sweep: the place-value sums telescope back into a plain masked matmul,
-/// so no cell planes are materialised at all.
+/// (`Wb = w + 2^(wb-1)`), cell-plane slicing, the per-column `colsum(Wb)`
+/// needed by the signed-input correction, and the lossless/adaptive ADC
+/// decision. When every ADC sample is an identity (lossless config,
+/// non-adaptive), install also selects a fused fast path that is
+/// algebraically — and therefore bit — identical to the bit-serial sweep:
+/// the place-value sums telescope back into a plain masked matmul, so no
+/// cell planes are materialised at all.
 ///
-/// `run` borrows `&self` and is thread-safe; large batches are split across
-/// `std::thread::available_parallelism()` worker threads, each with its own
-/// [`RunScratch`].
+/// For every other config the **digit-major slice engine** is installed:
+///
+/// * planes are stored k-major (`K × dense × N`), so the digit of one
+///   input row touches a single contiguous `dense × N` block instead of
+///   striding `s · K · N` apart per slice;
+/// * each slice is classified once — an all-zero plane is dropped
+///   entirely (it digitises to 0 in every regime), a *uniform* plane
+///   (every cell the same value, e.g. a bias-encoding constant slice of
+///   narrow weights) is folded into one quantise-and-broadcast per
+///   iteration instead of `K × N` work; only the remaining *dense*
+///   slices are materialised;
+/// * at run time each row's DAC digits are extracted once into the
+///   scratch digit plane, all-zero iterations are skipped outright, and
+///   identity-ADC samples of adaptive schedules fold straight into the
+///   accumulator without the quantise call.
+///
+/// `run` borrows `&self` and is thread-safe; large batches are split
+/// across the work-stealing executor, each worker with its own
+/// [`RunScratch`]. All of it is wall-clock only: the engine is pinned
+/// bit-for-bit against [`reference`] across every ADC regime.
 pub struct ProgrammedXbar {
     p: XbarParams,
     in_bits: u32,
@@ -145,8 +200,17 @@ pub struct ProgrammedXbar {
     /// Mask reconstructing exactly the bits the DAC sweep would stream.
     in_mask: i64,
     dac_mask: i64,
-    /// Flat `slices × K × N` cell planes (empty on the fast path).
+    /// Digit-major cell planes, flat `K × dense × N`: the dense slices of
+    /// row k are one contiguous block (empty on the fast path).
     planes: Vec<i64>,
+    /// Place shift (`s · cell_bits`) of each materialised (dense) slice.
+    dense_shifts: Vec<u32>,
+    /// Uniform slices as `(cell value, place shift)`: every cell of the
+    /// plane holds the same non-zero value, so its column sum is
+    /// `value × digit_sum` — one quantise per iteration, broadcast.
+    uniform_slices: Vec<(i64, u32)>,
+    /// All-zero slices dropped at install (they digitise to 0).
+    zero_slices: usize,
     /// Biased weight matrix, masked to the bits the cell planes hold.
     wb: Vec<i64>,
     /// Per-column sum of the (unmasked) biased weights, for `run_signed`.
@@ -185,24 +249,51 @@ impl ProgrammedXbar {
         let wb_masked: Vec<i64> = wb.data.iter().map(|&v| v & w_mask).collect();
         let mut colsum_wb = vec![0i64; n];
         for k in 0..kdim {
-            for c in 0..n {
-                colsum_wb[c] += wb.data[k * n + c];
+            for (sum, &v) in colsum_wb.iter_mut().zip(&wb.data[k * n..k * n + n]) {
+                *sum += v;
             }
         }
 
-        // install-time weight slicing: planes[s][k][c], flat. The fast path
-        // reads the fused `wb` buffer instead, so skip the planes entirely.
-        let planes = if fast {
-            Vec::new()
-        } else {
-            let mut planes = vec![0i64; slices * kdim * n];
+        // install-time slice classification: an all-zero plane contributes
+        // an exact 0 through every ADC regime (rounding of 0 is 0) so it
+        // is dropped; a uniform plane's column sum is value × digit-sum,
+        // so it needs no materialised cells; the rest are dense
+        let mut dense_shifts = Vec::new();
+        let mut uniform_slices = Vec::new();
+        let mut zero_slices = 0usize;
+        if !fast {
             for s in 0..slices {
                 let shift = s as u32 * p.cell_bits;
-                for k in 0..kdim {
-                    let dst = &mut planes[(s * kdim + k) * n..(s * kdim + k) * n + n];
-                    let src = &wb.data[k * n..k * n + n];
-                    for c in 0..n {
-                        dst[c] = (src[c] >> shift) & cell_mask;
+                let cell = |v: i64| (v >> shift) & cell_mask;
+                let first = wb.data.first().map_or(0, |&v| cell(v));
+                if wb.data.iter().all(|&v| cell(v) == first) {
+                    if first == 0 {
+                        zero_slices += 1;
+                    } else {
+                        uniform_slices.push((first, shift));
+                    }
+                } else {
+                    dense_shifts.push(shift);
+                }
+            }
+        }
+
+        // digit-major weight slicing: planes[k][j][c], flat — the dense
+        // slices of one reduction row are contiguous, so streaming one
+        // input digit reads one `dense × n` block instead of striding
+        // `s·K·N` apart per slice. The fast path reads the fused `wb`
+        // buffer instead, so no planes are materialised there at all.
+        let dense = dense_shifts.len();
+        let planes = if fast || dense == 0 {
+            Vec::new()
+        } else {
+            let mut planes = vec![0i64; kdim * dense * n];
+            for k in 0..kdim {
+                let src = &wb.data[k * n..k * n + n];
+                for (j, &shift) in dense_shifts.iter().enumerate() {
+                    let dst = &mut planes[(k * dense + j) * n..(k * dense + j + 1) * n];
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        *d = (v >> shift) & cell_mask;
                     }
                 }
             }
@@ -224,6 +315,9 @@ impl ProgrammedXbar {
             in_mask,
             dac_mask: (1i64 << p.dac_bits) - 1,
             planes,
+            dense_shifts,
+            uniform_slices,
+            zero_slices,
             wb: wb_masked,
             colsum_wb,
         }
@@ -244,7 +338,8 @@ impl ProgrammedXbar {
         self.iters
     }
 
-    /// Weight cell planes (crossbar slices) one VMM reads.
+    /// Weight cell planes (crossbar slices) one VMM reads — the logical
+    /// count; see [`Self::slice_profile`] for what install materialised.
     pub fn slices(&self) -> usize {
         self.slices
     }
@@ -264,15 +359,37 @@ impl ProgrammedXbar {
         self.fast
     }
 
+    /// `(dense, uniform, zero)` slice classification of this installation:
+    /// dense slices are materialised k-major, uniform slices fold into one
+    /// quantise per iteration, zero slices are dropped. Sums to
+    /// [`Self::slices`] on the slice engine; all zero on the fused path.
+    pub fn slice_profile(&self) -> (usize, usize, usize) {
+        (
+            self.dense_shifts.len(),
+            self.uniform_slices.len(),
+            self.zero_slices,
+        )
+    }
+
     /// Fresh scratch sized for this installation.
     pub fn scratch(&self) -> RunScratch {
-        RunScratch {
-            cols: if self.fast {
-                Vec::new()
-            } else {
-                vec![0i64; self.slices * self.n]
-            },
+        let mut s = RunScratch::empty();
+        self.ensure_scratch(&mut s);
+        s
+    }
+
+    /// Grow `scratch` to this installation's geometry (idempotent, keeps
+    /// the allocations). Safe across installs: the run loops overwrite
+    /// every element they read (`digit_sums.fill(0)`, a full digit
+    /// rewrite per row, `cols.fill(0)` per iteration), so stale contents
+    /// from another installation cannot leak into results.
+    fn ensure_scratch(&self, scratch: &mut RunScratch) {
+        if self.fast {
+            return; // the fused path touches no scratch
         }
+        scratch.cols.resize(self.dense_shifts.len() * self.n, 0);
+        scratch.digits.resize(self.iters * self.kdim, 0);
+        scratch.digit_sums.resize(self.iters, 0);
     }
 
     /// Raw product for unsigned inputs against the installed weights;
@@ -290,17 +407,58 @@ impl ProgrammedXbar {
     /// copying column windows out.
     pub fn run_window(&self, x: &Matrix, x_col0: usize) -> Matrix {
         let mut raw = self.raw_product(x, x_col0, 0);
-        if self.w_bias != 0 {
-            // signed-weight correction: subtract Bw * rowsum(x) digitally
-            for r in 0..x.rows {
-                let sx: i64 = (0..self.kdim).map(|k| x.at(r, x_col0 + k)).sum();
-                let out = &mut raw.data[r * self.n..(r + 1) * self.n];
-                for v in out.iter_mut() {
-                    *v -= self.w_bias * sx;
-                }
+        self.correct_w_bias(x, x_col0, &mut raw);
+        raw
+    }
+
+    /// [`Self::run_window`] with the batch-row fan-out forced onto a
+    /// caller-sized executor (1 worker = sequential on the caller thread)
+    /// — the property tests pin bit-identity across worker counts here.
+    pub fn run_window_on(&self, x: &Matrix, x_col0: usize, exec: &crate::sched::Executor) -> Matrix {
+        let mut raw = Matrix::zeros(x.rows, self.n);
+        self.accumulate_into(x, x_col0, 0, &mut raw.data, Some(exec), None);
+        self.correct_w_bias(x, x_col0, &mut raw);
+        raw
+    }
+
+    /// Accumulating variant of [`Self::run_window`]: adds this crossbar's
+    /// (bias-corrected) window product into `acc` in place. Chunked layers
+    /// ([`cnn::ProgrammedLinear`]) sum their raw partials straight into one
+    /// caller-owned accumulator instead of allocating a partial matrix per
+    /// chunk per call.
+    pub fn run_window_acc(&self, x: &Matrix, x_col0: usize, acc: &mut Matrix) {
+        self.run_window_acc_with(x, x_col0, acc, &mut RunScratch::empty());
+    }
+
+    /// [`Self::run_window_acc`] reusing a caller-owned [`RunScratch`]
+    /// (grown to this installation's geometry in place), so sequential
+    /// chunk sweeps allocate nothing at all. The scratch serves the
+    /// single-threaded path; if the batch is large enough to fan out,
+    /// each worker still brings its own.
+    pub fn run_window_acc_with(
+        &self,
+        x: &Matrix,
+        x_col0: usize,
+        acc: &mut Matrix,
+        scratch: &mut RunScratch,
+    ) {
+        assert_eq!(acc.rows, x.rows, "accumulator row mismatch");
+        assert_eq!(acc.cols, self.n, "accumulator column mismatch");
+        self.accumulate_into(x, x_col0, 0, &mut acc.data, None, Some(scratch));
+        self.correct_w_bias(x, x_col0, acc);
+    }
+
+    /// Signed-weight correction: subtract `Bw * rowsum(x)` digitally.
+    fn correct_w_bias(&self, x: &Matrix, x_col0: usize, raw: &mut Matrix) {
+        if self.w_bias == 0 {
+            return;
+        }
+        for r in 0..x.rows {
+            let sx: i64 = (0..self.kdim).map(|k| x.at(r, x_col0 + k)).sum();
+            for v in raw.data[r * self.n..(r + 1) * self.n].iter_mut() {
+                *v -= self.w_bias * sx;
             }
         }
-        raw
     }
 
     /// Signed-input raw product (both operand biases corrected digitally,
@@ -336,6 +494,7 @@ impl ProgrammedXbar {
     /// the output once the scratch exists. Bit-identical to [`Self::run`].
     pub fn run_with_scratch(&self, x: &Matrix, scratch: &mut RunScratch) -> Matrix {
         assert_eq!(x.cols, self.kdim);
+        self.ensure_scratch(scratch);
         let n = self.n;
         let mut acc = Matrix::zeros(x.rows, n);
         if n == 0 {
@@ -344,14 +503,7 @@ impl ProgrammedXbar {
         for (r, out) in acc.data.chunks_mut(n).enumerate() {
             self.run_row(x, r, 0, 0, out, scratch);
         }
-        if self.w_bias != 0 {
-            for r in 0..x.rows {
-                let sx: i64 = (0..self.kdim).map(|k| x.at(r, k)).sum();
-                for v in acc.data[r * n..(r + 1) * n].iter_mut() {
-                    *v -= self.w_bias * sx;
-                }
-            }
-        }
+        self.correct_w_bias(x, 0, &mut acc);
         acc
     }
 
@@ -360,34 +512,70 @@ impl ProgrammedXbar {
         if self.fast {
             self.kdim * self.n
         } else {
-            self.iters * self.kdim * self.slices.max(1) * self.n
+            self.iters * self.kdim * self.dense_shifts.len().max(1) * self.n
         }
     }
 
     /// Biased product of `(x[:, x_col0..] + x_off)` against the planes.
     fn raw_product(&self, x: &Matrix, x_col0: usize, x_off: i64) -> Matrix {
+        let mut acc = Matrix::zeros(x.rows, self.n);
+        self.accumulate_into(x, x_col0, x_off, &mut acc.data, None, None);
+        acc
+    }
+
+    /// Core engine: accumulate the biased product of `(x[:, x_col0..] +
+    /// x_off)` into `acc` (`rows × n`, += semantics). `exec` pins the
+    /// batch-row fan-out to a caller-sized executor; `None` sizes it
+    /// automatically (sequential below the work threshold and inside sched
+    /// workers, where the outer decomposition owns the pool). `scratch`
+    /// is reused on the sequential path (grown in place); workers of a
+    /// parallel fan-out always bring their own.
+    fn accumulate_into(
+        &self,
+        x: &Matrix,
+        x_col0: usize,
+        x_off: i64,
+        acc: &mut [i64],
+        exec: Option<&crate::sched::Executor>,
+        scratch: Option<&mut RunScratch>,
+    ) {
         assert!(x_col0 + self.kdim <= x.cols, "window exceeds input columns");
         let n = self.n;
-        let mut acc = Matrix::zeros(x.rows, n);
+        assert_eq!(acc.len(), x.rows * n, "accumulator shape mismatch");
         if n == 0 || x.rows == 0 {
-            return acc;
+            return;
         }
         // split across cores only when the work dwarfs thread spawn cost —
         // and never from inside a sched worker: the outer job decomposition
         // (per-image forward, batch serving) owns the pool, and nesting a
         // per-VMM fan-out under it would thrash ~cores² threads per read
-        let workers = if x.rows >= 2
-            && x.rows * self.work_per_row() >= 1 << 20
-            && !crate::sched::in_worker()
-        {
-            crate::util::worker_count(x.rows)
-        } else {
-            1
+        let workers = match exec {
+            Some(e) => e.workers().min(x.rows),
+            None => {
+                if x.rows >= 2
+                    && x.rows * self.work_per_row() >= 1 << 20
+                    && !crate::sched::in_worker()
+                {
+                    crate::util::worker_count(x.rows)
+                } else {
+                    1
+                }
+            }
         };
         if workers <= 1 {
-            let mut scratch = self.scratch();
-            for (r, out) in acc.data.chunks_mut(n).enumerate() {
-                self.run_row(x, r, x_col0, x_off, out, &mut scratch);
+            let mut owned;
+            let scratch = match scratch {
+                Some(s) => {
+                    self.ensure_scratch(s);
+                    s
+                }
+                None => {
+                    owned = self.scratch();
+                    &mut owned
+                }
+            };
+            for (r, out) in acc.chunks_mut(n).enumerate() {
+                self.run_row(x, r, x_col0, x_off, out, scratch);
             }
         } else {
             // batch rows fan out through the work-stealing executor
@@ -396,13 +584,16 @@ impl ProgrammedXbar {
             // chunk of the output (one uncontended lock per chunk) and
             // writes rows in place — no per-call buffers or copy-back —
             // with a private scratch, bit-identical to the sequential loop.
+            let pool = match exec {
+                Some(e) => *e,
+                None => crate::sched::Executor::new(workers),
+            };
             let rows_per = x.rows.div_ceil(workers * 2).max(1);
             let chunk_slots: Vec<std::sync::Mutex<Option<&mut [i64]>>> = acc
-                .data
                 .chunks_mut(rows_per * n)
                 .map(|c| std::sync::Mutex::new(Some(c)))
                 .collect();
-            crate::sched::Executor::new(workers).map(chunk_slots.len(), |ci| {
+            pool.map(chunk_slots.len(), |ci| {
                 let chunk = chunk_slots[ci]
                     .lock()
                     .unwrap()
@@ -414,7 +605,6 @@ impl ProgrammedXbar {
                 }
             });
         }
-        acc
     }
 
     /// One batch row through the pipeline, accumulating into `out`.
@@ -438,54 +628,102 @@ impl ProgrammedXbar {
                 }
                 let row = &self.wb[k * n..k * n + n];
                 if xv == 1 {
-                    for c in 0..n {
-                        out[c] += row[c];
+                    for (o, &v) in out.iter_mut().zip(row) {
+                        *o += v;
                     }
                 } else {
-                    for c in 0..n {
-                        out[c] += xv * row[c];
+                    for (o, &v) in out.iter_mut().zip(row) {
+                        *o += xv * v;
                     }
                 }
             }
             return;
         }
 
-        let cols = &mut scratch.cols;
+        // digit-major slice engine. Split borrows: digits/digit_sums are
+        // read-only once extracted, cols stays the mutable accumulator.
+        let RunScratch {
+            cols,
+            digits,
+            digit_sums,
+        } = scratch;
+        let kdim = self.kdim;
+
+        // 1. extract this row's DAC digits once (iteration-major `iters ×
+        // kdim` plane) and the per-iteration digit sums. Iterated
+        // arithmetic shifts compose, so digit i equals the reference's
+        // `(xv >> (i·dac_bits)) & dac_mask` bit-for-bit.
+        digit_sums.fill(0);
+        for k in 0..kdim {
+            let mut xv = x.at(r, x_col0 + k) + x_off;
+            for i in 0..self.iters {
+                let d = xv & self.dac_mask;
+                digits[i * kdim + k] = d;
+                digit_sums[i] += d;
+                xv >>= self.p.dac_bits;
+            }
+        }
+
+        let dense = self.dense_shifts.len();
         for i in 0..self.iters {
-            let shift = i as u32 * self.p.dac_bits;
-            cols.fill(0);
-            for k in 0..self.kdim {
-                let xb = ((x.at(r, x_col0 + k) + x_off) >> shift) & self.dac_mask;
-                if xb == 0 {
-                    continue;
-                }
-                let base = k * n;
-                for s in 0..self.slices {
-                    let row = &self.planes[s * self.kdim * n + base..s * self.kdim * n + base + n];
-                    let dst = &mut cols[s * n..s * n + n];
+            if digit_sums[i] == 0 {
+                // every digit of this iteration is zero (digits are
+                // non-negative): all column sums are 0 and 0 digitises to
+                // 0 in every regime, so the whole iteration is skipped —
+                // u8-range activations streamed at 16 input bits skip
+                // half their iterations here
+                continue;
+            }
+            let iter_place = i as u32 * self.p.dac_bits;
+            if dense > 0 {
+                cols.fill(0);
+                let row_digits = &digits[i * kdim..(i + 1) * kdim];
+                for (k, &xb) in row_digits.iter().enumerate() {
+                    if xb == 0 {
+                        continue;
+                    }
+                    // one contiguous `dense × n` block per input digit
+                    let block = &self.planes[k * dense * n..(k + 1) * dense * n];
                     if xb == 1 {
-                        for c in 0..n {
-                            dst[c] += row[c];
+                        for (dst, &src) in cols.iter_mut().zip(block) {
+                            *dst += src;
                         }
                     } else {
-                        for c in 0..n {
-                            dst[c] += xb * row[c];
+                        for (dst, &src) in cols.iter_mut().zip(block) {
+                            *dst += xb * src;
+                        }
+                    }
+                }
+                for (j, &shift) in self.dense_shifts.iter().enumerate() {
+                    let place = iter_place + shift;
+                    let src = &cols[j * n..(j + 1) * n];
+                    if self.lossless && (!self.adaptive || place >= self.p.out_shift) {
+                        // identity ADC: fold straight into the accumulator
+                        for (o, &v) in out.iter_mut().zip(src) {
+                            *o += v << place;
+                        }
+                    } else {
+                        for (o, &v) in out.iter_mut().zip(src) {
+                            *o += adc_sample(v, place, &self.p, self.adaptive) << place;
                         }
                     }
                 }
             }
-            for s in 0..self.slices {
-                let place = i as u32 * self.p.dac_bits + s as u32 * self.p.cell_bits;
-                let src = &cols[s * n..s * n + n];
-                if self.lossless && (!self.adaptive || place >= self.p.out_shift) {
-                    // identity ADC: fold straight into the accumulator
-                    for c in 0..n {
-                        out[c] += src[c] << place;
-                    }
+            // uniform slices: the column sum is value × digit-sum for every
+            // column, so quantise once and broadcast (i64 addition is
+            // exact, so reordering slice contributions moves no bits)
+            for &(v, shift) in &self.uniform_slices {
+                let place = iter_place + shift;
+                let col = v * digit_sums[i];
+                let q = if self.lossless && (!self.adaptive || place >= self.p.out_shift) {
+                    col
                 } else {
-                    for c in 0..n {
-                        let q = adc_sample(src[c], place, &self.p, self.adaptive);
-                        out[c] += q << place;
+                    adc_sample(col, place, &self.p, self.adaptive)
+                };
+                if q != 0 {
+                    let add = q << place;
+                    for o in out.iter_mut() {
+                        *o += add;
                     }
                 }
             }
@@ -622,6 +860,20 @@ mod tests {
     }
 
     #[test]
+    fn reset_zeroed_reshapes_and_clears() {
+        let mut m = Matrix::from_fn(3, 4, |r, c| (r * 4 + c) as i64 + 1);
+        let cap = m.data.capacity();
+        m.reset_zeroed(2, 5);
+        assert_eq!((m.rows, m.cols), (2, 5));
+        assert!(m.data.iter().all(|&v| v == 0));
+        // shrinking keeps the allocation (clear+resize never shrinks
+        // capacity) — the scratch-reuse property the buffers depend on
+        m.reset_zeroed(1, 2);
+        assert!(m.data.capacity() >= cap, "reset_zeroed reallocated");
+        assert_eq!(m.data, vec![0, 0]);
+    }
+
+    #[test]
     fn installed_run_is_bit_identical_to_reference_engine() {
         // the install/run refactor (and the install-time hoist of the
         // lossless flag) must not move a single bit, in any ADC regime
@@ -659,6 +911,65 @@ mod tests {
     }
 
     #[test]
+    fn zero_and_uniform_slices_are_classified_and_skipped() {
+        // 4-aligned weights: Wb = w + 2^15 stays 4-aligned, so the low
+        // 2-bit cell slice is all-zero and must be dropped at install —
+        // while staying bit-identical to the reference sweep
+        let p = XbarParams {
+            adc_bits: 7,
+            ..XbarParams::default()
+        };
+        let mut rng = Rng::new(91);
+        let w = Matrix::from_fn(p.rows, 6, |_, _| rng.range_i64(-8, 8) * 4);
+        let programmed = ProgrammedXbar::install(&w, &p, false);
+        let (dense, uniform, zero) = programmed.slice_profile();
+        assert_eq!(dense + uniform + zero, programmed.slices());
+        assert!(zero >= 1, "low slice of 4-aligned weights is all zero");
+        let x = Matrix::from_fn(3, p.rows, |_, _| rng.range_i64(0, 1 << 16));
+        assert_eq!(
+            programmed.run(&x),
+            reference::vmm_raw_reference(&x, &w, &p, false)
+        );
+
+        // constant weights: every slice is uniform, none dense — covered
+        // entirely by the quantise-and-broadcast fold, in both regimes
+        let wu = Matrix::from_fn(p.rows, 4, |_, _| 5);
+        for adaptive in [false, true] {
+            let programmed = ProgrammedXbar::install(&wu, &p, adaptive);
+            let (dense, uniform, zero) = programmed.slice_profile();
+            assert_eq!(dense, 0, "constant weights have no dense slice");
+            assert!(uniform >= 1);
+            assert_eq!(dense + uniform + zero, programmed.slices());
+            assert_eq!(
+                programmed.run(&x),
+                reference::vmm_raw_reference(&x, &wu, &p, adaptive),
+                "adaptive={adaptive}"
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_high_input_bits_match_reference() {
+        // u8-range activations streamed at 16 input bits: the top 8 DAC
+        // iterations are all-zero and skipped outright — still bit-equal
+        let p = XbarParams {
+            adc_bits: 8,
+            ..XbarParams::default()
+        };
+        let mut rng = Rng::new(97);
+        let x = Matrix::from_fn(2, p.rows, |_, _| rng.range_i64(0, 256));
+        let w = Matrix::from_fn(p.rows, 9, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
+        for adaptive in [false, true] {
+            let programmed = ProgrammedXbar::install(&w, &p, adaptive);
+            assert_eq!(
+                programmed.run(&x),
+                reference::vmm_raw_reference(&x, &w, &p, adaptive),
+                "adaptive={adaptive}"
+            );
+        }
+    }
+
+    #[test]
     fn repeated_runs_on_one_install_do_not_interfere() {
         // scratch reuse must be observationally pure, across both engines
         let p = XbarParams {
@@ -690,6 +1001,30 @@ mod tests {
     }
 
     #[test]
+    fn run_window_acc_accumulates_in_place() {
+        // the chunked-layer path: two windowed crossbars accumulated into
+        // one caller-owned matrix equal the sum of their run_window parts
+        let p = XbarParams {
+            adc_bits: 8, // slice engine
+            ..XbarParams::default()
+        };
+        let mut rng = Rng::new(53);
+        let wide = Matrix::from_fn(3, 2 * p.rows, |_, _| rng.range_i64(0, 1 << 16));
+        let wa = Matrix::from_fn(p.rows, 5, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
+        let wb = Matrix::from_fn(p.rows, 5, |_, _| rng.range_i64(-(1 << 15), 1 << 15));
+        let a = ProgrammedXbar::install(&wa, &p, false);
+        let b = ProgrammedXbar::install(&wb, &p, false);
+        let mut acc = Matrix::zeros(3, 5);
+        a.run_window_acc(&wide, 0, &mut acc);
+        b.run_window_acc(&wide, p.rows, &mut acc);
+        let mut want = a.run_window(&wide, 0);
+        for (v, part) in want.data.iter_mut().zip(b.run_window(&wide, p.rows).data) {
+            *v += part;
+        }
+        assert_eq!(acc, want);
+    }
+
+    #[test]
     fn fused_fast_path_engages_only_when_lossless() {
         let p = XbarParams::default();
         let w = Matrix::zeros(p.rows, 2);
@@ -715,5 +1050,20 @@ mod tests {
         let mut scratch = programmed.scratch();
         let sequential = programmed.run_with_scratch(&x, &mut scratch);
         assert_eq!(parallel, sequential);
+    }
+
+    #[test]
+    fn forced_executor_fan_out_matches_sequential() {
+        let p = XbarParams {
+            adc_bits: 7,
+            ..XbarParams::default()
+        };
+        let (x, w) = rand_xw(63, 5, 12, &p);
+        let programmed = ProgrammedXbar::install(&w, &p, true);
+        let want = programmed.run(&x);
+        for workers in [1, 2, 8] {
+            let got = programmed.run_window_on(&x, 0, &crate::sched::Executor::new(workers));
+            assert_eq!(got, want, "workers={workers}");
+        }
     }
 }

@@ -97,17 +97,25 @@ pub fn noisy_vmm_error(
 
     let iters = p.iters();
     let slices = p.slices();
+    let dac_mask = (1i64 << p.dac_bits) - 1;
     let mut max_err = 0.0f64;
     let mut sum_err = 0.0f64;
     let mut n = 0usize;
 
-    // install noisy cell values once (they persist across iterations)
+    // install noisy cell values once (they persist across iterations),
+    // alongside the ideal integer level planes — the per-iteration
+    // `(wb >> shift) & mask` re-derivation used to run inside the
+    // innermost loop. The float model keeps its own slice-major layout:
+    // it never reads the digit-major planes of `super::ProgrammedXbar`,
+    // so the engine's layout transpose cannot reach into the noise model.
     let mut cells = vec![0.0f64; w.rows * w.cols * slices];
+    let mut level_planes = vec![0i64; w.rows * w.cols * slices];
     for s in 0..slices {
         for r in 0..w.rows {
             for c in 0..w.cols {
                 let wb = (w.at(r, c) + bias) as u64;
-                let lvl = ((wb >> (s as u32 * p.cell_bits)) & ((1 << p.cell_bits) - 1)) as f64;
+                let ilvl = ((wb >> (s as u32 * p.cell_bits)) & ((1 << p.cell_bits) - 1)) as i64;
+                let lvl = ilvl as f64;
                 let mut v = lvl * cell_err(&mut rng);
                 let d = droop(r, c, w.rows, w.cols);
                 v *= if np.compensate_ir {
@@ -118,28 +126,38 @@ pub fn noisy_vmm_error(
                     1.0
                 };
                 cells[(s * w.rows + r) * w.cols + c] = v * d;
+                level_planes[(s * w.rows + r) * w.cols + c] = ilvl;
             }
         }
     }
 
+    // per-row DAC digits extracted once (`iters × kdim`, like the int
+    // engine's digit plane) instead of re-shifting per (column, slice).
+    // Summation order is unchanged, so the floats match the pre-refactor
+    // loop bit-for-bit.
+    let kdim = x.cols;
+    let mut digits = vec![0i64; iters * kdim];
     for br in 0..x.rows {
+        for k in 0..kdim {
+            let mut xv = x.at(br, k);
+            for i in 0..iters {
+                digits[i * kdim + k] = xv & dac_mask;
+                xv >>= p.dac_bits;
+            }
+        }
         for c in 0..w.cols {
             let mut acc = 0.0f64;
             let mut ideal_acc = 0i64;
             for i in 0..iters {
+                let row_digits = &digits[i * kdim..(i + 1) * kdim];
                 for s in 0..slices {
                     let place = (i as u32) * p.dac_bits + (s as u32) * p.cell_bits;
                     let mut col = 0.0f64;
                     let mut ideal_col = 0i64;
-                    for r in 0..x.cols {
-                        let xb = (x.at(br, r) >> (i as u32 * p.dac_bits))
-                            & ((1i64 << p.dac_bits) - 1);
+                    for (r, &xb) in row_digits.iter().enumerate() {
                         if xb != 0 {
                             col += xb as f64 * cells[(s * w.rows + r) * w.cols + c];
-                            let wb = (w.at(r, c) + bias) as u64;
-                            let lvl =
-                                ((wb >> (s as u32 * p.cell_bits)) & ((1 << p.cell_bits) - 1)) as i64;
-                            ideal_col += xb * lvl;
+                            ideal_col += xb * level_planes[(s * w.rows + r) * w.cols + c];
                         }
                     }
                     // ADC rounds the analog sum to the nearest integer code

@@ -11,13 +11,15 @@ use newton::karatsuba::{karatsuba_vmm_raw, DncSchedule};
 use newton::mapping::{Mapping, MappingPolicy};
 use newton::prop_assert;
 use newton::proptest_lite::check;
+use newton::sched::Executor;
 use newton::strassen::{strassen, strassen_with};
 use newton::util::Rng;
 use newton::workloads;
+use newton::xbar::cnn::ProgrammedLinear;
 use newton::xbar::reference::{
     biased_product_reference, vmm_raw_reference, vmm_raw_signed_reference,
 };
-use newton::xbar::{matmul, scale_clamp, vmm_raw, vmm_raw_signed, Matrix, ProgrammedXbar};
+use newton::xbar::{matmul, scale_clamp, vmm_raw, vmm_raw_signed, Matrix, ProgrammedXbar, RunScratch};
 
 fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize, lo: i64, hi: i64) -> Matrix {
     Matrix::from_fn(rows, cols, |_, _| rng.range_i64(lo, hi))
@@ -312,6 +314,88 @@ fn prop_programmed_signed_paths_equal_reference() {
             programmed.run_signed(&xs) == vmm_raw_signed_reference(&xs, &w, &p, adaptive),
             "signed-input path diverged (adc={} adaptive={adaptive})",
             p.adc_bits
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_digit_major_engine_equals_reference_across_workers() {
+    // the digit-major slice engine (k-major planes, zero/uniform slice
+    // classification, per-row digit extraction) must be bit-identical to
+    // the pre-refactor oracle across random shapes, all four ADC regimes,
+    // run_window offsets, and 1/2/8 workers — parallelism and layout are
+    // wall-clock optimisations, never numerics changes
+    check("digit-major==reference", 16, |rng| {
+        let regime = rng.below(4);
+        let (adc_bits, adaptive) = match regime {
+            0 => (9 + rng.below(3) as u32, false), // lossless -> fused
+            1 => (9, true),                        // adaptive
+            2 => (5 + rng.below(4) as u32, false), // lossy
+            _ => (5 + rng.below(4) as u32, true),  // lossy + adaptive
+        };
+        let p = XbarParams {
+            adc_bits,
+            out_shift: rng.below(12) as u32,
+            ..XbarParams::default()
+        };
+        let b = 1 + rng.below(5) as usize;
+        let k = 1 + rng.below(p.rows as u64) as usize;
+        let n = 1 + rng.below(12) as usize;
+        let pad = (rng.below(3) * 7) as usize; // window offset into x
+        let w = rand_matrix(rng, k, n, -(1 << 15), 1 << 15);
+        let wide = rand_matrix(rng, b, pad + k, 0, 1 << 16);
+        let programmed = ProgrammedXbar::install(&w, &p, adaptive);
+        let sliced = Matrix::from_fn(b, k, |r, c| wide.at(r, pad + c));
+        let want = vmm_raw_reference(&sliced, &w, &p, adaptive);
+        prop_assert!(
+            programmed.run_window(&wide, pad) == want,
+            "auto-split run diverged (regime {regime}, b={b} k={k} n={n} pad={pad} shift={})",
+            p.out_shift
+        );
+        for workers in [1usize, 2, 8] {
+            let got = programmed.run_window_on(&wide, pad, &Executor::new(workers));
+            prop_assert!(
+                got == want,
+                "forced {workers}-worker run diverged (regime {regime}, b={b} k={k} n={n} pad={pad})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forward_scratch_reuse_is_pure() {
+    // one reused forward scratch (caller-owned raw accumulator through
+    // ProgrammedLinear::run_with) across repeated and interleaved runs
+    // must be bit-identical to fresh-scratch runs
+    check("forward-scratch-pure", 8, |rng| {
+        let p = XbarParams {
+            adc_bits: 6 + rng.below(4) as u32,
+            ..XbarParams::default()
+        };
+        let adaptive = rng.below(2) == 1;
+        let kdim = 130 + rng.below(140) as usize; // always spans 2 chunks
+        let n = 1 + rng.below(8) as usize;
+        let w = rand_matrix(rng, kdim, n, -(1 << 15), 1 << 15);
+        let layer = ProgrammedLinear::install(&w, &p, adaptive);
+        let x1 = rand_matrix(rng, 2, kdim, 0, 1 << 16);
+        let x2 = rand_matrix(rng, 2, kdim, 0, 1 << 16);
+        let want1 = layer.run(&x1);
+        let want2 = layer.run(&x2);
+        let mut raw = Matrix::zeros(0, 0);
+        let mut xs = RunScratch::empty();
+        prop_assert!(
+            layer.run_with(&x1, &mut raw, &mut xs) == want1,
+            "first scratch run diverged from fresh run"
+        );
+        prop_assert!(
+            layer.run_with(&x2, &mut raw, &mut xs) == want2,
+            "interleaved scratch run diverged"
+        );
+        prop_assert!(
+            layer.run_with(&x1, &mut raw, &mut xs) == want1,
+            "reused forward scratch leaked state"
         );
         Ok(())
     });
