@@ -1,4 +1,4 @@
-//! End-to-end serving driver (EXPERIMENTS.md §End-to-end).
+//! End-to-end serving driver (see rust/ARCHITECTURE.md §Data flow).
 //!
 //! With artifacts present (`make artifacts`): loads the newton-mini stage
 //! artifacts, spins up the coordinator's inter-tile-style pipeline (leader
@@ -16,7 +16,10 @@
 //! For the multi-replica serving path with adaptive/lossy ADC configs and
 //! per-batch deviation reporting, use the CLI — that surface is the single
 //! owner of the flag plumbing: `newton serve --adc adaptive|lossy:<bits>
-//! [--replicas N]`.
+//! [--replicas N] [--pipeline]` (`--pipeline` schedules the conv stages
+//! and classifier tail wavefront-style across the replicas, Newton's
+//! conv-tile/classifier-tile split in software; bare `lossy` means
+//! `lossy:8` — see `AdcKind`).
 //!
 //! For serving over a socket instead of in-process, the same engine sits
 //! behind the `rust/src/net/` TCP endpoint (frame layout and semantics in

@@ -1,11 +1,13 @@
-//! Hot-path timing microbenchmarks (EXPERIMENTS.md §Perf, L3).
+//! Hot-path timing microbenchmarks (PERF.md §Measuring, L3).
 //!
 //! Times the coordinator-side hot paths with a median-of-N harness
 //! (criterion is unavailable offline): the analytic suite evaluation —
 //! sequential vs the parallel `evaluate_grid` engine — the rust golden
 //! model VMM through the legacy per-call engine vs the install-once
 //! `ProgrammedXbar` (per-call and amortised), the programmed CNN forward,
-//! the batcher, and — when artifacts exist — the PJRT execute path.
+//! the batcher, the pipelined staged replica pool (wavefront overlap vs
+//! the sequential whole-batch pass), and — when artifacts exist — the
+//! PJRT execute path.
 //!
 //! Alongside the human table it emits `BENCH_hotpath.json` (median µs per
 //! case plus derived speedups) so future PRs have a perf trajectory to
@@ -18,6 +20,8 @@ use std::time::Instant;
 use newton::cli::Args;
 use newton::config::{ChipConfig, NewtonFeatures, XbarParams};
 use newton::coordinator::batcher::{Batcher, PendingRequest};
+use newton::coordinator::pipeline::forward_pipelined;
+use newton::mapping::{StageMap, StagePolicy};
 use newton::pipeline::{evaluate, evaluate_grid, evaluate_suite};
 use newton::runtime::{default_artifacts_dir, Runtime};
 use newton::sched::{self, Executor};
@@ -156,6 +160,33 @@ fn main() {
         programmed_cnn.forward(&img8)
     });
 
+    // pipelined stage scheduling: stage s of image k+1 overlaps stage s+1
+    // of image k on distinct replicas (coordinator::pipeline wavefront,
+    // newton stage policy: classifier replica isolated). The baseline for
+    // the overlap claim is *device-sequential*: one replica run inside a
+    // pool worker, where the per-VMM batch-row fan-out is suppressed
+    // (sched::in_worker) exactly as it is inside every pipeline stage job
+    // — replicas, not cores, are the unit being provisioned. The
+    // whole-batch pass above (cnn_seq_b8) is NOT that baseline: on the
+    // caller thread its chunked VMMs fan rows across every core, so the
+    // multicore ratio is reported separately and ungated.
+    let cnn_seq_dev_b8 = h.bench("cnn: newton-mini forward b8, one replica in-worker", 3, || {
+        Executor::new(2).map(2, |i| (i == 0).then(|| programmed_cnn.forward_seq(&img8)))
+    });
+    let pipe_pool: Vec<_> = (0..4).map(|_| cnn.program(&p, false)).collect();
+    let map_r4 =
+        StageMap::build(pipe_pool[0].n_conv_stages(), 4, StagePolicy::newton()).unwrap();
+    let exec_r4 = Executor::new(worker_count(4));
+    let cnn_pipe_b8_r4 = h.bench("cnn: newton-mini forward b8, pipelined 4 replicas", 3, || {
+        forward_pipelined(&pipe_pool[..], &map_r4, &img8, &exec_r4)
+    });
+    let map_r2 =
+        StageMap::build(pipe_pool[0].n_conv_stages(), 2, StagePolicy::newton()).unwrap();
+    let exec_r2 = Executor::new(worker_count(2));
+    let cnn_pipe_b8_r2 = h.bench("cnn: newton-mini forward b8, pipelined 2 replicas", 3, || {
+        forward_pipelined(&pipe_pool[..2], &map_r2, &img8, &exec_r2)
+    });
+
     // ---- sched executor: contiguous vs stealing on a skewed mix ------------
     // first eighth of the jobs cost 10x (a resnet column on a design grid):
     // the contiguous split strands every other worker behind worker 0
@@ -230,6 +261,9 @@ fn main() {
     let sched_scaling_speedup = sched_one / sched_steal.max(1e-9);
     let sched_steal_speedup = sched_contig / sched_steal.max(1e-9);
     let cnn_image_split_speedup = cnn_seq_b8 / cnn_par_b8.max(1e-9);
+    let pipeline_speedup_b8 = cnn_seq_dev_b8 / cnn_pipe_b8_r4.max(1e-9);
+    let pipeline_speedup_b8_r2 = cnn_seq_dev_b8 / cnn_pipe_b8_r2.max(1e-9);
+    let pipeline_vs_multicore_b8 = cnn_seq_b8 / cnn_pipe_b8_r4.max(1e-9);
     println!("\nderived:");
     println!("  amortised VMM speedup (installed vs legacy) : {vmm_speedup:7.1}x (target >= 5x)");
     println!("  slice-engine speedup (adaptive b8)          : {vmm_slice_speedup:7.1}x (target >= 2x)");
@@ -241,6 +275,9 @@ fn main() {
     println!("  sched scaling (1 worker vs {pool} stealing)     : {sched_scaling_speedup:7.1}x");
     println!("  sched stealing vs contiguous (skewed mix)   : {sched_steal_speedup:7.1}x");
     println!("  cnn b8 per-image split vs sequential        : {cnn_image_split_speedup:7.1}x");
+    println!("  cnn b8 pipelined stages, 4 replicas         : {pipeline_speedup_b8:7.1}x over one device-sequential replica");
+    println!("  cnn b8 pipelined stages, 2 replicas         : {pipeline_speedup_b8_r2:7.1}x over one device-sequential replica");
+    println!("  cnn b8 pipelined vs multicore whole-batch   : {pipeline_vs_multicore_b8:7.1}x (informational)");
 
     let mut json = String::from("{\n  \"cases\": [\n");
     for (i, (name, med, n)) in h.results.iter().enumerate() {
@@ -250,7 +287,7 @@ fn main() {
         ));
     }
     json.push_str(&format!(
-        "  ],\n  \"derived\": {{\n    \"vmm_amortised_speedup\": {vmm_speedup:.2},\n    \"vmm_slice_engine_speedup\": {vmm_slice_speedup:.2},\n    \"slice_speedup_adaptive_b1\": {slice_adaptive_b1_speedup:.2},\n    \"slice_speedup_adaptive_b8\": {vmm_slice_speedup:.2},\n    \"slice_speedup_lossy_b1\": {slice_lossy_b1_speedup:.2},\n    \"slice_speedup_lossy_b8\": {slice_lossy_b8_speedup:.2},\n    \"suite_parallel_speedup\": {suite_speedup:.2},\n    \"cnn_programmed_speedup\": {cnn_speedup:.2},\n    \"sched_scaling_speedup\": {sched_scaling_speedup:.2},\n    \"sched_steal_speedup\": {sched_steal_speedup:.2},\n    \"cnn_image_split_speedup\": {cnn_image_split_speedup:.2}\n  }}\n}}\n"
+        "  ],\n  \"derived\": {{\n    \"vmm_amortised_speedup\": {vmm_speedup:.2},\n    \"vmm_slice_engine_speedup\": {vmm_slice_speedup:.2},\n    \"slice_speedup_adaptive_b1\": {slice_adaptive_b1_speedup:.2},\n    \"slice_speedup_adaptive_b8\": {vmm_slice_speedup:.2},\n    \"slice_speedup_lossy_b1\": {slice_lossy_b1_speedup:.2},\n    \"slice_speedup_lossy_b8\": {slice_lossy_b8_speedup:.2},\n    \"suite_parallel_speedup\": {suite_speedup:.2},\n    \"cnn_programmed_speedup\": {cnn_speedup:.2},\n    \"sched_scaling_speedup\": {sched_scaling_speedup:.2},\n    \"sched_steal_speedup\": {sched_steal_speedup:.2},\n    \"cnn_image_split_speedup\": {cnn_image_split_speedup:.2},\n    \"pipeline_speedup_b8\": {pipeline_speedup_b8:.2},\n    \"pipeline_speedup_b8_r2\": {pipeline_speedup_b8_r2:.2},\n    \"pipeline_vs_multicore_b8\": {pipeline_vs_multicore_b8:.2}\n  }}\n}}\n"
     ));
     match std::fs::write("BENCH_hotpath.json", &json) {
         Ok(()) => println!("\nwrote BENCH_hotpath.json"),

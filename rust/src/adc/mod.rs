@@ -1,5 +1,10 @@
 //! SAR ADC behavioral + power model (paper §III-A3, Figs 5 & 12).
 //!
+//! Serve-path role: none directly — the serving stack's ADC *numerics*
+//! live in [`crate::xbar`] (`AdcKind` selects them); this module is the
+//! energy/schedule model behind the adaptive-ADC savings those configs
+//! claim.
+//!
 //! A SAR ADC binary-searches the input voltage MSB-first; its energy splits
 //! across six components (Kull et al. [18], Murmann survey [23]). We model
 //! four groups: the capacitive DAC (CDAC), digital logic, other analog

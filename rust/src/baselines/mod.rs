@@ -1,5 +1,6 @@
 //! Digital baselines: the ideal neuron, DaDianNao, Eyeriss and TPU-1
-//! (paper §I energy ladder and Fig 24).
+//! (paper §I energy ladder and Fig 24). Analytic only — nothing here is
+//! on the serve path; the figures cite it as the comparison ladder.
 //!
 //! The first three are energy-per-operation models built from the same
 //! component constants as the main model (paper §I: ideal 0.33 pJ,

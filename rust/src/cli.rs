@@ -13,8 +13,8 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
     ("incremental", "Fig-20-style technique stacking table"),
     ("sweep", "design-space sweeps (--what ima|buffer|fc)"),
     ("verify", "run artifacts against golden test vectors"),
-    ("serve", "in-process batched serving demo (--adc, --replicas)"),
-    ("serve-net", "TCP serving endpoint (--addr, --adc, --replicas)"),
+    ("serve", "in-process batched serving demo (--adc, --replicas, --pipeline)"),
+    ("serve-net", "TCP serving endpoint (--addr, --adc, --replicas, --pipeline)"),
     ("bench-net", "load-generate against a serve-net endpoint (--addr)"),
     ("sched-stress", "work-stealing executor stress smoke (CI)"),
     ("export", "write every figure's data series as CSV (--out)"),

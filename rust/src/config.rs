@@ -89,7 +89,12 @@ pub enum AdcKind {
     /// Adaptive SAR scheme (§III-A3): bits outside the kept output window
     /// are gated; numerics stay within the analytic rounding bound.
     Adaptive,
-    /// Truncating lossy ADC at the given resolution (bits).
+    /// Truncating lossy ADC at the given resolution (bits). On the CLI a
+    /// bare `--adc lossy` means `Lossy(8)` — one bit below the default
+    /// geometry's 9-bit lossless budget, i.e. the cheapest resolution that
+    /// actually truncates (see [`AdcKind::parse`]). A resolution at or
+    /// above [`XbarParams::lossless_adc_bits`] keeps the `lossy` label but
+    /// is numerically exact, so no golden reference install rides along.
     Lossy(u32),
 }
 

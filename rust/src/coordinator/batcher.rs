@@ -180,6 +180,32 @@ mod tests {
     }
 
     #[test]
+    fn drain_flushes_pending_batches_in_fifo_order_with_partial_tail_last() {
+        // the drain-on-shutdown contract the dispatcher (and the pipelined
+        // serving path behind it) relies on: repeated take_batch calls — a
+        // drain is exactly that loop — return full batches in submission
+        // order and the partial tail last, never reordering ids across the
+        // drain boundary
+        let mut b = Batcher::new(4, 2, Duration::from_secs(3600));
+        for i in 0..10 {
+            b.push(req(i, 2));
+        }
+        let mut drained: Vec<Vec<u64>> = Vec::new();
+        while let Some(batch) = b.take_batch() {
+            drained.push(batch.ids.clone());
+            // padding appears only in the final (partial) flush
+            if batch.n_real < 4 {
+                assert!(b.take_batch().is_none(), "partial batch was not the tail");
+                assert!(batch.data[batch.n_real * 2..].iter().all(|&v| v == 0));
+            }
+        }
+        assert_eq!(drained, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9]]);
+        let flat: Vec<u64> = drained.into_iter().flatten().collect();
+        assert_eq!(flat, (0..10).collect::<Vec<_>>(), "drain reordered requests");
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
     #[should_panic(expected = "bad image shape")]
     fn rejects_wrong_shape() {
         let mut b = Batcher::new(2, 4, Duration::from_secs(1));

@@ -14,12 +14,20 @@
 //! are served next to a lossless golden install, and every batch reports
 //! its max-abs-error against that golden reference — fidelity-vs-cost
 //! sweeps (arXiv:2109.01262 / 2403.13082) against served traffic.
+//!
+//! [`GoldenServer::with_pipeline`] switches the same pool to *pipelined
+//! stage scheduling* ([`crate::coordinator::pipeline`]): instead of whole
+//! batches pinned to single replicas, each batch's images flow through the
+//! per-stage units wavefront-style across the pool, with stage placement
+//! governed by a [`StageMap`] — bit-identical either way.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::config::{AdcKind, XbarParams};
 use crate::coordinator::batcher::{Batch, Batcher, PendingRequest};
+use crate::coordinator::pipeline::forward_pipelined;
+use crate::mapping::{StageMap, StagePolicy};
 use crate::sched::Executor;
 use crate::xbar::cnn::{ForwardScratch, MiniCnn, ProgrammedCnn, Tensor};
 
@@ -39,6 +47,10 @@ pub struct GoldenServer {
     p: XbarParams,
     adaptive: bool,
     batch: usize,
+    /// Pipelined stage scheduling: when set, batches run wavefront-style
+    /// through [`crate::coordinator::pipeline`] across the replica pool
+    /// under this stage map, instead of whole batches on one replica.
+    pipeline: Option<StageMap>,
     /// Forward scratch reused across sequentially served batches (the
     /// net dispatcher and single-worker serving paths). `try_lock` only:
     /// concurrent batch jobs fall back to a fresh scratch instead of
@@ -51,7 +63,10 @@ pub struct GoldenServer {
 pub struct BatchReport {
     /// Batch index in submission order (reports come back in this order).
     pub index: usize,
-    /// Replica that executed the batch (round-robin affinity).
+    /// Replica that executed the batch (round-robin affinity). In
+    /// pipelined mode the batch flows across the whole pool, so this is
+    /// the replica of the *classifier* stage — the one that produced the
+    /// logits.
     pub replica: usize,
     /// Request ids of the real rows.
     pub ids: Vec<u64>,
@@ -141,6 +156,7 @@ impl GoldenServer {
             p,
             adaptive,
             batch,
+            pipeline: None,
             scratch: Mutex::new(ForwardScratch::new()),
         }
     }
@@ -152,9 +168,41 @@ impl GoldenServer {
 
     /// Multi-replica serving: `n_replicas` installs of the `kind` serving
     /// config (plus a lossless golden install when `kind` can deviate).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use newton::config::AdcKind;
+    /// use newton::coordinator::GoldenServer;
+    ///
+    /// // 2 adaptive-ADC replicas at batch 4; adaptive can deviate from
+    /// // lossless, so a golden reference install rides along
+    /// let s = GoldenServer::replicated(0, AdcKind::Adaptive, 2, 4);
+    /// assert_eq!(s.n_replicas(), 2);
+    /// assert_eq!(s.batch(), 4);
+    /// assert!(s.has_golden_reference());
+    /// ```
     pub fn replicated(seed: u64, kind: AdcKind, n_replicas: usize, batch: usize) -> Self {
         let (p, adaptive) = kind.apply(&XbarParams::default());
         Self::build(seed, p, adaptive, n_replicas, batch, Some(kind))
+    }
+
+    /// Enable pipelined stage scheduling: batches flow wavefront-style
+    /// through the per-stage units across the replica pool
+    /// ([`crate::coordinator::pipeline`]), with stage → replica placement
+    /// built under `policy`'s sharing constraints. Bit-identical to the
+    /// non-pipelined path. Fails when the policy cannot be satisfied with
+    /// this replica count (e.g. [`StagePolicy::newton`] needs >= 2
+    /// replicas for conv/classifier isolation).
+    pub fn with_pipeline(mut self, policy: StagePolicy) -> Result<Self, String> {
+        let map = crate::coordinator::pipeline::build_map(&self.replicas[..], policy)?;
+        self.pipeline = Some(map);
+        Ok(self)
+    }
+
+    /// The stage → replica map when pipelined stage scheduling is on.
+    pub fn pipeline_map(&self) -> Option<&StageMap> {
+        self.pipeline.as_ref()
     }
 
     /// The standard fallback configuration shared by `newton serve` and the
@@ -238,6 +286,17 @@ impl GoldenServer {
         while let Some(b) = batcher.take_batch() {
             batches.push(b);
         }
+        if self.pipeline.is_some() {
+            // pipelined mode: batches run one at a time — the wavefront
+            // itself keeps the replica pool busy, and overlapping two
+            // batches would put one physical replica under two stages at
+            // once (exactly what the stage map forbids)
+            return batches
+                .iter()
+                .enumerate()
+                .map(|(bi, b)| self.run_batch(bi, b, exec.workers()))
+                .collect();
+        }
         // divide the pool: in-flight batch jobs × per-image workers ≈ pool
         // (ceil so an uneven batch count never idles cores)
         let in_flight = exec.workers().min(batches.len()).max(1);
@@ -255,31 +314,50 @@ impl GoldenServer {
         self.run_batch(index, b, crate::util::worker_count(self.batch))
     }
 
+    /// Run `f` with the server-owned forward scratch when it is free, else
+    /// a fresh one — concurrent batch jobs degrade to allocation, never to
+    /// a lock convoy.
+    fn with_scratch<T>(&self, f: impl FnOnce(&mut ForwardScratch) -> T) -> T {
+        match self.scratch.try_lock() {
+            Ok(mut g) => f(&mut g),
+            Err(_) => f(&mut ForwardScratch::new()),
+        }
+    }
+
     fn run_batch(&self, index: usize, b: &Batch, image_workers: usize) -> BatchReport {
-        let replica = index % self.replicas.len();
         let t = tensor_from_flat(&b.data, self.batch);
-        let (served, want) = if image_workers <= 1 || self.batch <= 1 {
-            // sequential forward: reuse the server-owned scratch across
-            // served batches (im2col patches + raw accumulators survive
-            // between batches). try_lock so concurrent sequential batch
-            // jobs degrade to a fresh scratch, never to lock convoy.
-            let mut owned: Option<ForwardScratch> = None;
-            let mut guard = self.scratch.try_lock();
-            let scratch = match guard {
-                Ok(ref mut g) => &mut **g,
-                Err(_) => owned.get_or_insert_with(ForwardScratch::new),
-            };
-            let served = self.replicas[replica].forward_seq_with(&t, scratch);
+        let (replica, served, want) = if let Some(map) = &self.pipeline {
+            // wavefront over the replica pool: one worker per distinct
+            // replica in the map is the concurrency ceiling, more would
+            // only idle. The report's replica is the classifier stage's —
+            // the one that produced these logits.
+            let exec = Executor::new(image_workers.clamp(1, map.concurrency()));
+            let served = forward_pipelined(&self.replicas[..], map, &t, &exec);
             let want = self
                 .golden
                 .as_ref()
-                .map(|g| g.forward_seq_with(&t, scratch));
-            (served, want)
+                .map(|g| self.with_scratch(|s| g.forward_seq_with(&t, s)));
+            (*map.assignment.last().unwrap(), served, want)
+        } else if image_workers <= 1 || self.batch <= 1 {
+            // sequential forward: reuse the server-owned scratch across
+            // served batches (im2col patches + raw accumulators survive
+            // between batches).
+            let replica = index % self.replicas.len();
+            let (served, want) = self.with_scratch(|scratch| {
+                let served = self.replicas[replica].forward_seq_with(&t, scratch);
+                let want = self
+                    .golden
+                    .as_ref()
+                    .map(|g| g.forward_seq_with(&t, scratch));
+                (served, want)
+            });
+            (replica, served, want)
         } else {
+            let replica = index % self.replicas.len();
             let image_exec = Executor::new(image_workers);
             let served = self.replicas[replica].forward_on(&t, &image_exec);
             let want = self.golden.as_ref().map(|g| g.forward_on(&t, &image_exec));
-            (served, want)
+            (replica, served, want)
         };
         let max_abs_err = match &want {
             Some(want) => {
@@ -336,10 +414,14 @@ impl crate::net::Engine for GoldenServer {
 
     fn describe(&self) -> String {
         format!(
-            "golden newton-mini · adc {} · {} replica(s){} · batch {}",
+            "golden newton-mini · adc {} · {} replica(s){}{} · batch {}",
             self.kind.label(),
             self.replicas.len(),
             if self.golden.is_some() { " + lossless golden" } else { "" },
+            match &self.pipeline {
+                Some(map) => format!(" · pipelined stages {:?}", map.assignment),
+                None => String::new(),
+            },
             self.batch
         )
     }
@@ -442,6 +524,66 @@ mod tests {
         assert_eq!(got, want);
         let ids: Vec<u64> = reports.iter().flat_map(|r| r.ids.clone()).collect();
         assert_eq!(ids, (0..5u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pipeline_policy_feasibility_is_checked_at_construction() {
+        let err = GoldenServer::replicated(0, AdcKind::Exact, 1, 2)
+            .with_pipeline(StagePolicy::newton());
+        assert!(err.is_err(), "newton policy needs a dedicated classifier replica");
+        let s = GoldenServer::replicated(0, AdcKind::Exact, 1, 2)
+            .with_pipeline(StagePolicy::unconstrained())
+            .unwrap();
+        let map = s.pipeline_map().unwrap();
+        assert_eq!(map.assignment, vec![0, 0, 0, 0]);
+        let s = GoldenServer::replicated(0, AdcKind::Exact, 2, 2)
+            .with_pipeline(StagePolicy::newton())
+            .unwrap();
+        assert_eq!(s.pipeline_map().unwrap().assignment, vec![0, 0, 0, 1]);
+        assert!(crate::net::Engine::describe(&s).contains("pipelined stages"));
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn pipelined_serving_is_bit_identical_to_non_pipelined() {
+        // same seed, same config: the pipelined wavefront over 3 replicas
+        // must reproduce the single-replica sequential logits bit for bit,
+        // and the reported replica is the classifier stage's
+        let imgs = images(5, 21); // 2.5 batches exercises tail padding
+        let plain = GoldenServer::replicated(0, AdcKind::Exact, 1, 2);
+        let want = plain.infer(&imgs);
+        let piped = GoldenServer::replicated(0, AdcKind::Exact, 3, 2)
+            .with_pipeline(StagePolicy::newton())
+            .unwrap();
+        let reports = piped.serve_batches(&imgs);
+        assert_eq!(reports.len(), 3);
+        let classifier = *piped.pipeline_map().unwrap().assignment.last().unwrap();
+        let mut got: Vec<Vec<i32>> = Vec::new();
+        for (bi, r) in reports.iter().enumerate() {
+            assert_eq!(r.index, bi);
+            assert_eq!(r.replica, classifier);
+            assert_eq!(r.max_abs_err, 0, "exact pipelined serving deviated");
+            got.extend(r.logits.iter().cloned());
+        }
+        assert_eq!(got, want, "pipelined stage scheduling changed the numbers");
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn pipelined_adaptive_serving_keeps_the_golden_deviation_report() {
+        // deviation-vs-lossless must survive the pipelined path unchanged
+        let imgs = images(4, 23);
+        let plain = GoldenServer::replicated(0, AdcKind::Adaptive, 2, 2);
+        let piped = GoldenServer::replicated(0, AdcKind::Adaptive, 2, 2)
+            .with_pipeline(StagePolicy::newton())
+            .unwrap();
+        let want = plain.serve_batches(&imgs);
+        let got = piped.serve_batches(&imgs);
+        assert_eq!(want.len(), got.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.logits, g.logits, "batch {}", w.index);
+            assert_eq!(w.max_abs_err, g.max_abs_err, "batch {}", w.index);
+        }
     }
 
     #[test]

@@ -12,13 +12,22 @@
 //! Alongside the real numerics, the coordinator reports *simulated* hardware
 //! metrics for the served model by running the same analytic pipeline model
 //! used for the paper's figures on the newton-mini geometry.
+//!
+//! Two pipelines live here, one per backend: [`server::PipelineServer`]
+//! runs the PJRT stage artifacts on one thread per stage (artifact-gated),
+//! and [`pipeline`] schedules the golden engine's per-stage units
+//! wavefront-style over a replica pool under the sharing constraints of a
+//! [`crate::mapping::StageMap`] (`GoldenServer` serves either way; see
+//! `--pipeline` on `newton serve`/`serve-net`).
 
 pub mod batcher;
 pub mod golden;
+pub mod pipeline;
 pub mod server;
 
 pub use batcher::{Batch, Batcher};
 pub use golden::{serve_totals, BatchReport, GoldenServer};
+pub use pipeline::{build_map, forward_pipelined, ScratchPool, StagePool};
 pub use server::{PipelineServer, ServerConfig, ServerReport};
 
 use crate::workloads::{Layer, Network};

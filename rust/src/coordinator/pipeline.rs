@@ -1,0 +1,438 @@
+//! Pipelined stage scheduling over a replica pool (paper §III-B/§IV: the
+//! inter-tile pipeline over heterogeneous conv/classifier tiles).
+//!
+//! Newton keeps early conv tiles and the classifier tail busy at the same
+//! time: while image `k` is in conv1, image `k+1` is already in conv0 on a
+//! *different* tile group. This module is the software twin of that
+//! schedule for the golden serving stack: a batch of images flows through
+//! the per-stage units [`ProgrammedCnn::run_stage`] cut out of the CNN,
+//! mapped onto a pool of installed replicas by a
+//! [`StageMap`] (which records Newton's sharing constraints —
+//! the classifier tail never co-resides with a conv stage — instead of
+//! hard-coding them here).
+//!
+//! The schedule is a deterministic wavefront: wave `t` executes every
+//! ready cell `(image k, stage s)` with `k + s == t`, so stage `s` of
+//! image `k+1` overlaps stage `s+1` of image `k` exactly as in the chip's
+//! pipeline diagram. Cells of one wave that map to the same replica are
+//! grouped into a single job (a physical replica runs one stage at a
+//! time); distinct replicas run concurrently through the work-stealing
+//! executor ([`crate::sched`] — each wave is one `Executor::map` whose
+//! indivisible tail rides the injector queue). Every job writes its own
+//! result slot, so the pipelined forward is **bit-identical** to
+//! [`ProgrammedCnn::forward_seq`] for any replica count, worker count, or
+//! steal schedule — pinned by `prop_pipelined_forward_equals_seq_across_replicas_and_workers` in
+//! `rust/tests/properties.rs`.
+//!
+//! Scratch follows [`crate::mapping::StagePolicy::pooled_scratch`] (the
+//! per-worker scratch pooling left open by PR 4): one
+//! [`ForwardScratch`] per replica lives in a [`ScratchPool`], handed to
+//! whichever job runs on that replica this wave — race-free because a
+//! replica executes at most one stage per wave, and pure because scratch
+//! reuse is observationally pure (property-pinned since PR 4).
+//!
+//! The pool behind the scheduler is the [`StagePool`] trait, not a
+//! concrete engine: `[ProgrammedCnn]` implements it for the golden
+//! engine, and a PJRT-backed (or mixed) pool can implement it later
+//! without touching the scheduler — the same seam
+//! [`crate::net::Engine`] cut for the wire layer.
+
+use std::sync::Mutex;
+
+use crate::mapping::{StageMap, StagePolicy, StageRole};
+use crate::sched::Executor;
+use crate::xbar::cnn::{ForwardScratch, ProgrammedCnn, StageData, Tensor};
+use crate::xbar::Matrix;
+
+/// A pool of installed serving replicas, each able to execute any single
+/// pipeline stage. The seam between the wavefront scheduler and the
+/// compute backend: the golden engine implements it for `[ProgrammedCnn]`;
+/// a PJRT or heterogeneous pool slots in later without touching the
+/// scheduler (mirroring [`crate::net::Engine`] one layer down).
+pub trait StagePool: Sync {
+    /// Installed replicas the scheduler may map stages onto.
+    fn n_replicas(&self) -> usize;
+    /// Pipeline stages per image (conv stages + classifier tail).
+    fn n_stages(&self) -> usize;
+    /// Role of stage `s` — [`build_map`] derives the conv/classifier
+    /// split the [`StageMap`] sharing constraints apply to from these.
+    fn stage_role(&self, s: usize) -> StageRole;
+    /// Execute stage `s` on replica `replica`. Must be deterministic and
+    /// callable concurrently for distinct replicas.
+    fn run_stage(
+        &self,
+        replica: usize,
+        s: usize,
+        input: &StageData,
+        scratch: &mut ForwardScratch,
+    ) -> StageData;
+}
+
+/// A homogeneous golden-engine pool: every element is an install of the
+/// same weights and ADC config, so any replica may run any stage with
+/// bit-identical results.
+impl StagePool for [ProgrammedCnn] {
+    fn n_replicas(&self) -> usize {
+        self.len()
+    }
+
+    fn n_stages(&self) -> usize {
+        self[0].n_stages()
+    }
+
+    fn stage_role(&self, s: usize) -> StageRole {
+        if s < self[0].n_conv_stages() {
+            StageRole::Conv
+        } else {
+            StageRole::Classifier
+        }
+    }
+
+    fn run_stage(
+        &self,
+        replica: usize,
+        s: usize,
+        input: &StageData,
+        scratch: &mut ForwardScratch,
+    ) -> StageData {
+        self[replica].run_stage(s, input, scratch)
+    }
+}
+
+/// Per-replica forward-scratch pooling
+/// ([`crate::mapping::StagePolicy::pooled_scratch`]). A replica runs at most one
+/// stage per wave, so one scratch per replica suffices; the mutex is
+/// uncontended in steady state and only guards against a misbehaving
+/// [`StagePool`] mapping two concurrent jobs to one replica.
+pub struct ScratchPool {
+    slots: Option<Vec<Mutex<ForwardScratch>>>,
+}
+
+impl ScratchPool {
+    /// `pooled = false` disables reuse: every job allocates a fresh
+    /// scratch (the measurable baseline for the pooling win).
+    pub fn new(n_replicas: usize, pooled: bool) -> Self {
+        ScratchPool {
+            slots: pooled.then(|| {
+                (0..n_replicas)
+                    .map(|_| Mutex::new(ForwardScratch::new()))
+                    .collect()
+            }),
+        }
+    }
+
+    /// Run `f` with replica `r`'s pooled scratch (or a fresh one when
+    /// pooling is off).
+    pub fn with<T>(&self, r: usize, f: impl FnOnce(&mut ForwardScratch) -> T) -> T {
+        match &self.slots {
+            Some(slots) => f(&mut slots[r].lock().unwrap()),
+            None => f(&mut ForwardScratch::new()),
+        }
+    }
+}
+
+/// Build the stage → replica map for `pool` under `policy`, deriving the
+/// conv/classifier split from the pool's [`StagePool::stage_role`]s. The
+/// wavefront scheduler assumes the stage chain is convs followed by one
+/// classifier tail (the only shape [`ProgrammedCnn`] produces); pools
+/// with any other role layout are rejected here, before anything runs.
+pub fn build_map<P: StagePool + ?Sized>(
+    pool: &P,
+    policy: StagePolicy,
+) -> Result<StageMap, String> {
+    let n_stages = pool.n_stages();
+    let n_conv = (0..n_stages)
+        .filter(|&s| pool.stage_role(s) == StageRole::Conv)
+        .count();
+    if n_conv + 1 != n_stages || pool.stage_role(n_stages - 1) != StageRole::Classifier {
+        return Err(
+            "stage pool must be conv stages followed by one classifier tail".to_string(),
+        );
+    }
+    StageMap::build(n_conv, pool.n_replicas(), policy)
+}
+
+/// Pipelined staged forward over a replica pool: images of `img` flow
+/// through the stage pipeline wavefront-style (stage `s` of image `k+1`
+/// concurrent with stage `s+1` of image `k` on distinct replicas, as
+/// scheduled by `map`). Returns the `(B, classes)` logits matrix,
+/// bit-identical to [`ProgrammedCnn::forward_seq`] on the whole batch.
+pub fn forward_pipelined<P: StagePool + ?Sized>(
+    pool: &P,
+    map: &StageMap,
+    img: &Tensor,
+    exec: &Executor,
+) -> Matrix {
+    let n_stages = pool.n_stages();
+    assert_eq!(
+        map.assignment.len(),
+        n_stages,
+        "stage map was built for a different pipeline depth"
+    );
+    assert!(
+        map.n_replicas <= pool.n_replicas(),
+        "stage map wants {} replicas, pool has {}",
+        map.n_replicas,
+        pool.n_replicas()
+    );
+    assert!(img.b > 0, "empty batch");
+
+    // per-image in-flight activation; slot k is taken for the duration of
+    // image k's wave cell and restored with the stage output
+    let mut state: Vec<Option<StageData>> = (0..img.b)
+        .map(|k| Some(StageData::Act(img.image(k))))
+        .collect();
+    let scratch = ScratchPool::new(pool.n_replicas(), map.policy.pooled_scratch);
+
+    for wave in 0..(img.b + n_stages - 1) {
+        // ready cells on this anti-diagonal (k + s == wave), grouped by
+        // replica: same-replica cells serialise inside one job, distinct
+        // replicas overlap across jobs
+        let mut groups: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
+        for s in 0..n_stages {
+            let Some(k) = wave.checked_sub(s) else { break };
+            if k >= img.b {
+                continue;
+            }
+            let r = map.replica_of(s);
+            match groups.iter_mut().find(|(gr, _)| *gr == r) {
+                Some((_, cells)) => cells.push((k, s)),
+                None => groups.push((r, vec![(k, s)])),
+            }
+        }
+        let inputs: Vec<Vec<(usize, usize, StageData)>> = groups
+            .iter()
+            .map(|(_, cells)| {
+                cells
+                    .iter()
+                    .map(|&(k, s)| (k, s, state[k].take().expect("stage input ready")))
+                    .collect()
+            })
+            .collect();
+        let outs = exec.map(groups.len(), |g| {
+            let r = groups[g].0;
+            scratch.with(r, |scr| {
+                inputs[g]
+                    .iter()
+                    .map(|(k, s, data)| (*k, pool.run_stage(r, *s, data, scr)))
+                    .collect::<Vec<(usize, StageData)>>()
+            })
+        });
+        for group in outs {
+            for (k, data) in group {
+                state[k] = Some(data);
+            }
+        }
+    }
+
+    // reassemble the (B, classes) logits in image order
+    let mut rows: Vec<Matrix> = Vec::with_capacity(img.b);
+    for slot in state {
+        let logits = slot.expect("image completed the pipeline").logits();
+        debug_assert_eq!(logits.rows, 1, "per-image stage chain widened its batch");
+        rows.push(logits);
+    }
+    let cols = rows[0].cols;
+    let mut out = Matrix::zeros(img.b, cols);
+    for (k, row) in rows.into_iter().enumerate() {
+        out.data[k * cols..(k + 1) * cols].copy_from_slice(&row.data);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::StagePolicy;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Cheap synthetic pool over 1x1x1 "images": stage `s` on replica `r`
+    /// appends digit `s + 1` to the running value (base 10), so the final
+    /// "logits" encode the exact stage order each image saw; the last
+    /// stage emits logits. Also asserts no replica ever runs two cells
+    /// concurrently.
+    struct TracePool {
+        n_replicas: usize,
+        n_stages: usize,
+        active: Vec<AtomicUsize>,
+        max_overlap: AtomicUsize,
+    }
+
+    impl TracePool {
+        fn new(n_replicas: usize, n_stages: usize) -> Self {
+            TracePool {
+                n_replicas,
+                n_stages,
+                active: (0..n_replicas).map(|_| AtomicUsize::new(0)).collect(),
+                max_overlap: AtomicUsize::new(0),
+            }
+        }
+    }
+
+    impl StagePool for TracePool {
+        fn n_replicas(&self) -> usize {
+            self.n_replicas
+        }
+
+        fn n_stages(&self) -> usize {
+            self.n_stages
+        }
+
+        fn stage_role(&self, s: usize) -> StageRole {
+            if s + 1 < self.n_stages {
+                StageRole::Conv
+            } else {
+                StageRole::Classifier
+            }
+        }
+
+        fn run_stage(
+            &self,
+            replica: usize,
+            s: usize,
+            input: &StageData,
+            _scratch: &mut ForwardScratch,
+        ) -> StageData {
+            let before = self.active[replica].fetch_add(1, Ordering::SeqCst);
+            assert_eq!(before, 0, "replica {replica} ran two stages concurrently");
+            // count replicas busy right now, across the pool
+            let busy = self
+                .active
+                .iter()
+                .map(|a| a.load(Ordering::SeqCst))
+                .sum::<usize>();
+            self.max_overlap.fetch_max(busy, Ordering::SeqCst);
+            // long enough that concurrent wave jobs reliably overlap even
+            // when worker spawn is slow on a loaded CI box
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            let StageData::Act(t) = input else {
+                panic!("stage {s}: want activation");
+            };
+            let v = t.at(0, 0, 0, 0) * 10 + (s as i64 + 1);
+            self.active[replica].fetch_sub(1, Ordering::SeqCst);
+            if s + 1 == self.n_stages {
+                StageData::Logits(Matrix::from_fn(1, 1, |_, _| v))
+            } else {
+                let mut out = Tensor::zeros(1, 1, 1, 1);
+                out.set(0, 0, 0, 0, v);
+                StageData::Act(out)
+            }
+        }
+    }
+
+    fn trace_images(b: usize) -> Tensor {
+        let mut t = Tensor::zeros(b, 1, 1, 1);
+        for k in 0..b {
+            t.set(k, 0, 0, 0, (k + 1) as i64);
+        }
+        t
+    }
+
+    /// Image k's expected trace: seed k+1 with digits 1..=n_stages
+    /// appended in order.
+    fn want_trace(b: usize, n_stages: usize) -> Vec<i64> {
+        (0..b)
+            .map(|k| {
+                let mut v = (k + 1) as i64;
+                for s in 0..n_stages {
+                    v = v * 10 + (s as i64 + 1);
+                }
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn wavefront_runs_every_stage_in_order_for_every_image() {
+        for (replicas, workers) in [(1, 1), (2, 2), (4, 2), (4, 8)] {
+            let policy = if replicas == 1 {
+                StagePolicy::unconstrained()
+            } else {
+                StagePolicy::newton()
+            };
+            let pool = TracePool::new(replicas, 4);
+            // build_map derives the conv/classifier split from stage_role
+            let map = build_map(&pool, policy).unwrap();
+            assert_eq!(map, StageMap::build(3, replicas, policy).unwrap());
+            let out = forward_pipelined(
+                &pool,
+                &map,
+                &trace_images(5),
+                &Executor::new(workers),
+            );
+            assert_eq!(out.rows, 5);
+            assert_eq!(out.data, want_trace(5, 4), "r={replicas} w={workers}");
+        }
+    }
+
+    #[test]
+    fn distinct_replicas_actually_overlap() {
+        // 4 stages on 4 replicas, plenty of images and workers: at some
+        // wave at least two replicas must be busy simultaneously (the
+        // stage sleep spans the wave's concurrent jobs)
+        let pool = TracePool::new(4, 4);
+        let map = StageMap::build(3, 4, StagePolicy::newton()).unwrap();
+        let out = forward_pipelined(&pool, &map, &trace_images(8), &Executor::new(4));
+        assert_eq!(out.data, want_trace(8, 4));
+        assert!(
+            pool.max_overlap.load(Ordering::SeqCst) >= 2,
+            "no stage overlap observed on a 4-replica pool"
+        );
+    }
+
+    #[test]
+    fn single_worker_pipeline_is_equivalent_and_sequential() {
+        let pool = TracePool::new(4, 4);
+        let map = StageMap::build(3, 4, StagePolicy::newton()).unwrap();
+        let out = forward_pipelined(&pool, &map, &trace_images(3), &Executor::new(1));
+        assert_eq!(out.data, want_trace(3, 4));
+        assert_eq!(pool.max_overlap.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn unpooled_scratch_matches_pooled() {
+        let mut unpooled = StagePolicy::newton();
+        unpooled.pooled_scratch = false;
+        let pool = TracePool::new(2, 4);
+        let map = StageMap::build(3, 2, unpooled).unwrap();
+        let out = forward_pipelined(&pool, &map, &trace_images(4), &Executor::new(2));
+        assert_eq!(out.data, want_trace(4, 4));
+    }
+
+    #[test]
+    fn build_map_rejects_non_conv_classifier_layouts() {
+        // a pool whose roles are not convs-then-classifier must be
+        // refused before anything runs
+        struct AllConv(TracePool);
+        impl StagePool for AllConv {
+            fn n_replicas(&self) -> usize {
+                self.0.n_replicas()
+            }
+            fn n_stages(&self) -> usize {
+                self.0.n_stages()
+            }
+            fn stage_role(&self, _s: usize) -> StageRole {
+                StageRole::Conv
+            }
+            fn run_stage(
+                &self,
+                r: usize,
+                s: usize,
+                input: &StageData,
+                scratch: &mut ForwardScratch,
+            ) -> StageData {
+                self.0.run_stage(r, s, input, scratch)
+            }
+        }
+        let err = build_map(&AllConv(TracePool::new(2, 3)), StagePolicy::newton());
+        assert!(err.is_err(), "all-conv pool accepted");
+    }
+
+    #[test]
+    #[should_panic(expected = "different pipeline depth")]
+    fn mismatched_stage_map_is_rejected() {
+        let pool = TracePool::new(2, 3);
+        let map = StageMap::build(3, 2, StagePolicy::newton()).unwrap(); // 4 stages
+        forward_pipelined(&pool, &map, &trace_images(1), &Executor::new(1));
+    }
+}

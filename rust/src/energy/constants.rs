@@ -1,76 +1,76 @@
 //! Component power/area constants (paper Table I + ISAAC-derived values).
 //!
-//! CALIBRATION NOTE (DESIGN.md §Substitutions): CACTI 6.5 and Orion 2.0 are
+//! CALIBRATION NOTE (ARCHITECTURE.md §Substitutions): CACTI 6.5 and Orion 2.0 are
 //! not runnable here, so published anchor points are embedded and
-//! interpolated with CACTI-shaped laws. Components marked [T1] are straight
-//! from the paper's Table I; [ISAAC] come from the ISAAC paper's tile table;
-//! [CAL] are calibrated so that the ISAAC baseline configuration lands near
+//! interpolated with CACTI-shaped laws. Components marked \[T1\] are straight
+//! from the paper's Table I; \[ISAAC\] come from the ISAAC paper's tile table;
+//! \[CAL\] are calibrated so that the ISAAC baseline configuration lands near
 //! its published efficiency (CE ~455-480 GOPS/mm², PE ~380 GOPS/W) while the
 //! component *shares* match the text (ADC ~49% of chip power, analog ~61%).
 
-/// [T1] 8-bit SAR ADC @ 1.28 GS/s (Kull et al. [18]).
+/// \[T1\] 8-bit SAR ADC @ 1.28 GS/s (Kull et al. [18]).
 pub const ADC_POWER_MW: f64 = 3.1;
 pub const ADC_AREA_MM2: f64 = 0.0015;
 
-/// [T1] 128-lane 1-bit DAC array driving one crossbar's wordlines.
+/// \[T1\] 128-lane 1-bit DAC array driving one crossbar's wordlines.
 pub const DAC_ARRAY_POWER_MW: f64 = 0.5;
 pub const DAC_ARRAY_AREA_MM2: f64 = 0.00002;
 
-/// [T1] 128x128 memristor crossbar in compute mode.
+/// \[T1\] 128x128 memristor crossbar in compute mode.
 pub const XBAR_POWER_MW: f64 = 0.3;
 pub const XBAR_AREA_MM2: f64 = 0.0001;
 
-/// [T1] 32-flit 8-port router (Orion 2.0).
+/// \[T1\] 32-flit 8-port router (Orion 2.0).
 pub const ROUTER_POWER_MW: f64 = 168.0;
 pub const ROUTER_AREA_MM2: f64 = 0.604;
 
-/// [T1] HyperTransport: 4 links @ 1.6 GHz, 6.4 GB/s each, per chip.
+/// \[T1\] HyperTransport: 4 links @ 1.6 GHz, 6.4 GB/s each, per chip.
 pub const HT_POWER_MW: f64 = 10_400.0;
 pub const HT_AREA_MM2: f64 = 22.88;
 pub const HT_LINK_GBPS: f64 = 6.4;
 
-/// [ISAAC] sample-and-hold per crossbar (8x128 S+H: 10 fJ, tiny area).
+/// \[ISAAC\] sample-and-hold per crossbar (8x128 S+H: 10 fJ, tiny area).
 pub const SH_POWER_MW: f64 = 0.01;
 pub const SH_AREA_MM2: f64 = 0.00004;
 
-/// [ISAAC] shift-and-add unit (one per pair of ADC streams).
+/// \[ISAAC\] shift-and-add unit (one per pair of ADC streams).
 pub const SA_POWER_MW: f64 = 0.2;
 pub const SA_AREA_MM2: f64 = 0.00006;
 
-/// [ISAAC] IMA input register (2 KB for the 8-stream worst case; scales
+/// \[ISAAC\] IMA input register (2 KB for the 8-stream worst case; scales
 /// with the number of independent input streams the mapping allows).
 pub const IR_POWER_MW_8STREAM: f64 = 1.24;
 pub const IR_AREA_MM2_8STREAM: f64 = 0.0021;
 
-/// [ISAAC] IMA output register (256 B).
+/// \[ISAAC\] IMA output register (256 B).
 pub const OR_POWER_MW: f64 = 0.23;
 pub const OR_AREA_MM2: f64 = 0.00077;
 
-/// [ISAAC] sigmoid unit (2 per tile).
+/// \[ISAAC\] sigmoid unit (2 per tile).
 pub const SIGMOID_POWER_MW: f64 = 0.52;
 pub const SIGMOID_AREA_MM2: f64 = 0.0006;
 pub const SIGMOIDS_PER_TILE: usize = 2;
 
-/// [ISAAC] max/average-pool block per tile.
+/// \[ISAAC\] max/average-pool block per tile.
 pub const POOL_POWER_MW: f64 = 0.4;
 pub const POOL_AREA_MM2: f64 = 0.00024;
 
-/// [ISAAC] tile output register (3 KB).
+/// \[ISAAC\] tile output register (3 KB).
 pub const TILE_OR_POWER_MW: f64 = 1.68;
 pub const TILE_OR_AREA_MM2: f64 = 0.0032;
 
-/// [CAL] tile control/decode logic.
+/// \[CAL\] tile control/decode logic.
 pub const CTRL_POWER_MW: f64 = 5.0;
 pub const CTRL_AREA_MM2: f64 = 0.002;
 
-/// [ISAAC] eDRAM-to-IMA bus (256 bits).
+/// \[ISAAC\] eDRAM-to-IMA bus (256 bits).
 pub const EDRAM_BUS_POWER_MW: f64 = 7.0;
-/// [CAL] CACTI-32nm bus area, reduced from ISAAC's 0.09 to a routed-over
+/// \[CAL\] CACTI-32nm bus area, reduced from ISAAC's 0.09 to a routed-over
 /// estimate (wires over logic).
 pub const EDRAM_BUS_AREA_MM2: f64 = 0.03;
 
-/// [ISAAC] 64 KB eDRAM buffer anchor: 20.7 mW, 0.083 mm².
-/// [CAL] CACTI-shaped laws: area ~ fixed periphery + linear in capacity;
+/// \[ISAAC\] 64 KB eDRAM buffer anchor: 20.7 mW, 0.083 mm².
+/// \[CAL\] CACTI-shaped laws: area ~ fixed periphery + linear in capacity;
 /// access power ~ periphery + sqrt-ish in capacity. Anchored at 64 KB and
 /// checked to stay sane at 4-64 KB (Fig 15/16 sweep range).
 pub fn edram_area_mm2(kb: f64) -> f64 {
@@ -81,7 +81,7 @@ pub fn edram_power_mw(kb: f64) -> f64 {
     2.7 + (20.7 - 2.7) * (kb / 64.0).powf(0.75)
 }
 
-/// [CAL] IMA input HTree: area/power per independent input stream the tree
+/// \[CAL\] IMA input HTree: area/power per independent input stream the tree
 /// is provisioned for. ISAAC provisions one stream per crossbar (8);
 /// Newton's constrained mapping shares a single stream. Calibrated so the
 /// constrained-mapping step yields the paper's ~37% area-efficiency and
@@ -89,7 +89,7 @@ pub fn edram_power_mw(kb: f64) -> f64 {
 pub const HTREE_IN_POWER_MW_PER_STREAM: f64 = 1.0;
 pub const HTREE_IN_AREA_MM2_PER_STREAM: f64 = 0.0012;
 
-/// [CAL] IMA output HTree (collects digitised results): per ADC stream and
+/// \[CAL\] IMA output HTree (collects digitised results): per ADC stream and
 /// per bit of carried width. ISAAC carries the full 39-bit accumulator;
 /// adaptive-ADC Newton carries 16 bits (Fig 12's area effect).
 pub const HTREE_OUT_POWER_MW_PER_ADC_BIT: f64 = 0.005;
@@ -102,10 +102,10 @@ pub const ADC_RATE_SPS: f64 = 1.28e9;
 pub const CYCLE_NS: f64 = 100.0;
 
 /// Energy of moving one byte over the inter-tile network (router + link),
-/// pJ/byte. [CAL] Orion-flavoured constant used by the pipeline model.
+/// pJ/byte. \[CAL\] Orion-flavoured constant used by the pipeline model.
 pub const NOC_PJ_PER_BYTE: f64 = 1.8;
 
-/// Energy of one eDRAM byte access, pJ/byte. [CAL] from the 64 KB anchor:
+/// Energy of one eDRAM byte access, pJ/byte. \[CAL\] from the 64 KB anchor:
 /// 20.7 mW at 256 b / 100 ns duty.
 pub const EDRAM_PJ_PER_BYTE: f64 = 0.65;
 

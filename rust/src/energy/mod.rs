@@ -1,4 +1,7 @@
-//! Area/power/energy composition: component -> IMA -> tile -> chip.
+//! Area/power/energy composition: component -> IMA -> tile -> chip
+//! (paper §IV Table I constants; Figs 21/22/23 breakdowns).
+//! Serve-path role: the simulated-hardware metrics `newton serve` prints
+//! next to the measured wallclock numbers come from this model.
 //!
 //! `TileModel` assembles a tile's cost breakdown from the component library
 //! in [`constants`], applying the Newton technique knobs (ADC energy scale
@@ -323,7 +326,7 @@ mod tests {
         assert!((t.peak_gops() - 245.76).abs() < 1e-6, "{}", t.peak_gops());
         let ce = t.ce();
         let pe = t.pe();
-        // calibration corridor (DESIGN.md): ISAAC published CE 455-480,
+        // calibration corridor (ARCHITECTURE.md §Substitutions): ISAAC published CE 455-480,
         // PE ~380; our bottom-up model must land within ~25% on CE and
         // ~15% on PE.
         assert!((330.0..520.0).contains(&ce), "CE {ce}");

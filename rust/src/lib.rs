@@ -3,13 +3,13 @@
 //! A reproduction of *"Newton: Gravitating Towards the Physical Limits of
 //! Crossbar Acceleration"* (Nag et al.). The paper's substrate — memristor
 //! crossbars, SAR ADCs, eDRAM tiles, HTree interconnect — is simulated
-//! (see DESIGN.md §Substitutions); the paper's evaluation is an analytic,
+//! (see ARCHITECTURE.md §Substitutions); the paper's evaluation is an analytic,
 //! deterministic model, which this crate reimplements bottom-up from the
 //! published component constants, plus a functional bit-accurate crossbar
 //! pipeline and a serving coordinator that executes real inference through
 //! AOT-compiled XLA artifacts (PJRT).
 //!
-//! Layer map (DESIGN.md):
+//! Layer map (rust/ARCHITECTURE.md):
 //! * L1 — `python/compile/kernels/crossbar.py` (Pallas, build-time); its
 //!   bit-exact twin lives in [`xbar`] so the rust side can verify artifacts.
 //! * L2 — `python/compile/model.py` (JAX, build-time).

@@ -2,28 +2,35 @@
 //!
 //! Subcommands (the authoritative table is [`newton::cli::SUBCOMMANDS`];
 //! `newton help` prints it):
-//!   report                     headline Newton-vs-ISAAC comparison
-//!   simulate --net <name>      analytic evaluation of one workload
-//!   incremental                Fig-20-style technique stacking table
-//!   sweep --what ima|buffer|fc design-space sweeps (Figs 10/15/17/18)
-//!   verify                     run artifacts against golden test vectors
-//!   serve --requests N         batched serving demo over the PJRT runtime
-//!     --adc exact|adaptive|lossy:<bits>  multi-replica golden serving with
-//!                              per-batch deviation vs the lossless golden
-//!     --replicas N             installed replicas for the --adc path
-//!   serve-net                  TCP serving endpoint (rust/src/net/)
-//!     --addr HOST:PORT         bind address (port 0 = ephemeral)
-//!     --adc / --replicas / --batch   engine config, as for `serve`
-//!     --max-inflight N         admission limit (Busy beyond it)
-//!     --port-file PATH         write the bound address for scripts
-//!   bench-net --addr HOST:PORT multi-threaded load generator
-//!     --requests N --concurrency C   writes BENCH_net.json
-//!     --expect-exact           assert bit-identity vs in-process golden
-//!     --engine-seed N          seed of the server's install (default 0)
-//!     --shutdown               drain the server after the run
-//!   sched-stress               work-stealing executor stress smoke (CI)
-//!   export --out DIR           every figure's data series as CSV
-//!   list                       workloads, artifacts, and subcommands
+//!
+//! ```text
+//! report                     headline Newton-vs-ISAAC comparison
+//! simulate --net <name>      analytic evaluation of one workload
+//! incremental                Fig-20-style technique stacking table
+//! sweep --what ima|buffer|fc design-space sweeps (Figs 10/15/17/18)
+//! verify                     run artifacts against golden test vectors
+//! serve --requests N         batched serving demo over the PJRT runtime
+//!   --adc exact|adaptive|lossy:<bits>  multi-replica golden serving with
+//!                            per-batch deviation vs the lossless golden
+//!   --replicas N             installed replicas for the --adc path
+//!   --pipeline               pipelined stage scheduling across the
+//!                            replicas (conv/classifier stage split;
+//!                            implies the golden path, default --adc exact)
+//! serve-net                  TCP serving endpoint (rust/src/net/)
+//!   --addr HOST:PORT         bind address (port 0 = ephemeral)
+//!   --adc / --replicas / --batch   engine config, as for `serve`
+//!   --pipeline               pipelined stage scheduling, as for `serve`
+//!   --max-inflight N         admission limit (Busy beyond it)
+//!   --port-file PATH         write the bound address for scripts
+//! bench-net --addr HOST:PORT multi-threaded load generator
+//!   --requests N --concurrency C   writes BENCH_net.json
+//!   --expect-exact           assert bit-identity vs in-process golden
+//!   --engine-seed N          seed of the server's install (default 0)
+//!   --shutdown               drain the server after the run
+//! sched-stress               work-stealing executor stress smoke (CI)
+//! export --out DIR           every figure's data series as CSV
+//! list                       workloads, artifacts, and subcommands
+//! ```
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -33,7 +40,7 @@ use anyhow::{anyhow, bail, Result};
 use newton::cli::{self, Args};
 use newton::config::{AdcKind, ChipConfig, ImaConfig, XbarParams};
 use newton::coordinator::{newton_mini, GoldenServer, PipelineServer, ServerConfig};
-use newton::mapping::{self, Mapping, MappingPolicy};
+use newton::mapping::{self, Mapping, MappingPolicy, StagePolicy};
 use newton::metrics;
 use newton::net::{self, BenchConfig, NetServer, ServeConfig};
 use newton::pipeline::evaluate;
@@ -241,9 +248,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --adc selects the multi-replica golden path: N installed replicas fed
     // from the batcher through the work-stealing executor, every batch
     // checked against the lossless golden reference. Runs in a fresh
-    // checkout — no PJRT artifacts involved.
-    if let Some(kind) = args.get("adc") {
-        let kind = AdcKind::parse(kind).map_err(|e| anyhow!("{e}"))?;
+    // checkout — no PJRT artifacts involved. --pipeline (implies the
+    // golden path; exact ADC unless --adc says otherwise) switches it to
+    // pipelined stage scheduling across the replica pool.
+    if args.get("adc").is_some() || args.has_flag("pipeline") {
+        let kind = AdcKind::parse(args.get_or("adc", "exact")).map_err(|e| anyhow!("{e}"))?;
         serve_replicated(&images, kind, args)?;
         print_simulated_hw();
         return Ok(());
@@ -302,7 +311,12 @@ fn serve_replicated(images: &[Vec<i32>], kind: AdcKind, args: &Args) -> Result<(
         bail!("--batch must be >= 1");
     }
     let t0 = std::time::Instant::now();
-    let server = GoldenServer::replicated(0, kind, n_rep, batch);
+    let mut server = GoldenServer::replicated(0, kind, n_rep, batch);
+    if args.has_flag("pipeline") {
+        server = server
+            .with_pipeline(StagePolicy::newton())
+            .map_err(|e| anyhow!("--pipeline: {e}"))?;
+    }
     println!(
         "multi-replica golden serving: {} replicas{}, batch {}, adc {}",
         server.n_replicas(),
@@ -310,6 +324,12 @@ fn serve_replicated(images: &[Vec<i32>], kind: AdcKind, args: &Args) -> Result<(
         server.batch(),
         kind.label()
     );
+    if let Some(map) = server.pipeline_map() {
+        println!(
+            "  pipelined stage scheduling: stage -> replica {:?} (classifier isolated)",
+            map.assignment
+        );
+    }
     println!("  installed in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
 
     let t0 = std::time::Instant::now();
@@ -364,7 +384,13 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     }
 
     let t0 = std::time::Instant::now();
-    let engine = Arc::new(GoldenServer::replicated(seed, kind, replicas, batch));
+    let mut engine = GoldenServer::replicated(seed, kind, replicas, batch);
+    if args.has_flag("pipeline") {
+        engine = engine
+            .with_pipeline(StagePolicy::newton())
+            .map_err(|e| anyhow!("--pipeline: {e}"))?;
+    }
+    let engine = Arc::new(engine);
     println!(
         "installed engine in {:.1} ms: {}",
         t0.elapsed().as_secs_f64() * 1e3,

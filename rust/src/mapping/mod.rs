@@ -19,6 +19,13 @@
 //! tile *share* that buffer (Fig 6d), and spreading every layer across many
 //! tiles (Fig 7b) moves the per-tile requirement from the worst case to the
 //! average case.
+//!
+//! The same constrained-vs-worst-case-provisioning idea recurs on the
+//! serving path: [`StagePolicy`]/[`StageMap`] record which pipeline
+//! *stages* may share a serving replica (Newton's conv-tile /
+//! classifier-tile split, §III-B2) for the pipelined stage scheduler in
+//! [`crate::coordinator::pipeline`], so replica-sharing rules live here as
+//! an explicit policy instead of ad-hoc conditionals in the scheduler.
 
 use crate::config::{ImaConfig, XbarParams};
 use crate::workloads::{Layer, Network};
@@ -229,6 +236,159 @@ impl Mapping {
     }
 }
 
+// ---- pipelined stage scheduling policy ------------------------------------
+
+/// Role of one serving-pipeline stage, mirroring Newton's tile
+/// specialisation (§III-B2): conv tiles run their ADCs at full rate,
+/// classifier tiles are capacity-bound and differently provisioned — so
+/// the two are distinct hardware and a stage's role decides which replicas
+/// it may land on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageRole {
+    Conv,
+    Classifier,
+}
+
+/// Replica-sharing constraints for pipelined stage scheduling
+/// ([`crate::coordinator::pipeline`]): which stages may co-reside on one
+/// serving replica, and whether pipeline jobs draw their forward scratch
+/// from a per-replica pool. One policy value replaces what would otherwise
+/// be scattered conditionals in the scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StagePolicy {
+    /// Conv stages may pack onto one replica when replicas are scarce
+    /// (they serialise there — correctness-neutral, overlap shrinks).
+    pub share_conv: bool,
+    /// A conv stage may share a replica with the classifier tail. Newton
+    /// forbids this: conv and classifier tiles are distinct hardware.
+    pub share_mixed: bool,
+    /// Pipeline jobs borrow one [`crate::xbar::cnn::ForwardScratch`] per
+    /// replica from a shared pool instead of allocating per wave (a
+    /// replica runs at most one stage at a time, so per-replica pooling is
+    /// race-free by construction).
+    pub pooled_scratch: bool,
+}
+
+impl StagePolicy {
+    /// Newton's constraints: conv stages may pack together, the classifier
+    /// tail keeps a dedicated replica, scratch is pooled per replica.
+    pub fn newton() -> Self {
+        StagePolicy {
+            share_conv: true,
+            share_mixed: false,
+            pooled_scratch: true,
+        }
+    }
+
+    /// ISAAC-style worst-case provisioning: any stage anywhere (including
+    /// everything on a single replica, which degenerates to the sequential
+    /// forward).
+    pub fn unconstrained() -> Self {
+        StagePolicy {
+            share_conv: true,
+            share_mixed: true,
+            pooled_scratch: true,
+        }
+    }
+}
+
+/// A stage → replica assignment honouring a [`StagePolicy`]. Built once per
+/// served model, then consulted by the pipelined scheduler on every wave.
+///
+/// # Examples
+///
+/// ```
+/// use newton::mapping::{StageMap, StagePolicy};
+///
+/// // newton-mini: 3 conv stages + classifier tail over 2 replicas —
+/// // convs pack on replica 0, the classifier keeps replica 1 to itself
+/// let map = StageMap::build(3, 2, StagePolicy::newton()).unwrap();
+/// assert_eq!(map.assignment, vec![0, 0, 0, 1]);
+/// assert_eq!(map.concurrency(), 2);
+///
+/// // one replica cannot satisfy Newton's conv/classifier isolation
+/// assert!(StageMap::build(3, 1, StagePolicy::newton()).is_err());
+/// assert!(StageMap::build(3, 1, StagePolicy::unconstrained()).is_ok());
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageMap {
+    /// `assignment[s]` = replica that executes stage `s`; stages
+    /// `0..assignment.len()-1` are convs, the last is the classifier.
+    pub assignment: Vec<usize>,
+    /// Replicas the assignment draws from (some may stay idle when there
+    /// are more replicas than stages).
+    pub n_replicas: usize,
+    /// The policy the assignment was built under.
+    pub policy: StagePolicy,
+}
+
+impl StageMap {
+    /// Assign `n_conv + 1` stages (convs then the classifier tail) onto
+    /// `n_replicas` replicas under `policy`. Fails when the policy's
+    /// sharing constraints cannot be met with this replica count.
+    pub fn build(
+        n_conv: usize,
+        n_replicas: usize,
+        policy: StagePolicy,
+    ) -> Result<StageMap, String> {
+        if n_replicas == 0 {
+            return Err("stage map needs at least one replica".to_string());
+        }
+        let n_stages = n_conv + 1;
+        let assignment = if n_replicas >= n_stages {
+            // one replica per stage: every wave runs fully overlapped
+            (0..n_stages).collect()
+        } else if policy.share_mixed {
+            // unconstrained packing: round-robin everything
+            if !policy.share_conv && n_replicas < n_stages {
+                return Err(format!(
+                    "{n_stages} stages need {n_stages} replicas when conv stages may not share (have {n_replicas})"
+                ));
+            }
+            (0..n_stages).map(|s| s % n_replicas).collect()
+        } else {
+            // Newton: the classifier tail owns the last replica, convs
+            // spread over the rest
+            if n_replicas < 2 {
+                return Err(
+                    "conv/classifier isolation needs >= 2 replicas (or an unconstrained policy)"
+                        .to_string(),
+                );
+            }
+            let conv_replicas = n_replicas - 1;
+            if !policy.share_conv && conv_replicas < n_conv {
+                return Err(format!(
+                    "{n_conv} conv stages need {} replicas when conv stages may not share (have {n_replicas})",
+                    n_conv + 1
+                ));
+            }
+            let mut a: Vec<usize> = (0..n_conv).map(|s| s % conv_replicas).collect();
+            a.push(n_replicas - 1);
+            a
+        };
+        Ok(StageMap {
+            assignment,
+            n_replicas,
+            policy,
+        })
+    }
+
+    /// Replica assigned to stage `s`.
+    pub fn replica_of(&self, s: usize) -> usize {
+        self.assignment[s]
+    }
+
+    /// Distinct replicas actually used — the pipeline's concurrency
+    /// ceiling (at most this many stages execute in one wave).
+    pub fn concurrency(&self) -> usize {
+        let mut seen = vec![false; self.n_replicas];
+        for &r in &self.assignment {
+            seen[r] = true;
+        }
+        seen.iter().filter(|&&s| s).count()
+    }
+}
+
 /// Fig 10 sweep entry: average conv under-utilisation across a suite for a
 /// given constrained-IMA shape.
 pub fn avg_underutilization(
@@ -363,5 +523,59 @@ mod tests {
     fn traffic_counts_all_layers() {
         let m = build(&workloads::alexnet(), MappingPolicy::newton());
         assert!(m.traffic_per_image() > 100_000);
+    }
+
+    #[test]
+    fn stage_map_gives_each_stage_its_own_replica_when_it_can() {
+        let m = StageMap::build(3, 4, StagePolicy::newton()).unwrap();
+        assert_eq!(m.assignment, vec![0, 1, 2, 3]);
+        assert_eq!(m.concurrency(), 4);
+        // surplus replicas stay idle rather than splitting a stage
+        let m = StageMap::build(3, 6, StagePolicy::newton()).unwrap();
+        assert_eq!(m.assignment, vec![0, 1, 2, 3]);
+        assert_eq!(m.concurrency(), 4);
+    }
+
+    #[test]
+    fn stage_map_isolates_the_classifier_under_newton_policy() {
+        for n_replicas in 2..4 {
+            let m = StageMap::build(3, n_replicas, StagePolicy::newton()).unwrap();
+            let classifier = *m.assignment.last().unwrap();
+            assert_eq!(classifier, n_replicas - 1);
+            assert!(
+                m.assignment[..3].iter().all(|&r| r != classifier),
+                "conv stage shares the classifier replica: {:?}",
+                m.assignment
+            );
+            assert!(m.assignment.iter().all(|&r| r < n_replicas));
+        }
+    }
+
+    #[test]
+    fn stage_map_rejects_infeasible_policies() {
+        // Newton needs a dedicated classifier replica
+        assert!(StageMap::build(3, 1, StagePolicy::newton()).is_err());
+        assert!(StageMap::build(3, 0, StagePolicy::newton()).is_err());
+        // no sharing at all: one replica per stage or bust
+        let rigid = StagePolicy {
+            share_conv: false,
+            share_mixed: false,
+            pooled_scratch: false,
+        };
+        assert!(StageMap::build(3, 3, rigid).is_err());
+        assert_eq!(
+            StageMap::build(3, 4, rigid).unwrap().assignment,
+            vec![0, 1, 2, 3]
+        );
+    }
+
+    #[test]
+    fn unconstrained_stage_map_packs_round_robin() {
+        let m = StageMap::build(3, 2, StagePolicy::unconstrained()).unwrap();
+        assert_eq!(m.assignment, vec![0, 1, 0, 1]);
+        assert_eq!(m.concurrency(), 2);
+        let m = StageMap::build(3, 1, StagePolicy::unconstrained()).unwrap();
+        assert_eq!(m.assignment, vec![0, 0, 0, 0]);
+        assert_eq!(m.concurrency(), 1);
     }
 }

@@ -1,5 +1,7 @@
 //! Efficiency metrics and report assembly (CE, PE, incremental technique
-//! stacking — the Fig 20/21/22/23 machinery).
+//! stacking — the paper §IV evaluation and Fig 20/21/22/23 machinery).
+//! Serve-path role: [`export`] also writes the serving endpoint's
+//! `net_summary.csv` (`serve-net --export`) next to the figure series.
 
 pub mod export;
 

@@ -63,6 +63,23 @@ pub enum InferOutcome {
 }
 
 /// A blocking connection to a `serve-net` endpoint.
+///
+/// # Examples
+///
+/// One request/response round trip against a running endpoint (start one
+/// with `newton serve-net --addr 127.0.0.1:4242`):
+///
+/// ```no_run
+/// use newton::net::{Client, InferOutcome};
+///
+/// let mut c = Client::connect("127.0.0.1:4242")?;
+/// match c.infer(1, &[0; 3072])? {
+///     InferOutcome::Ok(reply) => println!("logits: {:?}", reply.logits),
+///     InferOutcome::Busy => println!("admission limit hit; retry later"),
+/// }
+/// c.shutdown()?; // drain the server
+/// # Ok::<(), Box<dyn std::error::Error>>(())
+/// ```
 pub struct Client {
     stream: TcpStream,
 }

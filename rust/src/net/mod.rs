@@ -24,9 +24,11 @@
 //!
 //! The server is generic over [`Engine`], the seam between transport and
 //! compute: `coordinator::GoldenServer` implements it today (golden
-//! crossbar numerics, multi-replica, deviation-vs-lossless reporting);
-//! the PJRT runtime or any heterogeneous replica pool can slot in later
-//! without touching the wire layer (ROADMAP: multi-backend execution).
+//! crossbar numerics, multi-replica, deviation-vs-lossless reporting,
+//! and — behind `serve-net --pipeline` — wavefront stage scheduling
+//! across the replica pool, invisible to this layer); the PJRT runtime
+//! or any heterogeneous replica pool can slot in later without touching
+//! the wire layer (ROADMAP: multi-backend execution).
 
 pub mod client;
 pub mod proto;

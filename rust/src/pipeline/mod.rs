@@ -56,7 +56,7 @@ pub struct WorkloadReport {
 }
 
 /// Fraction of peak power burned while idle (clocking, leakage, refresh).
-/// [CAL] keeps avg power between the dynamic floor and the peak envelope.
+/// \[CAL\] keeps avg power between the dynamic floor and the peak envelope.
 const IDLE_POWER_FRAC: f64 = 0.10;
 
 /// Evaluate one network on one chip configuration.

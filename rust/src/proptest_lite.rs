@@ -1,5 +1,5 @@
 //! Minimal property-testing harness (proptest is unavailable offline —
-//! DESIGN.md §Substitutions). Runs a property over N seeded random cases
+//! ARCHITECTURE.md §Substitutions). Runs a property over N seeded random cases
 //! and reports the first failing seed so failures reproduce exactly.
 
 use crate::util::Rng;

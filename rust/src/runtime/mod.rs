@@ -1,6 +1,11 @@
 //! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt` + manifest),
 //! compile them once on the CPU PJRT client, and execute them from the
-//! request path. Python never runs here (DESIGN.md L3 contract).
+//! request path. Python never runs here (ARCHITECTURE.md §Layer map).
+//! Serve-path role: backs `coordinator::PipelineServer` when artifacts
+//! exist; without them every serving surface falls back to the golden
+//! crossbar engine (`coordinator::GoldenServer`), which is also the seam
+//! (`net::Engine`, `coordinator::pipeline::StagePool`) a real PJRT
+//! replica pool will plug into.
 //!
 //! HLO *text* is the interchange format — see `python/compile/aot.py` and
 //! /opt/xla-example/README.md: jax >= 0.5 emits protos with 64-bit ids that

@@ -1,4 +1,4 @@
-//! Offline stub for the `xla` PJRT bindings (DESIGN.md §Substitutions).
+//! Offline stub for the `xla` PJRT bindings (ARCHITECTURE.md §Substitutions).
 //!
 //! The real bindings link against `libxla_extension`, which the offline
 //! image does not ship, and the crate itself cannot be fetched. This stub

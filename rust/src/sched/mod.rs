@@ -9,7 +9,7 @@
 //! the rest idle. The executor here sizes work to workers dynamically:
 //!
 //! * **per-worker deques** (mutex-protected; no external crates offline,
-//!   DESIGN.md §Substitutions — a Chase-Lev array would need atomics+unsafe
+//!   ARCHITECTURE.md §Substitutions — a Chase-Lev array would need atomics+unsafe
 //!   for little gain at these job granularities): the owner pops from the
 //!   front of its deque, preserving the contiguous seed order and its cache
 //!   locality;

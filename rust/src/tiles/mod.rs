@@ -1,4 +1,7 @@
 //! Heterogeneous tile composition (paper §III-B2, Figs 17, 18).
+//! The serving stack mirrors this split at replica granularity: the
+//! pipelined stage scheduler ([`crate::coordinator::pipeline`]) keeps
+//! classifier stages off conv replicas via [`crate::mapping::StagePolicy`].
 //!
 //! Conv tiles run their ADCs at full rate; classifier (FC) tiles are
 //! weight-capacity-bound and communication-bound, never throughput-bound,

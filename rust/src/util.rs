@@ -1,6 +1,6 @@
 //! Small shared utilities: deterministic RNG, stats, and table printing.
 //!
-//! No external crates are available offline (DESIGN.md §Substitutions), so
+//! No external crates are available offline (ARCHITECTURE.md §Substitutions), so
 //! the RNG is a xorshift64* generator — plenty for synthetic workloads and
 //! the property-test harness, not for cryptography.
 

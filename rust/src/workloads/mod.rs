@@ -1,6 +1,8 @@
 //! The paper's benchmark suite (Table II): nine ImageNet CNNs spanning the
 //! dataflow space — shallow (Alexnet), deep/wide (VGG, MSRA PReLU-nets) and
-//! residual (Resnet-34).
+//! residual (Resnet-34). Serve-path role: these are analytic workload
+//! *descriptions* (the served model is `coordinator::newton_mini`, which
+//! reuses the same [`Network`] type for its simulated-hardware report).
 //!
 //! Table-II notes: the printed table garbles a few entries (OCR of the
 //! original): Alexnet's conv1 stride ("11x11, 96 (4)" = 11x11, 96/4) and

@@ -310,11 +310,43 @@ pub fn xbar_linear(x: &Matrix, w: &Matrix, p: &XbarParams, adaptive: bool) -> Ma
     ProgrammedLinear::install(w, p, adaptive).run(x)
 }
 
+/// Activation flowing between pipeline stages: conv stages consume and
+/// produce feature-map tensors, the classifier tail produces logits. The
+/// unit of exchange for [`ProgrammedCnn::run_stage`] and the pipelined
+/// stage scheduler ([`crate::coordinator::pipeline`]) — the software
+/// analogue of neuron values crossing the tile mesh between Newton's
+/// conv tiles and classifier tiles.
+#[derive(Clone, Debug)]
+pub enum StageData {
+    /// A feature map: the input of every conv stage and of the classifier.
+    Act(Tensor),
+    /// Classifier output — only the final stage produces this.
+    Logits(Matrix),
+}
+
+impl StageData {
+    /// Unwrap the classifier output. Panics when called on a feature map,
+    /// i.e. when the stage pipeline stopped before its classifier tail.
+    pub fn logits(self) -> Matrix {
+        match self {
+            StageData::Logits(m) => m,
+            StageData::Act(_) => panic!("stage pipeline ended before the classifier tail"),
+        }
+    }
+}
+
 /// The install-once CNN: every layer's weights programmed into crossbar
 /// chunks with the per-stage scaling shifts baked in. Produced by
 /// [`MiniCnn::program`]; `forward` is bit-identical to [`MiniCnn::forward`]
 /// with the same `(p, adaptive)` but does no weight work per call — the
 /// serving analogue of the paper's in-situ weights.
+///
+/// The network is also exposed as per-stage executable units
+/// ([`Self::run_stage`]): one stage per conv layer (conv + relu8 + pool)
+/// plus the classifier tail (flatten + fc), mirroring Newton's conv-tile /
+/// classifier-tile split. [`Self::forward_seq_with`] is literally a fold of
+/// `run_stage` over `0..n_stages()`, so the staged decomposition and the
+/// sequential forward can never drift apart numerically.
 pub struct ProgrammedCnn {
     convs: Vec<ProgrammedLinear>,
     fc: ProgrammedLinear,
@@ -322,6 +354,53 @@ pub struct ProgrammedCnn {
 }
 
 impl ProgrammedCnn {
+    /// Assemble a programmed CNN from already-installed layers — the hook
+    /// for staged pools over geometries other than newton-mini (the
+    /// pipelined-scheduling property tests, future heterogeneous
+    /// backends). Shapes must chain: each conv's `out_cols` is the next
+    /// stage's channel count after pooling, and `fc.in_cols()` must equal
+    /// the flattened final feature map.
+    pub fn from_layers(convs: Vec<ProgrammedLinear>, fc: ProgrammedLinear, act_max: i64) -> Self {
+        ProgrammedCnn { convs, fc, act_max }
+    }
+
+    /// Executable pipeline stages: one per conv layer plus the classifier
+    /// tail (4 for newton-mini).
+    pub fn n_stages(&self) -> usize {
+        self.convs.len() + 1
+    }
+
+    /// Conv stages only (stages `0..n_conv_stages()` are convs; stage
+    /// `n_conv_stages()` is the classifier tail).
+    pub fn n_conv_stages(&self) -> usize {
+        self.convs.len()
+    }
+
+    /// Run one pipeline stage. Conv stages (`s < n_conv_stages()`) map a
+    /// feature tensor through conv3x3 + relu8 + maxpool2; the final stage
+    /// flattens and runs the fc classifier, producing logits. Chaining
+    /// stages `0..n_stages()` is bit-identical to [`Self::forward_seq`] —
+    /// the sequential forward is implemented as exactly that fold.
+    ///
+    /// Panics when `s` is out of range or `input` is not a feature map
+    /// (only the last stage emits [`StageData::Logits`]).
+    pub fn run_stage(&self, s: usize, input: &StageData, scratch: &mut ForwardScratch) -> StageData {
+        let StageData::Act(act) = input else {
+            panic!("stage {s}: input must be a feature map, not logits");
+        };
+        if s < self.convs.len() {
+            let conv = conv3x3_programmed(act, &self.convs[s], self.act_max, scratch);
+            StageData::Act(maxpool2(&conv))
+        } else {
+            assert_eq!(s, self.convs.len(), "stage {s} out of range");
+            let flat = Matrix::from_fn(act.b, act.h * act.w * act.c, |b, i| {
+                act.data[b * act.h * act.w * act.c + i]
+            });
+            let ForwardScratch { raw, xbar, .. } = scratch;
+            StageData::Logits(self.fc.run_with(&flat, raw, xbar))
+        }
+    }
+
     /// Full forward pass: (B,32,32,3) image -> (B,10) logits.
     ///
     /// Batches split per image across the work-stealing executor
@@ -377,18 +456,15 @@ impl ProgrammedCnn {
     /// the pass and survive across calls, so steady-state serving stops
     /// allocating them per layer per batch. Bit-identical to
     /// [`Self::forward_seq`] with a fresh scratch (pinned by the
-    /// scratch-purity property tests).
+    /// scratch-purity property tests). Implemented as a fold of
+    /// [`Self::run_stage`], so the staged pipeline path shares these exact
+    /// numerics.
     pub fn forward_seq_with(&self, img: &Tensor, scratch: &mut ForwardScratch) -> Matrix {
-        let mut act = img.clone();
-        for conv in &self.convs {
-            act = conv3x3_programmed(&act, conv, self.act_max, scratch);
-            act = maxpool2(&act);
+        let mut data = StageData::Act(img.clone());
+        for s in 0..self.n_stages() {
+            data = self.run_stage(s, &data, scratch);
         }
-        let flat = Matrix::from_fn(act.b, act.h * act.w * act.c, |b, i| {
-            act.data[b * act.h * act.w * act.c + i]
-        });
-        let ForwardScratch { raw, xbar, .. } = scratch;
-        self.fc.run_with(&flat, raw, xbar)
+        data.logits()
     }
 
     /// Argmax classes for a batch of images.
@@ -697,6 +773,46 @@ mod tests {
             want_a.data,
             "reused forward scratch leaked state"
         );
+    }
+
+    #[test]
+    fn stage_counts_match_the_layer_stack() {
+        let cnn = MiniCnn::new(0);
+        let programmed = cnn.program(&XbarParams::default(), false);
+        assert_eq!(programmed.n_stages(), 4);
+        assert_eq!(programmed.n_conv_stages(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "input must be a feature map")]
+    fn classifier_output_cannot_feed_another_stage() {
+        let cnn = MiniCnn::new(0);
+        let programmed = cnn.program(&XbarParams::default(), false);
+        let logits = StageData::Logits(Matrix::zeros(1, 10));
+        programmed.run_stage(0, &logits, &mut ForwardScratch::new());
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn staged_fold_matches_forward_seq_and_tracks_shapes() {
+        // one image walked stage by stage: each conv stage halves H/W and
+        // widens C, the tail emits (1, 10) logits bit-identical to the
+        // sequential pass
+        let cnn = MiniCnn::new(0);
+        let programmed = cnn.program(&XbarParams::default(), false);
+        let img = random_images(1, 31);
+        let want = programmed.forward_seq(&img);
+        let mut scratch = ForwardScratch::new();
+        let mut data = StageData::Act(img.clone());
+        let conv_shapes = [(16usize, 32usize), (8, 64), (4, 128)];
+        for s in 0..programmed.n_stages() {
+            data = programmed.run_stage(s, &data, &mut scratch);
+            if let StageData::Act(t) = &data {
+                let (hw, c) = conv_shapes[s];
+                assert_eq!((t.h, t.w, t.c), (hw, hw, c), "stage {s}");
+            }
+        }
+        assert_eq!(data.logits().data, want.data);
     }
 
     #[test]

@@ -219,6 +219,24 @@ pub struct ProgrammedXbar {
 
 impl ProgrammedXbar {
     /// Install signed weights (ISAAC bias encoding applied here, once).
+    ///
+    /// # Examples
+    ///
+    /// Install once, run many — with the default lossless config the raw
+    /// crossbar product equals a plain matmul bit-for-bit:
+    ///
+    /// ```
+    /// use newton::config::XbarParams;
+    /// use newton::xbar::{matmul, scale_clamp, Matrix, ProgrammedXbar};
+    ///
+    /// let p = XbarParams::default();
+    /// let w = Matrix::from_fn(p.rows, 4, |r, c| (r as i64 % 7) - 3 + c as i64);
+    /// let xbar = ProgrammedXbar::install(&w, &p, false);
+    /// let x = Matrix::from_fn(2, p.rows, |_, c| c as i64);
+    /// assert_eq!(xbar.run(&x), matmul(&x, &w));
+    /// let logits = scale_clamp(&xbar.run(&x), &p); // the full pipeline
+    /// assert_eq!(logits.rows, 2);
+    /// ```
     pub fn install(w: &Matrix, p: &XbarParams, adaptive: bool) -> Self {
         let bias = 1i64 << (p.weight_bits - 1);
         let wb = Matrix::from_fn(w.rows, w.cols, |r, c| w.at(r, c) + bias);

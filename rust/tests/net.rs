@@ -366,6 +366,53 @@ fn load_generator_covers_every_request_exactly_once() {
 
 #[test]
 #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+fn pipelined_serve_net_bit_identical_to_non_pipelined_path() {
+    // `serve-net --pipeline` loopback: the wavefront stage scheduler
+    // behind the socket must not change a bit vs the plain in-process
+    // path, and batch accounting lands on the classifier-stage replica
+    let engine = Arc::new(
+        GoldenServer::replicated(0, AdcKind::Exact, 3, 4)
+            .with_pipeline(newton::mapping::StagePolicy::newton())
+            .unwrap(),
+    );
+    let classifier = *engine.pipeline_map().unwrap().assignment.last().unwrap();
+    let server = NetServer::start(
+        engine,
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_inflight: 32,
+            batch_wait: Duration::from_millis(2),
+        },
+    )
+    .unwrap();
+
+    let mut cfg = BenchConfig::new(&server.local_addr().to_string());
+    cfg.requests = 12;
+    cfg.concurrency = 4;
+    cfg.seed = 17;
+    let report = load_generate(&cfg).unwrap();
+    assert_eq!(report.worst_abs_err, 0, "exact pipelined serving deviated");
+
+    let images: Vec<Vec<i32>> = (0..cfg.requests).map(|i| bench_image(cfg.seed, i)).collect();
+    let plain = GoldenServer::replicated(0, AdcKind::Exact, 1, 4);
+    assert_eq!(
+        report.logits,
+        plain.infer(&images),
+        "pipelined socket path changed the numbers"
+    );
+
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 12);
+    assert_eq!(stats.per_replica.len(), 3);
+    assert_eq!(
+        stats.per_replica.iter().sum::<u64>(),
+        stats.per_replica[classifier],
+        "pipelined batches must be accounted to the classifier replica"
+    );
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
 fn concurrent_clients_bit_identical_to_in_process_golden() {
     // the acceptance gate: the socket path must not change a single bit
     // vs the in-process GoldenServer under an exact ADC config

@@ -1,5 +1,5 @@
 //! Property tests over the coordinator-side invariants (proptest_lite
-//! harness — proptest itself is unavailable offline, DESIGN.md
+//! harness — proptest itself is unavailable offline, ARCHITECTURE.md
 //! §Substitutions): the numeric contract of the crossbar pipeline, the
 //! D&C equivalences, ADC schedule invariants, batcher behaviour, and
 //! mapping conservation laws.
@@ -359,6 +359,77 @@ fn prop_digit_major_engine_equals_reference_across_workers() {
                 got == want,
                 "forced {workers}-worker run diverged (regime {regime}, b={b} k={k} n={n} pad={pad})"
             );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipelined_forward_equals_seq_across_replicas_and_workers() {
+    // acceptance gate for pipelined stage scheduling: the wavefront over
+    // the replica pool must be bit-identical to forward_seq across
+    // {1,2,4} replicas × {1,2,8} workers, for random small staged CNNs
+    // (8x8x2 images, 2 conv stages + classifier) in exact and lossy
+    // regimes — overlap and placement are wall-clock choices, never
+    // numerics changes
+    use newton::coordinator::pipeline::forward_pipelined;
+    use newton::mapping::{StageMap, StagePolicy};
+    use newton::xbar::cnn::{ProgrammedCnn, Tensor};
+
+    check("pipelined==seq", 6, |rng| {
+        let p = XbarParams {
+            adc_bits: 8 + rng.below(2) as u32, // lossy:8 or lossless 9
+            ..XbarParams::default()
+        };
+        let adaptive = rng.below(2) == 1;
+        let shifts = [6u32, 5, 4];
+        let conv_w = [
+            rand_matrix(rng, 18, 3, -63, 64), // 3x3x2 -> 3
+            rand_matrix(rng, 27, 4, -63, 64), // 3x3x3 -> 4
+        ];
+        let fc_w = rand_matrix(rng, 2 * 2 * 4, 5, -63, 64);
+        let install = || {
+            let convs = conv_w
+                .iter()
+                .zip(shifts)
+                .map(|(w, out_shift)| {
+                    ProgrammedLinear::install(w, &XbarParams { out_shift, ..p }, adaptive)
+                })
+                .collect();
+            let fc = ProgrammedLinear::install(
+                &fc_w,
+                &XbarParams {
+                    out_shift: shifts[2],
+                    ..p
+                },
+                adaptive,
+            );
+            ProgrammedCnn::from_layers(convs, fc, 255)
+        };
+        let b = 1 + rng.below(5) as usize;
+        let mut img = Tensor::zeros(b, 8, 8, 2);
+        for v in img.data.iter_mut() {
+            *v = rng.below(256) as i64;
+        }
+        let reference = install();
+        let want = reference.forward_seq(&img);
+        for n_replicas in [1usize, 2, 4] {
+            let pool: Vec<ProgrammedCnn> = (0..n_replicas).map(|_| install()).collect();
+            let policy = if n_replicas == 1 {
+                StagePolicy::unconstrained()
+            } else {
+                StagePolicy::newton()
+            };
+            let map = StageMap::build(pool[0].n_conv_stages(), n_replicas, policy)
+                .expect("feasible stage map");
+            for workers in [1usize, 2, 8] {
+                let got = forward_pipelined(&pool[..], &map, &img, &Executor::new(workers));
+                prop_assert!(
+                    got == want,
+                    "pipelined forward diverged (replicas={n_replicas} workers={workers} b={b} adc={} adaptive={adaptive})",
+                    p.adc_bits
+                );
+            }
         }
         Ok(())
     });

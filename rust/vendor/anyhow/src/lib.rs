@@ -1,5 +1,5 @@
 //! Vendored stand-in for the `anyhow` crate (no external crates are
-//! available offline — DESIGN.md §Substitutions). Implements the subset the
+//! available offline — ARCHITECTURE.md §Substitutions). Implements the subset the
 //! workspace uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`]
 //! macros, and the [`Context`] extension on `Result` — including results
 //! that already carry an [`Error`], mirroring upstream's `ext::StdError`

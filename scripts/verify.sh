@@ -47,6 +47,14 @@ else
 fi
 
 echo
+echo "== cargo doc --no-deps (-D warnings gate) =="
+# docs are part of tier-1 quality: broken intra-doc links, bad code fences
+# and malformed HTML in rustdoc fail the build (ISSUE 5). Doc *tests* run
+# under `cargo test` above.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+echo "cargo doc gate OK"
+
+echo
 echo "== cargo fmt --check (advisory) =="
 if cargo fmt --version >/dev/null 2>&1; then
   if ! cargo fmt --all -- --check; then
@@ -67,17 +75,29 @@ echo "== serving smoke: multi-replica adaptive ADC vs lossless golden =="
 cargo run --release --bin newton -- serve --adc adaptive --replicas 2 --requests 16
 
 echo
-echo "== serve-net loopback smoke: 64 concurrent requests, exact ADC =="
+echo "== serving smoke: pipelined stage scheduling (conv/classifier split) =="
+# 3 replicas under the newton stage policy: convs round-robin replicas
+# 0..1, classifier isolated on replica 2. verify_head re-checks installed
+# weights against the per-call engine; pipelined-vs-sequential
+# bit-identity is pinned by the property tests above and by the
+# serve-net --pipeline + bench-net --expect-exact smoke below
+cargo run --release --bin newton -- serve --adc exact --replicas 3 --pipeline --requests 16
+
+echo
+echo "== serve-net loopback smoke: 64 concurrent requests, exact ADC, pipelined =="
 # ephemeral port; the server writes its bound address to a temp file.
-# bench-net --expect-exact asserts every response is bit-identical to the
-# in-process GoldenServer with zero deviation; --shutdown drains the
-# server, and `wait` surfaces any worker panic / unclean exit.
+# the server runs --pipeline (wavefront stage scheduling across the
+# replicas), and bench-net --expect-exact asserts every response is
+# bit-identical to the *non-pipelined* in-process GoldenServer with zero
+# deviation — the socket-level twin of the pipelined bit-identity
+# property; --shutdown drains the server, and `wait` surfaces any worker
+# panic / unclean exit.
 portfile=$(mktemp)
 rm -f BENCH_net.json
 # run the release binary directly (built above), not via `cargo run`: the
 # trap must kill the server itself, and cargo does not forward signals
 newton_bin="${CARGO_TARGET_DIR:-target}/release/newton"
-"$newton_bin" serve-net --adc exact --replicas 2 \
+"$newton_bin" serve-net --adc exact --replicas 2 --pipeline \
   --addr 127.0.0.1:0 --port-file "$portfile" &
 srv_pid=$!
 trap 'kill "$srv_pid" 2>/dev/null || true' EXIT
@@ -99,7 +119,7 @@ if ! [ -f BENCH_net.json ]; then
   echo "FAIL: bench-net wrote no BENCH_net.json"
   exit 1
 fi
-echo "serve-net smoke OK (bit-identical, clean drain)"
+echo "serve-net smoke OK (pipelined, bit-identical, clean drain)"
 
 echo
 echo "== perf smoke: cargo bench --bench perf_hotpath -- --smoke =="
@@ -129,6 +149,24 @@ if [ -f BENCH_hotpath.json ]; then
     fi
   else
     echo "WARN: BENCH_hotpath.json carries no slice_speedup_adaptive_b8; skipped"
+  fi
+  pipe=$(awk -F': ' '/"pipeline_speedup_b8":/ {gsub(/[,[:space:]]/, "", $2); print $2; exit}' BENCH_hotpath.json)
+  if [ -n "${pipe}" ]; then
+    cores=$(nproc 2>/dev/null || echo 1)
+    if [ "${cores}" -ge 4 ]; then
+      # 4 pipeline stages, heaviest ~45% of the work: >= 1.2x overlap is
+      # conservative once the machine can actually run stages concurrently
+      if awk "BEGIN { exit !(${pipe} >= 1.2) }"; then
+        echo "pipelined-stage speedup (b8, 4 replicas): ${pipe}x (target >= 1.2x) OK"
+      else
+        echo "FAIL: pipelined-stage speedup ${pipe}x below the 1.2x target"
+        exit 1
+      fi
+    else
+      echo "WARN: only ${cores} cores; pipelined-stage overlap target skipped (measured ${pipe}x)"
+    fi
+  else
+    echo "WARN: BENCH_hotpath.json carries no pipeline_speedup_b8; skipped"
   fi
 else
   echo "WARN: BENCH_hotpath.json absent; perf-target assert skipped"
