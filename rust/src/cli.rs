@@ -14,8 +14,8 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
     ("sweep", "design-space sweeps (--what ima|buffer|fc)"),
     ("verify", "run artifacts against golden test vectors"),
     ("serve", "in-process batched serving demo (--adc, --replicas, --pipeline)"),
-    ("serve-net", "TCP serving endpoint (--addr, --adc, --replicas, --pipeline)"),
-    ("bench-net", "load-generate against a serve-net endpoint (--addr)"),
+    ("serve-net", "TCP serving endpoint (--addr, --adc, --replicas, --pipeline, --health)"),
+    ("bench-net", "load-generate against a serve-net endpoint (--addr; --fault-rate = chaos)"),
     ("sched-stress", "work-stealing executor stress smoke (CI)"),
     ("export", "write every figure's data series as CSV (--out)"),
     ("list", "workloads, artifacts, and subcommands"),

@@ -20,16 +20,29 @@
 //! batches pinned to single replicas, each batch's images flow through the
 //! per-stage units wavefront-style across the pool, with stage placement
 //! governed by a [`StageMap`] — bit-identical either way.
+//!
+//! [`GoldenServer::with_health`] arms the replica health machinery
+//! ([`crate::coordinator::health`]): every batch's deviation feeds the
+//! per-replica state machine, bad batches are transparently re-run on a
+//! healthy replica, quarantined replicas leave the rotation (the pipelined
+//! stage map re-derives around them), and
+//! [`GoldenServer::reinstall`] reprograms a replica from pristine weights
+//! back to probation. Replicas live behind [`RwLock`]s so a reinstall (or
+//! a fault injection, [`GoldenServer::inject_cell_faults`]) swaps the
+//! install without stopping the server — in-flight batches hold read
+//! locks and finish on the old install first.
 
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::config::{AdcKind, XbarParams};
 use crate::coordinator::batcher::{Batch, Batcher, PendingRequest};
+use crate::coordinator::health::{HealthMonitor, HealthPolicy, HealthReport};
 use crate::coordinator::pipeline::forward_pipelined;
 use crate::mapping::{StageMap, StagePolicy};
 use crate::sched::Executor;
 use crate::xbar::cnn::{ForwardScratch, MiniCnn, ProgrammedCnn, Tensor};
+use crate::xbar::Matrix;
 
 /// Elements in one newton-mini input image — the request shape every
 /// serving surface (CLI, example, network endpoint) validates against.
@@ -39,9 +52,15 @@ pub const IMAGE_ELEMS: usize = 32 * 32 * 3;
 pub struct GoldenServer {
     cnn: MiniCnn,
     /// Installed serving replicas (>= 1), all with the serving ADC config.
-    replicas: Vec<ProgrammedCnn>,
+    /// Behind [`RwLock`]s so [`Self::reinstall`] /
+    /// [`Self::inject_cell_faults`] can swap an install mid-serve: batch
+    /// execution holds the read lock, a swap waits for it under the write
+    /// lock — uncontended in steady state.
+    replicas: Vec<RwLock<ProgrammedCnn>>,
     /// Lossless reference install, present whenever the serving config can
-    /// deviate from it (adaptive or lossy ADC).
+    /// deviate from it (adaptive or lossy ADC), and always once
+    /// [`Self::with_health`] arms the health machinery (drift detection
+    /// needs a pristine reference even for exact configs).
     golden: Option<ProgrammedCnn>,
     kind: AdcKind,
     p: XbarParams,
@@ -50,7 +69,11 @@ pub struct GoldenServer {
     /// Pipelined stage scheduling: when set, batches run wavefront-style
     /// through [`crate::coordinator::pipeline`] across the replica pool
     /// under this stage map, instead of whole batches on one replica.
-    pipeline: Option<StageMap>,
+    /// Behind a mutex because quarantines re-derive it mid-serve.
+    pipeline: Option<Mutex<StageMap>>,
+    /// Replica health state machine ([`Self::with_health`]); `None` keeps
+    /// the pre-health serving behaviour bit-for-bit.
+    health: Option<HealthMonitor>,
     /// Forward scratch reused across sequentially served batches (the
     /// net dispatcher and single-worker serving paths). `try_lock` only:
     /// concurrent batch jobs fall back to a fresh scratch instead of
@@ -126,8 +149,9 @@ impl GoldenServer {
         assert!(batch > 0);
         assert!(n_replicas > 0);
         let cnn = MiniCnn::new(seed);
-        let replicas: Vec<ProgrammedCnn> =
-            (0..n_replicas).map(|_| cnn.program(&p, adaptive)).collect();
+        let replicas: Vec<RwLock<ProgrammedCnn>> = (0..n_replicas)
+            .map(|_| RwLock::new(cnn.program(&p, adaptive)))
+            .collect();
         // the golden install is numerics-driven: present iff the serving
         // config can actually deviate (e.g. Lossy(10) at a 9-bit lossless
         // budget is exact and needs no reference, whatever its label)
@@ -157,6 +181,7 @@ impl GoldenServer {
             adaptive,
             batch,
             pipeline: None,
+            health: None,
             scratch: Mutex::new(ForwardScratch::new()),
         }
     }
@@ -196,13 +221,91 @@ impl GoldenServer {
     /// replicas for conv/classifier isolation).
     pub fn with_pipeline(mut self, policy: StagePolicy) -> Result<Self, String> {
         let map = crate::coordinator::pipeline::build_map(&self.replicas[..], policy)?;
-        self.pipeline = Some(map);
+        self.pipeline = Some(Mutex::new(map));
         Ok(self)
     }
 
-    /// The stage → replica map when pipelined stage scheduling is on.
-    pub fn pipeline_map(&self) -> Option<&StageMap> {
-        self.pipeline.as_ref()
+    /// Arm the replica health machinery: per-batch deviations feed the
+    /// [`HealthMonitor`] state machine, bad batches re-run on healthy
+    /// replicas, quarantined replicas leave the rotation. Forces a golden
+    /// reference install even for exact configs — drifted cells can only
+    /// be detected against pristine weights.
+    pub fn with_health(mut self, policy: HealthPolicy) -> Self {
+        if self.golden.is_none() {
+            self.golden = Some(self.cnn.program(
+                &XbarParams {
+                    adc_bits: self.p.lossless_adc_bits(),
+                    ..self.p
+                },
+                false,
+            ));
+        }
+        self.health = Some(HealthMonitor::new(self.replicas.len(), policy));
+        self
+    }
+
+    /// The health monitor when [`Self::with_health`] armed it.
+    pub fn health_monitor(&self) -> Option<&HealthMonitor> {
+        self.health.as_ref()
+    }
+
+    /// Aggregate health counters for `Stats`, when health is armed.
+    pub fn health_report(&self) -> Option<HealthReport> {
+        self.health.as_ref().map(|h| h.report())
+    }
+
+    /// The stage → replica map when pipelined stage scheduling is on
+    /// (a snapshot — quarantines re-derive the live map mid-serve).
+    pub fn pipeline_map(&self) -> Option<StageMap> {
+        self.pipeline.as_ref().map(|m| m.lock().unwrap().clone())
+    }
+
+    /// Replace replica `replica`'s install with a fault-perturbed one
+    /// (deterministic cell drift / stuck-at faults from `plan`) — the
+    /// chaos entry point: the perturbed replica is indistinguishable from
+    /// a drifted crossbar and must be caught by its served deviation.
+    /// Waits for the replica's in-flight batch under the write lock.
+    pub fn inject_cell_faults(&self, replica: usize, plan: &crate::faults::FaultPlan) {
+        let drifted = plan.program_drifted(&self.cnn, &self.p, self.adaptive);
+        *self.replicas[replica].write().unwrap() = drifted;
+    }
+
+    /// Reprogram replica `replica` from pristine weights — the crossbar
+    /// reinstall path. The swap waits for the replica's in-flight batch
+    /// (write lock); with health armed the replica returns to probation
+    /// and the pipelined stage map is re-derived to include it again.
+    pub fn reinstall(&self, replica: usize) {
+        let fresh = self.cnn.program(&self.p, self.adaptive);
+        *self.replicas[replica].write().unwrap() = fresh;
+        if let Some(h) = &self.health {
+            h.reinstalled(replica);
+        }
+        self.rebuild_pipeline_map();
+    }
+
+    /// Re-derive the pipelined stage map over the currently usable
+    /// replicas (no-op without health or without pipelining). Falls back
+    /// to the unconstrained policy when the armed policy is infeasible on
+    /// the survivors (e.g. newton's classifier isolation with one usable
+    /// replica) — degraded placement beats an outage.
+    fn rebuild_pipeline_map(&self) {
+        let (Some(m), Some(h)) = (&self.pipeline, &self.health) else {
+            return;
+        };
+        let usable = h.usable();
+        let mut g = m.lock().unwrap();
+        let n_conv = g.assignment.len() - 1;
+        let rebuilt = StageMap::build_over(n_conv, &usable, self.replicas.len(), g.policy)
+            .or_else(|_| {
+                StageMap::build_over(
+                    n_conv,
+                    &usable,
+                    self.replicas.len(),
+                    StagePolicy::unconstrained(),
+                )
+            })
+            .expect("health keeps at least one usable replica");
+        *g = rebuilt;
     }
 
     /// The standard fallback configuration shared by `newton serve` and the
@@ -246,7 +349,7 @@ impl GoldenServer {
         let mut out = Vec::with_capacity(images.len());
         for chunk in images.chunks(self.batch) {
             let t = tensor_from(chunk, self.batch);
-            let logits = self.replicas[0].forward(&t);
+            let logits = self.replicas[0].read().unwrap().forward(&t);
             for i in 0..chunk.len() {
                 out.push((0..logits.cols).map(|c| logits.at(i, c) as i32).collect());
             }
@@ -305,8 +408,10 @@ impl GoldenServer {
     }
 
     /// Run one batcher-shaped (padded) batch through replica
-    /// `index % n_replicas` — the network serving entry point
-    /// ([`crate::net::Engine`]). The per-image split inside the batch gets
+    /// `index % n_replicas` (with health armed: round-robin over the
+    /// *usable* replicas, bad batches transparently re-run) — the network
+    /// serving entry point ([`crate::net::Engine`]). The per-image split
+    /// inside the batch gets
     /// the whole pool: the network dispatcher executes batches one at a
     /// time, unlike [`Self::serve_batches_on`] which divides the pool
     /// across in-flight batches.
@@ -324,52 +429,34 @@ impl GoldenServer {
         }
     }
 
+    /// Max |served - want| over the batch's real rows.
+    fn batch_err(served: &Matrix, want: &Matrix, n_real: usize) -> i64 {
+        let mut worst = 0i64;
+        for r in 0..n_real {
+            for c in 0..served.cols {
+                worst = worst.max((served.at(r, c) - want.at(r, c)).abs());
+            }
+        }
+        worst
+    }
+
+    /// Whole-batch forward on one replica under its read lock: parallel
+    /// per-image split on `exec` when one is provided, else the
+    /// sequential pass over the server-owned scratch.
+    fn forward_replica(&self, replica: usize, t: &Tensor, exec: Option<&Executor>) -> Matrix {
+        let guard = self.replicas[replica].read().unwrap();
+        match exec {
+            Some(e) => guard.forward_on(t, e),
+            None => self.with_scratch(|s| guard.forward_seq_with(t, s)),
+        }
+    }
+
     fn run_batch(&self, index: usize, b: &Batch, image_workers: usize) -> BatchReport {
         let t = tensor_from_flat(&b.data, self.batch);
-        let (replica, served, want) = if let Some(map) = &self.pipeline {
-            // wavefront over the replica pool: one worker per distinct
-            // replica in the map is the concurrency ceiling, more would
-            // only idle. The report's replica is the classifier stage's —
-            // the one that produced these logits.
-            let exec = Executor::new(image_workers.clamp(1, map.concurrency()));
-            let served = forward_pipelined(&self.replicas[..], map, &t, &exec);
-            let want = self
-                .golden
-                .as_ref()
-                .map(|g| self.with_scratch(|s| g.forward_seq_with(&t, s)));
-            (*map.assignment.last().unwrap(), served, want)
-        } else if image_workers <= 1 || self.batch <= 1 {
-            // sequential forward: reuse the server-owned scratch across
-            // served batches (im2col patches + raw accumulators survive
-            // between batches).
-            let replica = index % self.replicas.len();
-            let (served, want) = self.with_scratch(|scratch| {
-                let served = self.replicas[replica].forward_seq_with(&t, scratch);
-                let want = self
-                    .golden
-                    .as_ref()
-                    .map(|g| g.forward_seq_with(&t, scratch));
-                (served, want)
-            });
-            (replica, served, want)
+        let (replica, served, max_abs_err) = if self.pipeline.is_some() {
+            self.run_batch_pipelined(&t, b.n_real, image_workers)
         } else {
-            let replica = index % self.replicas.len();
-            let image_exec = Executor::new(image_workers);
-            let served = self.replicas[replica].forward_on(&t, &image_exec);
-            let want = self.golden.as_ref().map(|g| g.forward_on(&t, &image_exec));
-            (replica, served, want)
-        };
-        let max_abs_err = match &want {
-            Some(want) => {
-                let mut worst = 0i64;
-                for r in 0..b.n_real {
-                    for c in 0..served.cols {
-                        worst = worst.max((served.at(r, c) - want.at(r, c)).abs());
-                    }
-                }
-                worst
-            }
-            None => 0,
+            self.run_batch_routed(index, &t, b.n_real, image_workers)
         };
         let logits = (0..b.n_real)
             .map(|r| (0..served.cols).map(|c| served.at(r, c) as i32).collect())
@@ -384,11 +471,140 @@ impl GoldenServer {
         }
     }
 
+    /// Whole-batch-per-replica serving: route, run, compare vs golden,
+    /// and (with health armed) transparently re-run a bad batch on
+    /// alternative replicas until one serves it cleanly or the pool is
+    /// exhausted — the report carries the best result found.
+    fn run_batch_routed(
+        &self,
+        index: usize,
+        t: &Tensor,
+        n_real: usize,
+        image_workers: usize,
+    ) -> (usize, Matrix, i64) {
+        let exec = (image_workers > 1 && self.batch > 1).then(|| Executor::new(image_workers));
+        let route = match &self.health {
+            Some(h) => h.route(index),
+            None => index % self.replicas.len(),
+        };
+        let served = self.forward_replica(route, t, exec.as_ref());
+        let want = self.golden.as_ref().map(|g| match exec.as_ref() {
+            Some(e) => g.forward_on(t, e),
+            None => self.with_scratch(|s| g.forward_seq_with(t, s)),
+        });
+        let Some(want) = want else {
+            return (route, served, 0);
+        };
+        let err = Self::batch_err(&served, &want, n_real);
+        let Some(h) = &self.health else {
+            return (route, served, err);
+        };
+        h.observe(route, err);
+        let threshold = h.policy().deviation_threshold;
+        let (mut best, mut tried) = ((route, served, err), vec![route]);
+        while best.2 > threshold {
+            let Some(alt) = h.alternative(&tried, index) else {
+                break; // every replica tried: serve the least-bad result
+            };
+            h.record_rerun();
+            let served = self.forward_replica(alt, t, exec.as_ref());
+            let err = Self::batch_err(&served, &want, n_real);
+            h.observe(alt, err);
+            tried.push(alt);
+            if err < best.2 {
+                best = (alt, served, err);
+            }
+        }
+        best
+    }
+
+    /// Pipelined serving: the wavefront flows across the mapped replicas,
+    /// so a bad batch cannot be blamed on one replica directly — with
+    /// health armed, the batch is re-run *solo* on each mapped replica to
+    /// localise the drift, each solo run feeds the state machine, the
+    /// stage map re-derives around any quarantine, and the best solo
+    /// result is served. The report's replica is the classifier stage's
+    /// (clean path) or the solo replica that produced the logits.
+    fn run_batch_pipelined(
+        &self,
+        t: &Tensor,
+        n_real: usize,
+        image_workers: usize,
+    ) -> (usize, Matrix, i64) {
+        let map = self
+            .pipeline
+            .as_ref()
+            .expect("pipelined path without a map")
+            .lock()
+            .unwrap()
+            .clone();
+        // wavefront over the replica pool: one worker per distinct
+        // replica in the map is the concurrency ceiling, more would
+        // only idle. The report's replica is the classifier stage's —
+        // the one that produced these logits.
+        let exec = Executor::new(image_workers.clamp(1, map.concurrency()));
+        let served = forward_pipelined(&self.replicas[..], &map, t, &exec);
+        let classifier = *map.assignment.last().unwrap();
+        let want = self
+            .golden
+            .as_ref()
+            .map(|g| self.with_scratch(|s| g.forward_seq_with(t, s)));
+        let Some(want) = want else {
+            return (classifier, served, 0);
+        };
+        let err = Self::batch_err(&served, &want, n_real);
+        let Some(h) = &self.health else {
+            return (classifier, served, err);
+        };
+        let threshold = h.policy().deviation_threshold;
+        let mut mapped: Vec<usize> = map.assignment.clone();
+        mapped.sort_unstable();
+        mapped.dedup();
+        if err <= threshold {
+            // clean wavefront: every mapped replica contributed a clean
+            // share (lets probation replicas earn Healthy back)
+            for &r in &mapped {
+                h.observe(r, err);
+            }
+            return (classifier, served, err);
+        }
+        // localise the drift: solo-run the batch on each mapped replica
+        h.record_rerun();
+        let mut best: Option<(usize, Matrix, i64)> = None;
+        for &r in &mapped {
+            let solo = self.forward_replica(r, t, None);
+            let solo_err = Self::batch_err(&solo, &want, n_real);
+            h.observe(r, solo_err);
+            if best.as_ref().map_or(true, |(_, _, e)| solo_err < *e) {
+                best = Some((r, solo, solo_err));
+            }
+        }
+        // try surviving replicas outside the map too, if the mapped ones
+        // all drifted
+        let mut best = best.expect("stage map uses at least one replica");
+        let mut tried = mapped;
+        while best.2 > threshold {
+            let Some(alt) = h.alternative(&tried, 0) else {
+                break;
+            };
+            h.record_rerun();
+            let solo = self.forward_replica(alt, t, None);
+            let solo_err = Self::batch_err(&solo, &want, n_real);
+            h.observe(alt, solo_err);
+            tried.push(alt);
+            if solo_err < best.2 {
+                best = (alt, solo, solo_err);
+            }
+        }
+        self.rebuild_pipeline_map();
+        best
+    }
+
     /// Verification path: the installed-crossbar forward must equal the
     /// legacy per-call engine bit-for-bit on this batch.
     pub fn verify_batch(&self, images: &[Vec<i32>]) -> bool {
         let t = tensor_from(images, images.len().max(1));
-        let installed = self.replicas[0].forward(&t);
+        let installed = self.replicas[0].read().unwrap().forward(&t);
         let legacy = self.cnn.forward(&t, &self.p, self.adaptive);
         installed.data == legacy.data
     }
@@ -414,14 +630,17 @@ impl crate::net::Engine for GoldenServer {
 
     fn describe(&self) -> String {
         format!(
-            "golden newton-mini · adc {} · {} replica(s){}{} · batch {}",
+            "golden newton-mini · adc {} · {} replica(s){}{}{} · batch {}",
             self.kind.label(),
             self.replicas.len(),
             if self.golden.is_some() { " + lossless golden" } else { "" },
             match &self.pipeline {
-                Some(map) => format!(" · pipelined stages {:?}", map.assignment),
+                Some(map) => {
+                    format!(" · pipelined stages {:?}", map.lock().unwrap().assignment)
+                }
                 None => String::new(),
             },
+            if self.health.is_some() { " · health armed" } else { "" },
             self.batch
         )
     }
@@ -434,6 +653,10 @@ impl crate::net::Engine for GoldenServer {
             logits: r.logits,
             max_abs_err: r.max_abs_err,
         }
+    }
+
+    fn health(&self) -> Option<HealthReport> {
+        self.health_report()
     }
 }
 
@@ -584,6 +807,104 @@ mod tests {
             assert_eq!(w.logits, g.logits, "batch {}", w.index);
             assert_eq!(w.max_abs_err, g.max_abs_err, "batch {}", w.index);
         }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn health_quarantines_a_drifted_replica_and_keeps_answers_exact() {
+        use crate::coordinator::health::{HealthPolicy, HealthState};
+        let policy = HealthPolicy {
+            quarantine_after: 2,
+            ..HealthPolicy::default()
+        };
+        let s = GoldenServer::replicated(0, AdcKind::Exact, 3, 2).with_health(policy);
+        s.inject_cell_faults(1, &crate::faults::FaultPlan::drift(7, 0.05, 30));
+        let imgs = images(12, 31); // 6 batches: replica 1 drawn at least twice
+        let want = GoldenServer::replicated(0, AdcKind::Exact, 1, 2).infer(&imgs);
+        // sequential executor: deterministic route/observe order
+        let reports = s.serve_batches_on(&imgs, &Executor::new(1));
+        let mut got: Vec<Vec<i32>> = Vec::new();
+        for r in &reports {
+            assert_eq!(r.max_abs_err, 0, "batch {}: drifted result served", r.index);
+            assert_ne!(r.replica, 1, "batch {}: logits came from the drifted replica", r.index);
+            got.extend(r.logits.iter().cloned());
+        }
+        assert_eq!(got, want, "health re-runs changed the served numbers");
+        let rep = s.health_report().unwrap();
+        assert_eq!(rep.states[1], HealthState::Quarantined.as_u8());
+        assert_eq!(rep.quarantines, 1);
+        assert!(rep.reruns >= 2, "bad batches were not re-run ({})", rep.reruns);
+        assert!(!rep.degraded);
+        // the fault schedule is seed-deterministic: a second injection from
+        // the same plan reproduces the identical drifted install
+        let s2 = GoldenServer::replicated(0, AdcKind::Exact, 3, 2).with_health(policy);
+        s2.inject_cell_faults(1, &crate::faults::FaultPlan::drift(7, 0.05, 30));
+        let r2 = s2.serve_batches_on(&imgs, &Executor::new(1));
+        let errs: Vec<i64> = reports.iter().map(|r| r.max_abs_err).collect();
+        let errs2: Vec<i64> = r2.iter().map(|r| r.max_abs_err).collect();
+        assert_eq!(errs, errs2, "same seed, different fault schedule");
+        assert_eq!(s2.health_report().unwrap().quarantines, 1);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn all_replicas_quarantined_degrades_to_least_bad_serving() {
+        use crate::coordinator::health::HealthPolicy;
+        let policy = HealthPolicy {
+            quarantine_after: 2,
+            ..HealthPolicy::default()
+        };
+        let s = GoldenServer::replicated(0, AdcKind::Exact, 2, 2).with_health(policy);
+        s.inject_cell_faults(0, &crate::faults::FaultPlan::drift(3, 0.01, 4));
+        s.inject_cell_faults(1, &crate::faults::FaultPlan::drift(4, 0.10, 40));
+        let imgs = images(8, 33);
+        let reports = s.serve_batches_on(&imgs, &Executor::new(1));
+        let rep = s.health_report().unwrap();
+        assert!(rep.degraded, "both replicas drifted but not flagged degraded");
+        assert_eq!(rep.quarantines, 2);
+        // serving never stopped: every request got logits, deviation is
+        // reported honestly rather than hidden
+        assert_eq!(reports.iter().map(|r| r.n_real).sum::<usize>(), 8);
+        assert!(reports.iter().all(|r| r.max_abs_err > 0));
+        // reinstalling one replica restores exact service
+        s.reinstall(0);
+        let after = s.serve_batches_on(&imgs, &Executor::new(1));
+        assert!(after.iter().all(|r| r.max_abs_err == 0 && r.replica == 0));
+        assert!(!s.health_report().unwrap().degraded);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn pipelined_health_localises_drift_and_rederives_the_map() {
+        use crate::coordinator::health::{HealthPolicy, HealthState};
+        let policy = HealthPolicy {
+            quarantine_after: 2,
+            ..HealthPolicy::default()
+        };
+        // newton map over 3 replicas: convs on 0..1, classifier on 2;
+        // replica 0 drifts, so the wavefront result goes bad and the solo
+        // blame pass must pin it on replica 0 alone
+        let s = GoldenServer::replicated(0, AdcKind::Exact, 3, 2)
+            .with_pipeline(StagePolicy::newton())
+            .unwrap()
+            .with_health(policy);
+        s.inject_cell_faults(0, &crate::faults::FaultPlan::drift(11, 0.05, 30));
+        let imgs = images(8, 35);
+        let want = GoldenServer::replicated(0, AdcKind::Exact, 1, 2).infer(&imgs);
+        let reports = s.serve_batches(&imgs); // pipelined: sequential already
+        let mut got: Vec<Vec<i32>> = Vec::new();
+        for r in &reports {
+            assert_eq!(r.max_abs_err, 0, "batch {}: drift leaked through", r.index);
+            got.extend(r.logits.iter().cloned());
+        }
+        assert_eq!(got, want);
+        let rep = s.health_report().unwrap();
+        assert_eq!(rep.states[0], HealthState::Quarantined.as_u8());
+        assert_eq!(rep.states[2], HealthState::Healthy.as_u8());
+        assert!(rep.reruns >= 1);
+        // the live map re-derived around the quarantined replica
+        let map = s.pipeline_map().unwrap();
+        assert!(!map.assignment.contains(&0), "map still places stages on 0: {:?}", map.assignment);
     }
 
     #[test]

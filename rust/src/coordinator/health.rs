@@ -1,0 +1,500 @@
+//! Replica health tracking for fault-tolerant serving.
+//!
+//! Newton's crossbars are analog: installed conductances drift, and a
+//! replica can silently start returning wrong logits while still
+//! answering quickly (arXiv:2109.01262's accuracy erosion). The golden
+//! serving stack already *measures* this — every batch reports its
+//! max-abs deviation vs the lossless golden install — and this module is
+//! the policy that *acts* on the measurement:
+//!
+//! ```text
+//!            bad batch                 bad streak /
+//!            (err > threshold)         EWMA drift
+//!  Healthy ────────────────▶ Suspect ─────────────▶ Quarantined
+//!     ▲                        │                        │
+//!     │  clean batch           │                        │ reinstall
+//!     ◀────────────────────────┘                        │ ("reprogram
+//!     ▲                                                 ▼  the xbar")
+//!     └──────────────────────────────────────────── Probation
+//!                    clean streak
+//! ```
+//!
+//! * **Healthy → Suspect**: `suspect_after` consecutive bad batches
+//!   (deviation strictly above `deviation_threshold`; a batch *exactly at*
+//!   the threshold is healthy).
+//! * **Suspect → Quarantined**: `quarantine_after` consecutive bad
+//!   batches, or the per-replica EWMA drift score exceeding
+//!   `ewma_quarantine`. Quarantined replicas leave the serving rotation
+//!   ([`HealthMonitor::route`]) and the pipelined stage map is re-derived
+//!   around them ([`crate::mapping::StageMap::build_over`]).
+//! * **Quarantined → Probation**: only via reinstall
+//!   ([`crate::coordinator::GoldenServer::reinstall`] reprograms the
+//!   crossbar from pristine weights, then calls
+//!   [`HealthMonitor::reinstalled`]).
+//! * **Probation → Healthy**: `probation_clean` consecutive clean batches.
+//!
+//! When *every* replica is quarantined the server keeps serving on the
+//! least-bad one (lowest EWMA) and flags the degradation in `Stats` —
+//! graceful degradation down to one replica, never an outage.
+//!
+//! The monitor is pure bookkeeping behind one mutex: the serving engine
+//! ([`crate::coordinator::GoldenServer`]) owns the re-run and reinstall
+//! mechanics, this module owns only state and placement decisions — so
+//! the state machine is unit-testable without a single forward pass.
+
+use std::sync::Mutex;
+
+/// Per-replica health state. Wire encoding (`Stats`): the `repr` value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum HealthState {
+    Healthy = 0,
+    Suspect = 1,
+    Quarantined = 2,
+    /// Reinstalled, serving again, not yet trusted as Healthy.
+    Probation = 3,
+}
+
+impl HealthState {
+    /// Stable wire byte for `Stats` snapshots.
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    /// Decode a wire byte (unknown values read as Quarantined — the
+    /// conservative direction).
+    pub fn from_u8(v: u8) -> HealthState {
+        match v {
+            0 => HealthState::Healthy,
+            1 => HealthState::Suspect,
+            3 => HealthState::Probation,
+            _ => HealthState::Quarantined,
+        }
+    }
+
+    /// Human label for stats printouts.
+    pub fn label(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Suspect => "suspect",
+            HealthState::Quarantined => "quarantined",
+            HealthState::Probation => "probation",
+        }
+    }
+}
+
+/// Deviation policy driving the state machine. The defaults suit exact
+/// serving configs, where any nonzero deviation is a fault; adaptive or
+/// lossy ADC configs deviate legitimately, so raise
+/// `deviation_threshold` above the config's expected deviation band
+/// before enabling health there.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthPolicy {
+    /// A batch is *bad* when its max-abs deviation vs golden is strictly
+    /// above this; a batch exactly at the threshold is healthy.
+    pub deviation_threshold: i64,
+    /// Consecutive bad batches before Healthy demotes to Suspect.
+    pub suspect_after: u32,
+    /// Consecutive bad batches before quarantine.
+    pub quarantine_after: u32,
+    /// EWMA smoothing factor for the per-replica drift score
+    /// (`score = alpha * err + (1 - alpha) * score`).
+    pub ewma_alpha: f64,
+    /// Quarantine when the EWMA drift score exceeds this, regardless of
+    /// the consecutive count (infinite by default: streaks decide).
+    pub ewma_quarantine: f64,
+    /// Consecutive clean batches before Probation promotes to Healthy.
+    pub probation_clean: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy {
+            deviation_threshold: 0,
+            suspect_after: 1,
+            quarantine_after: 3,
+            ewma_alpha: 0.25,
+            ewma_quarantine: f64::INFINITY,
+            probation_clean: 2,
+        }
+    }
+}
+
+/// One replica's bookkeeping.
+#[derive(Clone, Debug)]
+struct ReplicaHealth {
+    state: HealthState,
+    consecutive_bad: u32,
+    clean_streak: u32,
+    /// EWMA of per-batch max-abs deviation — the drift score.
+    ewma: f64,
+    observed: u64,
+}
+
+impl ReplicaHealth {
+    fn new() -> Self {
+        ReplicaHealth {
+            state: HealthState::Healthy,
+            consecutive_bad: 0,
+            clean_streak: 0,
+            ewma: 0.0,
+            observed: 0,
+        }
+    }
+}
+
+/// Aggregate health counters a serving engine reports through `Stats`
+/// (carried on the wire next to the per-replica request counts).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthReport {
+    /// Per-replica [`HealthState::as_u8`] bytes.
+    pub states: Vec<u8>,
+    /// Batches transparently re-run on another replica after a bad result.
+    pub reruns: u64,
+    /// Transitions *into* Quarantined (a replica re-quarantined after a
+    /// failed reinstall counts again).
+    pub quarantines: u64,
+    /// Every replica is quarantined: serving continues on the least-bad
+    /// one, results may deviate.
+    pub degraded: bool,
+}
+
+struct MonitorInner {
+    replicas: Vec<ReplicaHealth>,
+    reruns: u64,
+    quarantines: u64,
+}
+
+/// The replica health state machine (see module docs for the diagram).
+/// Thread-safe: observations and placement queries take one short lock.
+pub struct HealthMonitor {
+    policy: HealthPolicy,
+    inner: Mutex<MonitorInner>,
+}
+
+impl HealthMonitor {
+    pub fn new(n_replicas: usize, policy: HealthPolicy) -> Self {
+        assert!(n_replicas > 0);
+        assert!(policy.quarantine_after >= 1);
+        assert!(policy.suspect_after >= 1);
+        assert!((0.0..=1.0).contains(&policy.ewma_alpha));
+        HealthMonitor {
+            policy,
+            inner: Mutex::new(MonitorInner {
+                replicas: (0..n_replicas).map(|_| ReplicaHealth::new()).collect(),
+                reruns: 0,
+                quarantines: 0,
+            }),
+        }
+    }
+
+    pub fn policy(&self) -> &HealthPolicy {
+        &self.policy
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.inner.lock().unwrap().replicas.len()
+    }
+
+    /// Record one served batch's deviation for `replica` and run the
+    /// state machine. Returns the replica's state after the observation.
+    pub fn observe(&self, replica: usize, max_abs_err: i64) -> HealthState {
+        let mut g = self.inner.lock().unwrap();
+        let p = self.policy;
+        let bad = max_abs_err > p.deviation_threshold;
+        let h = &mut g.replicas[replica];
+        h.observed += 1;
+        h.ewma = p.ewma_alpha * max_abs_err as f64 + (1.0 - p.ewma_alpha) * h.ewma;
+        let was = h.state;
+        if bad {
+            h.consecutive_bad += 1;
+            h.clean_streak = 0;
+            if h.state != HealthState::Quarantined
+                && (h.consecutive_bad >= p.quarantine_after || h.ewma > p.ewma_quarantine)
+            {
+                h.state = HealthState::Quarantined;
+            } else if matches!(h.state, HealthState::Healthy | HealthState::Probation)
+                && h.consecutive_bad >= p.suspect_after
+            {
+                h.state = HealthState::Suspect;
+            }
+        } else {
+            h.consecutive_bad = 0;
+            h.clean_streak += 1;
+            match h.state {
+                HealthState::Suspect => h.state = HealthState::Healthy,
+                HealthState::Probation if h.clean_streak >= p.probation_clean => {
+                    h.state = HealthState::Healthy
+                }
+                _ => {}
+            }
+        }
+        let now = h.state;
+        if was != HealthState::Quarantined && now == HealthState::Quarantined {
+            g.quarantines += 1;
+        }
+        now
+    }
+
+    /// Current state of one replica.
+    pub fn state(&self, replica: usize) -> HealthState {
+        self.inner.lock().unwrap().replicas[replica].state
+    }
+
+    /// Replicas eligible for placement: everything not quarantined, in
+    /// index order. Empty **never** — when all are quarantined, the
+    /// least-bad one (lowest EWMA drift score, ties to the lowest index)
+    /// is returned alone so serving degrades instead of stopping.
+    pub fn usable(&self) -> Vec<usize> {
+        let g = self.inner.lock().unwrap();
+        Self::usable_of(&g.replicas)
+    }
+
+    fn usable_of(replicas: &[ReplicaHealth]) -> Vec<usize> {
+        let up: Vec<usize> = (0..replicas.len())
+            .filter(|&r| replicas[r].state != HealthState::Quarantined)
+            .collect();
+        if !up.is_empty() {
+            return up;
+        }
+        let least_bad = (0..replicas.len())
+            .min_by(|&a, &b| {
+                replicas[a]
+                    .ewma
+                    .partial_cmp(&replicas[b].ewma)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("monitor has at least one replica");
+        vec![least_bad]
+    }
+
+    /// Replica for batch `index`: round-robin over [`Self::usable`], so
+    /// with every replica healthy this is exactly `index % n_replicas` —
+    /// the health-off placement, bit-compatible by construction.
+    pub fn route(&self, index: usize) -> usize {
+        let up = self.usable();
+        up[index % up.len()]
+    }
+
+    /// A usable replica not in `exclude`, for re-running a bad batch.
+    /// Falls back to any non-excluded replica (least-bad first) when all
+    /// usable ones are excluded; `None` once every replica was tried.
+    pub fn alternative(&self, exclude: &[usize], index: usize) -> Option<usize> {
+        let g = self.inner.lock().unwrap();
+        let up: Vec<usize> = Self::usable_of(&g.replicas)
+            .into_iter()
+            .filter(|r| !exclude.contains(r))
+            .collect();
+        if !up.is_empty() {
+            return Some(up[index % up.len()]);
+        }
+        (0..g.replicas.len())
+            .filter(|r| !exclude.contains(r))
+            .min_by(|&a, &b| {
+                g.replicas[a]
+                    .ewma
+                    .partial_cmp(&g.replicas[b].ewma)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+    }
+
+    /// Count one transparent re-run of a bad batch on another replica.
+    pub fn record_rerun(&self) {
+        self.inner.lock().unwrap().reruns += 1;
+    }
+
+    /// The replica was reprogrammed from pristine weights: back to
+    /// [`HealthState::Probation`] with fresh counters — it must earn
+    /// Healthy through `probation_clean` clean batches.
+    pub fn reinstalled(&self, replica: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.replicas[replica] = ReplicaHealth {
+            state: HealthState::Probation,
+            ..ReplicaHealth::new()
+        };
+    }
+
+    /// Snapshot for `Stats`.
+    pub fn report(&self) -> HealthReport {
+        let g = self.inner.lock().unwrap();
+        HealthReport {
+            states: g.replicas.iter().map(|h| h.state.as_u8()).collect(),
+            reruns: g.reruns,
+            quarantines: g.quarantines,
+            degraded: g
+                .replicas
+                .iter()
+                .all(|h| h.state == HealthState::Quarantined),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deviation_exactly_at_threshold_is_healthy() {
+        let m = HealthMonitor::new(
+            2,
+            HealthPolicy {
+                deviation_threshold: 5,
+                ..HealthPolicy::default()
+            },
+        );
+        for _ in 0..20 {
+            assert_eq!(m.observe(0, 5), HealthState::Healthy);
+        }
+        // one unit over the line is bad
+        assert_eq!(m.observe(0, 6), HealthState::Suspect);
+    }
+
+    #[test]
+    fn consecutive_bad_batches_walk_healthy_suspect_quarantined() {
+        let m = HealthMonitor::new(2, HealthPolicy::default());
+        assert_eq!(m.observe(0, 10), HealthState::Suspect); // suspect_after = 1
+        assert_eq!(m.observe(0, 10), HealthState::Suspect);
+        assert_eq!(m.observe(0, 10), HealthState::Quarantined); // quarantine_after = 3
+        // quarantine is sticky: further observations do not resurrect it
+        assert_eq!(m.observe(0, 0), HealthState::Quarantined);
+        assert_eq!(m.report().quarantines, 1);
+    }
+
+    #[test]
+    fn clean_batch_resets_a_suspect() {
+        let m = HealthMonitor::new(1, HealthPolicy::default());
+        assert_eq!(m.observe(0, 3), HealthState::Suspect);
+        assert_eq!(m.observe(0, 0), HealthState::Healthy);
+        // the streak restarts: two more bads only reach Suspect again
+        assert_eq!(m.observe(0, 3), HealthState::Suspect);
+        assert_eq!(m.observe(0, 3), HealthState::Suspect);
+    }
+
+    #[test]
+    fn ewma_drift_quarantines_without_a_full_streak() {
+        let m = HealthMonitor::new(
+            1,
+            HealthPolicy {
+                quarantine_after: 100, // streaks effectively off
+                ewma_alpha: 0.5,
+                ewma_quarantine: 6.0,
+                ..HealthPolicy::default()
+            },
+        );
+        // ewma after one batch of 16 at alpha 0.5 is 8 — past the 6.0
+        // line immediately, no 100-batch streak needed
+        assert_eq!(m.observe(0, 16), HealthState::Quarantined);
+    }
+
+    #[test]
+    fn routing_skips_quarantined_replicas_and_matches_modulo_when_healthy() {
+        let m = HealthMonitor::new(3, HealthPolicy::default());
+        for i in 0..6 {
+            assert_eq!(m.route(i), i % 3, "healthy routing must be index % n");
+        }
+        // quarantine replica 1
+        for _ in 0..3 {
+            m.observe(1, 9);
+        }
+        assert_eq!(m.state(1), HealthState::Quarantined);
+        assert_eq!(m.usable(), vec![0, 2]);
+        for i in 0..6 {
+            assert_ne!(m.route(i), 1, "quarantined replica still routed");
+        }
+    }
+
+    #[test]
+    fn all_quarantined_serves_the_least_bad_and_reports_degraded() {
+        let m = HealthMonitor::new(
+            3,
+            HealthPolicy {
+                ewma_alpha: 1.0, // score = last err, for a readable test
+                ..HealthPolicy::default()
+            },
+        );
+        for (r, err) in [(0, 30), (1, 10), (2, 50)] {
+            for _ in 0..3 {
+                m.observe(r, err);
+            }
+        }
+        let rep = m.report();
+        assert!(rep.degraded);
+        assert_eq!(rep.states, vec![2, 2, 2]);
+        assert_eq!(rep.quarantines, 3);
+        // least-bad EWMA is replica 1
+        assert_eq!(m.usable(), vec![1]);
+        for i in 0..4 {
+            assert_eq!(m.route(i), 1);
+        }
+    }
+
+    #[test]
+    fn alternative_excludes_the_failing_replica() {
+        let m = HealthMonitor::new(3, HealthPolicy::default());
+        let alt = m.alternative(&[0], 0).unwrap();
+        assert_ne!(alt, 0);
+        // everything tried -> no alternative left
+        assert_eq!(m.alternative(&[0, 1, 2], 0), None);
+        // all usable excluded but one replica untried: least-bad fallback
+        for _ in 0..3 {
+            m.observe(2, 9);
+        }
+        assert_eq!(m.alternative(&[0, 1], 0), Some(2));
+    }
+
+    #[test]
+    fn reinstall_restores_probation_then_healthy_after_a_clean_streak() {
+        let m = HealthMonitor::new(2, HealthPolicy::default());
+        for _ in 0..3 {
+            m.observe(0, 7);
+        }
+        assert_eq!(m.state(0), HealthState::Quarantined);
+        m.reinstalled(0);
+        assert_eq!(m.state(0), HealthState::Probation);
+        assert!(m.usable().contains(&0), "probation serves again");
+        // probation_clean = 2 clean batches to earn Healthy
+        assert_eq!(m.observe(0, 0), HealthState::Probation);
+        assert_eq!(m.observe(0, 0), HealthState::Healthy);
+    }
+
+    #[test]
+    fn failed_reinstall_requarantines_and_counts_again() {
+        let m = HealthMonitor::new(2, HealthPolicy::default());
+        for _ in 0..3 {
+            m.observe(0, 7);
+        }
+        m.reinstalled(0);
+        // still drifted after "reprogramming": walks back to quarantine
+        for _ in 0..3 {
+            m.observe(0, 7);
+        }
+        assert_eq!(m.state(0), HealthState::Quarantined);
+        assert_eq!(m.report().quarantines, 2);
+    }
+
+    #[test]
+    fn report_counts_reruns() {
+        let m = HealthMonitor::new(2, HealthPolicy::default());
+        m.record_rerun();
+        m.record_rerun();
+        let rep = m.report();
+        assert_eq!(rep.reruns, 2);
+        assert_eq!(rep.quarantines, 0);
+        assert!(!rep.degraded);
+        assert_eq!(rep.states, vec![0, 0]);
+    }
+
+    #[test]
+    fn state_bytes_roundtrip() {
+        for s in [
+            HealthState::Healthy,
+            HealthState::Suspect,
+            HealthState::Quarantined,
+            HealthState::Probation,
+        ] {
+            assert_eq!(HealthState::from_u8(s.as_u8()), s);
+            assert!(!s.label().is_empty());
+        }
+        assert_eq!(HealthState::from_u8(200), HealthState::Quarantined);
+    }
+}

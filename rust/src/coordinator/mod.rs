@@ -22,11 +22,13 @@
 
 pub mod batcher;
 pub mod golden;
+pub mod health;
 pub mod pipeline;
 pub mod server;
 
 pub use batcher::{Batch, Batcher};
 pub use golden::{serve_totals, BatchReport, GoldenServer};
+pub use health::{HealthMonitor, HealthPolicy, HealthReport, HealthState};
 pub use pipeline::{build_map, forward_pipelined, ScratchPool, StagePool};
 pub use server::{PipelineServer, ServerConfig, ServerReport};
 

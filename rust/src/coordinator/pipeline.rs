@@ -37,7 +37,7 @@
 //! without touching the scheduler — the same seam
 //! [`crate::net::Engine`] cut for the wire layer.
 
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock};
 
 use crate::mapping::{StageMap, StagePolicy, StageRole};
 use crate::sched::Executor;
@@ -96,6 +96,41 @@ impl StagePool for [ProgrammedCnn] {
         scratch: &mut ForwardScratch,
     ) -> StageData {
         self[replica].run_stage(s, input, scratch)
+    }
+}
+
+/// The fault-tolerant pool: replicas live behind [`RwLock`]s so a
+/// reinstall ("reprogram the crossbar",
+/// [`crate::coordinator::GoldenServer::reinstall`]) can swap one out
+/// under a write lock while serving holds read locks. Wave jobs take the
+/// read lock per stage execution — uncontended in steady state, and a
+/// reinstall simply waits for the in-flight stage on that replica to
+/// finish before swapping.
+impl StagePool for [RwLock<ProgrammedCnn>] {
+    fn n_replicas(&self) -> usize {
+        self.len()
+    }
+
+    fn n_stages(&self) -> usize {
+        self[0].read().unwrap().n_stages()
+    }
+
+    fn stage_role(&self, s: usize) -> StageRole {
+        if s < self[0].read().unwrap().n_conv_stages() {
+            StageRole::Conv
+        } else {
+            StageRole::Classifier
+        }
+    }
+
+    fn run_stage(
+        &self,
+        replica: usize,
+        s: usize,
+        input: &StageData,
+        scratch: &mut ForwardScratch,
+    ) -> StageData {
+        self[replica].read().unwrap().run_stage(s, input, scratch)
     }
 }
 

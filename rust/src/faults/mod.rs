@@ -1,0 +1,476 @@
+//! Deterministic fault injection for chaos testing (std-only, like
+//! [`crate::sched`] — no `rand` dependency).
+//!
+//! Newton's crossbars are analog devices: conductance drift and
+//! programming error silently corrupt installed weights over time
+//! (arXiv:2109.01262 measures exactly this erosion in deployed analog
+//! inference), and the network in front of them fails in its own ways —
+//! corrupted frames, stalled peers, mid-frame disconnects. This module
+//! injects both failure classes *on a deterministic schedule*, so every
+//! chaos run is reproducible from a single seed:
+//!
+//! * [`FaultPlan`] perturbs a replica's programmed cells — per-cell
+//!   conductance drift and stuck-at faults over the weight matrices,
+//!   re-installed through the ordinary
+//!   [`ProgrammedLinear::install`](crate::xbar::cnn::ProgrammedLinear::install)
+//!   path so the perturbed install is a first-class replica
+//!   ([`FaultPlan::program_drifted`]). The health machinery in
+//!   [`crate::coordinator::health`] is expected to catch the resulting
+//!   deviation and quarantine the replica.
+//! * [`FaultyStream`] wraps any `Read + Write` transport and injects
+//!   frame corruption, partial writes, stalls, and mid-frame disconnects
+//!   at a configured rate. The retrying client
+//!   ([`crate::net::RetryClient`]) must mask every one of them without
+//!   ever surfacing a wrong answer.
+//!
+//! Determinism contract: the same `(seed, rate)` against the same call
+//! sequence makes the same decisions in the same order. The RNG is the
+//! repo-wide xorshift64* ([`crate::util::Rng`]); every fault site derives
+//! its stream from the plan seed and a site index, so schedules never
+//! alias across layers or connections.
+
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::XbarParams;
+use crate::util::Rng;
+use crate::xbar::cnn::{MiniCnn, ProgrammedCnn, ProgrammedLinear};
+use crate::xbar::Matrix;
+
+/// Signed-7-bit weight range of the golden model (|w| < 64, model.py):
+/// drifted cells clamp here, stuck-on cells pin to the positive rail.
+const WEIGHT_MAX: i64 = 63;
+
+/// A seeded, reproducible plan for perturbing programmed crossbar cells.
+///
+/// Two analog failure modes, applied per cell:
+///
+/// * **drift** — with probability `drift_rate`, a cell's conductance moves
+///   by a uniform nonzero delta in `[-drift_mag, drift_mag]`, clamped to
+///   the weight range (gradual conductance drift);
+/// * **stuck-at** — with probability `stuck_rate`, a cell pins to rail:
+///   stuck-off (0) or stuck-on (±full scale, keeping the cell's sign bias)
+///   with equal probability (hard programming faults).
+///
+/// The same plan applied to the same matrix always produces the same
+/// perturbation; distinct `layer` indices draw from distinct streams.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    drift_rate: f64,
+    drift_mag: i64,
+    stuck_rate: f64,
+}
+
+impl FaultPlan {
+    /// Pure conductance-drift plan: `rate` of cells move by up to `mag`.
+    pub fn drift(seed: u64, rate: f64, mag: i64) -> Self {
+        assert!((0.0..=1.0).contains(&rate), "drift rate {rate} out of [0,1]");
+        assert!(mag > 0, "drift magnitude must be positive");
+        FaultPlan {
+            seed,
+            drift_rate: rate,
+            drift_mag: mag,
+            stuck_rate: 0.0,
+        }
+    }
+
+    /// Pure stuck-at plan: `rate` of cells pin to a rail (0 or ±63).
+    pub fn stuck_at(seed: u64, rate: f64) -> Self {
+        assert!((0.0..=1.0).contains(&rate), "stuck rate {rate} out of [0,1]");
+        FaultPlan {
+            seed,
+            drift_rate: 0.0,
+            drift_mag: 1,
+            stuck_rate: rate,
+        }
+    }
+
+    /// Add stuck-at faults to a drift plan.
+    pub fn with_stuck(mut self, rate: f64) -> Self {
+        assert!((0.0..=1.0).contains(&rate), "stuck rate {rate} out of [0,1]");
+        self.stuck_rate = rate;
+        self
+    }
+
+    /// The plan's seed (chaos drivers report it so a run can be replayed).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Perturbed copy of one layer's weight matrix. Deterministic in
+    /// `(self, layer, w)`; layers draw from distinct RNG streams.
+    pub fn perturb(&self, layer: usize, w: &Matrix) -> Matrix {
+        let mut rng = Rng::new(self.seed ^ (layer as u64).wrapping_mul(0xA076_1D64_78BD_642F));
+        let mut out = w.clone();
+        for v in out.data.iter_mut() {
+            if self.stuck_rate > 0.0 && rng.f64() < self.stuck_rate {
+                // stuck-off or stuck-on (keep the cell's sign so the rail
+                // is reachable by drift too)
+                *v = if rng.below(2) == 0 {
+                    0
+                } else if *v < 0 {
+                    -WEIGHT_MAX
+                } else {
+                    WEIGHT_MAX
+                };
+            } else if self.drift_rate > 0.0 && rng.f64() < self.drift_rate {
+                let mut delta = rng.range_i64(-self.drift_mag, self.drift_mag + 1);
+                if delta == 0 {
+                    delta = self.drift_mag; // drifted cells actually move
+                }
+                *v = (*v + delta).clamp(-WEIGHT_MAX, WEIGHT_MAX);
+            }
+        }
+        out
+    }
+
+    /// Install a fault-perturbed replica of `cnn`: every layer's weights
+    /// run through [`Self::perturb`], then through the ordinary install
+    /// path with the per-stage scaling shifts — the exact twin of
+    /// [`MiniCnn::program`] over drifted cells. The result is a
+    /// first-class [`ProgrammedCnn`] the health machinery must catch by
+    /// its served deviation, not by any special marking.
+    pub fn program_drifted(&self, cnn: &MiniCnn, p: &XbarParams, adaptive: bool) -> ProgrammedCnn {
+        let convs = cnn
+            .convs
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let pp = XbarParams {
+                    out_shift: cnn.shifts[i],
+                    ..*p
+                };
+                ProgrammedLinear::install(&self.perturb(i, w), &pp, adaptive)
+            })
+            .collect();
+        let pp = XbarParams {
+            out_shift: cnn.shifts[cnn.convs.len()],
+            ..*p
+        };
+        let fc = ProgrammedLinear::install(&self.perturb(cnn.convs.len(), &cnn.fc), &pp, adaptive);
+        ProgrammedCnn::from_layers(convs, fc, cnn.act_max)
+    }
+}
+
+/// Network fault kinds [`FaultyStream`] injects. `u8` repr is the RNG
+/// draw; the set mirrors how real sockets fail under a flaky peer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum NetFault {
+    /// Delay the operation, then perform it normally.
+    Stall,
+    /// Fail with `ConnectionReset` and kill the stream.
+    Disconnect,
+    /// Flip one bit of the payload (write: before sending; read: after
+    /// receiving) — downstream framing must catch it by checksum.
+    Corrupt,
+    /// Write a prefix of the buffer, then kill the stream (mid-frame
+    /// disconnect). On the read side this degrades to `Disconnect`.
+    Partial,
+}
+
+impl NetFault {
+    fn draw(rng: &mut Rng) -> Self {
+        match rng.below(4) {
+            0 => NetFault::Stall,
+            1 => NetFault::Disconnect,
+            2 => NetFault::Corrupt,
+            _ => NetFault::Partial,
+        }
+    }
+}
+
+/// A `Read + Write` wrapper that injects faults on a deterministic,
+/// seeded schedule. Each IO call rolls once against `rate`; a triggered
+/// roll draws one of [`NetFault`]'s kinds. After a disconnect-class fault
+/// the stream is dead: every further call fails with `BrokenPipe`, like a
+/// real torn socket.
+///
+/// Generic over the transport so the schedule is unit-testable on
+/// in-memory buffers; the chaos bench wraps `TcpStream`.
+pub struct FaultyStream<S> {
+    inner: S,
+    rng: Rng,
+    rate: f64,
+    stall: Duration,
+    dead: bool,
+    injected: Arc<AtomicU64>,
+}
+
+impl<S> FaultyStream<S> {
+    /// Wrap `inner`; a fault fires on each read/write with probability
+    /// `rate` (0 disables injection entirely — a pure passthrough).
+    pub fn new(inner: S, seed: u64, rate: f64) -> Self {
+        Self::with_counter(inner, seed, rate, Arc::new(AtomicU64::new(0)))
+    }
+
+    /// [`Self::new`] sharing an injected-fault counter across streams
+    /// (the chaos bench aggregates one counter over all lanes).
+    pub fn with_counter(inner: S, seed: u64, rate: f64, counter: Arc<AtomicU64>) -> Self {
+        assert!((0.0..=1.0).contains(&rate), "fault rate {rate} out of [0,1]");
+        FaultyStream {
+            inner,
+            rng: Rng::new(seed),
+            rate,
+            stall: Duration::from_millis(5),
+            dead: false,
+            injected: counter,
+        }
+    }
+
+    /// Faults injected so far through this stream's counter.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// The wrapped transport.
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    fn roll(&mut self) -> Option<NetFault> {
+        if self.rate > 0.0 && self.rng.f64() < self.rate {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            Some(NetFault::draw(&mut self.rng))
+        } else {
+            None
+        }
+    }
+
+    fn torn() -> io::Error {
+        io::Error::new(io::ErrorKind::BrokenPipe, "fault-injected stream is dead")
+    }
+
+    fn reset() -> io::Error {
+        io::Error::new(io::ErrorKind::ConnectionReset, "injected disconnect")
+    }
+}
+
+impl<S: Read> Read for FaultyStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.dead {
+            return Err(Self::torn());
+        }
+        match self.roll() {
+            None => self.inner.read(buf),
+            Some(NetFault::Stall) => {
+                std::thread::sleep(self.stall);
+                self.inner.read(buf)
+            }
+            Some(NetFault::Disconnect) | Some(NetFault::Partial) => {
+                self.dead = true;
+                Err(Self::reset())
+            }
+            Some(NetFault::Corrupt) => {
+                let n = self.inner.read(buf)?;
+                if n > 0 {
+                    let i = self.rng.below(n as u64) as usize;
+                    let bit = self.rng.below(8) as u8;
+                    buf[i] ^= 1 << bit;
+                }
+                Ok(n)
+            }
+        }
+    }
+}
+
+impl<S: Write> Write for FaultyStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.dead {
+            return Err(Self::torn());
+        }
+        if buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        match self.roll() {
+            None => self.inner.write(buf),
+            Some(NetFault::Stall) => {
+                std::thread::sleep(self.stall);
+                self.inner.write(buf)
+            }
+            Some(NetFault::Disconnect) => {
+                self.dead = true;
+                Err(Self::reset())
+            }
+            Some(NetFault::Corrupt) => {
+                let mut c = buf.to_vec();
+                let i = self.rng.below(c.len() as u64) as usize;
+                let bit = self.rng.below(8) as u8;
+                c[i] ^= 1 << bit;
+                self.inner.write(&c)
+            }
+            Some(NetFault::Partial) => {
+                // deliver a nonempty prefix, then tear the stream: the
+                // peer sees a frame that stops mid-payload
+                let n = 1 + self.rng.below(buf.len() as u64) as usize;
+                let n = n.min(buf.len());
+                let written = self.inner.write(&buf[..n])?;
+                self.dead = true;
+                Ok(written)
+            }
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        if self.dead {
+            return Err(Self::torn());
+        }
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.range_i64(-63, 64))
+    }
+
+    #[test]
+    fn perturbation_is_deterministic_per_seed_and_layer() {
+        let w = mat(16, 12, 3);
+        let plan = FaultPlan::drift(7, 0.2, 20).with_stuck(0.05);
+        assert_eq!(plan.perturb(0, &w).data, plan.perturb(0, &w).data);
+        assert_eq!(plan.perturb(1, &w).data, plan.perturb(1, &w).data);
+        // distinct layers draw distinct streams
+        assert_ne!(plan.perturb(0, &w).data, plan.perturb(1, &w).data);
+        // distinct seeds differ
+        let other = FaultPlan::drift(8, 0.2, 20).with_stuck(0.05);
+        assert_ne!(plan.perturb(0, &w).data, other.perturb(0, &w).data);
+    }
+
+    #[test]
+    fn drift_moves_cells_but_stays_in_weight_range() {
+        let w = mat(32, 32, 5);
+        let out = FaultPlan::drift(1, 1.0, 10).perturb(0, &w);
+        assert_ne!(out.data, w.data, "rate-1 drift must move something");
+        let moved = out
+            .data
+            .iter()
+            .zip(&w.data)
+            .filter(|(a, b)| a != b)
+            .count();
+        // rate 1.0: every cell not already pinned at a rail moves
+        assert!(moved > w.data.len() / 2, "only {moved} cells moved");
+        assert!(out.data.iter().all(|v| (-63..=63).contains(v)));
+    }
+
+    #[test]
+    fn zero_rates_are_identity() {
+        let w = mat(8, 8, 2);
+        let out = FaultPlan::drift(9, 0.0, 5).perturb(0, &w);
+        assert_eq!(out.data, w.data);
+    }
+
+    #[test]
+    fn stuck_cells_pin_to_rails() {
+        let w = mat(16, 16, 11);
+        let out = FaultPlan::stuck_at(3, 1.0).perturb(0, &w);
+        assert!(out.data.iter().all(|&v| v == 0 || v == 63 || v == -63));
+    }
+
+    #[test]
+    fn drifted_install_deviates_from_pristine() {
+        let cnn = MiniCnn::new(0);
+        let p = XbarParams::default();
+        let pristine = cnn.program(&p, false);
+        let plan = FaultPlan::drift(7, 0.02, 30);
+        let drifted = plan.program_drifted(&cnn, &p, false);
+        let img = crate::xbar::cnn::random_images(1, 4);
+        let a = pristine.forward_seq(&img);
+        let b = drifted.forward_seq(&img);
+        assert_ne!(a.data, b.data, "2% drift at mag 30 must be visible");
+        // and the same plan reproduces the same drifted install
+        let again = plan.program_drifted(&cnn, &p, false);
+        assert_eq!(b.data, again.forward_seq(&img).data);
+    }
+
+    /// In-memory transport for schedule tests: reads stream zeros.
+    struct Loop {
+        wrote: Vec<u8>,
+    }
+
+    impl Read for Loop {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            for b in buf.iter_mut() {
+                *b = 0;
+            }
+            Ok(buf.len())
+        }
+    }
+
+    impl Write for Loop {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.wrote.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// Drive a fixed IO script; return (bytes sunk, per-call outcomes).
+    fn run_script(seed: u64, rate: f64) -> (Vec<u8>, Vec<String>) {
+        let mut s = FaultyStream::new(Loop { wrote: Vec::new() }, seed, rate);
+        let mut log = Vec::new();
+        for i in 0..40u8 {
+            let out = [i; 8];
+            match s.write(&out) {
+                Ok(n) => log.push(format!("w{n}")),
+                Err(e) => log.push(format!("we:{:?}", e.kind())),
+            }
+            let mut inb = [0u8; 4];
+            match s.read(&mut inb) {
+                Ok(n) => log.push(format!("r{n}:{}", inb[0])),
+                Err(e) => log.push(format!("re:{:?}", e.kind())),
+            }
+        }
+        (s.inner.wrote, log)
+    }
+
+    #[test]
+    fn fault_schedule_is_reproducible_from_the_seed() {
+        let (a_bytes, a_log) = run_script(7, 0.3);
+        let (b_bytes, b_log) = run_script(7, 0.3);
+        assert_eq!(a_bytes, b_bytes);
+        assert_eq!(a_log, b_log);
+        let (_, c_log) = run_script(8, 0.3);
+        assert_ne!(a_log, c_log, "different seed, different schedule");
+    }
+
+    #[test]
+    fn dead_stream_stays_dead_and_counts_faults() {
+        let mut s = FaultyStream::new(Loop { wrote: Vec::new() }, 1, 1.0);
+        // drive until a disconnect-class fault kills it
+        let mut died = false;
+        for _ in 0..64 {
+            if s.write(&[1, 2, 3]).is_err() && s.dead {
+                died = true;
+                break;
+            }
+        }
+        assert!(died, "rate-1 injection never tore the stream");
+        assert!(s.injected() > 0);
+        let err = s.write(&[4]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+        let err = s.read(&mut [0; 4]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+    }
+
+    #[test]
+    fn zero_rate_is_a_passthrough() {
+        let mut s = FaultyStream::new(Loop { wrote: Vec::new() }, 42, 0.0);
+        for _ in 0..100 {
+            assert_eq!(s.write(&[9; 16]).unwrap(), 16);
+            let mut b = [1u8; 8];
+            assert_eq!(s.read(&mut b).unwrap(), 8);
+            assert_eq!(b, [0; 8]);
+        }
+        assert_eq!(s.injected(), 0);
+        assert_eq!(s.inner.wrote.len(), 1600);
+    }
+}

@@ -24,6 +24,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod faults;
 pub mod karatsuba;
 pub mod mapping;
 pub mod metrics;

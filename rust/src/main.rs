@@ -22,10 +22,23 @@
 //!   --pipeline               pipelined stage scheduling, as for `serve`
 //!   --max-inflight N         admission limit (Busy beyond it)
 //!   --port-file PATH         write the bound address for scripts
+//!   --health                 replica health monitor: deviating replicas
+//!                            walk Healthy -> Suspect -> Quarantined and
+//!                            leave the serving rotation; batches re-run
+//!                            on a healthy replica
+//!   --deviation-threshold N  batch |err| beyond which a replica is bad
+//!   --suspect-after/--quarantine-after N   consecutive-bad thresholds
+//!   --inject-drift R         perturb replica R's installed cells
+//!                            (--drift-seed/--drift-rate/--drift-mag)
+//!   --read-tick-ms/--write-timeout-ms/--wake-timeout-ms   IO timeouts
 //! bench-net --addr HOST:PORT multi-threaded load generator
 //!   --requests N --concurrency C   writes BENCH_net.json
 //!   --expect-exact           assert bit-identity vs in-process golden
 //!   --engine-seed N          seed of the server's install (default 0)
+//!   --fault-seed S --fault-rate P   chaos mode: inject client-side wire
+//!                            faults, retry under deadlines, and compare
+//!                            against a clean pass (fault_overhead_b8)
+//!   --deadline-ms N          per-request deadline across retries
 //!   --shutdown               drain the server after the run
 //! sched-stress               work-stealing executor stress smoke (CI)
 //! export --out DIR           every figure's data series as CSV
@@ -39,7 +52,8 @@ use anyhow::{anyhow, bail, Result};
 
 use newton::cli::{self, Args};
 use newton::config::{AdcKind, ChipConfig, ImaConfig, XbarParams};
-use newton::coordinator::{newton_mini, GoldenServer, PipelineServer, ServerConfig};
+use newton::coordinator::{newton_mini, GoldenServer, HealthPolicy, HealthState, PipelineServer, ServerConfig};
+use newton::faults::FaultPlan;
 use newton::mapping::{self, Mapping, MappingPolicy, StagePolicy};
 use newton::metrics;
 use newton::net::{self, BenchConfig, NetServer, ServeConfig};
@@ -390,6 +404,37 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
             .with_pipeline(StagePolicy::newton())
             .map_err(|e| anyhow!("--pipeline: {e}"))?;
     }
+    // any health knob arms the monitor, so `--deviation-threshold 0` alone
+    // works in scripts without a separate --health
+    if args.has_flag("health") || args.get("health").is_some() || args.get("deviation-threshold").is_some() {
+        let policy = HealthPolicy {
+            deviation_threshold: args.get_usize("deviation-threshold", 0) as i64,
+            suspect_after: args.get_usize("suspect-after", 1) as u32,
+            quarantine_after: args.get_usize("quarantine-after", 3) as u32,
+            ..HealthPolicy::default()
+        };
+        engine = engine.with_health(policy);
+    }
+    if let Some(r) = args.get("inject-drift") {
+        let replica: usize = r
+            .parse()
+            .map_err(|_| anyhow!("--inject-drift wants a replica index, got {r:?}"))?;
+        if replica >= replicas {
+            bail!("--inject-drift {replica} out of range (replicas: {replicas})");
+        }
+        let plan = FaultPlan::drift(
+            args.get_usize("drift-seed", 7) as u64,
+            args.get_f64("drift-rate", 0.05),
+            args.get_usize("drift-mag", 30) as i64,
+        );
+        engine.inject_cell_faults(replica, &plan);
+        println!(
+            "injected cell drift into replica {replica} (seed {}, rate {}, mag {})",
+            args.get_usize("drift-seed", 7),
+            args.get_f64("drift-rate", 0.05),
+            args.get_usize("drift-mag", 30)
+        );
+    }
     let engine = Arc::new(engine);
     println!(
         "installed engine in {:.1} ms: {}",
@@ -397,12 +442,20 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
         newton::net::Engine::describe(engine.as_ref())
     );
 
+    let timeouts = net::Timeouts::default();
+    let timeouts = net::Timeouts {
+        read_tick: Duration::from_millis(args.get_usize("read-tick-ms", timeouts.read_tick.as_millis() as usize) as u64),
+        write_timeout: Duration::from_millis(args.get_usize("write-timeout-ms", timeouts.write_timeout.as_millis() as usize) as u64),
+        wake_connect: Duration::from_millis(args.get_usize("wake-timeout-ms", timeouts.wake_connect.as_millis() as usize) as u64),
+        ..timeouts
+    };
     let server = NetServer::start(
         engine,
         ServeConfig {
             addr: args.get_or("addr", "127.0.0.1:0").to_string(),
             max_inflight,
             batch_wait: Duration::from_millis(wait_ms as u64),
+            timeouts,
         },
     )?;
     let addr = server.local_addr();
@@ -435,11 +488,30 @@ fn print_net_stats(s: &net::StatsSnapshot) {
         s.p99_us as f64 / 1e3
     );
     println!("  worst batch deviation vs lossless golden: {}", s.worst_abs_err);
-    let mut t = Table::new(&["replica", "requests"]);
-    for (i, n) in s.per_replica.iter().enumerate() {
-        t.row(&[i.to_string(), n.to_string()]);
+    if s.health.is_empty() {
+        let mut t = Table::new(&["replica", "requests"]);
+        for (i, n) in s.per_replica.iter().enumerate() {
+            t.row(&[i.to_string(), n.to_string()]);
+        }
+        t.print();
+    } else {
+        println!(
+            "  health     : {} batch re-runs, {} quarantines{}",
+            s.reruns,
+            s.quarantines,
+            if s.degraded { " — DEGRADED (all replicas quarantined)" } else { "" }
+        );
+        let mut t = Table::new(&["replica", "requests", "health"]);
+        for (i, n) in s.per_replica.iter().enumerate() {
+            let state = s
+                .health
+                .get(i)
+                .map(|&b| HealthState::from_u8(b).label())
+                .unwrap_or("?");
+            t.row(&[i.to_string(), n.to_string(), state.to_string()]);
+        }
+        t.print();
     }
-    t.print();
 }
 
 /// Multi-threaded load generator against a `serve-net` endpoint. Writes
@@ -454,19 +526,60 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
     cfg.requests = args.get_usize("requests", 64);
     cfg.concurrency = args.get_usize("concurrency", 8);
     cfg.seed = args.get_usize("seed", 0) as u64;
+    cfg.deadline = Duration::from_millis(args.get_usize("deadline-ms", 30_000) as u64);
+    cfg.fault_seed = args.get_usize("fault-seed", 0) as u64;
+    cfg.fault_rate = args.get_f64("fault-rate", 0.0);
     if cfg.requests == 0 || cfg.concurrency == 0 {
         bail!("--requests and --concurrency must be >= 1");
     }
+    if !(0.0..=1.0).contains(&cfg.fault_rate) {
+        bail!("--fault-rate must be in [0, 1], got {}", cfg.fault_rate);
+    }
 
     println!(
-        "bench-net: {} requests x {} lanes against {addr}",
-        cfg.requests, cfg.concurrency
+        "bench-net: {} requests x {} lanes against {addr}{}",
+        cfg.requests,
+        cfg.concurrency,
+        if cfg.fault_rate > 0.0 {
+            format!(" (chaos: fault rate {} seed {})", cfg.fault_rate, cfg.fault_seed)
+        } else {
+            String::new()
+        }
     );
+    // chaos mode measures its overhead against a clean pass of the same
+    // stream first, so fault_overhead_b8 comes from one process and one
+    // warmed server
+    let clean = if cfg.fault_rate > 0.0 {
+        let clean_cfg = BenchConfig {
+            fault_rate: 0.0,
+            ..cfg.clone()
+        };
+        let c = net::load_generate(&clean_cfg)?;
+        println!(
+            "clean pass: {} requests in {:.2}s ({:.1} req/s)",
+            c.requests, c.wall_s, c.throughput_rps
+        );
+        Some(c)
+    } else {
+        None
+    };
     let mut report = net::load_generate(&cfg)?;
+    let fault_overhead = clean
+        .as_ref()
+        .map(|c| c.throughput_rps / report.throughput_rps.max(1e-9));
     println!(
         "completed {} requests in {:.2}s ({:.1} req/s, {} busy retries)",
         report.requests, report.wall_s, report.throughput_rps, report.busy_retries
     );
+    if cfg.fault_rate > 0.0 {
+        println!(
+            "  chaos      : {} faults injected, {} transport retries, {} reconnects, overhead {:.2}x",
+            report.injected_faults,
+            report.fault_retries,
+            report.reconnects,
+            fault_overhead.unwrap_or(1.0)
+        );
+    }
     println!(
         "  latency p50 : {:.1} ms   p99: {:.1} ms   max: {:.1} ms",
         report.p50_ms, report.p99_ms, report.max_ms
@@ -519,7 +632,7 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
         None
     };
 
-    write_bench_net_json(&report, &stats, verified);
+    write_bench_net_json(&report, &stats, verified, fault_overhead);
 
     if args.has_flag("shutdown") {
         ctl.shutdown()?;
@@ -532,6 +645,7 @@ fn write_bench_net_json(
     r: &net::BenchReport,
     server: &net::StatsSnapshot,
     verified: Option<bool>,
+    fault_overhead: Option<f64>,
 ) {
     let per_replica = r
         .per_replica
@@ -539,14 +653,23 @@ fn write_bench_net_json(
         .map(|n| n.to_string())
         .collect::<Vec<_>>()
         .join(", ");
+    let health = server
+        .health
+        .iter()
+        .map(|b| b.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
     let json = format!(
         "{{\n  \"requests\": {},\n  \"concurrency\": {},\n  \"wall_s\": {:.6},\n  \
          \"throughput_rps\": {:.3},\n  \"p50_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \
-         \"max_ms\": {:.3},\n  \"busy_retries\": {},\n  \"worst_abs_err\": {},\n  \
+         \"max_ms\": {:.3},\n  \"busy_retries\": {},\n  \"fault_retries\": {},\n  \
+         \"reconnects\": {},\n  \"injected_faults\": {},\n  \"fault_overhead_b8\": {},\n  \
+         \"worst_abs_err\": {},\n  \
          \"verified_exact\": {},\n  \"per_replica\": [{}],\n  \"server\": {{\n    \
          \"served\": {},\n    \"busy\": {},\n    \"proto_errors\": {},\n    \
          \"batches\": {},\n    \"batch_fill\": {:.4},\n    \"p50_us\": {},\n    \
-         \"p99_us\": {}\n  }}\n}}\n",
+         \"p99_us\": {},\n    \"reruns\": {},\n    \"quarantines\": {},\n    \
+         \"degraded\": {},\n    \"health\": [{}]\n  }}\n}}\n",
         r.requests,
         r.concurrency,
         r.wall_s,
@@ -555,6 +678,10 @@ fn write_bench_net_json(
         r.p99_ms,
         r.max_ms,
         r.busy_retries,
+        r.fault_retries,
+        r.reconnects,
+        r.injected_faults,
+        fault_overhead.map_or("null".to_string(), |x| format!("{x:.3}")),
         r.worst_abs_err,
         match verified {
             Some(true) => "true",
@@ -569,6 +696,10 @@ fn write_bench_net_json(
         server.batch_fill,
         server.p50_us,
         server.p99_us,
+        server.reruns,
+        server.quarantines,
+        server.degraded,
+        health,
     );
     match std::fs::write("BENCH_net.json", &json) {
         Ok(()) => println!("wrote BENCH_net.json"),

@@ -373,6 +373,47 @@ impl StageMap {
         })
     }
 
+    /// [`Self::build`] over a *subset* of a pool's replicas — the health
+    /// machinery re-derives stage placement around quarantined replicas
+    /// without shrinking the pool itself. `usable` lists the eligible
+    /// replica indices (ascending, non-empty, all `< n_pool`); the
+    /// assignment is built as if those were the whole pool, then remapped
+    /// onto the real indices, while `n_replicas` stays `n_pool` so the
+    /// map remains valid against the full pool's scratch slots.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use newton::mapping::{StageMap, StagePolicy};
+    ///
+    /// // replica 1 of a 3-replica pool is quarantined: convs pack on 0,
+    /// // the classifier takes 2, nothing lands on 1
+    /// let map = StageMap::build_over(3, &[0, 2], 3, StagePolicy::newton()).unwrap();
+    /// assert_eq!(map.assignment, vec![0, 0, 0, 2]);
+    /// assert_eq!(map.n_replicas, 3);
+    /// ```
+    pub fn build_over(
+        n_conv: usize,
+        usable: &[usize],
+        n_pool: usize,
+        policy: StagePolicy,
+    ) -> Result<StageMap, String> {
+        assert!(
+            usable.windows(2).all(|w| w[0] < w[1]),
+            "usable replica list must be ascending and duplicate-free"
+        );
+        assert!(
+            usable.iter().all(|&r| r < n_pool),
+            "usable replica outside the pool"
+        );
+        let inner = Self::build(n_conv, usable.len(), policy)?;
+        Ok(StageMap {
+            assignment: inner.assignment.iter().map(|&r| usable[r]).collect(),
+            n_replicas: n_pool,
+            policy,
+        })
+    }
+
     /// Replica assigned to stage `s`.
     pub fn replica_of(&self, s: usize) -> usize {
         self.assignment[s]
@@ -567,6 +608,25 @@ mod tests {
             StageMap::build(3, 4, rigid).unwrap().assignment,
             vec![0, 1, 2, 3]
         );
+    }
+
+    #[test]
+    fn build_over_remaps_onto_the_usable_subset() {
+        // full pool healthy: identical to build()
+        let m = StageMap::build_over(3, &[0, 1, 2, 3], 4, StagePolicy::newton()).unwrap();
+        assert_eq!(m, StageMap::build(3, 4, StagePolicy::newton()).unwrap());
+        // middle replica quarantined: assignment avoids it, pool size kept
+        let m = StageMap::build_over(3, &[0, 2, 3], 4, StagePolicy::newton()).unwrap();
+        assert_eq!(m.assignment, vec![0, 2, 0, 3]);
+        assert_eq!(m.n_replicas, 4);
+        assert!(!m.assignment.contains(&1));
+        // down to one usable replica: newton infeasible, unconstrained packs
+        assert!(StageMap::build_over(3, &[2], 4, StagePolicy::newton()).is_err());
+        let m = StageMap::build_over(3, &[2], 4, StagePolicy::unconstrained()).unwrap();
+        assert_eq!(m.assignment, vec![2, 2, 2, 2]);
+        assert_eq!(m.concurrency(), 1);
+        // no usable replicas is a policy error, not a panic
+        assert!(StageMap::build_over(3, &[], 4, StagePolicy::unconstrained()).is_err());
     }
 
     #[test]

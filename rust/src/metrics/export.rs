@@ -206,9 +206,18 @@ pub fn export_net_summary(dir: &Path, s: &StatsSnapshot) -> Result<String> {
         format!("latency_p50_us,{}", s.p50_us),
         format!("latency_p99_us,{}", s.p99_us),
         format!("replicas,{}", s.per_replica.len()),
+        format!("batch_reruns,{}", s.reruns),
+        format!("quarantines,{}", s.quarantines),
+        format!("degraded,{}", s.degraded as u8),
     ];
     for (i, n) in s.per_replica.iter().enumerate() {
         rows.push(format!("replica_{i}_requests,{n}"));
+    }
+    for (i, b) in s.health.iter().enumerate() {
+        rows.push(format!(
+            "replica_{i}_health,{}",
+            crate::coordinator::HealthState::from_u8(*b).label()
+        ));
     }
     write_csv(dir, "net_summary.csv", "metric,value", &rows)?;
     Ok("net_summary.csv".into())
@@ -232,6 +241,10 @@ mod tests {
             p50_us: 1500,
             p99_us: 9000,
             per_replica: vec![33, 31],
+            reruns: 2,
+            quarantines: 1,
+            degraded: false,
+            health: vec![0, 2],
         };
         let name = export_net_summary(&dir, &snap).unwrap();
         assert_eq!(name, "net_summary.csv");
@@ -247,8 +260,13 @@ mod tests {
             "latency_p50_us,1500",
             "latency_p99_us,9000",
             "replicas,2",
+            "batch_reruns,2",
+            "quarantines,1",
+            "degraded,0",
             "replica_0_requests,33",
             "replica_1_requests,31",
+            "replica_0_health,healthy",
+            "replica_1_health,quarantined",
         ] {
             assert!(text.lines().any(|l| l == want), "missing row {want:?} in:\n{text}");
         }

@@ -6,14 +6,24 @@
 //! concurrency comes from opening more connections, which is exactly what
 //! [`load_generate`] does — one lane per connection, fanned out on the
 //! work-stealing executor ([`crate::sched`]).
+//!
+//! [`RetryClient`] layers resilience on top: a per-request deadline, a
+//! reconnect-and-retry loop with capped exponential [`Backoff`] and
+//! deterministic jitter, and an optional chaos mode that wraps the socket
+//! in a [`crate::faults::FaultyStream`]. Retrying is safe because requests
+//! are idempotent by construction — the server computes per-row logits
+//! deterministically from the image alone, so serving a request twice
+//! yields the same bits and only the last reply is read.
 
 use std::fmt;
-use std::io;
+use std::io::{self, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::golden::IMAGE_ELEMS;
+use crate::faults::FaultyStream;
 use crate::net::percentile_us;
 use crate::net::proto::{self, InferReply, InferRequest, Msg, ProtoError, StatsSnapshot, WireError};
 use crate::sched::Executor;
@@ -28,6 +38,9 @@ pub enum NetError {
     Server(WireError),
     /// The server replied with a frame that makes no sense here.
     Unexpected(&'static str),
+    /// A [`RetryClient`] request ran out of its per-request deadline
+    /// before any attempt succeeded.
+    DeadlineExceeded { elapsed: Duration },
 }
 
 impl fmt::Display for NetError {
@@ -36,11 +49,47 @@ impl fmt::Display for NetError {
             NetError::Proto(e) => write!(f, "wire protocol: {e}"),
             NetError::Server(e) => write!(f, "server error (code {}): {}", e.code, e.message),
             NetError::Unexpected(m) => write!(f, "unexpected server reply: {m}"),
+            NetError::DeadlineExceeded { elapsed } => {
+                write!(f, "request deadline exceeded after {elapsed:?}")
+            }
         }
     }
 }
 
 impl std::error::Error for NetError {}
+
+impl NetError {
+    /// True when retrying the request on a fresh connection can succeed.
+    ///
+    /// Retryable: `Busy`-adjacent transport failures (timeouts, resets,
+    /// torn writes, EOF mid-frame), client-side framing failures
+    /// (checksum/magic/malformed — the reply was corrupted in flight),
+    /// and a server `ERR_MALFORMED` (the *request* frame arrived
+    /// corrupted; the connection is dead but the request was never
+    /// decoded, or was served and the reply lost — both safe to retry
+    /// under idempotence). Everything else — shape errors, draining,
+    /// internal errors, deadline exhaustion — is a real answer, not a
+    /// transient.
+    pub fn retryable(&self) -> bool {
+        match self {
+            NetError::Proto(ProtoError::Io(e)) => matches!(
+                e.kind(),
+                io::ErrorKind::WouldBlock
+                    | io::ErrorKind::TimedOut
+                    | io::ErrorKind::ConnectionReset
+                    | io::ErrorKind::ConnectionAborted
+                    | io::ErrorKind::BrokenPipe
+                    | io::ErrorKind::UnexpectedEof
+                    | io::ErrorKind::Interrupted
+            ),
+            NetError::Proto(
+                ProtoError::Checksum { .. } | ProtoError::BadMagic(_) | ProtoError::Malformed(_),
+            ) => true,
+            NetError::Server(e) => e.code == proto::ERR_MALFORMED,
+            _ => false,
+        }
+    }
+}
 
 impl From<ProtoError> for NetError {
     fn from(e: ProtoError) -> Self {
@@ -80,15 +129,24 @@ pub enum InferOutcome {
 /// c.shutdown()?; // drain the server
 /// # Ok::<(), Box<dyn std::error::Error>>(())
 /// ```
-pub struct Client {
-    stream: TcpStream,
+pub struct Client<S = TcpStream> {
+    stream: S,
 }
 
-impl Client {
+impl Client<TcpStream> {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         Ok(Client { stream })
+    }
+}
+
+impl<S: Read + Write> Client<S> {
+    /// Wrap an already-connected bidirectional stream (a plain
+    /// `TcpStream`, a [`FaultyStream`] in chaos mode, or an in-memory
+    /// transport in tests). The caller owns socket options.
+    pub fn from_stream(stream: S) -> Client<S> {
+        Client { stream }
     }
 
     fn request(&mut self, msg: &Msg) -> Result<Msg, NetError> {
@@ -118,14 +176,16 @@ impl Client {
         }
     }
 
-    /// Inference with bounded busy-retry. Returns the reply plus how many
-    /// `Busy` rejections were absorbed.
-    pub fn infer_retry(
+    /// Inference with bounded busy-retry driven by a capped-exponential
+    /// [`Backoff`]. Returns the reply plus how many `Busy` rejections
+    /// were absorbed. Only `Busy` is retried here — transport failures
+    /// need a fresh connection, which is [`RetryClient`]'s job.
+    pub fn infer_backoff(
         &mut self,
         id: u64,
         image: &[i32],
         max_retries: usize,
-        backoff: Duration,
+        backoff: &mut Backoff,
     ) -> Result<(InferReply, usize), NetError> {
         let mut retries = 0usize;
         loop {
@@ -138,10 +198,28 @@ impl Client {
                             "server stayed busy past the retry budget",
                         ));
                     }
-                    std::thread::sleep(backoff);
+                    std::thread::sleep(backoff.next_delay());
                 }
             }
         }
+    }
+
+    /// Inference with bounded fixed-sleep busy-retry.
+    #[deprecated(
+        note = "fixed-sleep spin; use infer_backoff with a Backoff, or RetryClient for \
+                full transport-level resilience"
+    )]
+    pub fn infer_retry(
+        &mut self,
+        id: u64,
+        image: &[i32],
+        max_retries: usize,
+        backoff: Duration,
+    ) -> Result<(InferReply, usize), NetError> {
+        // base == cap pins every delay to the old per-sleep duration
+        // (modulo the jitter factor, which only ever shortens it)
+        let mut b = Backoff::new(backoff, backoff, id);
+        self.infer_backoff(id, image, max_retries, &mut b)
     }
 
     /// Fetch the server's statistics snapshot.
@@ -160,6 +238,228 @@ impl Client {
             Msg::Error(e) => Err(NetError::Server(e)),
             _ => Err(NetError::Unexpected("non-ack frame to a shutdown request")),
         }
+    }
+}
+
+// ---- resilience ----------------------------------------------------------
+
+/// Capped exponential backoff with deterministic jitter.
+///
+/// The delay before attempt `k` is `min(cap, base * 2^k)` scaled by a
+/// jitter factor in `[0.5, 1.0)` drawn from a seeded [`Rng`], so two runs
+/// from the same seed sleep the same schedule (the chaos bench's
+/// reproducibility contract) while lanes with different seeds still
+/// decorrelate their retry storms.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff {
+            base,
+            cap,
+            attempt: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Delays handed out since construction or the last [`Self::reset`].
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Forget the failure streak (call after a success).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    /// The delay to sleep before the next attempt.
+    pub fn next_delay(&mut self) -> Duration {
+        // 2^20 * any practical base already dwarfs any practical cap, so
+        // clamping the exponent keeps the shift finite without changing
+        // the capped result
+        let exp = self.attempt.min(20);
+        self.attempt += 1;
+        let raw = self.base.as_secs_f64() * (1u64 << exp) as f64;
+        let capped = raw.min(self.cap.as_secs_f64());
+        let jitter = 0.5 + self.rng.f64() / 2.0;
+        Duration::from_secs_f64(capped * jitter)
+    }
+}
+
+/// Per-request resilience policy for [`RetryClient`].
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Overall per-request deadline across every attempt and backoff
+    /// sleep; exhausting it yields [`NetError::DeadlineExceeded`].
+    pub deadline: Duration,
+    /// Socket read/write timeout armed on each connection, so one wedged
+    /// attempt cannot eat the whole deadline.
+    pub attempt_timeout: Duration,
+    /// First backoff delay; doubles per consecutive failure.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            deadline: Duration::from_secs(30),
+            attempt_timeout: Duration::from_secs(5),
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(250),
+        }
+    }
+}
+
+/// A reconnecting, deadline-bounded inference client.
+///
+/// Wraps the one-connection [`Client`] with the full retry loop: every
+/// failure classified retryable by [`NetError::retryable`] drops the
+/// connection, sleeps a [`Backoff`] delay (clamped to the remaining
+/// deadline), reconnects, and re-sends — safe because requests are
+/// idempotent (see the module docs). `Busy` retries on the same
+/// connection. Chaos mode ([`Self::with_chaos`]) wraps every connection
+/// in a [`FaultyStream`] seeded deterministically from the client seed
+/// and a connection sequence number, so a whole faulty session replays
+/// bit-identically from one seed. Inference only: stats/shutdown control
+/// traffic should ride a plain [`Client`] so chaos cannot corrupt it.
+pub struct RetryClient {
+    addr: String,
+    policy: RetryPolicy,
+    seed: u64,
+    fault_rate: f64,
+    injected: Arc<AtomicU64>,
+    conn: Option<Client<FaultyStream<TcpStream>>>,
+    /// Connections opened so far; salts each connection's fault stream.
+    conn_seq: u64,
+    backoff: Backoff,
+    busy_retries: u64,
+    fault_retries: u64,
+    reconnects: u64,
+}
+
+impl RetryClient {
+    /// Lazily-connecting client; `seed` drives the backoff jitter and (in
+    /// chaos mode) the fault schedule.
+    pub fn new(addr: &str, policy: RetryPolicy, seed: u64) -> RetryClient {
+        RetryClient {
+            addr: addr.to_string(),
+            backoff: Backoff::new(
+                policy.backoff_base,
+                policy.backoff_cap,
+                seed ^ 0x9E37_79B9_7F4A_7C15,
+            ),
+            policy,
+            seed,
+            fault_rate: 0.0,
+            injected: Arc::new(AtomicU64::new(0)),
+            conn: None,
+            conn_seq: 0,
+            busy_retries: 0,
+            fault_retries: 0,
+            reconnects: 0,
+        }
+    }
+
+    /// Chaos mode: inject wire faults at `rate` per IO call on every
+    /// subsequent connection (see [`FaultyStream`]). Rate 0 is a clean
+    /// passthrough.
+    pub fn with_chaos(mut self, rate: f64) -> Self {
+        self.fault_rate = rate;
+        self
+    }
+
+    /// `Busy` rejections absorbed across all requests.
+    pub fn busy_retries(&self) -> u64 {
+        self.busy_retries
+    }
+
+    /// Transport-level retries (reconnect-and-resend) across all requests.
+    pub fn fault_retries(&self) -> u64 {
+        self.fault_retries
+    }
+
+    /// Connections opened beyond the first.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// Wire faults injected by chaos mode so far (0 outside chaos mode).
+    pub fn injected_faults(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    fn ensure_conn(&mut self) -> Result<&mut Client<FaultyStream<TcpStream>>, NetError> {
+        if self.conn.is_none() {
+            // connect under the attempt timeout too — a blackholed dial
+            // must not eat the whole deadline
+            let addr = self
+                .addr
+                .as_str()
+                .to_socket_addrs()?
+                .next()
+                .ok_or(NetError::Unexpected("address resolved to no socket address"))?;
+            let stream = TcpStream::connect_timeout(&addr, self.policy.attempt_timeout)?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(self.policy.attempt_timeout))?;
+            stream.set_write_timeout(Some(self.policy.attempt_timeout))?;
+            let fault_seed = self.seed ^ self.conn_seq.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+            if self.conn_seq > 0 {
+                self.reconnects += 1;
+            }
+            self.conn_seq += 1;
+            let faulty =
+                FaultyStream::with_counter(stream, fault_seed, self.fault_rate, self.injected.clone());
+            self.conn = Some(Client::from_stream(faulty));
+        }
+        Ok(self.conn.as_mut().unwrap())
+    }
+
+    /// One resilient inference request; returns the reply plus the
+    /// *successful* attempt's service time in µs (retries and backoff
+    /// sleeps excluded, so latency percentiles measure the server, not
+    /// the chaos).
+    pub fn infer_timed(&mut self, id: u64, image: &[i32]) -> Result<(InferReply, u64), NetError> {
+        let t0 = Instant::now();
+        self.backoff.reset();
+        loop {
+            let attempt = Instant::now();
+            match self.ensure_conn().and_then(|c| c.infer(id, image)) {
+                Ok(InferOutcome::Ok(reply)) => {
+                    return Ok((reply, attempt.elapsed().as_micros() as u64))
+                }
+                Ok(InferOutcome::Busy) => {
+                    // explicit backpressure: the connection is fine
+                    self.busy_retries += 1;
+                }
+                Err(e) if e.retryable() => {
+                    // the stream cannot be resynced past a torn frame;
+                    // reconnect and re-send under idempotence
+                    self.fault_retries += 1;
+                    self.conn = None;
+                }
+                Err(e) => return Err(e),
+            }
+            let left = self.policy.deadline.saturating_sub(t0.elapsed());
+            if left.is_zero() {
+                return Err(NetError::DeadlineExceeded {
+                    elapsed: t0.elapsed(),
+                });
+            }
+            std::thread::sleep(self.backoff.next_delay().min(left));
+        }
+    }
+
+    /// One resilient inference request.
+    pub fn infer(&mut self, id: u64, image: &[i32]) -> Result<InferReply, NetError> {
+        self.infer_timed(id, image).map(|(r, _)| r)
     }
 }
 
@@ -184,10 +484,19 @@ pub struct BenchConfig {
     pub concurrency: usize,
     /// Seed for the deterministic request stream.
     pub seed: u64,
-    /// Sleep between busy-retries.
+    /// First busy/fault backoff delay (doubles per consecutive failure,
+    /// capped at 32x).
     pub busy_backoff: Duration,
-    /// Busy-retry budget per request.
+    /// Legacy busy-spin budget; the per-request [`Self::deadline`] is the
+    /// operative bound now that lanes ride [`RetryClient`].
     pub max_busy_retries: usize,
+    /// Per-request deadline across retries and backoff sleeps.
+    pub deadline: Duration,
+    /// Chaos-mode fault schedule seed (per-lane streams are salted from
+    /// it); only meaningful when [`Self::fault_rate`] > 0.
+    pub fault_seed: u64,
+    /// Chaos-mode wire-fault probability per IO call; 0 disables chaos.
+    pub fault_rate: f64,
 }
 
 impl BenchConfig {
@@ -199,6 +508,9 @@ impl BenchConfig {
             seed: 0,
             busy_backoff: Duration::from_millis(2),
             max_busy_retries: 10_000,
+            deadline: Duration::from_secs(30),
+            fault_seed: 0,
+            fault_rate: 0.0,
         }
     }
 }
@@ -211,6 +523,12 @@ pub struct BenchReport {
     pub concurrency: usize,
     /// Busy rejections absorbed across all requests.
     pub busy_retries: usize,
+    /// Transport-level retries (reconnect-and-resend) across all lanes.
+    pub fault_retries: u64,
+    /// Reconnects beyond each lane's first connection.
+    pub reconnects: u64,
+    /// Wire faults injected by chaos mode (0 outside chaos mode).
+    pub injected_faults: u64,
     pub wall_s: f64,
     pub throughput_rps: f64,
     /// Per-request service latency (successful attempt only), ms.
@@ -239,37 +557,39 @@ struct LaneResult {
 #[derive(Default)]
 struct LaneOut {
     results: Vec<LaneResult>,
-    busy: usize,
+    busy: u64,
+    faults: u64,
+    reconnects: u64,
+    injected: u64,
 }
 
-fn run_lane(cfg: &BenchConfig, next: &AtomicUsize) -> Result<LaneOut, NetError> {
-    let mut client = Client::connect(cfg.addr.as_str())?;
+fn run_lane(lane: usize, cfg: &BenchConfig, next: &AtomicUsize) -> Result<LaneOut, NetError> {
+    let policy = RetryPolicy {
+        deadline: cfg.deadline,
+        backoff_base: cfg.busy_backoff,
+        backoff_cap: cfg.busy_backoff.saturating_mul(32),
+        ..RetryPolicy::default()
+    };
+    // each lane gets its own deterministic fault/jitter stream, salted
+    // from the fault seed so the whole fleet replays from one number
+    let lane_seed = cfg
+        .fault_seed
+        .wrapping_add((lane as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut client = RetryClient::new(cfg.addr.as_str(), policy, lane_seed).with_chaos(cfg.fault_rate);
     let mut out = LaneOut::default();
     loop {
         let i = next.fetch_add(1, Ordering::Relaxed);
         if i >= cfg.requests {
+            out.busy = client.busy_retries();
+            out.faults = client.fault_retries();
+            out.reconnects = client.reconnects();
+            out.injected = client.injected_faults();
             return Ok(out);
         }
         let image = bench_image(cfg.seed, i);
-        // time each attempt separately so the reported latency is the
-        // successful attempt's service time, not busy-retry queueing
-        let mut retries = 0usize;
-        let (reply, us) = loop {
-            let t0 = Instant::now();
-            match client.infer(i as u64, &image)? {
-                InferOutcome::Ok(r) => break (r, t0.elapsed().as_micros() as u64),
-                InferOutcome::Busy => {
-                    retries += 1;
-                    if retries > cfg.max_busy_retries {
-                        return Err(NetError::Unexpected(
-                            "server stayed busy past the retry budget",
-                        ));
-                    }
-                    std::thread::sleep(cfg.busy_backoff);
-                }
-            }
-        };
-        out.busy += retries;
+        // infer_timed reports the successful attempt's service time, so
+        // the latency sample measures the server, not retry queueing
+        let (reply, us) = client.infer_timed(i as u64, &image)?;
         out.results.push(LaneResult {
             index: i,
             us,
@@ -292,14 +612,20 @@ pub fn load_generate(cfg: &BenchConfig) -> Result<BenchReport, NetError> {
     let lanes = cfg.concurrency.min(cfg.requests);
     let next = AtomicUsize::new(0);
     let t0 = Instant::now();
-    let lane_outs = Executor::new(lanes).map(lanes, |_| run_lane(cfg, &next));
+    let lane_outs = Executor::new(lanes).map(lanes, |lane| run_lane(lane, cfg, &next));
     let wall = t0.elapsed().as_secs_f64();
 
     let mut results: Vec<LaneResult> = Vec::with_capacity(cfg.requests);
-    let mut busy_retries = 0usize;
+    let mut busy_retries = 0u64;
+    let mut fault_retries = 0u64;
+    let mut reconnects = 0u64;
+    let mut injected_faults = 0u64;
     for lo in lane_outs {
         let lo = lo?;
         busy_retries += lo.busy;
+        fault_retries += lo.faults;
+        reconnects += lo.reconnects;
+        injected_faults += lo.injected;
         results.extend(lo.results);
     }
     results.sort_by_key(|r| r.index);
@@ -321,7 +647,10 @@ pub fn load_generate(cfg: &BenchConfig) -> Result<BenchReport, NetError> {
     Ok(BenchReport {
         requests: cfg.requests,
         concurrency: lanes,
-        busy_retries,
+        busy_retries: busy_retries as usize,
+        fault_retries,
+        reconnects,
+        injected_faults,
         wall_s: wall,
         throughput_rps: cfg.requests as f64 / wall.max(1e-9),
         p50_ms: percentile_us(&lat, 0.50) as f64 / 1e3,
@@ -345,5 +674,97 @@ mod tests {
         assert_eq!(a, bench_image(0, 3));
         assert_ne!(a, bench_image(0, 4));
         assert_ne!(a, bench_image(1, 3));
+    }
+
+    #[test]
+    fn backoff_doubles_caps_and_jitters_deterministically() {
+        let base = Duration::from_millis(4);
+        let cap = Duration::from_millis(40);
+        let mut a = Backoff::new(base, cap, 9);
+        let mut b = Backoff::new(base, cap, 9);
+        let da: Vec<Duration> = (0..12).map(|_| a.next_delay()).collect();
+        let db: Vec<Duration> = (0..12).map(|_| b.next_delay()).collect();
+        assert_eq!(da, db, "same seed, same schedule");
+        // every delay sits in its capped exponential jitter window
+        // ([0.5, 1.0) of min(cap, base * 2^k), up to nanosecond rounding)
+        for (k, d) in da.iter().enumerate() {
+            let window = (base * 2u32.pow(k as u32)).min(cap);
+            assert!(
+                *d >= window / 2 && *d <= window,
+                "attempt {k}: {d:?} outside [{:?}, {window:?}]",
+                window / 2
+            );
+        }
+        // the cap binds from attempt 4 on (4ms << 4 = 64ms > 40ms)
+        assert!(da[6] <= cap && da[6] >= cap / 2);
+        // a different seed jitters a different schedule
+        let mut c = Backoff::new(base, cap, 10);
+        let dc: Vec<Duration> = (0..12).map(|_| c.next_delay()).collect();
+        assert_ne!(da, dc);
+        // reset forgets the streak: the next delay is base-sized again
+        a.reset();
+        assert_eq!(a.attempts(), 0);
+        assert!(a.next_delay() <= base);
+        assert_eq!(a.attempts(), 1);
+    }
+
+    #[test]
+    fn retryable_classification_splits_transients_from_answers() {
+        let io_err = |k: io::ErrorKind| NetError::Proto(ProtoError::Io(k.into()));
+        assert!(io_err(io::ErrorKind::ConnectionReset).retryable());
+        assert!(io_err(io::ErrorKind::TimedOut).retryable());
+        assert!(io_err(io::ErrorKind::BrokenPipe).retryable());
+        assert!(!io_err(io::ErrorKind::ConnectionRefused).retryable());
+        assert!(NetError::Proto(ProtoError::Checksum { want: 1, got: 2 }).retryable());
+        assert!(NetError::Proto(ProtoError::BadMagic(*b"XXXX")).retryable());
+        assert!(NetError::Server(WireError {
+            code: proto::ERR_MALFORMED,
+            message: String::new()
+        })
+        .retryable());
+        for fatal in [proto::ERR_BAD_SHAPE, proto::ERR_DRAINING, proto::ERR_INTERNAL] {
+            assert!(!NetError::Server(WireError {
+                code: fatal,
+                message: String::new()
+            })
+            .retryable());
+        }
+        assert!(!NetError::Unexpected("x").retryable());
+        assert!(!NetError::DeadlineExceeded {
+            elapsed: Duration::ZERO
+        }
+        .retryable());
+    }
+
+    #[test]
+    fn retry_client_honours_the_deadline_against_a_mute_server() {
+        // a listener that accepts and holds connections but never replies:
+        // every attempt times out, and the overall deadline must end it
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let held = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sink = held.clone();
+        std::thread::spawn(move || {
+            while let Ok((s, _)) = listener.accept() {
+                sink.lock().unwrap().push(s);
+            }
+        });
+        let policy = RetryPolicy {
+            deadline: Duration::from_millis(150),
+            attempt_timeout: Duration::from_millis(25),
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(4),
+        };
+        let mut rc = RetryClient::new(&addr, policy, 7);
+        // shape is irrelevant: the frame never reaches an engine
+        match rc.infer(1, &[0i32; 4]) {
+            Err(NetError::DeadlineExceeded { elapsed }) => {
+                assert!(elapsed >= Duration::from_millis(150));
+            }
+            other => panic!("want deadline exceeded, got {other:?}"),
+        }
+        assert!(rc.fault_retries() >= 1, "timeouts should count as retries");
+        assert!(rc.reconnects() >= 1, "each timeout drops the connection");
+        assert_eq!(rc.injected_faults(), 0, "chaos off injects nothing");
     }
 }

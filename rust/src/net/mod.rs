@@ -34,9 +34,12 @@ pub mod client;
 pub mod proto;
 pub mod server;
 
-pub use client::{bench_image, load_generate, BenchConfig, BenchReport, Client, InferOutcome, NetError};
+pub use client::{
+    bench_image, load_generate, Backoff, BenchConfig, BenchReport, Client, InferOutcome, NetError,
+    RetryClient, RetryPolicy,
+};
 pub use proto::StatsSnapshot;
-pub use server::{NetServer, ServeConfig};
+pub use server::{NetServer, ServeConfig, Timeouts};
 
 use crate::coordinator::Batch;
 
@@ -71,6 +74,13 @@ pub trait Engine: Send + Sync {
     /// Run one batcher-shaped (padded) batch; `index` provides the
     /// round-robin replica affinity.
     fn run(&self, index: usize, batch: &Batch) -> EngineBatch;
+    /// Replica-health snapshot, when the engine runs a
+    /// [`crate::coordinator::health::HealthMonitor`] (the golden engine
+    /// under `--health`). `None` means the engine has no health machinery
+    /// and the server reports empty health stats.
+    fn health(&self) -> Option<crate::coordinator::health::HealthReport> {
+        None
+    }
 }
 
 /// Nearest-rank percentile over an ascending-sorted latency sample.

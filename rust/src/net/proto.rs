@@ -152,6 +152,17 @@ pub struct StatsSnapshot {
     pub p99_us: u64,
     /// Requests served per replica (round-robin batch affinity).
     pub per_replica: Vec<u64>,
+    /// Batches transparently re-run on another replica after a deviation
+    /// (0 when the engine has no health monitor).
+    pub reruns: u64,
+    /// Transitions *into* `Quarantined` observed by the health monitor.
+    pub quarantines: u64,
+    /// True while every replica is quarantined and the server is degraded
+    /// to the least-drifted one.
+    pub degraded: bool,
+    /// Per-replica health states (`coordinator::health::HealthState` as
+    /// bytes); empty when the engine has no health monitor.
+    pub health: Vec<u8>,
 }
 
 /// One protocol message. Client-to-server: `Infer`, `StatsReq`,
@@ -230,6 +241,11 @@ pub fn encode_payload(m: &Msg) -> (u8, Vec<u8>) {
             for r in &s.per_replica {
                 p.extend_from_slice(&r.to_le_bytes());
             }
+            p.extend_from_slice(&s.reruns.to_le_bytes());
+            p.extend_from_slice(&s.quarantines.to_le_bytes());
+            p.push(s.degraded as u8);
+            p.extend_from_slice(&(s.health.len() as u32).to_le_bytes());
+            p.extend_from_slice(&s.health);
             TY_STATS
         }
         Msg::Shutdown => TY_SHUTDOWN,
@@ -278,6 +294,10 @@ impl<'a> Cur<'a> {
         let s = &self.b[self.at..self.at + n];
         self.at += n;
         Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
     }
 
     fn u16(&mut self) -> Result<u16, ProtoError> {
@@ -364,6 +384,13 @@ pub fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
                 return Err(ProtoError::Malformed("replica count exceeds payload"));
             }
             let per_replica = (0..n).map(|_| c.u64()).collect::<Result<_, _>>()?;
+            let reruns = c.u64()?;
+            let quarantines = c.u64()?;
+            let degraded = c.u8()? != 0;
+            let nh = c.u32()? as usize;
+            // `take` bounds-checks the byte count against the payload, so a
+            // lying length cannot size an allocation.
+            let health = c.take(nh)?.to_vec();
             Msg::Stats(StatsSnapshot {
                 served,
                 busy,
@@ -374,6 +401,10 @@ pub fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
                 p50_us,
                 p99_us,
                 per_replica,
+                reruns,
+                quarantines,
+                degraded,
+                health,
             })
         }
         TY_SHUTDOWN => Msg::Shutdown,
@@ -481,6 +512,10 @@ mod tests {
                 p50_us: 1500,
                 p99_us: 9000,
                 per_replica: vec![33, 31],
+                reruns: 4,
+                quarantines: 1,
+                degraded: true,
+                health: vec![0, 2],
             }),
             Msg::Stats(StatsSnapshot::default()),
             Msg::Shutdown,
@@ -576,6 +611,19 @@ mod tests {
         payload.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(matches!(
             decode_payload(TY_INFER, &payload),
+            Err(ProtoError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn lying_health_byte_count_is_rejected() {
+        let (ty, mut payload) = encode_payload(&Msg::Stats(StatsSnapshot::default()));
+        // the trailing u32 is the (empty) health length; inflate it without
+        // supplying the bytes
+        let at = payload.len() - 4;
+        payload[at..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_payload(ty, &payload),
             Err(ProtoError::Malformed(_))
         ));
     }

@@ -42,17 +42,43 @@ use crate::net::proto::{
 use crate::net::{percentile_us, Engine};
 use crate::util::Rng;
 
-/// Read-timeout tick: handlers wake this often to notice a drain.
-const READ_TICK: Duration = Duration::from_millis(100);
-/// Write timeout: a dead client cannot wedge a handler forever.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
-/// Ticks a handler keeps waiting for the rest of a half-received frame
-/// once draining started, before giving the connection up.
-const DRAIN_GRACE_TICKS: u32 = 25;
-/// Ticks an *idle* connection stays open once draining started, so a
-/// request crossing the drain on the wire still gets its `ERR_DRAINING`
-/// reply instead of a bare EOF.
-const DRAIN_IDLE_TICKS: u32 = 2;
+/// Every wall-clock knob the server's IO path uses, in one place.
+///
+/// These used to be scattered `const`s (plus a hardcoded connect timeout
+/// buried in the accept wake-up); hoisting them into a config struct makes
+/// them overridable from `serve-net` flags (`--read-tick-ms`,
+/// `--write-timeout-ms`, `--wake-timeout-ms`) and lets tests tighten them
+/// without waiting on production-sized timeouts.
+#[derive(Clone, Debug)]
+pub struct Timeouts {
+    /// Read-timeout tick: handlers wake this often to notice a drain.
+    pub read_tick: Duration,
+    /// Write timeout: a dead client cannot wedge a handler forever.
+    pub write_timeout: Duration,
+    /// Connect timeout for the drain wake-up dial in [`wake_accept`] (was
+    /// a hardcoded 1s), so a pathological network setup can never wedge
+    /// shutdown.
+    pub wake_connect: Duration,
+    /// Read ticks a handler keeps waiting for the rest of a half-received
+    /// frame once draining started, before giving the connection up.
+    pub drain_grace_ticks: u32,
+    /// Read ticks an *idle* connection stays open once draining started,
+    /// so a request crossing the drain on the wire still gets its
+    /// `ERR_DRAINING` reply instead of a bare EOF.
+    pub drain_idle_ticks: u32,
+}
+
+impl Default for Timeouts {
+    fn default() -> Self {
+        Timeouts {
+            read_tick: Duration::from_millis(100),
+            write_timeout: Duration::from_secs(5),
+            wake_connect: Duration::from_secs(1),
+            drain_grace_ticks: 25,
+            drain_idle_ticks: 2,
+        }
+    }
+}
 
 /// Server knobs. The batch shape itself comes from the [`Engine`].
 #[derive(Clone, Debug)]
@@ -66,6 +92,8 @@ pub struct ServeConfig {
     /// vLLM-style batching deadline: a partial batch closes once its
     /// oldest request has waited this long.
     pub batch_wait: Duration,
+    /// IO timeouts (read tick, write timeout, drain windows).
+    pub timeouts: Timeouts,
 }
 
 impl Default for ServeConfig {
@@ -74,6 +102,7 @@ impl Default for ServeConfig {
             addr: "127.0.0.1:0".to_string(),
             max_inflight: 64,
             batch_wait: Duration::from_millis(2),
+            timeouts: Timeouts::default(),
         }
     }
 }
@@ -144,6 +173,7 @@ struct Shared {
     engine: Arc<dyn Engine>,
     local_addr: SocketAddr,
     batch_wait: Duration,
+    timeouts: Timeouts,
     max_inflight: usize,
     inflight: AtomicUsize,
     draining: AtomicBool,
@@ -171,6 +201,7 @@ impl NetServer {
         let shared = Arc::new(Shared {
             local_addr,
             batch_wait: cfg.batch_wait,
+            timeouts: cfg.timeouts.clone(),
             max_inflight: cfg.max_inflight,
             inflight: AtomicUsize::new(0),
             draining: AtomicBool::new(false),
@@ -268,10 +299,11 @@ fn wake_accept(shared: &Shared) {
             std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
         });
     }
-    let _ = TcpStream::connect_timeout(&addr, Duration::from_secs(1));
+    let _ = TcpStream::connect_timeout(&addr, shared.timeouts.wake_connect);
 }
 
 fn snapshot(shared: &Shared) -> StatsSnapshot {
+    let health = shared.engine.health();
     let s = shared.stats.lock().unwrap();
     let mut lat = s.latencies_us.clone();
     lat.sort_unstable();
@@ -289,6 +321,10 @@ fn snapshot(shared: &Shared) -> StatsSnapshot {
         p50_us: percentile_us(&lat, 0.50),
         p99_us: percentile_us(&lat, 0.99),
         per_replica: s.per_replica.clone(),
+        reruns: health.as_ref().map_or(0, |h| h.reruns),
+        quarantines: health.as_ref().map_or(0, |h| h.quarantines),
+        degraded: health.as_ref().is_some_and(|h| h.degraded),
+        health: health.map_or_else(Vec::new, |h| h.states),
     }
 }
 
@@ -388,8 +424,8 @@ fn dispatch_loop(shared: &Arc<Shared>) {
 
 fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream) {
     let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(READ_TICK));
-    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let _ = stream.set_read_timeout(Some(shared.timeouts.read_tick));
+    let _ = stream.set_write_timeout(Some(shared.timeouts.write_timeout));
     loop {
         match read_msg_idle(&mut stream, shared) {
             Ok(Some(msg)) => {
@@ -445,10 +481,10 @@ fn read_full(
                 if shared.draining.load(Ordering::Acquire) {
                     drain_ticks += 1;
                     if off == 0 && frame_start {
-                        if drain_ticks > DRAIN_IDLE_TICKS {
+                        if drain_ticks > shared.timeouts.drain_idle_ticks {
                             return Ok(false);
                         }
-                    } else if drain_ticks > DRAIN_GRACE_TICKS {
+                    } else if drain_ticks > shared.timeouts.drain_grace_ticks {
                         return Err(ProtoError::Malformed("drain deadline passed mid-frame"));
                     }
                 }

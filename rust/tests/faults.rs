@@ -1,0 +1,136 @@
+//! Fault-tolerance integration tests: quarantine edges that need the full
+//! crate surface — reinstall racing an in-flight batch, and the property
+//! pin that fault-free serving with the health machinery armed is
+//! bit-identical to the plain pipelined path.
+//!
+//! The unit-level quarantine edges (threshold-exact deviation, EWMA drift,
+//! all-replicas-quarantined degradation) live next to the state machine in
+//! `coordinator::health` and `coordinator::golden`.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use newton::config::AdcKind;
+use newton::coordinator::{GoldenServer, HealthPolicy, HealthState};
+use newton::faults::FaultPlan;
+use newton::mapping::StagePolicy;
+use newton::sched::Executor;
+use newton::util::Rng;
+
+fn images(n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..32 * 32 * 3).map(|_| rng.below(256) as i32).collect())
+        .collect()
+}
+
+/// Reinstall ("reprogram the crossbar") while batches are in flight: the
+/// replica's RwLock write acquisition serialises against read-locked
+/// forwards, so whichever install a batch observes, the served answer must
+/// stay exact — the drifted replica's output is caught by the golden
+/// comparison and re-run on the clean one, and the reinstalled replica
+/// rejoins without a wrong answer ever escaping.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+fn reinstall_during_inflight_batches_never_serves_a_wrong_answer() {
+    let policy = HealthPolicy {
+        quarantine_after: 2,
+        ..HealthPolicy::default()
+    };
+    let s = Arc::new(GoldenServer::replicated(0, AdcKind::Exact, 2, 2).with_health(policy));
+    s.inject_cell_faults(0, &FaultPlan::drift(7, 0.05, 30));
+    let imgs = images(16, 41); // 8 batches: plenty in flight around the reinstall
+    let want = GoldenServer::replicated(0, AdcKind::Exact, 1, 2).infer(&imgs);
+
+    let srv = Arc::clone(&s);
+    let imgs2 = imgs.clone();
+    // sequential executor: the race under test is serve vs reinstall, not
+    // batch-vs-batch interleaving
+    let worker = thread::spawn(move || srv.serve_batches_on(&imgs2, &Executor::new(1)));
+    // land the reinstall mid-stream; exact timing is irrelevant — the
+    // invariants below must hold wherever the write lock slots in
+    thread::sleep(Duration::from_millis(2));
+    s.reinstall(0);
+    let reports = worker.join().unwrap();
+
+    assert_eq!(reports.iter().map(|r| r.n_real).sum::<usize>(), 16);
+    let mut got: Vec<Vec<i32>> = Vec::new();
+    for r in &reports {
+        assert_eq!(r.max_abs_err, 0, "batch {}: a drifted result was served", r.index);
+        got.extend(r.logits.iter().cloned());
+    }
+    assert_eq!(got, want, "reinstall race changed the served numbers");
+
+    let rep = s.health_report().unwrap();
+    assert_eq!(rep.states.len(), 2);
+    assert!(!rep.degraded, "clean replica 1 should keep the pool serviceable");
+    // replica 0 was reinstalled: it must not be stuck quarantined — it is
+    // on probation, re-earned healthy, or (if a drifted in-flight batch
+    // was observed after the reset) back to suspect awaiting clean runs
+    assert_ne!(
+        rep.states[0],
+        HealthState::Quarantined.as_u8(),
+        "reinstalled replica left quarantined"
+    );
+    // replica 1 never drifted
+    assert_eq!(rep.states[1], HealthState::Healthy.as_u8());
+}
+
+/// Property pin: with no faults injected, arming the health machinery on
+/// the pipelined path changes nothing — the BatchReport stream (routing,
+/// ids, logits, deviation) is bit-identical to the plain pipelined server,
+/// and the monitor records zero re-runs and zero quarantines. This holds
+/// both for exact configs (deviation is always zero) and for lossy
+/// configs under a permissive threshold (benign ADC deviation must not be
+/// misread as a fault).
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+fn fault_free_health_serving_is_bit_identical_to_the_pipelined_path() {
+    let permissive = HealthPolicy {
+        deviation_threshold: i64::MAX,
+        ..HealthPolicy::default()
+    };
+    let cases = [
+        (AdcKind::Exact, HealthPolicy::default()),
+        (AdcKind::Adaptive, permissive),
+    ];
+    for seed in [0u64, 3, 11] {
+        for (kind, policy) in &cases {
+            let imgs = images(5, seed.wrapping_mul(100) + 7); // 2.5 batches: tail padding
+            let plain = GoldenServer::replicated(seed, *kind, 3, 2)
+                .with_pipeline(StagePolicy::newton())
+                .unwrap();
+            let armed = GoldenServer::replicated(seed, *kind, 3, 2)
+                .with_pipeline(StagePolicy::newton())
+                .unwrap()
+                .with_health(*policy);
+            let want = plain.serve_batches(&imgs);
+            let got = armed.serve_batches(&imgs);
+            assert_eq!(want.len(), got.len());
+            for (w, g) in want.iter().zip(&got) {
+                let tag = format!("seed {seed} adc {} batch {}", kind.label(), w.index);
+                assert_eq!(w.index, g.index, "{tag}");
+                assert_eq!(w.replica, g.replica, "{tag}: health changed the routing");
+                assert_eq!(w.ids, g.ids, "{tag}");
+                assert_eq!(w.n_real, g.n_real, "{tag}");
+                assert_eq!(w.logits, g.logits, "{tag}: health changed the numbers");
+                assert_eq!(w.max_abs_err, g.max_abs_err, "{tag}: deviation report drifted");
+            }
+            let rep = armed.health_report().unwrap();
+            assert_eq!(rep.reruns, 0, "fault-free run triggered re-runs");
+            assert_eq!(rep.quarantines, 0, "fault-free run quarantined a replica");
+            assert!(!rep.degraded);
+            assert!(rep
+                .states
+                .iter()
+                .all(|&b| b == HealthState::Healthy.as_u8()));
+            // the stage map never re-derived away from the construction map
+            assert_eq!(
+                plain.pipeline_map().unwrap().assignment,
+                armed.pipeline_map().unwrap().assignment,
+                "health rebuilt the stage map without a quarantine"
+            );
+        }
+    }
+}

@@ -14,11 +14,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use newton::config::AdcKind;
-use newton::coordinator::{Batch, GoldenServer};
+use newton::coordinator::{Batch, GoldenServer, HealthReport};
 use newton::net::proto::{self, Msg, StatsSnapshot};
 use newton::net::{
-    bench_image, load_generate, BenchConfig, Client, Engine, EngineBatch, InferOutcome, NetError,
-    NetServer, ServeConfig,
+    bench_image, load_generate, Backoff, BenchConfig, Client, Engine, EngineBatch, InferOutcome,
+    NetError, NetServer, ServeConfig,
 };
 
 /// Cheap deterministic engine: per real row, logits are
@@ -126,6 +126,7 @@ fn start(engine: Arc<dyn Engine>, max_inflight: usize) -> NetServer {
             addr: "127.0.0.1:0".to_string(),
             max_inflight,
             batch_wait: Duration::from_millis(1),
+            ..ServeConfig::default()
         },
     )
     .expect("bind ephemeral port")
@@ -273,8 +274,9 @@ fn admission_limit_returns_busy_not_queueing() {
     }
     assert!(matches!(blocker.join().unwrap(), InferOutcome::Ok(_)));
     // once the slot frees, the same connection gets served
+    let mut backoff = Backoff::new(Duration::from_millis(2), Duration::from_millis(20), 3);
     let (reply, _retries) = c
-        .infer_retry(3, &[3, 0, 0, 0], 1000, Duration::from_millis(5))
+        .infer_backoff(3, &[3, 0, 0, 0], 1000, &mut backoff)
         .unwrap();
     assert_eq!(reply.logits, echo_logits(&[3, 0, 0, 0]));
     let stats = server.stats();
@@ -364,6 +366,98 @@ fn load_generator_covers_every_request_exactly_once() {
     assert_eq!(stats.per_replica.iter().sum::<u64>(), 40);
 }
 
+/// Echo engine that also reports a canned health snapshot, to exercise
+/// the stats plumbing without the golden engine's compute cost.
+struct HealthyEcho(EchoEngine);
+
+impl Engine for HealthyEcho {
+    fn image_elems(&self) -> usize {
+        self.0.image_elems()
+    }
+
+    fn batch_capacity(&self) -> usize {
+        self.0.batch_capacity()
+    }
+
+    fn n_replicas(&self) -> usize {
+        self.0.n_replicas()
+    }
+
+    fn describe(&self) -> String {
+        "echo stub + health".to_string()
+    }
+
+    fn run(&self, index: usize, b: &Batch) -> EngineBatch {
+        self.0.run(index, b)
+    }
+
+    fn health(&self) -> Option<HealthReport> {
+        Some(HealthReport {
+            states: vec![0, 2],
+            reruns: 5,
+            quarantines: 1,
+            degraded: false,
+        })
+    }
+}
+
+#[test]
+fn health_report_rides_the_stats_frame() {
+    let server = start(
+        Arc::new(HealthyEcho(EchoEngine {
+            elems: 4,
+            capacity: 2,
+            replicas: 2,
+        })),
+        16,
+    );
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.health, vec![0, 2]);
+    assert_eq!(stats.reruns, 5);
+    assert_eq!(stats.quarantines, 1);
+    assert!(!stats.degraded);
+    // an engine without a monitor reports empty health (see other tests'
+    // stats assertions, which Default to exactly that)
+    server.shutdown();
+}
+
+#[test]
+fn chaos_lanes_still_cover_every_request_exactly_once() {
+    // chaos mode over real sockets: client-side fault injection tears
+    // frames, stalls reads, and drops connections, and the retry loop
+    // must still deliver every request's correct answer exactly once
+    let server = start(Arc::new(EchoEngine::wide()), 32);
+    let mut cfg = BenchConfig::new(&server.local_addr().to_string());
+    cfg.requests = 48;
+    cfg.concurrency = 4;
+    cfg.seed = 5;
+    cfg.fault_seed = 7;
+    cfg.fault_rate = 0.1;
+    let report = load_generate(&cfg).unwrap();
+    assert_eq!(report.logits.len(), 48);
+    for (i, logits) in report.logits.iter().enumerate() {
+        assert_eq!(logits, &echo_logits(&bench_image(cfg.seed, i)), "request {i}");
+    }
+    assert!(
+        report.injected_faults > 0,
+        "rate 0.1 over 48 requests of IO injected nothing"
+    );
+    assert!(
+        report.fault_retries > 0,
+        "faults were injected but nothing retried"
+    );
+    // every retryable failure drops its connection; the next attempt (if
+    // the lane is not already done) must reconnect
+    assert!(
+        report.reconnects + cfg.concurrency as u64 >= report.fault_retries,
+        "retries without matching reconnects: {} vs {}",
+        report.fault_retries,
+        report.reconnects
+    );
+    server.shutdown();
+}
+
 #[test]
 #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
 fn pipelined_serve_net_bit_identical_to_non_pipelined_path() {
@@ -382,6 +476,7 @@ fn pipelined_serve_net_bit_identical_to_non_pipelined_path() {
             addr: "127.0.0.1:0".to_string(),
             max_inflight: 32,
             batch_wait: Duration::from_millis(2),
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -423,6 +518,7 @@ fn concurrent_clients_bit_identical_to_in_process_golden() {
             addr: "127.0.0.1:0".to_string(),
             max_inflight: 32,
             batch_wait: Duration::from_millis(2),
+            ..ServeConfig::default()
         },
     )
     .unwrap();

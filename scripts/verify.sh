@@ -20,27 +20,28 @@ echo "== cargo test --release -q (release-gated suites) =="
 cargo test --release -q
 
 echo
-echo "== cargo clippy (rust/src/xbar/ gate) =="
+echo "== cargo clippy (rust/src/{xbar,net,faults}/ gate) =="
 # clippy cannot be scoped to one module, so run it on the lib at
-# `-D warnings` severity and gate only the xbar subtree: any diagnostic
-# pointing into rust/src/xbar/ fails the build, drift elsewhere stays
-# advisory (seed code predates the clippy adoption)
+# `-D warnings` severity and gate only the subtrees written under the
+# clippy regime: any diagnostic pointing into rust/src/xbar/, rust/src/net/
+# or rust/src/faults/ fails the build, drift elsewhere stays advisory
+# (seed code predates the clippy adoption)
 if cargo clippy --version >/dev/null 2>&1; then
   clippy_status=0
   clippy_out=$(cargo clippy -q --lib --message-format=short -- -D warnings 2>&1) || clippy_status=$?
-  xbar_hits=$(printf '%s\n' "$clippy_out" | grep "src/xbar/" || true)
-  if [ -n "$xbar_hits" ]; then
-    printf '%s\n' "$xbar_hits"
-    echo "FAIL: clippy diagnostics in rust/src/xbar/ (-D warnings gate)"
+  gated_hits=$(printf '%s\n' "$clippy_out" | grep 'src/xbar/\|src/net/\|src/faults/' || true)
+  if [ -n "$gated_hits" ]; then
+    printf '%s\n' "$gated_hits"
+    echo "FAIL: clippy diagnostics in rust/src/{xbar,net,faults}/ (-D warnings gate)"
     exit 1
   elif [ "$clippy_status" -ne 0 ]; then
-    # clippy exited non-zero with no xbar diagnostics: either lints in
+    # clippy exited non-zero with no gated diagnostics: either lints in
     # other (advisory) modules or an incomplete run — do not report a
     # clean gate in either case, and surface the tail for triage
     printf '%s\n' "$clippy_out" | tail -5
-    echo "WARN: clippy exited ${clippy_status} with no rust/src/xbar/ diagnostics; xbar gate inconclusive (non-xbar lints stay advisory)"
+    echo "WARN: clippy exited ${clippy_status} with no gated diagnostics; xbar/net/faults gate inconclusive (other lints stay advisory)"
   else
-    echo "clippy xbar gate OK"
+    echo "clippy xbar/net/faults gate OK"
   fi
 else
   echo "clippy unavailable; skipped"
@@ -120,6 +121,52 @@ if ! [ -f BENCH_net.json ]; then
   exit 1
 fi
 echo "serve-net smoke OK (pipelined, bit-identical, clean drain)"
+
+echo
+echo "== serve-net chaos smoke: cell drift + wire faults, exact answers =="
+# replica 2 is installed with seeded cell drift; --deviation-threshold 0
+# arms the health monitor, so every batch the drifted replica serves is
+# caught against the lossless golden, transparently re-run on a healthy
+# replica, and the drifted replica is quarantined after 2 strikes.
+# bench-net's chaos mode additionally corrupts/stalls/drops ~5% of its own
+# wire IO (seeded, reproducible) and --expect-exact asserts every accepted
+# request still returned the bit-exact golden answer through the retries.
+portfile=$(mktemp)
+rm -f BENCH_net.json
+"$newton_bin" serve-net --adc exact --replicas 3 --health \
+  --inject-drift 2 --deviation-threshold 0 --quarantine-after 2 \
+  --addr 127.0.0.1:0 --port-file "$portfile" &
+srv_pid=$!
+trap 'kill "$srv_pid" 2>/dev/null || true' EXIT
+for _ in $(seq 1 150); do
+  [ -s "$portfile" ] && break
+  sleep 0.2
+done
+if ! [ -s "$portfile" ]; then
+  echo "FAIL: chaos serve-net never wrote its bound address"
+  exit 1
+fi
+addr=$(cat "$portfile")
+"$newton_bin" bench-net --addr "$addr" \
+  --requests 128 --concurrency 8 \
+  --fault-seed 7 --fault-rate 0.05 --expect-exact --shutdown
+wait "$srv_pid"
+trap - EXIT
+rm -f "$portfile"
+if ! [ -f BENCH_net.json ]; then
+  echo "FAIL: chaos bench-net wrote no BENCH_net.json"
+  exit 1
+fi
+quarantines=$(awk -F': ' '/"quarantines":/ {gsub(/[,[:space:]]/, "", $2); print $2; exit}' BENCH_net.json)
+if [ -z "${quarantines}" ] || [ "${quarantines}" -lt 1 ]; then
+  echo "FAIL: drifted replica was not quarantined (quarantines: ${quarantines:-missing})"
+  exit 1
+fi
+if ! grep -q '"verified_exact": true' BENCH_net.json; then
+  echo "FAIL: chaos run did not verify bit-exact answers"
+  exit 1
+fi
+echo "chaos smoke OK (quarantines: ${quarantines}, bit-exact under 5% wire faults, clean drain)"
 
 echo
 echo "== perf smoke: cargo bench --bench perf_hotpath -- --smoke =="
