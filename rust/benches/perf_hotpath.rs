@@ -180,6 +180,15 @@ fn main() {
     let cnn_pipe_b8_r4 = h.bench("cnn: newton-mini forward b8, pipelined 4 replicas", 3, || {
         forward_pipelined(&pipe_pool[..], &map_r4, &img8, &exec_r4)
     });
+    // tracing overhead on the same workload: per-cell + per-stage spans
+    // live, draining into the bounded global sink (drop-oldest, so a full
+    // ring costs the same as an empty one). verify.sh gates the ratio.
+    newton::obs::set_trace_level(newton::obs::TraceLevel::Spans);
+    let cnn_pipe_b8_r4_traced =
+        h.bench("cnn: newton-mini forward b8, pipelined 4 replicas, traced", 3, || {
+            forward_pipelined(&pipe_pool[..], &map_r4, &img8, &exec_r4)
+        });
+    newton::obs::set_trace_level(newton::obs::TraceLevel::Off);
     let map_r2 =
         StageMap::build(pipe_pool[0].n_conv_stages(), 2, StagePolicy::newton()).unwrap();
     let exec_r2 = Executor::new(worker_count(2));
@@ -218,6 +227,7 @@ fn main() {
         for i in 0..1024u64 {
             b.push(PendingRequest {
                 id: i,
+                trace: 0,
                 image: vec![0; 4],
                 enqueued: Instant::now(),
             });
@@ -264,6 +274,7 @@ fn main() {
     let pipeline_speedup_b8 = cnn_seq_dev_b8 / cnn_pipe_b8_r4.max(1e-9);
     let pipeline_speedup_b8_r2 = cnn_seq_dev_b8 / cnn_pipe_b8_r2.max(1e-9);
     let pipeline_vs_multicore_b8 = cnn_seq_b8 / cnn_pipe_b8_r4.max(1e-9);
+    let trace_overhead_b8 = cnn_pipe_b8_r4_traced / cnn_pipe_b8_r4.max(1e-9);
     println!("\nderived:");
     println!("  amortised VMM speedup (installed vs legacy) : {vmm_speedup:7.1}x (target >= 5x)");
     println!("  slice-engine speedup (adaptive b8)          : {vmm_slice_speedup:7.1}x (target >= 2x)");
@@ -278,6 +289,7 @@ fn main() {
     println!("  cnn b8 pipelined stages, 4 replicas         : {pipeline_speedup_b8:7.1}x over one device-sequential replica");
     println!("  cnn b8 pipelined stages, 2 replicas         : {pipeline_speedup_b8_r2:7.1}x over one device-sequential replica");
     println!("  cnn b8 pipelined vs multicore whole-batch   : {pipeline_vs_multicore_b8:7.1}x (informational)");
+    println!("  tracing overhead, pipelined b8 (spans on)   : {trace_overhead_b8:7.2}x (target <= 1.03x)");
 
     let mut json = String::from("{\n  \"cases\": [\n");
     for (i, (name, med, n)) in h.results.iter().enumerate() {
@@ -287,7 +299,7 @@ fn main() {
         ));
     }
     json.push_str(&format!(
-        "  ],\n  \"derived\": {{\n    \"vmm_amortised_speedup\": {vmm_speedup:.2},\n    \"vmm_slice_engine_speedup\": {vmm_slice_speedup:.2},\n    \"slice_speedup_adaptive_b1\": {slice_adaptive_b1_speedup:.2},\n    \"slice_speedup_adaptive_b8\": {vmm_slice_speedup:.2},\n    \"slice_speedup_lossy_b1\": {slice_lossy_b1_speedup:.2},\n    \"slice_speedup_lossy_b8\": {slice_lossy_b8_speedup:.2},\n    \"suite_parallel_speedup\": {suite_speedup:.2},\n    \"cnn_programmed_speedup\": {cnn_speedup:.2},\n    \"sched_scaling_speedup\": {sched_scaling_speedup:.2},\n    \"sched_steal_speedup\": {sched_steal_speedup:.2},\n    \"cnn_image_split_speedup\": {cnn_image_split_speedup:.2},\n    \"pipeline_speedup_b8\": {pipeline_speedup_b8:.2},\n    \"pipeline_speedup_b8_r2\": {pipeline_speedup_b8_r2:.2},\n    \"pipeline_vs_multicore_b8\": {pipeline_vs_multicore_b8:.2}\n  }}\n}}\n"
+        "  ],\n  \"derived\": {{\n    \"vmm_amortised_speedup\": {vmm_speedup:.2},\n    \"vmm_slice_engine_speedup\": {vmm_slice_speedup:.2},\n    \"slice_speedup_adaptive_b1\": {slice_adaptive_b1_speedup:.2},\n    \"slice_speedup_adaptive_b8\": {vmm_slice_speedup:.2},\n    \"slice_speedup_lossy_b1\": {slice_lossy_b1_speedup:.2},\n    \"slice_speedup_lossy_b8\": {slice_lossy_b8_speedup:.2},\n    \"suite_parallel_speedup\": {suite_speedup:.2},\n    \"cnn_programmed_speedup\": {cnn_speedup:.2},\n    \"sched_scaling_speedup\": {sched_scaling_speedup:.2},\n    \"sched_steal_speedup\": {sched_steal_speedup:.2},\n    \"cnn_image_split_speedup\": {cnn_image_split_speedup:.2},\n    \"pipeline_speedup_b8\": {pipeline_speedup_b8:.2},\n    \"pipeline_speedup_b8_r2\": {pipeline_speedup_b8_r2:.2},\n    \"pipeline_vs_multicore_b8\": {pipeline_vs_multicore_b8:.2},\n    \"trace_overhead_b8\": {trace_overhead_b8:.3}\n  }}\n}}\n"
     ));
     match std::fs::write("BENCH_hotpath.json", &json) {
         Ok(()) => println!("\nwrote BENCH_hotpath.json"),

@@ -13,9 +13,9 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
     ("incremental", "Fig-20-style technique stacking table"),
     ("sweep", "design-space sweeps (--what ima|buffer|fc)"),
     ("verify", "run artifacts against golden test vectors"),
-    ("serve", "in-process batched serving demo (--adc, --replicas, --pipeline)"),
-    ("serve-net", "TCP serving endpoint (--addr, --adc, --replicas, --pipeline, --health)"),
-    ("bench-net", "load-generate against a serve-net endpoint (--addr; --fault-rate = chaos)"),
+    ("serve", "in-process batched serving demo (--adc, --replicas, --pipeline, --trace-out)"),
+    ("serve-net", "TCP serving endpoint (--addr, --adc, --replicas, --pipeline, --health, --trace-out)"),
+    ("bench-net", "load-generate against a serve-net endpoint (--addr; --concurrency 1,8,64 sweeps; --fault-rate = chaos; --trace-out)"),
     ("sched-stress", "work-stealing executor stress smoke (CI)"),
     ("export", "write every figure's data series as CSV (--out)"),
     ("list", "workloads, artifacts, and subcommands"),

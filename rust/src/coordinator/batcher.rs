@@ -11,6 +11,9 @@ use std::time::{Duration, Instant};
 #[derive(Debug)]
 pub struct PendingRequest {
     pub id: u64,
+    /// Client-minted trace id riding the request through dispatch so batch
+    /// spans correlate with client retries; 0 means untraced.
+    pub trace: u64,
     pub image: Vec<i32>,
     pub enqueued: Instant,
 }
@@ -19,6 +22,8 @@ pub struct PendingRequest {
 #[derive(Debug)]
 pub struct Batch {
     pub ids: Vec<u64>,
+    /// Per-request trace ids, parallel to `ids`.
+    pub traces: Vec<u64>,
     /// Flattened batch-major data, padded to `capacity` images.
     pub data: Vec<i32>,
     /// Real images in the batch (the rest is padding).
@@ -76,15 +81,18 @@ impl Batcher {
         let taken: Vec<PendingRequest> = self.pending.drain(..n).collect();
         let mut data = Vec::with_capacity(self.capacity * self.image_elems);
         let mut ids = Vec::with_capacity(n);
+        let mut traces = Vec::with_capacity(n);
         let mut enqueued = Vec::with_capacity(n);
         for r in &taken {
             ids.push(r.id);
+            traces.push(r.trace);
             enqueued.push(r.enqueued);
             data.extend_from_slice(&r.image);
         }
         data.resize(self.capacity * self.image_elems, 0);
         Some(Batch {
             ids,
+            traces,
             data,
             n_real: n,
             enqueued,
@@ -99,6 +107,7 @@ mod tests {
     fn req(id: u64, elems: usize) -> PendingRequest {
         PendingRequest {
             id,
+            trace: id.wrapping_mul(1000),
             image: vec![id as i32; elems],
             enqueued: Instant::now(),
         }
@@ -114,6 +123,7 @@ mod tests {
         let batch = b.take_batch().unwrap();
         assert_eq!(batch.n_real, 4);
         assert_eq!(batch.ids, vec![0, 1, 2, 3]);
+        assert_eq!(batch.traces, vec![0, 1000, 2000, 3000]);
         assert_eq!(batch.data.len(), 8);
         assert_eq!(b.pending_len(), 1);
     }

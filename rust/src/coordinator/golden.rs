@@ -40,6 +40,7 @@ use crate::coordinator::batcher::{Batch, Batcher, PendingRequest};
 use crate::coordinator::health::{HealthMonitor, HealthPolicy, HealthReport};
 use crate::coordinator::pipeline::forward_pipelined;
 use crate::mapping::{StageMap, StagePolicy};
+use crate::obs;
 use crate::sched::Executor;
 use crate::xbar::cnn::{ForwardScratch, MiniCnn, ProgrammedCnn, Tensor};
 use crate::xbar::Matrix;
@@ -381,6 +382,7 @@ impl GoldenServer {
         for (i, img) in images.iter().enumerate() {
             batcher.push(PendingRequest {
                 id: i as u64,
+                trace: 0,
                 image: img.clone(),
                 enqueued: Instant::now(),
             });
@@ -416,7 +418,15 @@ impl GoldenServer {
     /// time, unlike [`Self::serve_batches_on`] which divides the pool
     /// across in-flight batches.
     pub fn run_one(&self, index: usize, b: &Batch) -> BatchReport {
-        self.run_batch(index, b, crate::util::worker_count(self.batch))
+        let sp = obs::span("batch", "serve")
+            .arg("index", index as u64)
+            .arg("n_real", b.n_real as u64)
+            .arg("trace0", b.traces.first().copied().unwrap_or(0));
+        let r = self.run_batch(index, b, crate::util::worker_count(self.batch));
+        // the executing replica is only known after the fact; attach it so
+        // the exported trace can be grouped per replica
+        let _sp = sp.arg("replica", r.replica as u64);
+        r
     }
 
     /// Run `f` with the server-owned forward scratch when it is free, else
@@ -507,6 +517,12 @@ impl GoldenServer {
                 break; // every replica tried: serve the least-bad result
             };
             h.record_rerun();
+            obs::counter("health.reruns").inc();
+            obs::event(
+                "health_rerun",
+                "health",
+                &[("batch", index as u64), ("replica", alt as u64)],
+            );
             let served = self.forward_replica(alt, t, exec.as_ref());
             let err = Self::batch_err(&served, &want, n_real);
             h.observe(alt, err);
@@ -570,6 +586,8 @@ impl GoldenServer {
         }
         // localise the drift: solo-run the batch on each mapped replica
         h.record_rerun();
+        obs::counter("health.reruns").inc();
+        obs::event("health_rerun", "health", &[("pipelined", 1)]);
         let mut best: Option<(usize, Matrix, i64)> = None;
         for &r in &mapped {
             let solo = self.forward_replica(r, t, None);
@@ -588,6 +606,12 @@ impl GoldenServer {
                 break;
             };
             h.record_rerun();
+            obs::counter("health.reruns").inc();
+            obs::event(
+                "health_rerun",
+                "health",
+                &[("pipelined", 1), ("replica", alt as u64)],
+            );
             let solo = self.forward_replica(alt, t, None);
             let solo_err = Self::batch_err(&solo, &want, n_real);
             h.observe(alt, solo_err);

@@ -232,6 +232,8 @@ impl HealthMonitor {
         let now = h.state;
         if was != HealthState::Quarantined && now == HealthState::Quarantined {
             g.quarantines += 1;
+            crate::obs::counter("health.quarantines").inc();
+            crate::obs::event("quarantine", "health", &[("replica", replica as u64)]);
         }
         now
     }

@@ -249,7 +249,17 @@ pub fn forward_pipelined<P: StagePool + ?Sized>(
             scratch.with(r, |scr| {
                 inputs[g]
                     .iter()
-                    .map(|(k, s, data)| (*k, pool.run_stage(r, *s, data, scr)))
+                    .map(|(k, s, data)| {
+                        // one span per wavefront cell: (image k, stage s)
+                        // on replica r — the trace-completeness contract
+                        // (tests/properties.rs, verify.sh) keys on these
+                        // exact name/arg labels
+                        let _sp = crate::obs::span("cell", "pipeline")
+                            .arg("k", *k as u64)
+                            .arg("s", *s as u64)
+                            .arg("replica", r as u64);
+                        (*k, pool.run_stage(r, *s, data, scr))
+                    })
                     .collect::<Vec<(usize, StageData)>>()
             })
         });

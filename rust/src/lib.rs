@@ -29,6 +29,7 @@ pub mod karatsuba;
 pub mod mapping;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod pipeline;
 pub mod proptest_lite;
 pub mod runtime;

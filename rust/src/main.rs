@@ -16,6 +16,10 @@
 //!   --pipeline               pipelined stage scheduling across the
 //!                            replicas (conv/classifier stage split;
 //!                            implies the golden path, default --adc exact)
+//!   --trace-out PATH         write a Chrome-trace JSON (Perfetto) of the
+//!                            run's spans when the command exits
+//!   --trace-level off|spans|verbose   span detail; defaults to `spans`
+//!                            when --trace-out is given, `off` otherwise
 //! serve-net                  TCP serving endpoint (rust/src/net/)
 //!   --addr HOST:PORT         bind address (port 0 = ephemeral)
 //!   --adc / --replicas / --batch   engine config, as for `serve`
@@ -31,8 +35,11 @@
 //!   --inject-drift R         perturb replica R's installed cells
 //!                            (--drift-seed/--drift-rate/--drift-mag)
 //!   --read-tick-ms/--write-timeout-ms/--wake-timeout-ms   IO timeouts
+//!   --trace-out/--trace-level      Chrome-trace export, as for `serve`
 //! bench-net --addr HOST:PORT multi-threaded load generator
-//!   --requests N --concurrency C   writes BENCH_net.json
+//!   --requests N --concurrency C[,C..]   writes BENCH_net.json; a comma
+//!                            list (e.g. 1,8,64) sweeps extra passes and
+//!                            emits latency_p50/p99/p999_us_c{N} keys
 //!   --expect-exact           assert bit-identity vs in-process golden
 //!   --engine-seed N          seed of the server's install (default 0)
 //!   --fault-seed S --fault-rate P   chaos mode: inject client-side wire
@@ -40,6 +47,7 @@
 //!                            against a clean pass (fault_overhead_b8)
 //!   --deadline-ms N          per-request deadline across retries
 //!   --shutdown               drain the server after the run
+//!   --trace-out/--trace-level      client-side Chrome-trace export
 //! sched-stress               work-stealing executor stress smoke (CI)
 //! export --out DIR           every figure's data series as CSV
 //! list                       workloads, artifacts, and subcommands
@@ -84,6 +92,37 @@ fn main() {
     if let Err(e) = r {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+/// `--trace-out PATH` / `--trace-level off|spans|verbose`: arm the obs
+/// layer for this run. The level defaults to `spans` when an output path
+/// is given and `off` otherwise, so plain runs pay only the relaxed-load
+/// disabled cost. Returns the output path for [`export_trace`].
+fn init_tracing(args: &Args) -> Result<Option<String>> {
+    let out = args.get("trace-out").map(str::to_string);
+    let level = match args.get("trace-level") {
+        Some(l) => newton::obs::TraceLevel::parse(l)
+            .ok_or_else(|| anyhow!("--trace-level wants off|spans|verbose, got {l:?}"))?,
+        None if out.is_some() => newton::obs::TraceLevel::Spans,
+        None => newton::obs::TraceLevel::Off,
+    };
+    newton::obs::set_trace_level(level);
+    Ok(out)
+}
+
+/// Flush this thread and write the global sink as Chrome-trace JSON.
+/// Worker/handler threads flushed on exit; by the time a command gets
+/// here their spans are already in the sink.
+fn export_trace(out: Option<&str>) {
+    let Some(path) = out else { return };
+    match newton::obs::export_global_chrome_trace(std::path::Path::new(path)) {
+        Ok(()) => println!(
+            "wrote {path} ({} trace events, {} dropped)",
+            newton::obs::global_sink().len(),
+            newton::obs::global_sink().dropped()
+        ),
+        Err(e) => println!("could not write trace {path}: {e}"),
     }
 }
 
@@ -251,6 +290,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let trace_out = init_tracing(args)?;
     let n_req = args.get_usize("requests", 64);
     let dir = default_artifacts_dir();
     let cfg = ServerConfig::newton_mini(dir);
@@ -269,6 +309,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let kind = AdcKind::parse(args.get_or("adc", "exact")).map_err(|e| anyhow!("{e}"))?;
         serve_replicated(&images, kind, args)?;
         print_simulated_hw();
+        export_trace(trace_out.as_deref());
         return Ok(());
     }
 
@@ -304,6 +345,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     print_simulated_hw();
+    export_trace(trace_out.as_deref());
     Ok(())
 }
 
@@ -381,6 +423,7 @@ fn serve_replicated(images: &[Vec<i32>], kind: AdcKind, args: &Args) -> Result<(
 /// Blocks until a client sends a `Shutdown` frame, then drains and prints
 /// the final stats.
 fn cmd_serve_net(args: &Args) -> Result<()> {
+    let trace_out = init_tracing(args)?;
     let kind = AdcKind::parse(args.get_or("adc", "exact")).map_err(|e| anyhow!("{e}"))?;
     let replicas = args.get_usize("replicas", 2);
     let batch = args.get_usize("batch", 8);
@@ -468,6 +511,7 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
 
     let stats = server.join();
     print_net_stats(&stats);
+    export_trace(trace_out.as_deref());
     if let Some(dir) = args.get("export") {
         let f = metrics::export::export_net_summary(std::path::Path::new(dir), &stats)?;
         println!("wrote {dir}/{f}");
@@ -481,11 +525,12 @@ fn print_net_stats(s: &net::StatsSnapshot) {
         s.served, s.busy, s.proto_errors
     );
     println!(
-        "  batches    : {} (fill {:.0}%)   latency p50 {:.1} ms  p99 {:.1} ms",
+        "  batches    : {} (fill {:.0}%)   latency p50 {:.1} ms  p99 {:.1} ms  p999 {:.1} ms",
         s.batches,
         s.batch_fill * 100.0,
         s.p50_us as f64 / 1e3,
-        s.p99_us as f64 / 1e3
+        s.p99_us as f64 / 1e3,
+        s.p999_us as f64 / 1e3
     );
     println!("  worst batch deviation vs lossless golden: {}", s.worst_abs_err);
     if s.health.is_empty() {
@@ -512,6 +557,12 @@ fn print_net_stats(s: &net::StatsSnapshot) {
         }
         t.print();
     }
+    if !s.metrics.is_empty() {
+        println!("  counters   :");
+        for (name, value) in &s.metrics {
+            println!("    {name:<28} {value}");
+        }
+    }
 }
 
 /// Multi-threaded load generator against a `serve-net` endpoint. Writes
@@ -519,17 +570,30 @@ fn print_net_stats(s: &net::StatsSnapshot) {
 /// request stream through an in-process `GoldenServer` and asserts
 /// bit-identity plus zero deviation; `--shutdown` drains the server.
 fn cmd_bench_net(args: &Args) -> Result<()> {
+    let trace_out = init_tracing(args)?;
     let addr = args
         .get("addr")
         .ok_or_else(|| anyhow!("--addr is required (serve-net prints the bound address)"))?;
+    // --concurrency takes a single lane count or a comma list (1,8,64);
+    // the first entry is the primary pass (chaos/verification/top-level
+    // JSON), the rest are latency-sweep passes
+    let conc_spec = args.get_or("concurrency", "8");
+    let concurrencies: Vec<usize> = conc_spec
+        .split(',')
+        .map(|s| {
+            s.trim().parse::<usize>().map_err(|_| {
+                anyhow!("--concurrency wants N or a comma list like 1,8,64, got {conc_spec:?}")
+            })
+        })
+        .collect::<Result<_>>()?;
     let mut cfg = BenchConfig::new(addr);
     cfg.requests = args.get_usize("requests", 64);
-    cfg.concurrency = args.get_usize("concurrency", 8);
+    cfg.concurrency = concurrencies[0];
     cfg.seed = args.get_usize("seed", 0) as u64;
     cfg.deadline = Duration::from_millis(args.get_usize("deadline-ms", 30_000) as u64);
     cfg.fault_seed = args.get_usize("fault-seed", 0) as u64;
     cfg.fault_rate = args.get_f64("fault-rate", 0.0);
-    if cfg.requests == 0 || cfg.concurrency == 0 {
+    if cfg.requests == 0 || concurrencies.iter().any(|&c| c == 0) {
         bail!("--requests and --concurrency must be >= 1");
     }
     if !(0.0..=1.0).contains(&cfg.fault_rate) {
@@ -581,10 +645,30 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "  latency p50 : {:.1} ms   p99: {:.1} ms   max: {:.1} ms",
-        report.p50_ms, report.p99_ms, report.max_ms
+        "  latency p50 : {:.1} ms   p99: {:.1} ms   p999: {:.1} ms   max: {:.1} ms",
+        report.p50_ms,
+        report.p99_ms,
+        report.p999_us as f64 / 1e3,
+        report.max_ms
     );
     println!("  worst batch deviation vs lossless golden: {}", report.worst_abs_err);
+
+    // latency sweep: the primary pass plus one pass per extra lane count,
+    // all against the same warmed server
+    let mut sweep: Vec<(usize, u64, u64, u64)> =
+        vec![(cfg.concurrency, report.p50_us, report.p99_us, report.p999_us)];
+    for &c in &concurrencies[1..] {
+        let pass_cfg = BenchConfig {
+            concurrency: c,
+            ..cfg.clone()
+        };
+        let p = net::load_generate(&pass_cfg)?;
+        println!(
+            "  sweep c={c:<3}: {:.1} req/s   p50 {} us  p99 {} us  p999 {} us",
+            p.throughput_rps, p.p50_us, p.p99_us, p.p999_us
+        );
+        sweep.push((c, p.p50_us, p.p99_us, p.p999_us));
+    }
 
     // server-side view of the same run
     let mut ctl = net::Client::connect(addr)?;
@@ -632,12 +716,13 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
         None
     };
 
-    write_bench_net_json(&report, &stats, verified, fault_overhead);
+    write_bench_net_json(&report, &stats, verified, fault_overhead, &sweep);
 
     if args.has_flag("shutdown") {
         ctl.shutdown()?;
         println!("sent shutdown; server drained and acked");
     }
+    export_trace(trace_out.as_deref());
     Ok(())
 }
 
@@ -646,6 +731,7 @@ fn write_bench_net_json(
     server: &net::StatsSnapshot,
     verified: Option<bool>,
     fault_overhead: Option<f64>,
+    sweep: &[(usize, u64, u64, u64)],
 ) {
     let per_replica = r
         .per_replica
@@ -659,17 +745,31 @@ fn write_bench_net_json(
         .map(|b| b.to_string())
         .collect::<Vec<_>>()
         .join(", ");
+    // one exact-microsecond triple per swept lane count (first = primary)
+    let mut sweep_keys = String::new();
+    for (c, p50, p99, p999) in sweep {
+        sweep_keys.push_str(&format!(
+            "  \"latency_p50_us_c{c}\": {p50},\n  \"latency_p99_us_c{c}\": {p99},\n  \
+             \"latency_p999_us_c{c}\": {p999},\n"
+        ));
+    }
+    let metrics_json = server
+        .metrics
+        .iter()
+        .map(|(k, v)| format!("\"{k}\": {v}"))
+        .collect::<Vec<_>>()
+        .join(", ");
     let json = format!(
         "{{\n  \"requests\": {},\n  \"concurrency\": {},\n  \"wall_s\": {:.6},\n  \
          \"throughput_rps\": {:.3},\n  \"p50_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \
-         \"max_ms\": {:.3},\n  \"busy_retries\": {},\n  \"fault_retries\": {},\n  \
+         \"max_ms\": {:.3},\n{}  \"busy_retries\": {},\n  \"fault_retries\": {},\n  \
          \"reconnects\": {},\n  \"injected_faults\": {},\n  \"fault_overhead_b8\": {},\n  \
          \"worst_abs_err\": {},\n  \
          \"verified_exact\": {},\n  \"per_replica\": [{}],\n  \"server\": {{\n    \
          \"served\": {},\n    \"busy\": {},\n    \"proto_errors\": {},\n    \
          \"batches\": {},\n    \"batch_fill\": {:.4},\n    \"p50_us\": {},\n    \
-         \"p99_us\": {},\n    \"reruns\": {},\n    \"quarantines\": {},\n    \
-         \"degraded\": {},\n    \"health\": [{}]\n  }}\n}}\n",
+         \"p99_us\": {},\n    \"p999_us\": {},\n    \"reruns\": {},\n    \"quarantines\": {},\n    \
+         \"degraded\": {},\n    \"health\": [{}],\n    \"metrics\": {{{}}}\n  }}\n}}\n",
         r.requests,
         r.concurrency,
         r.wall_s,
@@ -677,6 +777,7 @@ fn write_bench_net_json(
         r.p50_ms,
         r.p99_ms,
         r.max_ms,
+        sweep_keys,
         r.busy_retries,
         r.fault_retries,
         r.reconnects,
@@ -696,10 +797,12 @@ fn write_bench_net_json(
         server.batch_fill,
         server.p50_us,
         server.p99_us,
+        server.p999_us,
         server.reruns,
         server.quarantines,
         server.degraded,
         health,
+        metrics_json,
     );
     match std::fs::write("BENCH_net.json", &json) {
         Ok(()) => println!("wrote BENCH_net.json"),

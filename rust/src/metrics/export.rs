@@ -193,7 +193,8 @@ pub fn export_all(dir: &Path) -> Result<Vec<String>> {
 
 /// Serialize a `serve-net` [`StatsSnapshot`] as `net_summary.csv` next to
 /// the figure exports: one `metric,value` row per counter plus a
-/// `replica_<i>_requests` row per installed replica.
+/// `replica_<i>_requests` row per installed replica and a `metric_<name>`
+/// row per obs-registry counter the server shipped in its Stats frame.
 pub fn export_net_summary(dir: &Path, s: &StatsSnapshot) -> Result<String> {
     std::fs::create_dir_all(dir)?;
     let mut rows = vec![
@@ -205,6 +206,7 @@ pub fn export_net_summary(dir: &Path, s: &StatsSnapshot) -> Result<String> {
         format!("worst_abs_err,{}", s.worst_abs_err),
         format!("latency_p50_us,{}", s.p50_us),
         format!("latency_p99_us,{}", s.p99_us),
+        format!("latency_p999_us,{}", s.p999_us),
         format!("replicas,{}", s.per_replica.len()),
         format!("batch_reruns,{}", s.reruns),
         format!("quarantines,{}", s.quarantines),
@@ -218,6 +220,9 @@ pub fn export_net_summary(dir: &Path, s: &StatsSnapshot) -> Result<String> {
             "replica_{i}_health,{}",
             crate::coordinator::HealthState::from_u8(*b).label()
         ));
+    }
+    for (name, value) in &s.metrics {
+        rows.push(format!("metric_{name},{value}"));
     }
     write_csv(dir, "net_summary.csv", "metric,value", &rows)?;
     Ok("net_summary.csv".into())
@@ -240,11 +245,16 @@ mod tests {
             worst_abs_err: 0,
             p50_us: 1500,
             p99_us: 9000,
+            p999_us: 12_000,
             per_replica: vec![33, 31],
             reruns: 2,
             quarantines: 1,
             degraded: false,
             health: vec![0, 2],
+            metrics: vec![
+                ("net.requests".to_string(), 64),
+                ("sched.steals".to_string(), 5),
+            ],
         };
         let name = export_net_summary(&dir, &snap).unwrap();
         assert_eq!(name, "net_summary.csv");
@@ -259,6 +269,7 @@ mod tests {
             "worst_abs_err,0",
             "latency_p50_us,1500",
             "latency_p99_us,9000",
+            "latency_p999_us,12000",
             "replicas,2",
             "batch_reruns,2",
             "quarantines,1",
@@ -267,6 +278,8 @@ mod tests {
             "replica_1_requests,31",
             "replica_0_health,healthy",
             "replica_1_health,quarantined",
+            "metric_net.requests,64",
+            "metric_sched.steals,5",
         ] {
             assert!(text.lines().any(|l| l == want), "missing row {want:?} in:\n{text}");
         }

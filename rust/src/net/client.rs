@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::golden::IMAGE_ELEMS;
 use crate::faults::FaultyStream;
 use crate::net::percentile_us;
+use crate::obs;
 use crate::net::proto::{self, InferReply, InferRequest, Msg, ProtoError, StatsSnapshot, WireError};
 use crate::sched::Executor;
 use crate::util::Rng;
@@ -154,22 +155,41 @@ impl<S: Read + Write> Client<S> {
         Ok(proto::read_msg(&mut self.stream)?)
     }
 
-    /// One inference request. `id` is opaque and echoed in the reply.
+    /// One inference request. `id` is opaque and echoed in the reply; a
+    /// fresh trace id is minted per call (use [`Self::infer_traced`] to
+    /// carry one trace across multiple attempts).
     pub fn infer(&mut self, id: u64, image: &[i32]) -> Result<InferOutcome, NetError> {
+        self.infer_traced(id, obs::next_trace_id(), image)
+    }
+
+    /// One inference request carrying an explicit client-minted trace id
+    /// (0 = untraced). The server echoes both `id` and `trace` in the
+    /// reply, and the reply is rejected unless both match — so a trace id
+    /// doubles as an end-to-end correlation check. [`RetryClient`] mints
+    /// one trace per *logical* request so every resend shares it and the
+    /// server can spot duplicate dispatches.
+    pub fn infer_traced(
+        &mut self,
+        id: u64,
+        trace: u64,
+        image: &[i32],
+    ) -> Result<InferOutcome, NetError> {
         if image.len() > proto::MAX_IMAGE_ELEMS {
             // fail locally instead of emitting a frame every receiver is
             // required to reject
             return Err(NetError::Proto(ProtoError::Oversized {
-                len: 12 + image.len() * 4,
+                len: 20 + image.len() * 4,
             }));
         }
+        let _sp = obs::span_verbose("client_infer", "net").arg("trace", trace).arg("id", id);
         let msg = Msg::Infer(InferRequest {
             id,
+            trace,
             image: image.to_vec(),
         });
         match self.request(&msg)? {
-            Msg::Reply(r) if r.id == id => Ok(InferOutcome::Ok(r)),
-            Msg::Reply(_) => Err(NetError::Unexpected("reply id does not echo the request")),
+            Msg::Reply(r) if r.id == id && r.trace == trace => Ok(InferOutcome::Ok(r)),
+            Msg::Reply(_) => Err(NetError::Unexpected("reply id/trace does not echo the request")),
             Msg::Busy => Ok(InferOutcome::Busy),
             Msg::Error(e) => Err(NetError::Server(e)),
             _ => Err(NetError::Unexpected("non-reply frame to an inference request")),
@@ -343,6 +363,9 @@ pub struct RetryClient {
     busy_retries: u64,
     fault_retries: u64,
     reconnects: u64,
+    /// Trace id minted for the most recent logical request (0 before the
+    /// first request); every retry attempt of that request carried it.
+    last_trace: u64,
 }
 
 impl RetryClient {
@@ -365,6 +388,7 @@ impl RetryClient {
             busy_retries: 0,
             fault_retries: 0,
             reconnects: 0,
+            last_trace: 0,
         }
     }
 
@@ -394,6 +418,13 @@ impl RetryClient {
     /// Wire faults injected by chaos mode so far (0 outside chaos mode).
     pub fn injected_faults(&self) -> u64 {
         self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Trace id of the most recent logical request (0 before the first).
+    /// Every attempt of that request — across busy retries, reconnects,
+    /// and resends — carried this one id on the wire.
+    pub fn last_trace(&self) -> u64 {
+        self.last_trace
     }
 
     fn ensure_conn(&mut self) -> Result<&mut Client<FaultyStream<TcpStream>>, NetError> {
@@ -428,10 +459,16 @@ impl RetryClient {
     /// the chaos).
     pub fn infer_timed(&mut self, id: u64, image: &[i32]) -> Result<(InferReply, u64), NetError> {
         let t0 = Instant::now();
+        // one trace per *logical* request: every retry attempt below
+        // resends this same id, so the server (and the exported trace)
+        // can correlate resends of one request
+        let trace = obs::next_trace_id();
+        self.last_trace = trace;
+        let _sp = obs::span("retry_infer", "net").arg("trace", trace).arg("id", id);
         self.backoff.reset();
         loop {
             let attempt = Instant::now();
-            match self.ensure_conn().and_then(|c| c.infer(id, image)) {
+            match self.ensure_conn().and_then(|c| c.infer_traced(id, trace, image)) {
                 Ok(InferOutcome::Ok(reply)) => {
                     return Ok((reply, attempt.elapsed().as_micros() as u64))
                 }
@@ -535,6 +572,12 @@ pub struct BenchReport {
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub max_ms: f64,
+    /// Exact nearest-rank latency percentiles in µs over the merged lane
+    /// samples (the ms fields above are these divided by 1e3; kept for
+    /// report-format stability).
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
     /// Worst batch deviation vs the lossless golden observed in replies.
     pub worst_abs_err: i64,
     /// Replies per replica, indexed by replica id. Sized by the highest
@@ -656,6 +699,9 @@ pub fn load_generate(cfg: &BenchConfig) -> Result<BenchReport, NetError> {
         p50_ms: percentile_us(&lat, 0.50) as f64 / 1e3,
         p99_ms: percentile_us(&lat, 0.99) as f64 / 1e3,
         max_ms: lat.last().copied().unwrap_or(0) as f64 / 1e3,
+        p50_us: percentile_us(&lat, 0.50),
+        p99_us: percentile_us(&lat, 0.99),
+        p999_us: percentile_us(&lat, 0.999),
         worst_abs_err,
         per_replica,
         logits,

@@ -9,7 +9,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic  b"NWT0"
-//! 4       1     version (1)
+//! 4       1     version (2)
 //! 5       1     message type (TY_*)
 //! 6       2     reserved (0)
 //! 8       4     payload length, LE u32 (<= MAX_PAYLOAD)
@@ -33,8 +33,11 @@ use std::io::{self, Read, Write};
 
 /// Frame magic: rejects non-protocol peers before the length is trusted.
 pub const MAGIC: [u8; 4] = *b"NWT0";
-/// Protocol version carried in every frame header.
-pub const VERSION: u8 = 1;
+/// Protocol version carried in every frame header. v2 widened `Infer`
+/// and `Reply` with a client-minted trace id and the `Stats` payload with
+/// p999 + an observability metrics block; v1 peers are rejected at the
+/// header (both ends of the wire live in this repo).
+pub const VERSION: u8 = 2;
 /// Fixed frame-header size in bytes.
 pub const HEADER_LEN: usize = 16;
 /// Hard payload ceiling; an oversized header is rejected before any
@@ -43,8 +46,15 @@ pub const HEADER_LEN: usize = 16;
 /// reject).
 pub const MAX_PAYLOAD: usize = 4 << 20;
 /// Largest image an `Infer` frame can carry under [`MAX_PAYLOAD`]
-/// (payload = 8-byte id + 4-byte count + 4 bytes per element).
-pub const MAX_IMAGE_ELEMS: usize = (MAX_PAYLOAD - 12) / 4;
+/// (payload = 8-byte id + 8-byte trace id + 4-byte count + 4 bytes per
+/// element).
+pub const MAX_IMAGE_ELEMS: usize = (MAX_PAYLOAD - 20) / 4;
+
+/// Longest metric name the `Stats` frame will carry (encode truncates,
+/// decode rejects above it — the names are in-crate constants).
+pub const MAX_METRIC_NAME: usize = 64;
+/// Most metric entries one `Stats` frame will carry.
+pub const MAX_METRICS: usize = 256;
 
 /// Message types (header byte 5).
 pub const TY_INFER: u8 = 1;
@@ -107,6 +117,10 @@ impl From<io::Error> for ProtoError {
 #[derive(Clone, Debug, PartialEq)]
 pub struct InferRequest {
     pub id: u64,
+    /// Client-minted trace id (`obs::next_trace_id`), stable across every
+    /// retry of one logical request so attempts correlate across
+    /// reconnects; 0 means untraced. Echoed in the reply.
+    pub trace: u64,
     pub image: Vec<i32>,
 }
 
@@ -115,6 +129,8 @@ pub struct InferRequest {
 pub struct InferReply {
     /// Echo of the request id.
     pub id: u64,
+    /// Echo of the request's trace id.
+    pub trace: u64,
     /// Replica that executed the batch carrying this request.
     pub replica: u32,
     /// Max |served - golden| over the whole batch this request rode in
@@ -147,9 +163,11 @@ pub struct StatsSnapshot {
     pub batch_fill: f64,
     /// Worst per-batch max-abs-error vs the lossless golden install.
     pub worst_abs_err: i64,
-    /// Request latency percentiles (admission -> reply written), µs.
+    /// Request latency percentiles (admission -> reply written), µs —
+    /// exact-bucket values from the server's log-bucket histogram.
     pub p50_us: u64,
     pub p99_us: u64,
+    pub p999_us: u64,
     /// Requests served per replica (round-robin batch affinity).
     pub per_replica: Vec<u64>,
     /// Batches transparently re-run on another replica after a deviation
@@ -163,6 +181,10 @@ pub struct StatsSnapshot {
     /// Per-replica health states (`coordinator::health::HealthState` as
     /// bytes); empty when the engine has no health monitor.
     pub health: Vec<u8>,
+    /// Observability counters (`obs::metrics_snapshot`) riding the stats
+    /// frame: (name, value), name-ordered, at most [`MAX_METRICS`]
+    /// entries of [`MAX_METRIC_NAME`]-byte names.
+    pub metrics: Vec<(String, u64)>,
 }
 
 /// One protocol message. Client-to-server: `Infer`, `StatsReq`,
@@ -207,11 +229,13 @@ pub fn encode_payload(m: &Msg) -> (u8, Vec<u8>) {
     let ty = match m {
         Msg::Infer(r) => {
             p.extend_from_slice(&r.id.to_le_bytes());
+            p.extend_from_slice(&r.trace.to_le_bytes());
             put_i32s(&mut p, &r.image);
             TY_INFER
         }
         Msg::Reply(r) => {
             p.extend_from_slice(&r.id.to_le_bytes());
+            p.extend_from_slice(&r.trace.to_le_bytes());
             p.extend_from_slice(&r.replica.to_le_bytes());
             p.extend_from_slice(&r.max_abs_err.to_le_bytes());
             put_i32s(&mut p, &r.logits);
@@ -237,6 +261,7 @@ pub fn encode_payload(m: &Msg) -> (u8, Vec<u8>) {
             p.extend_from_slice(&s.worst_abs_err.to_le_bytes());
             p.extend_from_slice(&s.p50_us.to_le_bytes());
             p.extend_from_slice(&s.p99_us.to_le_bytes());
+            p.extend_from_slice(&s.p999_us.to_le_bytes());
             p.extend_from_slice(&(s.per_replica.len() as u32).to_le_bytes());
             for r in &s.per_replica {
                 p.extend_from_slice(&r.to_le_bytes());
@@ -246,6 +271,15 @@ pub fn encode_payload(m: &Msg) -> (u8, Vec<u8>) {
             p.push(s.degraded as u8);
             p.extend_from_slice(&(s.health.len() as u32).to_le_bytes());
             p.extend_from_slice(&s.health);
+            let nm = s.metrics.len().min(MAX_METRICS);
+            p.extend_from_slice(&(nm as u32).to_le_bytes());
+            for (name, value) in s.metrics.iter().take(nm) {
+                let bytes = name.as_bytes();
+                let n = bytes.len().min(MAX_METRIC_NAME);
+                p.extend_from_slice(&(n as u16).to_le_bytes());
+                p.extend_from_slice(&bytes[..n]);
+                p.extend_from_slice(&value.to_le_bytes());
+            }
             TY_STATS
         }
         Msg::Shutdown => TY_SHUTDOWN,
@@ -347,16 +381,19 @@ pub fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
     let msg = match ty {
         TY_INFER => {
             let id = c.u64()?;
+            let trace = c.u64()?;
             let image = c.i32s()?;
-            Msg::Infer(InferRequest { id, image })
+            Msg::Infer(InferRequest { id, trace, image })
         }
         TY_REPLY => {
             let id = c.u64()?;
+            let trace = c.u64()?;
             let replica = c.u32()?;
             let max_abs_err = c.i64()?;
             let logits = c.i32s()?;
             Msg::Reply(InferReply {
                 id,
+                trace,
                 replica,
                 max_abs_err,
                 logits,
@@ -379,6 +416,7 @@ pub fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
             let worst_abs_err = c.i64()?;
             let p50_us = c.u64()?;
             let p99_us = c.u64()?;
+            let p999_us = c.u64()?;
             let n = c.u32()? as usize;
             if (payload.len() - c.at) / 8 < n {
                 return Err(ProtoError::Malformed("replica count exceeds payload"));
@@ -391,6 +429,22 @@ pub fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
             // `take` bounds-checks the byte count against the payload, so a
             // lying length cannot size an allocation.
             let health = c.take(nh)?.to_vec();
+            let nm = c.u32()? as usize;
+            // each metric entry is at least 10 bytes (u16 len + u64 value);
+            // a lying count fails here before any allocation is sized
+            if nm > MAX_METRICS || (payload.len() - c.at) / 10 < nm {
+                return Err(ProtoError::Malformed("metrics count exceeds payload"));
+            }
+            let mut metrics = Vec::with_capacity(nm);
+            for _ in 0..nm {
+                let n = c.u16()? as usize;
+                if n > MAX_METRIC_NAME {
+                    return Err(ProtoError::Malformed("metric name too long"));
+                }
+                let name = String::from_utf8_lossy(c.take(n)?).into_owned();
+                let value = c.u64()?;
+                metrics.push((name, value));
+            }
             Msg::Stats(StatsSnapshot {
                 served,
                 busy,
@@ -400,11 +454,13 @@ pub fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
                 worst_abs_err,
                 p50_us,
                 p99_us,
+                p999_us,
                 per_replica,
                 reruns,
                 quarantines,
                 degraded,
                 health,
+                metrics,
             })
         }
         TY_SHUTDOWN => Msg::Shutdown,
@@ -481,17 +537,24 @@ mod tests {
         vec![
             Msg::Infer(InferRequest {
                 id: 7,
+                trace: 0xDEAD_BEEF_0000_0001,
                 image: vec![0, -1, 255, i32::MAX, i32::MIN],
             }),
-            Msg::Infer(InferRequest { id: 0, image: vec![] }),
+            Msg::Infer(InferRequest {
+                id: 0,
+                trace: 0,
+                image: vec![],
+            }),
             Msg::Reply(InferReply {
                 id: 7,
+                trace: 0xDEAD_BEEF_0000_0001,
                 replica: 3,
                 max_abs_err: 12,
                 logits: vec![10, -20, 30],
             }),
             Msg::Reply(InferReply {
                 id: u64::MAX,
+                trace: u64::MAX,
                 replica: 0,
                 max_abs_err: i64::MAX,
                 logits: vec![],
@@ -511,11 +574,16 @@ mod tests {
                 worst_abs_err: 12,
                 p50_us: 1500,
                 p99_us: 9000,
+                p999_us: 21_000,
                 per_replica: vec![33, 31],
                 reruns: 4,
                 quarantines: 1,
                 degraded: true,
                 health: vec![0, 2],
+                metrics: vec![
+                    ("net.dup_trace_dispatch".to_string(), 2),
+                    ("sched.steals".to_string(), 100),
+                ],
             }),
             Msg::Stats(StatsSnapshot::default()),
             Msg::Shutdown,
@@ -538,6 +606,7 @@ mod tests {
     fn corrupted_payload_fails_checksum() {
         let mut f = encode_frame(&Msg::Infer(InferRequest {
             id: 1,
+            trace: 9,
             image: vec![1, 2, 3],
         }));
         let last = f.len() - 1;
@@ -577,7 +646,11 @@ mod tests {
 
     #[test]
     fn trailing_bytes_are_rejected() {
-        let m = Msg::Infer(InferRequest { id: 2, image: vec![5] });
+        let m = Msg::Infer(InferRequest {
+            id: 2,
+            trace: 0,
+            image: vec![5],
+        });
         let (ty, mut payload) = encode_payload(&m);
         payload.push(0xAB);
         assert!(matches!(
@@ -590,6 +663,7 @@ mod tests {
     fn truncated_payload_is_rejected() {
         let (ty, payload) = encode_payload(&Msg::Reply(InferReply {
             id: 3,
+            trace: 4,
             replica: 1,
             max_abs_err: 0,
             logits: vec![1, 2, 3, 4],
@@ -604,10 +678,11 @@ mod tests {
 
     #[test]
     fn lying_element_count_is_rejected_before_allocation() {
-        // a 4-byte payload claiming u32::MAX elements must fail the bounds
+        // a payload claiming u32::MAX elements must fail the bounds
         // check, not try to allocate 16 GiB
         let mut payload = Vec::new();
-        payload.extend_from_slice(&77u64.to_le_bytes());
+        payload.extend_from_slice(&77u64.to_le_bytes()); // id
+        payload.extend_from_slice(&1u64.to_le_bytes()); // trace
         payload.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(matches!(
             decode_payload(TY_INFER, &payload),
@@ -618,10 +693,31 @@ mod tests {
     #[test]
     fn lying_health_byte_count_is_rejected() {
         let (ty, mut payload) = encode_payload(&Msg::Stats(StatsSnapshot::default()));
-        // the trailing u32 is the (empty) health length; inflate it without
-        // supplying the bytes
+        // for a default snapshot the payload ends with the (empty) health
+        // length u32 followed by the (empty) metrics count u32; inflate the
+        // health length without supplying the bytes
+        let at = payload.len() - 8;
+        payload[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_payload(ty, &payload),
+            Err(ProtoError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn lying_metrics_count_is_rejected() {
+        let (ty, mut payload) = encode_payload(&Msg::Stats(StatsSnapshot::default()));
+        // the trailing u32 is the (empty) metrics count
         let at = payload.len() - 4;
         payload[at..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_payload(ty, &payload),
+            Err(ProtoError::Malformed(_))
+        ));
+        // a plausible count with no entry bytes behind it must also fail
+        let (ty, mut payload) = encode_payload(&Msg::Stats(StatsSnapshot::default()));
+        let at = payload.len() - 4;
+        payload[at..].copy_from_slice(&3u32.to_le_bytes());
         assert!(matches!(
             decode_payload(ty, &payload),
             Err(ProtoError::Malformed(_))
@@ -633,7 +729,11 @@ mod tests {
         let frame = encode_frame(&Msg::Shutdown);
         let mut cur = std::io::Cursor::new(&frame[..HEADER_LEN - 3]);
         assert!(matches!(read_msg(&mut cur), Err(ProtoError::Io(_))));
-        let long = encode_frame(&Msg::Infer(InferRequest { id: 1, image: vec![9; 16] }));
+        let long = encode_frame(&Msg::Infer(InferRequest {
+            id: 1,
+            trace: 0,
+            image: vec![9; 16],
+        }));
         let mut cur = std::io::Cursor::new(&long[..HEADER_LEN + 5]);
         assert!(matches!(read_msg(&mut cur), Err(ProtoError::Io(_))));
     }

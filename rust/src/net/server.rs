@@ -25,12 +25,12 @@
 //! framed stream cannot be resynced past a bad frame); the server itself
 //! keeps serving, and abrupt client disconnects are routine, not errors.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{self, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -39,8 +39,8 @@ use crate::coordinator::Batch;
 use crate::net::proto::{
     self, InferReply, InferRequest, Msg, ProtoError, StatsSnapshot, WireError,
 };
-use crate::net::{percentile_us, Engine};
-use crate::util::Rng;
+use crate::net::Engine;
+use crate::obs::{self, Counter, Histogram};
 
 /// Every wall-clock knob the server's IO path uses, in one place.
 ///
@@ -118,12 +118,6 @@ struct Queue {
     routes: HashMap<u64, Sender<RouteReply>>,
 }
 
-/// Latency samples kept for percentile estimation. Below this count the
-/// percentiles are exact; past it, a uniform reservoir (Algorithm R) over
-/// the whole request stream keeps memory and snapshot cost bounded for a
-/// long-lived endpoint.
-const LATENCY_RESERVOIR: usize = 8192;
-
 struct StatsInner {
     served: u64,
     busy: u64,
@@ -131,13 +125,7 @@ struct StatsInner {
     batches: u64,
     fill_sum: f64,
     worst_abs_err: i64,
-    latencies_us: Vec<u64>,
-    /// Total latency samples observed (>= latencies_us.len()).
-    latency_count: u64,
     per_replica: Vec<u64>,
-    /// Drives the reservoir replacement choice only — no numerics ride on
-    /// it, so a fixed seed keeps the server deterministic to construct.
-    rng: Rng,
 }
 
 impl StatsInner {
@@ -149,25 +137,58 @@ impl StatsInner {
             batches: 0,
             fill_sum: 0.0,
             worst_abs_err: 0,
-            latencies_us: Vec::new(),
-            latency_count: 0,
             per_replica: vec![0; n_replicas],
-            rng: Rng::new(0x6e65_7473),
-        }
-    }
-
-    fn record_latency(&mut self, us: u64) {
-        self.latency_count += 1;
-        if self.latencies_us.len() < LATENCY_RESERVOIR {
-            self.latencies_us.push(us);
-        } else {
-            let j = self.rng.below(self.latency_count) as usize;
-            if j < LATENCY_RESERVOIR {
-                self.latencies_us[j] = us;
-            }
         }
     }
 }
+
+/// Recently-dispatched client trace ids, bounded FIFO. A `RetryClient`
+/// resend after a lost reply re-dispatches the same trace id on a fresh
+/// connection; this window makes that duplicate-dispatch path observable
+/// (counter + instant event) without unbounded memory.
+struct TraceDedup {
+    order: VecDeque<u64>,
+    seen: HashSet<u64>,
+}
+
+/// Resends arrive within a retry deadline of the original, so a small
+/// window of recent dispatches is enough to catch them.
+const TRACE_DEDUP_WINDOW: usize = 1024;
+
+impl TraceDedup {
+    fn new() -> Self {
+        TraceDedup {
+            order: VecDeque::with_capacity(TRACE_DEDUP_WINDOW),
+            seen: HashSet::with_capacity(TRACE_DEDUP_WINDOW),
+        }
+    }
+
+    /// Record a dispatch; true if `trace` was already dispatched recently.
+    fn check_insert(&mut self, trace: u64) -> bool {
+        if trace == 0 {
+            return false; // untraced request
+        }
+        if !self.seen.insert(trace) {
+            return true;
+        }
+        self.order.push_back(trace);
+        if self.order.len() > TRACE_DEDUP_WINDOW {
+            if let Some(old) = self.order.pop_front() {
+                self.seen.remove(&old);
+            }
+        }
+        false
+    }
+}
+
+/// Instrumentation-site counter cache: registry lookup once, relaxed
+/// atomic add afterwards.
+fn site_counter(name: &'static str, slot: &'static OnceLock<Arc<Counter>>) -> &'static Counter {
+    slot.get_or_init(|| obs::counter(name))
+}
+
+static DUP_TRACE: OnceLock<Arc<Counter>> = OnceLock::new();
+static REQS: OnceLock<Arc<Counter>> = OnceLock::new();
 
 struct Shared {
     engine: Arc<dyn Engine>,
@@ -181,6 +202,13 @@ struct Shared {
     queue: Mutex<Queue>,
     work_cv: Condvar,
     stats: Mutex<StatsInner>,
+    /// Request latency (admission -> reply written), µs. A log-bucket
+    /// histogram outside the stats mutex: recording is two relaxed atomic
+    /// adds on the reply path, and exact-bucket p50/p99/p999 replace the
+    /// reservoir sampler whose tail quantiles were sampling-noisy at high
+    /// request counts.
+    latency: Histogram,
+    traces: Mutex<TraceDedup>,
 }
 
 /// A running TCP serving endpoint.
@@ -212,6 +240,8 @@ impl NetServer {
             }),
             work_cv: Condvar::new(),
             stats: Mutex::new(StatsInner::new(engine.n_replicas())),
+            latency: Histogram::new(),
+            traces: Mutex::new(TraceDedup::new()),
             engine,
         });
         let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
@@ -304,9 +334,9 @@ fn wake_accept(shared: &Shared) {
 
 fn snapshot(shared: &Shared) -> StatsSnapshot {
     let health = shared.engine.health();
+    let lat = shared.latency.snapshot();
+    let metrics = obs::metrics_snapshot().counters;
     let s = shared.stats.lock().unwrap();
-    let mut lat = s.latencies_us.clone();
-    lat.sort_unstable();
     StatsSnapshot {
         served: s.served,
         busy: s.busy,
@@ -318,13 +348,15 @@ fn snapshot(shared: &Shared) -> StatsSnapshot {
             0.0
         },
         worst_abs_err: s.worst_abs_err,
-        p50_us: percentile_us(&lat, 0.50),
-        p99_us: percentile_us(&lat, 0.99),
+        p50_us: lat.percentile(0.50),
+        p99_us: lat.percentile(0.99),
+        p999_us: lat.percentile(0.999),
         per_replica: s.per_replica.clone(),
         reruns: health.as_ref().map_or(0, |h| h.reruns),
         quarantines: health.as_ref().map_or(0, |h| h.quarantines),
         degraded: health.as_ref().is_some_and(|h| h.degraded),
         health: health.map_or_else(Vec::new, |h| h.states),
+        metrics,
     }
 }
 
@@ -392,6 +424,10 @@ fn next_batch(shared: &Shared) -> Option<Batch> {
 fn dispatch_loop(shared: &Arc<Shared>) {
     let mut batch_index = 0usize;
     while let Some(b) = next_batch(shared) {
+        let _sp = obs::span("dispatch", "net")
+            .arg("batch", batch_index as u64)
+            .arg("n_real", b.n_real as u64)
+            .arg("trace0", b.traces.first().copied().unwrap_or(0));
         let out = shared.engine.run(batch_index, &b);
         batch_index += 1;
         debug_assert_eq!(out.logits.len(), b.n_real, "engine row count");
@@ -423,6 +459,7 @@ fn dispatch_loop(shared: &Arc<Shared>) {
 // ---- per-connection handling ---------------------------------------------
 
 fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream) {
+    let _conn_sp = obs::span_verbose("conn", "net");
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(shared.timeouts.read_tick));
     let _ = stream.set_write_timeout(Some(shared.timeouts.write_timeout));
@@ -512,6 +549,7 @@ fn read_msg_idle(stream: &mut TcpStream, shared: &Shared) -> Result<Option<Msg>,
     if got != sum {
         return Err(ProtoError::Checksum { want: sum, got });
     }
+    let _sp = obs::span_verbose("decode", "net").arg("len", payload.len() as u64);
     proto::decode_payload(ty, &payload).map(Some)
 }
 
@@ -564,6 +602,10 @@ fn try_admit(shared: &Shared) -> bool {
 }
 
 fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) -> bool {
+    let _sp = obs::span("request", "net")
+        .arg("trace", req.trace)
+        .arg("id", req.id);
+    site_counter("net.requests", &REQS).inc();
     let want = shared.engine.image_elems();
     if req.image.len() != want {
         return proto::write_msg(
@@ -603,9 +645,17 @@ fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) 
         q.routes.insert(sid, tx);
         q.batcher.push(PendingRequest {
             id: sid,
+            trace: req.trace,
             image: req.image,
             enqueued: Instant::now(),
         });
+    }
+    // the request is now committed to dispatch: surface a resent trace id
+    // (RetryClient reconnect after a lost reply) as the duplicate-dispatch
+    // path — the answer is idempotent, so it is served, not refused
+    if shared.traces.lock().unwrap().check_insert(req.trace) {
+        site_counter("net.dup_trace_dispatch", &DUP_TRACE).inc();
+        obs::event("dup_trace_dispatch", "net", &[("trace", req.trace), ("id", req.id)]);
     }
     shared.work_cv.notify_one();
 
@@ -613,18 +663,21 @@ fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) 
     shared.inflight.fetch_sub(1, Ordering::AcqRel);
     match reply {
         Ok((replica, max_abs_err, logits)) => {
-            let ok = proto::write_msg(
-                stream,
-                &Msg::Reply(InferReply {
-                    id: req.id,
-                    replica,
-                    max_abs_err,
-                    logits,
-                }),
-            )
-            .is_ok();
-            let us = t0.elapsed().as_micros() as u64;
-            shared.stats.lock().unwrap().record_latency(us);
+            let ok = {
+                let _enc = obs::span_verbose("encode", "net").arg("trace", req.trace);
+                proto::write_msg(
+                    stream,
+                    &Msg::Reply(InferReply {
+                        id: req.id,
+                        trace: req.trace,
+                        replica,
+                        max_abs_err,
+                        logits,
+                    }),
+                )
+                .is_ok()
+            };
+            shared.latency.record(t0.elapsed().as_micros() as u64);
             ok
         }
         // dispatcher gone without replying: only possible if it panicked

@@ -1,0 +1,351 @@
+//! Named counters and fixed log-bucket histograms (std-only).
+//!
+//! The histogram is the HdrHistogram idea at its cheapest useful setting:
+//! values bucket by their power-of-two magnitude with four linear
+//! sub-buckets per octave (two significant bits), so any recorded value is
+//! reported within 25% of its true magnitude and the whole structure is a
+//! fixed 252-slot array of relaxed atomics — `record` is two atomic adds,
+//! writers are never stopped, and a snapshot is a plain load sweep.
+//! Percentiles are *exact-bucket*: the reported value is the inclusive
+//! upper edge of the bucket holding the requested rank (conservative for
+//! latency), unlike the reservoir sampler this replaces whose tail
+//! quantiles were sampling-noisy at high request counts.
+//!
+//! Counters and histograms live in a process-global [`Registry`] keyed by
+//! `&'static str`; instrumentation sites cache the returned `Arc` in a
+//! `OnceLock` so the steady-state cost is one relaxed atomic add with no
+//! registry lock. Standalone instances (no registry) back per-server
+//! state like the net server's latency histogram.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonic named counter: one relaxed `fetch_add` per event.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter::default()
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket count: 4 exact buckets for values 0..=3, then 4 linear
+/// sub-buckets per power-of-two octave for bit positions 2..=63.
+pub const N_BUCKETS: usize = 4 + 62 * 4;
+
+/// Bucket index for a value: exact below 4, otherwise the octave (msb
+/// position) plus the next two significant bits.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < 4 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize; // >= 2
+    let sub = ((v >> (msb - 2)) & 0b11) as usize;
+    4 + (msb - 2) * 4 + sub
+}
+
+/// Inclusive upper edge of bucket `i` — the value percentiles report.
+pub fn bucket_upper(i: usize) -> u64 {
+    assert!(i < N_BUCKETS);
+    if i < 4 {
+        return i as u64;
+    }
+    let msb = (i - 4) / 4 + 2;
+    let sub = ((i - 4) % 4) as u64;
+    let width = 1u64 << (msb - 2);
+    let lo = (1u64 << msb) + sub * width;
+    lo.saturating_add(width - 1)
+}
+
+/// Fixed log-bucket histogram; see the module docs for the layout.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>, // N_BUCKETS slots
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Consistent point-in-time copy without stopping writers: the count is
+    /// recomputed from the loaded buckets, so percentile ranks always agree
+    /// with the bucket contents even if a record lands mid-sweep.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let count = buckets.iter().sum();
+        HistogramSnapshot {
+            buckets,
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Shorthand: percentile of a fresh snapshot.
+    pub fn percentile(&self, q: f64) -> u64 {
+        self.snapshot().percentile(q)
+    }
+}
+
+/// Loaded bucket counts; all derived stats come from here.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// Exact-bucket percentile: upper edge of the bucket holding rank
+    /// `ceil(q * count)` (nearest-rank). Empty histograms report 0.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(N_BUCKETS - 1)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// Point-in-time copy of every registered metric.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+/// Name → metric map. `counter`/`histogram` lock only on first lookup per
+/// site (sites cache the `Arc` in a `OnceLock`); the metrics themselves
+/// are lock-free to update.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<&'static str, Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<&'static str, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &'static str) -> Arc<Counter> {
+        Arc::clone(
+            self.counters
+                .lock()
+                .unwrap()
+                .entry(name)
+                .or_insert_with(|| Arc::new(Counter::new())),
+        )
+    }
+
+    pub fn histogram(&self, name: &'static str) -> Arc<Histogram> {
+        Arc::clone(
+            self.histograms
+                .lock()
+                .unwrap()
+                .entry(name)
+                .or_insert_with(|| Arc::new(Histogram::new())),
+        )
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, c)| (n.to_string(), c.get()))
+            .collect();
+        let histograms = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, h)| (n.to_string(), h.snapshot()))
+            .collect();
+        MetricsSnapshot {
+            counters,
+            histograms,
+        }
+    }
+}
+
+fn global() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// Process-global counter by name (BTreeMap-ordered in snapshots).
+pub fn counter(name: &'static str) -> Arc<Counter> {
+    global().counter(name)
+}
+
+/// Process-global histogram by name.
+pub fn histogram(name: &'static str) -> Arc<Histogram> {
+    global().histogram(name)
+}
+
+/// Snapshot of the process-global registry.
+pub fn metrics_snapshot() -> MetricsSnapshot {
+    global().snapshot()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        assert_eq!(c.get(), 0);
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+    }
+
+    #[test]
+    fn bucket_layout_is_monotonic_and_total() {
+        // every value maps to exactly one bucket whose range contains it,
+        // and bucket edges are strictly increasing
+        let mut prev_upper = None;
+        for i in 0..N_BUCKETS {
+            let up = bucket_upper(i);
+            if let Some(p) = prev_upper {
+                assert!(up > p, "bucket {i} upper {up} <= previous {p}");
+            }
+            prev_upper = Some(up);
+        }
+        for v in [0u64, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 100, 999, 1 << 20, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(v <= bucket_upper(i), "v={v} above its bucket {i}");
+            if i > 0 {
+                assert!(v > bucket_upper(i - 1), "v={v} below bucket {i}");
+            }
+        }
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(bucket_upper(N_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn empty_histogram_percentiles_are_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.50), 0);
+        assert_eq!(h.percentile(0.999), 0);
+        assert_eq!(h.snapshot().mean(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_owns_every_percentile() {
+        let h = Histogram::new();
+        h.record(100);
+        let want = bucket_upper(bucket_index(100));
+        for q in [0.0, 0.5, 0.99, 0.999, 1.0] {
+            assert_eq!(h.percentile(q), want, "q={q}");
+        }
+        // exact-bucket contract: within 25% above the true value
+        assert!(want >= 100 && want <= 125);
+    }
+
+    #[test]
+    fn top_bucket_saturates_not_overflows() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX - 1);
+        assert_eq!(h.percentile(1.0), u64::MAX);
+        assert_eq!(h.snapshot().count, 2);
+    }
+
+    #[test]
+    fn percentiles_split_a_bimodal_load() {
+        let h = Histogram::new();
+        for _ in 0..99 {
+            h.record(10);
+        }
+        h.record(10_000);
+        let p50 = h.percentile(0.50);
+        let p99 = h.percentile(0.99);
+        let p999 = h.percentile(0.999);
+        assert!(p50 >= 10 && p50 < 13, "p50={p50}");
+        assert!(p99 < 13, "p99={p99} (99 of 100 samples are 10)");
+        assert!(p999 >= 10_000, "p999={p999} must see the outlier");
+        assert!(p50 <= p99 && p99 <= p999);
+    }
+
+    #[test]
+    fn low_values_are_exact() {
+        let h = Histogram::new();
+        for v in [0, 1, 2, 3] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.25), 0);
+        assert_eq!(h.percentile(1.0), 3);
+    }
+
+    #[test]
+    fn registry_interns_by_name() {
+        let r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.inc();
+        assert_eq!(b.get(), 1);
+        r.histogram("h").record(7);
+        let snap = r.snapshot();
+        assert_eq!(snap.counters, vec![("x".to_string(), 1)]);
+        assert_eq!(snap.histograms.len(), 1);
+        assert_eq!(snap.histograms[0].1.count, 1);
+    }
+}

@@ -1,0 +1,35 @@
+//! Observability: spans over the serving hot path, named counters,
+//! log-bucket latency histograms, and a Chrome-trace exporter — std-only.
+//!
+//! Newton's argument is an accounting argument (energy and ADC pressure
+//! attributed per sub-computation, PAPER.md §IV), so the runtime needs the
+//! same attribution at serve time: which stage, which replica, which
+//! request. This module is that substrate; every layer above the engine
+//! threads through it (see ARCHITECTURE.md §Observability for the span
+//! taxonomy and the overhead discipline).
+//!
+//! Two halves:
+//!
+//! * [`span`] — RAII spans with monotonic µs timestamps and per-thread
+//!   buffers draining into a bounded drop-oldest [`TraceSink`];
+//!   `TraceSink::export_chrome_trace` writes chrome://tracing /
+//!   Perfetto-loadable JSON. Gated by a process-global [`TraceLevel`]
+//!   (CLI: `--trace-level off|spans|verbose`, `--trace-out PATH`); when
+//!   off a span site costs one relaxed atomic load.
+//! * [`metrics`] — named [`Counter`]s and fixed log-bucket [`Histogram`]s
+//!   (exact-bucket p50/p99/p999, replacing the net server's reservoir
+//!   sampler) in a process-global registry snapshotted without stopping
+//!   writers; snapshots ride the net `Stats` frame into
+//!   `print_net_stats`, `net_summary.csv`, and `BENCH_net.json`.
+
+pub mod metrics;
+pub mod span;
+
+pub use metrics::{
+    counter, histogram, metrics_snapshot, Counter, Histogram, HistogramSnapshot, MetricsSnapshot,
+    Registry,
+};
+pub use span::{
+    event, export_global_chrome_trace, flush_thread, global_sink, next_trace_id, set_trace_level,
+    span, span_verbose, spans_on, trace_level, verbose_on, Span, TraceEvent, TraceLevel, TraceSink,
+};

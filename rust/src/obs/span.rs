@@ -1,0 +1,512 @@
+//! RAII spans, instant events, the bounded global trace sink, and the
+//! Chrome-trace exporter.
+//!
+//! Overhead discipline (the reason this file exists at all, given the
+//! paper's argument is an accounting argument):
+//!
+//! * **Disabled** (`TraceLevel::Off`, the default): creating a span is one
+//!   relaxed atomic load; drop is one branch. No timestamps, no
+//!   allocation, no thread-local touch — the hot paths stay bit-identical
+//!   and effectively free (property-pinned in `tests/properties.rs`).
+//! * **Enabled**: a span costs two `Instant::now` calls (start/drop) plus
+//!   a push into a per-thread buffer — the `sched::in_worker` trick
+//!   applied to tracing: no lock on the hot path. Buffers drain into the
+//!   global [`TraceSink`] every [`FLUSH_AT`] events and on thread exit.
+//! * **Bounded**: the sink is a drop-oldest ring with a dropped-events
+//!   counter, so tracing can never OOM or convoy the serve path; a full
+//!   sink costs the same as an empty one.
+//!
+//! Timestamps are monotonic microseconds since a process-global epoch
+//! (first obs touch), which is exactly what the Chrome trace format wants.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// How much the runtime records; see `--trace-level` on the CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// No spans or events (counters/histograms still update).
+    Off = 0,
+    /// Request / batch / stage / pipeline-cell spans and health events.
+    Spans = 1,
+    /// Additionally the per-frame decode/encode sub-spans.
+    Verbose = 2,
+}
+
+impl TraceLevel {
+    pub fn parse(s: &str) -> Option<TraceLevel> {
+        match s {
+            "off" => Some(TraceLevel::Off),
+            "spans" => Some(TraceLevel::Spans),
+            "verbose" => Some(TraceLevel::Verbose),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(TraceLevel::Off as u8);
+
+pub fn set_trace_level(l: TraceLevel) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn trace_level() -> TraceLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => TraceLevel::Off,
+        1 => TraceLevel::Spans,
+        _ => TraceLevel::Verbose,
+    }
+}
+
+/// One relaxed load — the disabled-path cost of every span site.
+#[inline]
+pub fn spans_on() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= TraceLevel::Spans as u8
+}
+
+#[inline]
+pub fn verbose_on() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= TraceLevel::Verbose as u8
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    Instant::now().saturating_duration_since(epoch()).as_micros() as u64
+}
+
+/// Small dense per-thread ordinal (Chrome `tid`), assigned on first span.
+fn thread_ord() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static ORD: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    ORD.with(|o| *o)
+}
+
+/// Client-side trace-ID mint: unique within a process run and very
+/// unlikely to collide across client processes (pid in the high half).
+/// 0 is reserved for "no trace".
+pub fn next_trace_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    ((std::process::id() as u64) << 32) | (NEXT.fetch_add(1, Ordering::Relaxed) & 0xFFFF_FFFF)
+}
+
+/// One recorded span (`ph == b'X'`) or instant event (`ph == b'i'`).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub ph: u8,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub tid: u64,
+    pub args: Vec<(&'static str, u64)>,
+}
+
+impl TraceEvent {
+    /// Named argument lookup (tests and exporter assertions).
+    pub fn arg(&self, key: &str) -> Option<u64> {
+        self.args.iter().find(|(k, _)| *k == key).map(|(_, v)| *v)
+    }
+}
+
+/// Bounded drop-oldest event ring. The global sink behind all spans is
+/// one of these ([`global_sink`]); tests build private ones.
+#[derive(Debug)]
+pub struct TraceSink {
+    inner: Mutex<VecDeque<TraceEvent>>,
+    capacity: usize,
+    dropped: AtomicU64,
+}
+
+/// Global sink capacity: at ~100 bytes/event this bounds trace memory to
+/// a few MiB regardless of how long a server runs.
+pub const GLOBAL_SINK_CAPACITY: usize = 1 << 16;
+
+impl TraceSink {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        TraceSink {
+            inner: Mutex::new(VecDeque::with_capacity(capacity.min(1024))),
+            capacity,
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Append events, evicting the oldest past capacity (counted, never
+    /// blocking on memory).
+    pub fn push_all<I: IntoIterator<Item = TraceEvent>>(&self, events: I) {
+        let mut q = self.inner.lock().unwrap();
+        for ev in events {
+            if q.len() >= self.capacity {
+                q.pop_front();
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            q.push_back(ev);
+        }
+    }
+
+    pub fn push(&self, ev: TraceEvent) {
+        self.push_all(std::iter::once(ev));
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted to keep the ring bounded.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Copy of the current contents, oldest first.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.inner.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Empty the ring and zero the dropped counter (tests, run restarts).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().clear();
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// Write the sink as Chrome-trace JSON (object form), loadable by
+    /// chrome://tracing and Perfetto: `ph:"X"` complete events with µs
+    /// timestamps, span args verbatim, plus the dropped-event count under
+    /// `otherData`.
+    pub fn export_chrome_trace(&self, path: &Path) -> std::io::Result<()> {
+        let events = self.snapshot();
+        let mut out = String::with_capacity(events.len() * 96 + 128);
+        out.push_str("{\"traceEvents\":[\n");
+        for (i, ev) in events.iter().enumerate() {
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{}\",\"pid\":1,\"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{",
+                esc(ev.name),
+                esc(ev.cat),
+                ev.ph as char,
+                ev.tid,
+                ev.ts_us,
+                ev.dur_us,
+            ));
+            for (j, (k, v)) in ev.args.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("\"{}\":{}", esc(k), v));
+            }
+            out.push_str("}}");
+            if i + 1 < events.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"dropped_events\":{}}}}}\n",
+            self.dropped()
+        ));
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(out.as_bytes())
+    }
+}
+
+fn esc(s: &str) -> String {
+    // span/cat names are in-crate static strings, but stay safe anyway
+    s.chars()
+        .flat_map(|c| match c {
+            '"' | '\\' => vec!['\\', c],
+            c if (c as u32) < 0x20 => vec![' '],
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// The process-global sink every span records into.
+pub fn global_sink() -> &'static TraceSink {
+    static SINK: OnceLock<TraceSink> = OnceLock::new();
+    SINK.get_or_init(|| TraceSink::new(GLOBAL_SINK_CAPACITY))
+}
+
+/// Thread-local buffer size before draining into the global sink.
+pub const FLUSH_AT: usize = 64;
+
+struct ThreadBuf {
+    events: Vec<TraceEvent>,
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        if !self.events.is_empty() {
+            global_sink().push_all(self.events.drain(..));
+        }
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<ThreadBuf> = RefCell::new(ThreadBuf { events: Vec::new() });
+}
+
+fn record(ev: TraceEvent) {
+    let full = BUF
+        .try_with(|b| {
+            let mut b = b.borrow_mut();
+            b.events.push(ev);
+            b.events.len() >= FLUSH_AT
+        })
+        .unwrap_or(false);
+    if full {
+        flush_thread();
+    }
+}
+
+/// Drain the calling thread's span buffer into the global sink. Worker
+/// and handler threads flush automatically on exit (thread-local drop);
+/// long-lived threads (main) call this before exporting.
+pub fn flush_thread() {
+    let _ = BUF.try_with(|b| {
+        let mut b = b.borrow_mut();
+        if !b.events.is_empty() {
+            global_sink().push_all(b.events.drain(..));
+        }
+    });
+}
+
+/// Flush the calling thread, then export the global sink; the shape every
+/// `--trace-out` CLI path uses.
+pub fn export_global_chrome_trace(path: &Path) -> std::io::Result<()> {
+    flush_thread();
+    global_sink().export_chrome_trace(path)
+}
+
+/// RAII span. Inactive spans (tracing off, or level below the span's
+/// gate) skip timestamps, args, and recording entirely.
+#[must_use = "a span measures the scope it is bound to; bind it with `let _sp = ...`"]
+pub struct Span {
+    start: Option<Instant>,
+    name: &'static str,
+    cat: &'static str,
+    args: Vec<(&'static str, u64)>,
+}
+
+/// Open a span recorded at `TraceLevel::Spans` and above.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    Span {
+        start: if spans_on() {
+            epoch(); // pin the epoch before the first timestamp
+            Some(Instant::now())
+        } else {
+            None
+        },
+        name,
+        cat,
+        args: Vec::new(),
+    }
+}
+
+/// Open a span recorded only at `TraceLevel::Verbose`.
+#[inline]
+pub fn span_verbose(name: &'static str, cat: &'static str) -> Span {
+    Span {
+        start: if verbose_on() {
+            epoch();
+            Some(Instant::now())
+        } else {
+            None
+        },
+        name,
+        cat,
+        args: Vec::new(),
+    }
+}
+
+impl Span {
+    /// Attach a key/value argument (no-op on inactive spans).
+    #[inline]
+    pub fn arg(mut self, key: &'static str, value: u64) -> Span {
+        if self.start.is_some() {
+            self.args.push((key, value));
+        }
+        self
+    }
+
+    pub fn active(&self) -> bool {
+        self.start.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let dur_us = start.elapsed().as_micros() as u64;
+        let ts_us = start.saturating_duration_since(epoch()).as_micros() as u64;
+        record(TraceEvent {
+            name: self.name,
+            cat: self.cat,
+            ph: b'X',
+            ts_us,
+            dur_us,
+            tid: thread_ord(),
+            args: std::mem::take(&mut self.args),
+        });
+    }
+}
+
+/// Record an instant event (health transitions, duplicate dispatches).
+pub fn event(name: &'static str, cat: &'static str, args: &[(&'static str, u64)]) {
+    if !spans_on() {
+        return;
+    }
+    record(TraceEvent {
+        name,
+        cat,
+        ph: b'i',
+        ts_us: now_us(),
+        dur_us: 0,
+        tid: thread_ord(),
+        args: args.to_vec(),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // tests below mutate the process-global trace level; serialise them
+    static LEVEL_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn trace_level_parses() {
+        assert_eq!(TraceLevel::parse("off"), Some(TraceLevel::Off));
+        assert_eq!(TraceLevel::parse("spans"), Some(TraceLevel::Spans));
+        assert_eq!(TraceLevel::parse("verbose"), Some(TraceLevel::Verbose));
+        assert_eq!(TraceLevel::parse("loud"), None);
+        assert!(TraceLevel::Off < TraceLevel::Spans);
+        assert!(TraceLevel::Spans < TraceLevel::Verbose);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let sink = TraceSink::new(3);
+        let ev = |ts| TraceEvent {
+            name: "e",
+            cat: "t",
+            ph: b'X',
+            ts_us: ts,
+            dur_us: 1,
+            tid: 0,
+            args: Vec::new(),
+        };
+        sink.push_all((0..5).map(ev));
+        assert_eq!(sink.len(), 3);
+        assert_eq!(sink.dropped(), 2);
+        let got: Vec<u64> = sink.snapshot().iter().map(|e| e.ts_us).collect();
+        assert_eq!(got, vec![2, 3, 4], "oldest events must go first");
+        sink.clear();
+        assert!(sink.is_empty());
+        assert_eq!(sink.dropped(), 0);
+    }
+
+    #[test]
+    fn chrome_export_is_wellformed() {
+        let sink = TraceSink::new(8);
+        sink.push(TraceEvent {
+            name: "cell",
+            cat: "pipeline",
+            ph: b'X',
+            ts_us: 10,
+            dur_us: 5,
+            tid: 2,
+            args: vec![("k", 1), ("s", 2), ("replica", 0)],
+        });
+        sink.push(TraceEvent {
+            name: "quarantine",
+            cat: "health",
+            ph: b'i',
+            ts_us: 20,
+            dur_us: 0,
+            tid: 2,
+            args: vec![("replica", 1)],
+        });
+        let dir = std::env::temp_dir().join(format!("obs_export_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        sink.export_chrome_trace(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(text.starts_with("{\"traceEvents\":["));
+        assert!(text.contains("\"name\":\"cell\""));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"ph\":\"i\""));
+        assert!(text.contains("\"k\":1,\"s\":2,\"replica\":0"));
+        assert!(text.contains("\"dropped_events\":0"));
+        // crude structural balance check in lieu of a JSON parser
+        assert_eq!(
+            text.matches('{').count(),
+            text.matches('}').count(),
+            "unbalanced braces"
+        );
+        assert_eq!(text.matches('[').count(), text.matches(']').count());
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = LEVEL_LOCK.lock().unwrap();
+        set_trace_level(TraceLevel::Off);
+        let before = global_sink().len();
+        for _ in 0..8 {
+            let _sp = span("obs_test_disabled", "test").arg("x", 1);
+        }
+        flush_thread();
+        let polluting: Vec<TraceEvent> = global_sink()
+            .snapshot()
+            .into_iter()
+            .filter(|e| e.name == "obs_test_disabled")
+            .collect();
+        assert!(polluting.is_empty(), "disabled span recorded: {polluting:?}");
+        let _ = before;
+    }
+
+    #[test]
+    fn enabled_spans_reach_the_global_sink_with_args() {
+        let _g = LEVEL_LOCK.lock().unwrap();
+        set_trace_level(TraceLevel::Spans);
+        {
+            let _sp = span("obs_test_enabled", "test").arg("k", 7);
+            let _v = span_verbose("obs_test_verbose_gated", "test");
+        }
+        set_trace_level(TraceLevel::Off);
+        flush_thread();
+        let snap = global_sink().snapshot();
+        let mine: Vec<&TraceEvent> =
+            snap.iter().filter(|e| e.name == "obs_test_enabled").collect();
+        assert_eq!(mine.len(), 1);
+        assert_eq!(mine[0].arg("k"), Some(7));
+        assert_eq!(mine[0].ph, b'X');
+        assert!(
+            !snap.iter().any(|e| e.name == "obs_test_verbose_gated"),
+            "verbose span leaked at Spans level"
+        );
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+        assert_eq!(a >> 32, (std::process::id() as u64));
+    }
+}

@@ -35,9 +35,18 @@
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::obs;
 use crate::util::worker_count;
+
+/// Global sched counters, flushed once per `map_stats` run from its local
+/// tallies (never per job — the hot path stays untouched). Sites cache the
+/// registry `Arc` so only the first run per process takes the registry
+/// lock.
+static JOBS_CTR: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+static STEALS_CTR: OnceLock<Arc<obs::Counter>> = OnceLock::new();
+static INJECTOR_CTR: OnceLock<Arc<obs::Counter>> = OnceLock::new();
 
 thread_local! {
     /// Set for the lifetime of a pool worker thread (never cleared: worker
@@ -53,6 +62,15 @@ thread_local! {
 /// workers are fresh threads with their own flag.
 pub fn in_worker() -> bool {
     IN_WORKER.with(|f| f.get())
+}
+
+fn flush_sched_metrics(jobs: usize, steals: usize) {
+    JOBS_CTR.get_or_init(|| obs::counter("sched.jobs")).add(jobs as u64);
+    if steals > 0 {
+        STEALS_CTR
+            .get_or_init(|| obs::counter("sched.steals"))
+            .add(steals as u64);
+    }
 }
 
 /// A mutex-protected job deque. The owning worker pops from the front
@@ -186,6 +204,7 @@ impl Executor {
         let workers = self.workers.min(n_jobs.max(1));
         if workers <= 1 {
             let out: Vec<T> = (0..n_jobs).map(&job).collect();
+            flush_sched_metrics(n_jobs, 0);
             return (
                 out,
                 SchedStats {
@@ -206,6 +225,12 @@ impl Executor {
             d.seed(w * base..(w + 1) * base);
         }
         injector.seed(workers * base..n_jobs);
+        let tail = n_jobs - workers * base;
+        if tail > 0 {
+            INJECTOR_CTR
+                .get_or_init(|| obs::counter("sched.injector_jobs"))
+                .add(tail as u64);
+        }
 
         let steals = AtomicUsize::new(0);
         let pending = AtomicUsize::new(n_jobs);
@@ -302,12 +327,14 @@ impl Executor {
             .into_iter()
             .map(|s| s.expect("sched job completed"))
             .collect();
+        let stolen = steals.load(Ordering::Relaxed);
+        flush_sched_metrics(n_jobs, stolen);
         (
             out,
             SchedStats {
                 workers,
                 jobs: n_jobs,
-                steals: steals.load(Ordering::Relaxed),
+                steals: stolen,
                 executed,
             },
         )

@@ -385,6 +385,7 @@ impl ProgrammedCnn {
     /// Panics when `s` is out of range or `input` is not a feature map
     /// (only the last stage emits [`StageData::Logits`]).
     pub fn run_stage(&self, s: usize, input: &StageData, scratch: &mut ForwardScratch) -> StageData {
+        let _sp = crate::obs::span("stage", "cnn").arg("s", s as u64);
         let StageData::Act(act) = input else {
             panic!("stage {s}: input must be a feature map, not logits");
         };

@@ -28,6 +28,18 @@ pub mod reference;
 
 use crate::config::XbarParams;
 
+/// Engine op counters (process-global, cached `Arc`s — one registry lock
+/// per process, then a relaxed add per `accumulate_into` call, never per
+/// row or per sample): fused vs slice-engine VMM rows, plus the logical
+/// ADC sample count a real chip would have digitised for the same work
+/// (`rows × iters × slices × n`, the paper's ADC-pressure accounting).
+static FUSED_ROWS: std::sync::OnceLock<std::sync::Arc<crate::obs::Counter>> =
+    std::sync::OnceLock::new();
+static SLICE_ROWS: std::sync::OnceLock<std::sync::Arc<crate::obs::Counter>> =
+    std::sync::OnceLock::new();
+static ADC_SAMPLES: std::sync::OnceLock<std::sync::Arc<crate::obs::Counter>> =
+    std::sync::OnceLock::new();
+
 /// A dense signed matrix in row-major order.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
@@ -562,6 +574,18 @@ impl ProgrammedXbar {
         assert_eq!(acc.len(), x.rows * n, "accumulator shape mismatch");
         if n == 0 || x.rows == 0 {
             return;
+        }
+        if self.fast {
+            FUSED_ROWS
+                .get_or_init(|| crate::obs::counter("xbar.fused_vmm_rows"))
+                .add(x.rows as u64);
+        } else {
+            SLICE_ROWS
+                .get_or_init(|| crate::obs::counter("xbar.slice_vmm_rows"))
+                .add(x.rows as u64);
+            ADC_SAMPLES
+                .get_or_init(|| crate::obs::counter("xbar.adc_samples"))
+                .add((x.rows * self.iters * self.slices * n) as u64);
         }
         // split across cores only when the work dwarfs thread spawn cost —
         // and never from inside a sched worker: the outer job decomposition

@@ -459,6 +459,102 @@ fn chaos_lanes_still_cover_every_request_exactly_once() {
 }
 
 #[test]
+fn retry_attempts_share_one_trace_id() {
+    // satellite contract: RetryClient mints ONE trace id per logical
+    // request, and every resend carries it. A hand-rolled listener reads
+    // the first attempt's Infer frame and drops the connection without
+    // replying; the retry reconnects and resends, and the second
+    // connection serves it. Both wire frames must carry the same nonzero
+    // trace, which the reply echoes.
+    use newton::net::proto::InferReply;
+    use newton::net::{RetryClient, RetryPolicy};
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        // connection 1: read the request, then hang up with no reply
+        let (mut s1, _) = listener.accept().unwrap();
+        let t1 = match proto::read_msg(&mut s1).unwrap() {
+            Msg::Infer(req) => req.trace,
+            other => panic!("want Infer on conn 1, got {other:?}"),
+        };
+        drop(s1);
+        // connection 2: the resend; answer it properly
+        let (mut s2, _) = listener.accept().unwrap();
+        let t2 = match proto::read_msg(&mut s2).unwrap() {
+            Msg::Infer(req) => {
+                proto::write_msg(
+                    &mut s2,
+                    &Msg::Reply(InferReply {
+                        id: req.id,
+                        trace: req.trace,
+                        replica: 0,
+                        max_abs_err: 0,
+                        logits: vec![42],
+                    }),
+                )
+                .unwrap();
+                req.trace
+            }
+            other => panic!("want Infer on conn 2, got {other:?}"),
+        };
+        (t1, t2)
+    });
+
+    let policy = RetryPolicy {
+        deadline: Duration::from_secs(10),
+        attempt_timeout: Duration::from_secs(2),
+        ..RetryPolicy::default()
+    };
+    let mut c = RetryClient::new(&addr.to_string(), policy, 9);
+    let reply = c.infer(7, &[1, 2, 3, 4]).expect("retry must recover");
+    let (t1, t2) = server.join().unwrap();
+    assert_ne!(t1, 0, "first attempt went out untraced");
+    assert_eq!(t1, t2, "the resend minted a fresh trace id");
+    assert_eq!(c.last_trace(), t1, "client-side trace record disagrees with the wire");
+    assert_eq!(reply.trace, t1, "reply does not echo the logical request's trace");
+    assert_eq!(reply.logits, vec![42]);
+    assert!(c.reconnects() >= 1, "recovery without a reconnect");
+}
+
+#[test]
+fn duplicate_trace_dispatch_is_counted_server_side() {
+    // the server's dedup window spots two dispatched requests carrying
+    // the same trace id (a resend whose first attempt was actually
+    // served) and bumps net.dup_trace_dispatch, which rides the Stats
+    // frame's metrics block
+    let server = start(Arc::new(EchoEngine::small()), 16);
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    let trace = 0xDEAD_0000_0001u64;
+    for id in 0..2u64 {
+        match c.infer_traced(id, trace, &[1, 1, 1, 1]).unwrap() {
+            InferOutcome::Ok(r) => assert_eq!(r.trace, trace),
+            InferOutcome::Busy => panic!("busy under a 16-deep limit"),
+        }
+    }
+    let stats = c.stats().unwrap();
+    let dup = stats
+        .metrics
+        .iter()
+        .find(|(name, _)| name == "net.dup_trace_dispatch")
+        .map(|(_, v)| *v);
+    assert!(
+        dup.is_some_and(|v| v >= 1),
+        "duplicate-trace dispatch not counted; metrics: {:?}",
+        stats.metrics
+    );
+    // the request counter rides along too
+    assert!(
+        stats
+            .metrics
+            .iter()
+            .any(|(name, v)| name == "net.requests" && *v >= 2),
+        "net.requests missing from the stats metrics block"
+    );
+    server.shutdown();
+}
+
+#[test]
 #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
 fn pipelined_serve_net_bit_identical_to_non_pipelined_path() {
     // `serve-net --pipeline` loopback: the wavefront stage scheduler

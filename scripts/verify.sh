@@ -20,28 +20,28 @@ echo "== cargo test --release -q (release-gated suites) =="
 cargo test --release -q
 
 echo
-echo "== cargo clippy (rust/src/{xbar,net,faults}/ gate) =="
+echo "== cargo clippy (rust/src/{xbar,net,faults,obs}/ gate) =="
 # clippy cannot be scoped to one module, so run it on the lib at
 # `-D warnings` severity and gate only the subtrees written under the
-# clippy regime: any diagnostic pointing into rust/src/xbar/, rust/src/net/
-# or rust/src/faults/ fails the build, drift elsewhere stays advisory
-# (seed code predates the clippy adoption)
+# clippy regime: any diagnostic pointing into rust/src/xbar/, rust/src/net/,
+# rust/src/faults/ or rust/src/obs/ fails the build, drift elsewhere stays
+# advisory (seed code predates the clippy adoption)
 if cargo clippy --version >/dev/null 2>&1; then
   clippy_status=0
   clippy_out=$(cargo clippy -q --lib --message-format=short -- -D warnings 2>&1) || clippy_status=$?
-  gated_hits=$(printf '%s\n' "$clippy_out" | grep 'src/xbar/\|src/net/\|src/faults/' || true)
+  gated_hits=$(printf '%s\n' "$clippy_out" | grep 'src/xbar/\|src/net/\|src/faults/\|src/obs/' || true)
   if [ -n "$gated_hits" ]; then
     printf '%s\n' "$gated_hits"
-    echo "FAIL: clippy diagnostics in rust/src/{xbar,net,faults}/ (-D warnings gate)"
+    echo "FAIL: clippy diagnostics in rust/src/{xbar,net,faults,obs}/ (-D warnings gate)"
     exit 1
   elif [ "$clippy_status" -ne 0 ]; then
     # clippy exited non-zero with no gated diagnostics: either lints in
     # other (advisory) modules or an incomplete run — do not report a
     # clean gate in either case, and surface the tail for triage
     printf '%s\n' "$clippy_out" | tail -5
-    echo "WARN: clippy exited ${clippy_status} with no gated diagnostics; xbar/net/faults gate inconclusive (other lints stay advisory)"
+    echo "WARN: clippy exited ${clippy_status} with no gated diagnostics; xbar/net/faults/obs gate inconclusive (other lints stay advisory)"
   else
-    echo "clippy xbar/net/faults gate OK"
+    echo "clippy xbar/net/faults/obs gate OK"
   fi
 else
   echo "clippy unavailable; skipped"
@@ -92,13 +92,16 @@ echo "== serve-net loopback smoke: 64 concurrent requests, exact ADC, pipelined 
 # bit-identical to the *non-pipelined* in-process GoldenServer with zero
 # deviation — the socket-level twin of the pipelined bit-identity
 # property; --shutdown drains the server, and `wait` surfaces any worker
-# panic / unclean exit.
+# panic / unclean exit. The server also runs with --trace-out: on the
+# drained shutdown it exports a Chrome-trace JSON whose per-cell spans are
+# asserted below to cover every pipeline stage and >= 2 replicas.
 portfile=$(mktemp)
-rm -f BENCH_net.json
+rm -f BENCH_net.json trace.json
 # run the release binary directly (built above), not via `cargo run`: the
 # trap must kill the server itself, and cargo does not forward signals
 newton_bin="${CARGO_TARGET_DIR:-target}/release/newton"
 "$newton_bin" serve-net --adc exact --replicas 2 --pipeline \
+  --trace-out trace.json --trace-level spans \
   --addr 127.0.0.1:0 --port-file "$portfile" &
 srv_pid=$!
 trap 'kill "$srv_pid" 2>/dev/null || true' EXIT
@@ -121,6 +124,32 @@ if ! [ -f BENCH_net.json ]; then
   exit 1
 fi
 echo "serve-net smoke OK (pipelined, bit-identical, clean drain)"
+
+echo
+echo "== trace smoke: Chrome-trace export parses, cell spans cover the wavefront =="
+if command -v python3 >/dev/null 2>&1; then
+  if ! [ -f trace.json ]; then
+    echo "FAIL: serve-net --trace-out wrote no trace.json"
+    exit 1
+  fi
+  python3 -m json.tool trace.json >/dev/null
+  python3 - <<'PY'
+import json
+with open("trace.json") as f:
+    doc = json.load(f)
+cells = [e for e in doc["traceEvents"]
+         if e.get("name") == "cell" and e.get("cat") == "pipeline"]
+stages = {e["args"]["s"] for e in cells}
+replicas = {e["args"]["replica"] for e in cells}
+assert stages == {0, 1, 2, 3}, f"cell spans cover stages {sorted(stages)}, want {{0,1,2,3}}"
+assert len(replicas) >= 2, f"cell spans name only replicas {sorted(replicas)}, want >= 2"
+print(f"trace smoke OK ({len(cells)} cell spans, stages {sorted(stages)}, "
+      f"replicas {sorted(replicas)}, {len(doc['traceEvents'])} events total)")
+PY
+  rm -f trace.json
+else
+  echo "WARN: python3 unavailable; trace-export smoke skipped"
+fi
 
 echo
 echo "== serve-net chaos smoke: cell drift + wire faults, exact answers =="
@@ -214,6 +243,19 @@ if [ -f BENCH_hotpath.json ]; then
     fi
   else
     echo "WARN: BENCH_hotpath.json carries no pipeline_speedup_b8; skipped"
+  fi
+  overhead=$(awk -F': ' '/"trace_overhead_b8":/ {gsub(/[,[:space:]]/, "", $2); print $2; exit}' BENCH_hotpath.json)
+  if [ -n "${overhead}" ]; then
+    # spans-on vs spans-off ratio of the pipelined b8 forward; the tracing
+    # fast path must stay within 3% of the untraced hot path
+    if awk "BEGIN { exit !(${overhead} <= 1.03) }"; then
+      echo "tracing overhead (pipelined b8, spans on): ${overhead}x (target <= 1.03x) OK"
+    else
+      echo "FAIL: tracing overhead ${overhead}x above the 1.03x target"
+      exit 1
+    fi
+  else
+    echo "WARN: BENCH_hotpath.json carries no trace_overhead_b8; skipped"
   fi
 else
   echo "WARN: BENCH_hotpath.json absent; perf-target assert skipped"
