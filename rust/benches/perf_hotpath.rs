@@ -189,6 +189,15 @@ fn main() {
             forward_pipelined(&pipe_pool[..], &map_r4, &img8, &exec_r4)
         });
     newton::obs::set_trace_level(newton::obs::TraceLevel::Off);
+    // cost-ledger overhead on the same workload: per-run scratch counting
+    // plus per-stage registry attribution live. verify.sh gates the ratio
+    // next to trace_overhead_b8.
+    newton::obs::ledger::set_enabled(true);
+    let cnn_pipe_b8_r4_ledgered =
+        h.bench("cnn: newton-mini forward b8, pipelined 4 replicas, ledgered", 3, || {
+            forward_pipelined(&pipe_pool[..], &map_r4, &img8, &exec_r4)
+        });
+    newton::obs::ledger::set_enabled(false);
     let map_r2 =
         StageMap::build(pipe_pool[0].n_conv_stages(), 2, StagePolicy::newton()).unwrap();
     let exec_r2 = Executor::new(worker_count(2));
@@ -260,6 +269,22 @@ fn main() {
         Err(_) => println!("pjrt benches skipped (run `make artifacts`)"),
     }
 
+    // ---- per-inference ledger aggregates -----------------------------------
+    // one ledgered lossy:8 adaptive b8 forward (the regime where the slice
+    // engine, adaptive truncation, and zero-slice skips are all live),
+    // priced through the serving tile model — the keys PERF.md's measured
+    // table and BENCH_net.json share
+    let cnn_lossy = cnn.program(&lossy_p, true);
+    newton::obs::ledger::set_enabled(true);
+    let mut ledger_scratch = newton::xbar::cnn::ForwardScratch::new();
+    let _ = cnn_lossy.forward_seq_with(&img8, &mut ledger_scratch);
+    newton::obs::ledger::set_enabled(false);
+    let ledger = ledger_scratch.take_ledger();
+    let tile = newton::energy::TileModel::new(ChipConfig::newton().conv_tile, lossy_p);
+    let adc_ops_per_infer = ledger.adc_ops() as f64 / 8.0;
+    let skipped_slice_frac = ledger.skipped_slice_frac();
+    let energy_pj_per_infer = tile.ledger_energy_pj(&ledger) / 8.0;
+
     // ---- derived speedups + machine-readable artifact ----------------------
     let vmm_speedup = legacy / amortised.max(1e-9);
     let vmm_slice_speedup = legacy_adaptive / amortised_adaptive.max(1e-9);
@@ -275,6 +300,7 @@ fn main() {
     let pipeline_speedup_b8_r2 = cnn_seq_dev_b8 / cnn_pipe_b8_r2.max(1e-9);
     let pipeline_vs_multicore_b8 = cnn_seq_b8 / cnn_pipe_b8_r4.max(1e-9);
     let trace_overhead_b8 = cnn_pipe_b8_r4_traced / cnn_pipe_b8_r4.max(1e-9);
+    let ledger_overhead_b8 = cnn_pipe_b8_r4_ledgered / cnn_pipe_b8_r4.max(1e-9);
     println!("\nderived:");
     println!("  amortised VMM speedup (installed vs legacy) : {vmm_speedup:7.1}x (target >= 5x)");
     println!("  slice-engine speedup (adaptive b8)          : {vmm_slice_speedup:7.1}x (target >= 2x)");
@@ -290,6 +316,10 @@ fn main() {
     println!("  cnn b8 pipelined stages, 2 replicas         : {pipeline_speedup_b8_r2:7.1}x over one device-sequential replica");
     println!("  cnn b8 pipelined vs multicore whole-batch   : {pipeline_vs_multicore_b8:7.1}x (informational)");
     println!("  tracing overhead, pipelined b8 (spans on)   : {trace_overhead_b8:7.2}x (target <= 1.03x)");
+    println!("  ledger overhead, pipelined b8 (counts on)   : {ledger_overhead_b8:7.2}x (target <= 1.03x)");
+    println!("  ADC ops per inference (lossy:8 adaptive b8) : {adc_ops_per_infer:9.0}");
+    println!("  skipped slice fraction (lossy:8 adaptive)   : {skipped_slice_frac:9.4}");
+    println!("  modeled energy per inference                : {energy_pj_per_infer:9.1} pJ");
 
     let mut json = String::from("{\n  \"cases\": [\n");
     for (i, (name, med, n)) in h.results.iter().enumerate() {
@@ -299,7 +329,7 @@ fn main() {
         ));
     }
     json.push_str(&format!(
-        "  ],\n  \"derived\": {{\n    \"vmm_amortised_speedup\": {vmm_speedup:.2},\n    \"vmm_slice_engine_speedup\": {vmm_slice_speedup:.2},\n    \"slice_speedup_adaptive_b1\": {slice_adaptive_b1_speedup:.2},\n    \"slice_speedup_adaptive_b8\": {vmm_slice_speedup:.2},\n    \"slice_speedup_lossy_b1\": {slice_lossy_b1_speedup:.2},\n    \"slice_speedup_lossy_b8\": {slice_lossy_b8_speedup:.2},\n    \"suite_parallel_speedup\": {suite_speedup:.2},\n    \"cnn_programmed_speedup\": {cnn_speedup:.2},\n    \"sched_scaling_speedup\": {sched_scaling_speedup:.2},\n    \"sched_steal_speedup\": {sched_steal_speedup:.2},\n    \"cnn_image_split_speedup\": {cnn_image_split_speedup:.2},\n    \"pipeline_speedup_b8\": {pipeline_speedup_b8:.2},\n    \"pipeline_speedup_b8_r2\": {pipeline_speedup_b8_r2:.2},\n    \"pipeline_vs_multicore_b8\": {pipeline_vs_multicore_b8:.2},\n    \"trace_overhead_b8\": {trace_overhead_b8:.3}\n  }}\n}}\n"
+        "  ],\n  \"derived\": {{\n    \"vmm_amortised_speedup\": {vmm_speedup:.2},\n    \"vmm_slice_engine_speedup\": {vmm_slice_speedup:.2},\n    \"slice_speedup_adaptive_b1\": {slice_adaptive_b1_speedup:.2},\n    \"slice_speedup_adaptive_b8\": {vmm_slice_speedup:.2},\n    \"slice_speedup_lossy_b1\": {slice_lossy_b1_speedup:.2},\n    \"slice_speedup_lossy_b8\": {slice_lossy_b8_speedup:.2},\n    \"suite_parallel_speedup\": {suite_speedup:.2},\n    \"cnn_programmed_speedup\": {cnn_speedup:.2},\n    \"sched_scaling_speedup\": {sched_scaling_speedup:.2},\n    \"sched_steal_speedup\": {sched_steal_speedup:.2},\n    \"cnn_image_split_speedup\": {cnn_image_split_speedup:.2},\n    \"pipeline_speedup_b8\": {pipeline_speedup_b8:.2},\n    \"pipeline_speedup_b8_r2\": {pipeline_speedup_b8_r2:.2},\n    \"pipeline_vs_multicore_b8\": {pipeline_vs_multicore_b8:.2},\n    \"trace_overhead_b8\": {trace_overhead_b8:.3},\n    \"ledger_overhead_b8\": {ledger_overhead_b8:.3},\n    \"adc_ops_per_infer\": {adc_ops_per_infer:.3},\n    \"skipped_slice_frac\": {skipped_slice_frac:.6},\n    \"energy_pj_per_infer\": {energy_pj_per_infer:.3}\n  }}\n}}\n"
     ));
     match std::fs::write("BENCH_hotpath.json", &json) {
         Ok(()) => println!("\nwrote BENCH_hotpath.json"),

@@ -14,8 +14,9 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
     ("sweep", "design-space sweeps (--what ima|buffer|fc)"),
     ("verify", "run artifacts against golden test vectors"),
     ("serve", "in-process batched serving demo (--adc, --replicas, --pipeline, --trace-out)"),
-    ("serve-net", "TCP serving endpoint (--addr, --adc, --replicas, --pipeline, --health, --trace-out)"),
+    ("serve-net", "TCP serving endpoint (--addr, --adc, --replicas, --pipeline, --health, --admin-addr, --cost-reports, --trace-out)"),
     ("bench-net", "load-generate against a serve-net endpoint (--addr; --concurrency 1,8,64 sweeps; --fault-rate = chaos; --trace-out)"),
+    ("statz", "scrape a serve-net admin plane (--addr; see serve-net --admin-addr)"),
     ("sched-stress", "work-stealing executor stress smoke (CI)"),
     ("export", "write every figure's data series as CSV (--out)"),
     ("list", "workloads, artifacts, and subcommands"),

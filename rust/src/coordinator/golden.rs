@@ -38,7 +38,7 @@ use std::time::{Duration, Instant};
 use crate::config::{AdcKind, XbarParams};
 use crate::coordinator::batcher::{Batch, Batcher, PendingRequest};
 use crate::coordinator::health::{HealthMonitor, HealthPolicy, HealthReport};
-use crate::coordinator::pipeline::forward_pipelined;
+use crate::coordinator::pipeline::forward_pipelined_ledgered;
 use crate::mapping::{StageMap, StagePolicy};
 use crate::obs;
 use crate::sched::Executor;
@@ -80,6 +80,9 @@ pub struct GoldenServer {
     /// concurrent batch jobs fall back to a fresh scratch instead of
     /// serialising on the lock.
     scratch: Mutex<ForwardScratch>,
+    /// Tile energy model pricing served cost ledgers into picojoules
+    /// (paper Table I constants over the serving crossbar geometry).
+    tile: crate::energy::TileModel,
 }
 
 /// One served batch from [`GoldenServer::serve_batches`].
@@ -101,6 +104,14 @@ pub struct BatchReport {
     /// Max |served - golden| over the real logits of this batch; 0 when
     /// the serving config is itself lossless.
     pub max_abs_err: i64,
+    /// Hardware cost ledger of the forward whose logits were served
+    /// (empty unless `obs::ledger` is enabled). Golden-reference forwards
+    /// and discarded health re-runs are excluded — the ledger prices what
+    /// this batch's answer cost, not everything the server did around it.
+    pub cost: obs::CostLedger,
+    /// `cost` priced through the tile energy model, picojoules (0 when
+    /// the ledger is off).
+    pub energy_pj: f64,
 }
 
 /// Aggregate a serve run's per-batch reports into
@@ -184,6 +195,13 @@ impl GoldenServer {
             pipeline: None,
             health: None,
             scratch: Mutex::new(ForwardScratch::new()),
+            // price ledgers against the newton conv tile built over the
+            // *serving* crossbar params (resolved ADC widths already live
+            // in the ledger, so no activity-factor scaling here)
+            tile: crate::energy::TileModel::new(
+                crate::config::ChipConfig::newton().conv_tile,
+                p,
+            ),
         }
     }
 
@@ -330,6 +348,12 @@ impl GoldenServer {
         self.kind
     }
 
+    /// The tile energy model pricing served cost ledgers (paper Table I
+    /// constants over the serving crossbar geometry).
+    pub fn energy_model(&self) -> &crate::energy::TileModel {
+        &self.tile
+    }
+
     /// True when a lossless golden install rides along for per-batch
     /// deviation reporting.
     pub fn has_golden_reference(&self) -> bool {
@@ -450,23 +474,44 @@ impl GoldenServer {
         worst
     }
 
-    /// Whole-batch forward on one replica under its read lock: parallel
-    /// per-image split on `exec` when one is provided, else the
-    /// sequential pass over the server-owned scratch.
-    fn forward_replica(&self, replica: usize, t: &Tensor, exec: Option<&Executor>) -> Matrix {
+    /// Whole-batch forward on one replica under its read lock — parallel
+    /// per-image split on `exec` when one is provided, else the sequential
+    /// pass over the server-owned scratch — returning the forward's
+    /// hardware cost ledger (empty unless `obs::ledger` is enabled). The
+    /// shared sequential scratch is drained *before* the forward too, so
+    /// residue from forwards that must not count — golden references
+    /// through [`Self::with_scratch`] — never leaks into this attribution.
+    fn forward_replica_ledgered(
+        &self,
+        replica: usize,
+        t: &Tensor,
+        exec: Option<&Executor>,
+    ) -> (Matrix, obs::CostLedger) {
         let guard = self.replicas[replica].read().unwrap();
         match exec {
-            Some(e) => guard.forward_on(t, e),
-            None => self.with_scratch(|s| guard.forward_seq_with(t, s)),
+            Some(e) => guard.forward_on_ledgered(t, e),
+            None => self.with_scratch(|s| {
+                let _ = s.take_ledger();
+                let out = guard.forward_seq_with(t, s);
+                (out, s.take_ledger())
+            }),
         }
     }
 
     fn run_batch(&self, index: usize, b: &Batch, image_workers: usize) -> BatchReport {
         let t = tensor_from_flat(&b.data, self.batch);
-        let (replica, served, max_abs_err) = if self.pipeline.is_some() {
+        let (replica, served, max_abs_err, cost) = if self.pipeline.is_some() {
             self.run_batch_pipelined(&t, b.n_real, image_workers)
         } else {
             self.run_batch_routed(index, &t, b.n_real, image_workers)
+        };
+        let energy_pj = if cost.is_empty() {
+            0.0
+        } else {
+            let pj = self.tile.ledger_energy_pj(&cost);
+            obs::ledger::record_serving(&cost, b.n_real, pj);
+            obs::ledger::record_replica(replica, &cost);
+            pj
         };
         let logits = (0..b.n_real)
             .map(|r| (0..served.cols).map(|c| served.at(r, c) as i32).collect())
@@ -478,6 +523,8 @@ impl GoldenServer {
             n_real: b.n_real,
             logits,
             max_abs_err,
+            cost,
+            energy_pj,
         }
     }
 
@@ -491,27 +538,27 @@ impl GoldenServer {
         t: &Tensor,
         n_real: usize,
         image_workers: usize,
-    ) -> (usize, Matrix, i64) {
+    ) -> (usize, Matrix, i64, obs::CostLedger) {
         let exec = (image_workers > 1 && self.batch > 1).then(|| Executor::new(image_workers));
         let route = match &self.health {
             Some(h) => h.route(index),
             None => index % self.replicas.len(),
         };
-        let served = self.forward_replica(route, t, exec.as_ref());
+        let (served, cost) = self.forward_replica_ledgered(route, t, exec.as_ref());
         let want = self.golden.as_ref().map(|g| match exec.as_ref() {
             Some(e) => g.forward_on(t, e),
             None => self.with_scratch(|s| g.forward_seq_with(t, s)),
         });
         let Some(want) = want else {
-            return (route, served, 0);
+            return (route, served, 0, cost);
         };
         let err = Self::batch_err(&served, &want, n_real);
         let Some(h) = &self.health else {
-            return (route, served, err);
+            return (route, served, err, cost);
         };
         h.observe(route, err);
         let threshold = h.policy().deviation_threshold;
-        let (mut best, mut tried) = ((route, served, err), vec![route]);
+        let (mut best, mut tried) = ((route, served, err, cost), vec![route]);
         while best.2 > threshold {
             let Some(alt) = h.alternative(&tried, index) else {
                 break; // every replica tried: serve the least-bad result
@@ -523,12 +570,12 @@ impl GoldenServer {
                 "health",
                 &[("batch", index as u64), ("replica", alt as u64)],
             );
-            let served = self.forward_replica(alt, t, exec.as_ref());
+            let (served, cost) = self.forward_replica_ledgered(alt, t, exec.as_ref());
             let err = Self::batch_err(&served, &want, n_real);
             h.observe(alt, err);
             tried.push(alt);
             if err < best.2 {
-                best = (alt, served, err);
+                best = (alt, served, err, cost);
             }
         }
         best
@@ -546,7 +593,7 @@ impl GoldenServer {
         t: &Tensor,
         n_real: usize,
         image_workers: usize,
-    ) -> (usize, Matrix, i64) {
+    ) -> (usize, Matrix, i64, obs::CostLedger) {
         let map = self
             .pipeline
             .as_ref()
@@ -559,18 +606,18 @@ impl GoldenServer {
         // only idle. The report's replica is the classifier stage's —
         // the one that produced these logits.
         let exec = Executor::new(image_workers.clamp(1, map.concurrency()));
-        let served = forward_pipelined(&self.replicas[..], &map, t, &exec);
+        let (served, cost) = forward_pipelined_ledgered(&self.replicas[..], &map, t, &exec);
         let classifier = *map.assignment.last().unwrap();
         let want = self
             .golden
             .as_ref()
             .map(|g| self.with_scratch(|s| g.forward_seq_with(t, s)));
         let Some(want) = want else {
-            return (classifier, served, 0);
+            return (classifier, served, 0, cost);
         };
         let err = Self::batch_err(&served, &want, n_real);
         let Some(h) = &self.health else {
-            return (classifier, served, err);
+            return (classifier, served, err, cost);
         };
         let threshold = h.policy().deviation_threshold;
         let mut mapped: Vec<usize> = map.assignment.clone();
@@ -582,19 +629,19 @@ impl GoldenServer {
             for &r in &mapped {
                 h.observe(r, err);
             }
-            return (classifier, served, err);
+            return (classifier, served, err, cost);
         }
         // localise the drift: solo-run the batch on each mapped replica
         h.record_rerun();
         obs::counter("health.reruns").inc();
         obs::event("health_rerun", "health", &[("pipelined", 1)]);
-        let mut best: Option<(usize, Matrix, i64)> = None;
+        let mut best: Option<(usize, Matrix, i64, obs::CostLedger)> = None;
         for &r in &mapped {
-            let solo = self.forward_replica(r, t, None);
+            let (solo, solo_cost) = self.forward_replica_ledgered(r, t, None);
             let solo_err = Self::batch_err(&solo, &want, n_real);
             h.observe(r, solo_err);
-            if best.as_ref().map_or(true, |(_, _, e)| solo_err < *e) {
-                best = Some((r, solo, solo_err));
+            if best.as_ref().map_or(true, |(_, _, e, _)| solo_err < *e) {
+                best = Some((r, solo, solo_err, solo_cost));
             }
         }
         // try surviving replicas outside the map too, if the mapped ones
@@ -612,12 +659,12 @@ impl GoldenServer {
                 "health",
                 &[("pipelined", 1), ("replica", alt as u64)],
             );
-            let solo = self.forward_replica(alt, t, None);
+            let (solo, solo_cost) = self.forward_replica_ledgered(alt, t, None);
             let solo_err = Self::batch_err(&solo, &want, n_real);
             h.observe(alt, solo_err);
             tried.push(alt);
             if solo_err < best.2 {
-                best = (alt, solo, solo_err);
+                best = (alt, solo, solo_err, solo_cost);
             }
         }
         self.rebuild_pipeline_map();
@@ -676,6 +723,8 @@ impl crate::net::Engine for GoldenServer {
             n_real: r.n_real,
             logits: r.logits,
             max_abs_err: r.max_abs_err,
+            cost: r.cost,
+            energy_pj: r.energy_pj,
         }
     }
 
@@ -929,6 +978,28 @@ mod tests {
         // the live map re-derived around the quarantined replica
         let map = s.pipeline_map().unwrap();
         assert!(!map.assignment.contains(&0), "map still places stages on 0: {:?}", map.assignment);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn ledgered_serving_attaches_cost_without_moving_bits() {
+        let _guard = crate::obs::ledger::test_guard();
+        let s = GoldenServer::replicated(0, AdcKind::Adaptive, 2, 2);
+        let imgs = images(3, 41); // 1.5 batches: padding rows count too
+        crate::obs::ledger::set_enabled(false);
+        let off = s.serve_batches_on(&imgs, &Executor::new(1));
+        crate::obs::ledger::set_enabled(true);
+        let on = s.serve_batches_on(&imgs, &Executor::new(1));
+        crate::obs::ledger::set_enabled(false);
+        assert_eq!(off.len(), on.len());
+        for (a, b) in off.iter().zip(&on) {
+            assert_eq!(a.logits, b.logits, "enabling the ledger moved served bits");
+            assert!(a.cost.is_empty(), "disabled serving accrued cost");
+            assert_eq!(a.energy_pj, 0.0);
+            assert!(!b.cost.is_empty(), "enabled serving accrued no cost");
+            assert!(b.energy_pj > 0.0, "served forward priced as free");
+            assert!(b.cost.rows() > 0);
+        }
     }
 
     #[test]

@@ -141,6 +141,11 @@ impl StagePool for [RwLock<ProgrammedCnn>] {
 /// [`StagePool`] mapping two concurrent jobs to one replica.
 pub struct ScratchPool {
     slots: Option<Vec<Mutex<ForwardScratch>>>,
+    /// Hardware cost spilled out of the scratches: [`Self::with`] drains
+    /// each scratch's accrued ledger here after every job, so per-forward
+    /// attribution survives both pooled reuse (no cross-batch residue)
+    /// and the fresh-scratch drop when pooling is off.
+    spill: Mutex<crate::obs::CostLedger>,
 }
 
 impl ScratchPool {
@@ -153,16 +158,35 @@ impl ScratchPool {
                     .map(|_| Mutex::new(ForwardScratch::new()))
                     .collect()
             }),
+            spill: Mutex::new(crate::obs::CostLedger::new()),
         }
     }
 
     /// Run `f` with replica `r`'s pooled scratch (or a fresh one when
     /// pooling is off).
     pub fn with<T>(&self, r: usize, f: impl FnOnce(&mut ForwardScratch) -> T) -> T {
-        match &self.slots {
-            Some(slots) => f(&mut slots[r].lock().unwrap()),
-            None => f(&mut ForwardScratch::new()),
+        let (out, ledger) = match &self.slots {
+            Some(slots) => {
+                let mut scr = slots[r].lock().unwrap();
+                let out = f(&mut scr);
+                (out, scr.take_ledger())
+            }
+            None => {
+                let mut scr = ForwardScratch::new();
+                let out = f(&mut scr);
+                (out, scr.take_ledger())
+            }
+        };
+        if !ledger.is_empty() {
+            self.spill.lock().unwrap().merge(&ledger);
         }
+        out
+    }
+
+    /// Drain everything [`Self::with`] spilled since the last drain — the
+    /// per-forward capture point of the pipelined path.
+    pub fn drain_ledger(&self) -> crate::obs::CostLedger {
+        std::mem::take(&mut *self.spill.lock().unwrap())
     }
 }
 
@@ -198,6 +222,20 @@ pub fn forward_pipelined<P: StagePool + ?Sized>(
     img: &Tensor,
     exec: &Executor,
 ) -> Matrix {
+    forward_pipelined_ledgered(pool, map, img, exec).0
+}
+
+/// [`forward_pipelined`] returning the batch's hardware cost ledger
+/// alongside the logits: every wave job's cost is spilled out of the
+/// [`ScratchPool`] and drained once the wavefront completes. The ledger
+/// is empty unless `obs::ledger` is enabled; the logits are bit-identical
+/// to [`forward_pipelined`] either way.
+pub fn forward_pipelined_ledgered<P: StagePool + ?Sized>(
+    pool: &P,
+    map: &StageMap,
+    img: &Tensor,
+    exec: &Executor,
+) -> (Matrix, crate::obs::CostLedger) {
     let n_stages = pool.n_stages();
     assert_eq!(
         map.assignment.len(),
@@ -282,7 +320,7 @@ pub fn forward_pipelined<P: StagePool + ?Sized>(
     for (k, row) in rows.into_iter().enumerate() {
         out.data[k * cols..(k + 1) * cols].copy_from_slice(&row.data);
     }
-    out
+    (out, scratch.drain_ledger())
 }
 
 #[cfg(test)]

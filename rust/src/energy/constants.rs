@@ -33,6 +33,11 @@ pub const HT_LINK_GBPS: f64 = 6.4;
 pub const SH_POWER_MW: f64 = 0.01;
 pub const SH_AREA_MM2: f64 = 0.00004;
 
+/// \[ISAAC\] energy of capturing one analog column sample without an ADC
+/// conversion (the identity-ADC fold still pays the sample-and-hold):
+/// 10 fJ = 0.01 pJ. The ledger energy model charges this per fold.
+pub const SH_SAMPLE_PJ: f64 = 0.01;
+
 /// \[ISAAC\] shift-and-add unit (one per pair of ADC streams).
 pub const SA_POWER_MW: f64 = 0.2;
 pub const SA_AREA_MM2: f64 = 0.00006;

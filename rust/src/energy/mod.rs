@@ -308,6 +308,37 @@ impl TileModel {
     pub fn energy_per_op_pj(&self) -> f64 {
         self.breakdown().power_mw() * 1e-3 / self.peak_gops() * 1e3
     }
+
+    /// Modeled energy (pJ) of the work one [`crate::obs::CostLedger`]
+    /// records — the bridge from the engine's op counts to the paper's
+    /// energy-per-inference figure:
+    ///
+    /// * quantising ADC conversions at `ADC_POWER_MW / ADC_RATE_SPS`
+    ///   (~2.4 pJ), scaled by resolved width over the deployed width — a
+    ///   SAR conversion spends one capacitor-settle-and-compare cycle per
+    ///   bit, so the adaptive schedule's truncated conversions cost
+    ///   proportionally less (§III-B);
+    /// * identity-ADC folds at [`constants::SH_SAMPLE_PJ`] — a skipped
+    ///   conversion still pays its sample-and-hold;
+    /// * row movement at [`constants::EDRAM_PJ_PER_BYTE`] per activation
+    ///   byte streamed out of the tile buffer.
+    ///
+    /// The fold and movement terms keep lossless/fused configurations —
+    /// which quantise nothing — from reading as free.
+    pub fn ledger_energy_pj(&self, l: &crate::obs::CostLedger) -> f64 {
+        let full_bits = self.xbar.adc_bits.min(self.xbar.lossless_adc_bits()).max(1) as f64;
+        let adc_sample_pj = k::ADC_POWER_MW * 1e-3 / k::ADC_RATE_SPS * 1e12;
+        let bytes_per_elem = self.xbar.input_bits.div_ceil(8) as f64;
+        let mut pj = 0.0;
+        for (bits, &count) in l.adc_ops_by_bits.iter().enumerate() {
+            if count > 0 {
+                pj += count as f64 * adc_sample_pj * (bits as f64 / full_bits).min(1.0);
+            }
+        }
+        pj += l.identity_folds as f64 * k::SH_SAMPLE_PJ;
+        pj += l.row_elems as f64 * bytes_per_elem * k::EDRAM_PJ_PER_BYTE;
+        pj
+    }
 }
 
 #[cfg(test)]
@@ -389,6 +420,38 @@ mod tests {
         assert!(kara.breakdown().area_mm2() > base.breakdown().area_mm2());
         assert!(kara.breakdown().power_mw() < base.breakdown().power_mw());
         assert!(kara.ce() < base.ce()); // the area-efficiency price
+    }
+
+    #[test]
+    fn ledger_energy_charges_every_dimension() {
+        let t = isaac_tile();
+        let empty = crate::obs::CostLedger::new();
+        assert_eq!(t.ledger_energy_pj(&empty), 0.0);
+
+        // a fused forward records only folds and row movement — it must
+        // still cost something (the admin smoke keys on nonzero energy
+        // under the default lossless config)
+        let mut fused = crate::obs::CostLedger::new();
+        fused.identity_folds = 1000;
+        fused.row_elems = 128;
+        let fused_pj = t.ledger_energy_pj(&fused);
+        assert!(fused_pj > 0.0, "fused path read as free");
+
+        // quantising the same samples at full width costs strictly more
+        let mut full = crate::obs::CostLedger::new();
+        full.count_adc(t.xbar.adc_bits, 1000);
+        full.row_elems = 128;
+        let full_pj = t.ledger_energy_pj(&full);
+        assert!(full_pj > fused_pj, "{full_pj} vs {fused_pj}");
+
+        // ...and the adaptive schedule's truncated conversions cost less
+        // than full-width ones (bit-proportional SAR energy)
+        let mut trunc = crate::obs::CostLedger::new();
+        trunc.count_adc(t.xbar.adc_bits - 4, 1000);
+        trunc.row_elems = 128;
+        let trunc_pj = t.ledger_energy_pj(&trunc);
+        assert!(trunc_pj < full_pj, "{trunc_pj} vs {full_pj}");
+        assert!(trunc_pj > fused_pj, "a real conversion beats an S+H fold");
     }
 
     #[test]

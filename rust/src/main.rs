@@ -36,6 +36,20 @@
 //!                            (--drift-seed/--drift-rate/--drift-mag)
 //!   --read-tick-ms/--write-timeout-ms/--wake-timeout-ms   IO timeouts
 //!   --trace-out/--trace-level      Chrome-trace export, as for `serve`
+//!   --admin-addr HOST:PORT   pull-based admin plane: every connection
+//!                            gets one sorted plain-text metrics
+//!                            exposition (scrape with `newton statz`);
+//!                            also arms the latency/energy drift watchdog
+//!   --admin-port-file PATH   write the bound admin address for scripts
+//!   --cost-reports           attach a per-request CostReport to every
+//!                            Reply frame (proto v3 tail)
+//!   --no-ledger              disable the hardware cost ledger (on by
+//!                            default under serve-net)
+//!   --metrics-out PATH       periodically rewrite PATH with a sorted
+//!                            metric_<name> snapshot of the obs registry
+//!   --metrics-interval-ms N  snapshot cadence (default 1000)
+//! statz --addr HOST:PORT     scrape a serve-net admin plane and print
+//!                            the exposition (read-to-EOF plain text)
 //! bench-net --addr HOST:PORT multi-threaded load generator
 //!   --requests N --concurrency C[,C..]   writes BENCH_net.json; a comma
 //!                            list (e.g. 1,8,64) sweeps extra passes and
@@ -83,6 +97,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "serve-net" => cmd_serve_net(&args),
         "bench-net" => cmd_bench_net(&args),
+        "statz" => cmd_statz(&args),
         "sched-stress" => cmd_sched_stress(&args),
         "export" => cmd_export(&args),
         "list" => cmd_list(),
@@ -492,6 +507,11 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
         wake_connect: Duration::from_millis(args.get_usize("wake-timeout-ms", timeouts.wake_connect.as_millis() as usize) as u64),
         ..timeouts
     };
+    // the hardware cost ledger is on by default for the long-lived
+    // endpoint (per-forward overhead is a few relaxed adds; see
+    // ledger_overhead_b8 in PERF.md) — it feeds the admin exposition,
+    // the Stats frame's ledger.* counters, and --cost-reports
+    newton::obs::ledger::set_enabled(!args.has_flag("no-ledger"));
     let server = NetServer::start(
         engine,
         ServeConfig {
@@ -499,6 +519,8 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
             max_inflight,
             batch_wait: Duration::from_millis(wait_ms as u64),
             timeouts,
+            admin_addr: args.get("admin-addr").map(str::to_string),
+            cost_reports: args.has_flag("cost-reports"),
         },
     )?;
     let addr = server.local_addr();
@@ -507,9 +529,37 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
         std::fs::write(pf, addr.to_string())?;
         println!("  bound address written to {pf}");
     }
+    if let Some(admin) = server.admin_addr() {
+        println!("  admin plane on {admin} (scrape with: newton statz --addr {admin})");
+        if let Some(pf) = args.get("admin-port-file") {
+            std::fs::write(pf, admin.to_string())?;
+            println!("  admin address written to {pf}");
+        }
+    }
     println!("  drain with: newton bench-net --addr {addr} --shutdown");
 
+    // --metrics-out: a background writer that rewrites PATH with a sorted
+    // registry snapshot every interval (and once more on the way out), so
+    // an operator can tail live ledger/serving counters without a scrape
+    let stop_writer = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let writer = args.get("metrics-out").map(str::to_string).map(|path| {
+        let stop = stop_writer.clone();
+        let interval =
+            Duration::from_millis(args.get_usize("metrics-interval-ms", 1000).max(10) as u64);
+        std::thread::spawn(move || loop {
+            write_metrics_snapshot(&path);
+            if stop.load(std::sync::atomic::Ordering::Acquire) {
+                break;
+            }
+            std::thread::sleep(interval);
+        })
+    });
+
     let stats = server.join();
+    stop_writer.store(true, std::sync::atomic::Ordering::Release);
+    if let Some(w) = writer {
+        let _ = w.join();
+    }
     print_net_stats(&stats);
     export_trace(trace_out.as_deref());
     if let Some(dir) = args.get("export") {
@@ -563,6 +613,42 @@ fn print_net_stats(s: &net::StatsSnapshot) {
             println!("    {name:<28} {value}");
         }
     }
+}
+
+/// One sorted `metric_<name> value` snapshot of the obs registry —
+/// the `--metrics-out` writer's file format (histograms expand to
+/// `.count`/`.p50`/`.p99` rows). Best-effort: a failed write is skipped,
+/// not fatal to serving.
+fn write_metrics_snapshot(path: &str) {
+    let snap = newton::obs::metrics_snapshot();
+    let mut lines: Vec<String> = Vec::new();
+    for (name, v) in &snap.counters {
+        lines.push(format!("metric_{name} {v}"));
+    }
+    for (name, h) in &snap.histograms {
+        lines.push(format!("metric_{name}.count {}", h.count));
+        lines.push(format!("metric_{name}.p50 {}", h.percentile(0.50)));
+        lines.push(format!("metric_{name}.p99 {}", h.percentile(0.99)));
+    }
+    lines.sort_unstable();
+    let mut body = lines.join("\n");
+    body.push('\n');
+    let _ = std::fs::write(path, body);
+}
+
+/// Scrape a serve-net admin plane (`--admin-addr`) and print the plain
+/// text exposition.
+fn cmd_statz(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow!("--addr is required (serve-net --admin-addr prints it)"))?;
+    let timeout = Duration::from_millis(args.get_usize("timeout-ms", 5000) as u64);
+    let body = net::scrape_statz(addr, timeout)?;
+    if body.is_empty() {
+        bail!("empty exposition from {addr}");
+    }
+    print!("{body}");
+    Ok(())
 }
 
 /// Multi-threaded load generator against a `serve-net` endpoint. Writes
@@ -759,12 +845,36 @@ fn write_bench_net_json(
         .map(|(k, v)| format!("\"{k}\": {v}"))
         .collect::<Vec<_>>()
         .join(", ");
+    // hardware-cost headline keys, derived client-side from the Stats
+    // frame's ledger.* counters divided by requests served (all zeros
+    // when the server runs --no-ledger)
+    let lookup = |name: &str| {
+        server
+            .metrics
+            .iter()
+            .find(|(k, _)| k == name)
+            .map_or(0u64, |&(_, v)| v)
+    };
+    let served_f = (server.served as f64).max(1.0);
+    let adc_ops_per_infer = lookup("ledger.adc_ops") as f64 / served_f;
+    let energy_pj_per_infer = lookup("ledger.energy_pj") as f64 / served_f;
+    let slice_total = lookup("ledger.slice_iters_executed")
+        + lookup("ledger.slice_iters_folded")
+        + lookup("ledger.slice_iters_skipped");
+    let skipped_slice_frac = if slice_total > 0 {
+        lookup("ledger.slice_iters_skipped") as f64 / slice_total as f64
+    } else {
+        0.0
+    };
     let json = format!(
         "{{\n  \"requests\": {},\n  \"concurrency\": {},\n  \"wall_s\": {:.6},\n  \
          \"throughput_rps\": {:.3},\n  \"p50_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \
          \"max_ms\": {:.3},\n{}  \"busy_retries\": {},\n  \"fault_retries\": {},\n  \
          \"reconnects\": {},\n  \"injected_faults\": {},\n  \"fault_overhead_b8\": {},\n  \
          \"worst_abs_err\": {},\n  \
+         \"adc_ops_per_infer\": {adc_ops_per_infer:.3},\n  \
+         \"skipped_slice_frac\": {skipped_slice_frac:.6},\n  \
+         \"energy_pj_per_infer\": {energy_pj_per_infer:.3},\n  \
          \"verified_exact\": {},\n  \"per_replica\": [{}],\n  \"server\": {{\n    \
          \"served\": {},\n    \"busy\": {},\n    \"proto_errors\": {},\n    \
          \"batches\": {},\n    \"batch_fill\": {:.4},\n    \"p50_us\": {},\n    \

@@ -221,7 +221,11 @@ pub fn export_net_summary(dir: &Path, s: &StatsSnapshot) -> Result<String> {
             crate::coordinator::HealthState::from_u8(*b).label()
         ));
     }
-    for (name, value) in &s.metrics {
+    // sort the obs-registry rows by name regardless of wire order, so two
+    // exports of one snapshot are byte-identical and diffs stay clean
+    let mut metrics: Vec<&(String, u64)> = s.metrics.iter().collect();
+    metrics.sort_by(|a, b| a.0.cmp(&b.0));
+    for (name, value) in metrics {
         rows.push(format!("metric_{name},{value}"));
     }
     write_csv(dir, "net_summary.csv", "metric,value", &rows)?;
@@ -251,9 +255,11 @@ mod tests {
             quarantines: 1,
             degraded: false,
             health: vec![0, 2],
+            // deliberately unsorted: the exporter must order these rows
             metrics: vec![
-                ("net.requests".to_string(), 64),
                 ("sched.steals".to_string(), 5),
+                ("net.requests".to_string(), 64),
+                ("ledger.adc_ops".to_string(), 147_456),
             ],
         };
         let name = export_net_summary(&dir, &snap).unwrap();
@@ -280,9 +286,17 @@ mod tests {
             "replica_1_health,quarantined",
             "metric_net.requests,64",
             "metric_sched.steals,5",
+            "metric_ledger.adc_ops,147456",
         ] {
             assert!(text.lines().any(|l| l == want), "missing row {want:?} in:\n{text}");
         }
+        // metric_ rows come out name-sorted even though the snapshot
+        // carried them out of order
+        let metric_rows: Vec<&str> =
+            text.lines().filter(|l| l.starts_with("metric_")).collect();
+        let mut sorted = metric_rows.clone();
+        sorted.sort_unstable();
+        assert_eq!(metric_rows, sorted, "metric_ rows are not name-sorted");
         // every data row is exactly metric,value
         for l in text.lines().skip(1) {
             assert_eq!(l.matches(',').count(), 1, "{l}");

@@ -261,6 +261,24 @@ impl<S: Read + Write> Client<S> {
     }
 }
 
+/// Scrape the admin plane's text exposition: connect, read to EOF, return
+/// the body. The plane is frameless plain text (the server writes one
+/// exposition and closes), so this is the entire client — `newton statz`
+/// and the verify smoke both ride it.
+pub fn scrape_statz<A: ToSocketAddrs>(addr: A, timeout: Duration) -> io::Result<String> {
+    let addr = addr.to_socket_addrs()?.next().ok_or_else(|| {
+        io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "address resolved to no socket address",
+        )
+    })?;
+    let mut s = TcpStream::connect_timeout(&addr, timeout)?;
+    s.set_read_timeout(Some(timeout))?;
+    let mut body = String::new();
+    s.read_to_string(&mut body)?;
+    Ok(body)
+}
+
 // ---- resilience ----------------------------------------------------------
 
 /// Capped exponential backoff with deterministic jitter.

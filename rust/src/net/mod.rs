@@ -35,10 +35,10 @@ pub mod proto;
 pub mod server;
 
 pub use client::{
-    bench_image, load_generate, Backoff, BenchConfig, BenchReport, Client, InferOutcome, NetError,
-    RetryClient, RetryPolicy,
+    bench_image, load_generate, scrape_statz, Backoff, BenchConfig, BenchReport, Client,
+    InferOutcome, NetError, RetryClient, RetryPolicy,
 };
-pub use proto::StatsSnapshot;
+pub use proto::{CostReport, StatsSnapshot};
 pub use server::{NetServer, ServeConfig, Timeouts};
 
 use crate::coordinator::Batch;
@@ -53,6 +53,13 @@ pub struct EngineBatch {
     /// Per-request logits, one row per real request, in `Batch::ids` order.
     pub logits: Vec<Vec<i32>>,
     pub max_abs_err: i64,
+    /// Hardware cost ledger of the served forward (empty unless
+    /// `obs::ledger` is enabled) — the server divides it per request for
+    /// opt-in [`proto::CostReport`]s on the `Reply` frame.
+    pub cost: crate::obs::CostLedger,
+    /// `cost` priced through the engine's tile energy model, picojoules
+    /// (0 when the ledger is off).
+    pub energy_pj: f64,
 }
 
 /// A batched inference backend the [`NetServer`] can route to.

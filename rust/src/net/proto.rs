@@ -9,7 +9,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic  b"NWT0"
-//! 4       1     version (2)
+//! 4       1     version (3)
 //! 5       1     message type (TY_*)
 //! 6       2     reserved (0)
 //! 8       4     payload length, LE u32 (<= MAX_PAYLOAD)
@@ -35,9 +35,11 @@ use std::io::{self, Read, Write};
 pub const MAGIC: [u8; 4] = *b"NWT0";
 /// Protocol version carried in every frame header. v2 widened `Infer`
 /// and `Reply` with a client-minted trace id and the `Stats` payload with
-/// p999 + an observability metrics block; v1 peers are rejected at the
+/// p999 + an observability metrics block; v3 lets an opt-in
+/// [`CostReport`] ride the tail of the `Reply` frame (zero bytes when the
+/// server has cost reports disabled). Older peers are rejected at the
 /// header (both ends of the wire live in this repo).
-pub const VERSION: u8 = 2;
+pub const VERSION: u8 = 3;
 /// Fixed frame-header size in bytes.
 pub const HEADER_LEN: usize = 16;
 /// Hard payload ceiling; an oversized header is rejected before any
@@ -124,6 +126,33 @@ pub struct InferRequest {
     pub image: Vec<i32>,
 }
 
+/// Per-request hardware cost attribution (proto v3), riding the tail of
+/// a `Reply` frame when the server has `--cost-reports` on. Values are
+/// the served batch's `obs::CostLedger` divided by the batch's real-row
+/// count, so they answer "what did *my* inference cost" in amortised
+/// terms. Fixed-width (48 bytes of counters + 8 bytes of f64 energy);
+/// when disabled the reply carries **zero** extra bytes — absence, not a
+/// flag, encodes "off", so disabled v3 replies match v2 sizes.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostReport {
+    /// Real ADC conversions (all resolved bit-widths summed).
+    pub adc_ops: u64,
+    /// Identity-ADC folds (conversions the schedule proved away).
+    pub identity_folds: u64,
+    /// Slice-plane iterations actually executed.
+    pub slice_iters_executed: u64,
+    /// Slice-plane iterations folded to a shift-add (uniform planes).
+    pub slice_iters_folded: u64,
+    /// Slice-plane iterations skipped outright (zero planes / zero DAC
+    /// slabs).
+    pub slice_iters_skipped: u64,
+    /// Input rows pushed through the crossbars.
+    pub rows: u64,
+    /// Modeled energy of this request, picojoules (tile energy model over
+    /// the ledger).
+    pub energy_pj: f64,
+}
+
 /// A served inference result.
 #[derive(Clone, Debug, PartialEq)]
 pub struct InferReply {
@@ -137,6 +166,9 @@ pub struct InferReply {
     /// (0 when the serving config is lossless).
     pub max_abs_err: i64,
     pub logits: Vec<i32>,
+    /// Amortised hardware cost of this request (`None` unless the server
+    /// runs with cost reports enabled; encodes as zero bytes when absent).
+    pub cost: Option<CostReport>,
 }
 
 /// A server-side failure bound to one request/connection.
@@ -239,6 +271,17 @@ pub fn encode_payload(m: &Msg) -> (u8, Vec<u8>) {
             p.extend_from_slice(&r.replica.to_le_bytes());
             p.extend_from_slice(&r.max_abs_err.to_le_bytes());
             put_i32s(&mut p, &r.logits);
+            // v3 cost tail: absent == zero bytes (the decoder keys on
+            // payload exhaustion, not a flag byte)
+            if let Some(c) = &r.cost {
+                p.extend_from_slice(&c.adc_ops.to_le_bytes());
+                p.extend_from_slice(&c.identity_folds.to_le_bytes());
+                p.extend_from_slice(&c.slice_iters_executed.to_le_bytes());
+                p.extend_from_slice(&c.slice_iters_folded.to_le_bytes());
+                p.extend_from_slice(&c.slice_iters_skipped.to_le_bytes());
+                p.extend_from_slice(&c.rows.to_le_bytes());
+                p.extend_from_slice(&c.energy_pj.to_le_bytes());
+            }
             TY_REPLY
         }
         Msg::Busy => TY_BUSY,
@@ -391,12 +434,29 @@ pub fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
             let replica = c.u32()?;
             let max_abs_err = c.i64()?;
             let logits = c.i32s()?;
+            // v3 cost tail: an exhausted payload means "no cost report";
+            // anything else must be exactly one fixed-width CostReport
+            // (a partial tail fails the bounds check in `take`).
+            let cost = if c.done() {
+                None
+            } else {
+                Some(CostReport {
+                    adc_ops: c.u64()?,
+                    identity_folds: c.u64()?,
+                    slice_iters_executed: c.u64()?,
+                    slice_iters_folded: c.u64()?,
+                    slice_iters_skipped: c.u64()?,
+                    rows: c.u64()?,
+                    energy_pj: c.f64()?,
+                })
+            };
             Msg::Reply(InferReply {
                 id,
                 trace,
                 replica,
                 max_abs_err,
                 logits,
+                cost,
             })
         }
         TY_BUSY => Msg::Busy,
@@ -551,6 +611,7 @@ mod tests {
                 replica: 3,
                 max_abs_err: 12,
                 logits: vec![10, -20, 30],
+                cost: None,
             }),
             Msg::Reply(InferReply {
                 id: u64::MAX,
@@ -558,6 +619,23 @@ mod tests {
                 replica: 0,
                 max_abs_err: i64::MAX,
                 logits: vec![],
+                cost: None,
+            }),
+            Msg::Reply(InferReply {
+                id: 8,
+                trace: 0xDEAD_BEEF_0000_0002,
+                replica: 1,
+                max_abs_err: 0,
+                logits: vec![1, 2],
+                cost: Some(CostReport {
+                    adc_ops: 147_456,
+                    identity_folds: 1024,
+                    slice_iters_executed: 1800,
+                    slice_iters_folded: 120,
+                    slice_iters_skipped: 128,
+                    rows: 16,
+                    energy_pj: 35_812.5,
+                }),
             }),
             Msg::Busy,
             Msg::Error(WireError {
@@ -667,12 +745,64 @@ mod tests {
             replica: 1,
             max_abs_err: 0,
             logits: vec![1, 2, 3, 4],
+            cost: None,
         }));
         for cut in [0, 1, payload.len() - 1] {
             assert!(
                 decode_payload(ty, &payload[..cut]).is_err(),
                 "cut at {cut} decoded"
             );
+        }
+    }
+
+    #[test]
+    fn absent_cost_report_costs_zero_bytes() {
+        // the v3 cost tail must be free when disabled: a cost-less reply
+        // encodes to exactly the v2 layout, and a present report adds
+        // exactly its fixed width
+        let bare = InferReply {
+            id: 1,
+            trace: 2,
+            replica: 0,
+            max_abs_err: 0,
+            logits: vec![5, 6, 7],
+            cost: None,
+        };
+        let (_, p_none) = encode_payload(&Msg::Reply(bare.clone()));
+        assert_eq!(p_none.len(), 8 + 8 + 4 + 8 + 4 + 3 * 4);
+        let mut with = bare;
+        with.cost = Some(CostReport {
+            adc_ops: 9,
+            energy_pj: 1.25,
+            ..CostReport::default()
+        });
+        let (_, p_some) = encode_payload(&Msg::Reply(with));
+        assert_eq!(p_some.len(), p_none.len() + 7 * 8);
+    }
+
+    #[test]
+    fn partial_cost_tail_is_rejected() {
+        let (ty, payload) = encode_payload(&Msg::Reply(InferReply {
+            id: 3,
+            trace: 4,
+            replica: 1,
+            max_abs_err: 0,
+            logits: vec![1],
+            cost: Some(CostReport::default()),
+        }));
+        // any strict prefix of the 56-byte cost tail must fail decode —
+        // the tail is all-or-nothing, never silently treated as absent
+        let base = payload.len() - 7 * 8;
+        for extra in [1, 8, 55] {
+            assert!(
+                decode_payload(ty, &payload[..base + extra]).is_err(),
+                "partial cost tail of {extra} bytes decoded"
+            );
+        }
+        // ...while the empty tail (exact v2 framing) decodes to None
+        match decode_payload(ty, &payload[..base]).unwrap() {
+            Msg::Reply(r) => assert_eq!(r.cost, None),
+            other => panic!("{other:?}"),
         }
     }
 

@@ -24,9 +24,23 @@
 //! A protocol error on a connection is fatal to that connection only (a
 //! framed stream cannot be resynced past a bad frame); the server itself
 //! keeps serving, and abrupt client disconnects are routine, not errors.
+//!
+//! Two optional side-planes ride the same lifecycle:
+//!
+//! * an **admin plane** (`ServeConfig::admin_addr`) — a second listener
+//!   that answers every connection with one plain-text metrics exposition
+//!   (sorted `name{label="v"} value` lines rendered from the `obs`
+//!   registry, server stats, replica health, and the hardware cost
+//!   ledger) and closes. Pull-based and frameless: `curl`, `nc`, or
+//!   `newton statz` can scrape it without speaking the binary protocol,
+//!   and a wedged scraper can never block the serving path;
+//! * a **watchdog** on the admin thread: every tick it compares request
+//!   p99 latency and energy-per-inference against a baseline frozen over
+//!   the first ticks after startup, raises `obs.anomaly.*` counters on
+//!   drift, and latches the exposition's `newton_degraded` line.
 
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::io::{self, Read};
+use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
@@ -94,6 +108,13 @@ pub struct ServeConfig {
     pub batch_wait: Duration,
     /// IO timeouts (read tick, write timeout, drain windows).
     pub timeouts: Timeouts,
+    /// Admin-plane bind address (`None` disables the plane and its
+    /// watchdog). Port 0 picks an ephemeral port — see
+    /// [`NetServer::admin_addr`].
+    pub admin_addr: Option<String>,
+    /// Attach a per-request [`proto::CostReport`] to every `Reply` frame
+    /// (proto v3 tail). Off by default: replies carry zero extra bytes.
+    pub cost_reports: bool,
 }
 
 impl Default for ServeConfig {
@@ -103,12 +124,16 @@ impl Default for ServeConfig {
             max_inflight: 64,
             batch_wait: Duration::from_millis(2),
             timeouts: Timeouts::default(),
+            admin_addr: None,
+            cost_reports: false,
         }
     }
 }
 
-/// What the dispatcher hands back to a blocked handler.
-type RouteReply = (u32, i64, Vec<i32>);
+/// What the dispatcher hands back to a blocked handler: replica, batch
+/// max-abs-err, the row's logits, and (when cost reports are on) the
+/// request's amortised share of the batch's hardware cost.
+type RouteReply = (u32, i64, Vec<i32>, Option<proto::CostReport>);
 
 /// Batcher plus the routing table, under one lock so an admission check,
 /// route registration, and push are atomic against the dispatcher's
@@ -209,6 +234,13 @@ struct Shared {
     /// request counts.
     latency: Histogram,
     traces: Mutex<TraceDedup>,
+    /// Attach per-request cost reports to replies (proto v3 tail).
+    cost_reports: bool,
+    /// Admin-plane bound address, when the plane is enabled.
+    admin_addr: Option<SocketAddr>,
+    /// Latched by the watchdog on p99-latency or energy-per-inference
+    /// drift; surfaces as `newton_degraded 1` in the admin exposition.
+    watchdog_degraded: AtomicBool,
 }
 
 /// A running TCP serving endpoint.
@@ -216,6 +248,7 @@ pub struct NetServer {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
     dispatcher: Option<JoinHandle<()>>,
+    admin: Option<JoinHandle<()>>,
     handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
@@ -226,6 +259,16 @@ impl NetServer {
         assert!(cfg.max_inflight >= 1, "max_inflight must be >= 1");
         let listener = TcpListener::bind(cfg.addr.as_str())?;
         let local_addr = listener.local_addr()?;
+        // bind the admin plane before any thread starts so a bad admin
+        // address fails the whole start, not a background thread
+        let admin_listener = match &cfg.admin_addr {
+            Some(a) => Some(TcpListener::bind(a.as_str())?),
+            None => None,
+        };
+        let admin_addr = match &admin_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
         let shared = Arc::new(Shared {
             local_addr,
             batch_wait: cfg.batch_wait,
@@ -242,6 +285,9 @@ impl NetServer {
             stats: Mutex::new(StatsInner::new(engine.n_replicas())),
             latency: Histogram::new(),
             traces: Mutex::new(TraceDedup::new()),
+            cost_reports: cfg.cost_reports,
+            admin_addr,
+            watchdog_degraded: AtomicBool::new(false),
             engine,
         });
         let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
@@ -255,10 +301,15 @@ impl NetServer {
             let handlers = handlers.clone();
             std::thread::spawn(move || accept_loop(&shared, listener, &handlers))
         };
+        let admin = admin_listener.map(|l| {
+            let shared = shared.clone();
+            std::thread::spawn(move || admin_loop(&shared, l))
+        });
         Ok(NetServer {
             shared,
             accept: Some(accept),
             dispatcher: Some(dispatcher),
+            admin,
             handlers,
         })
     }
@@ -266,6 +317,12 @@ impl NetServer {
     /// The bound address (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.shared.local_addr
+    }
+
+    /// The admin plane's bound address (resolves port 0); `None` when the
+    /// plane is disabled.
+    pub fn admin_addr(&self) -> Option<SocketAddr> {
+        self.shared.admin_addr
     }
 
     /// True once a drain started (client `Shutdown` frame or
@@ -313,6 +370,11 @@ impl NetServer {
         }
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
+        }
+        // the admin loop polls the drain flag between accepts, so it
+        // exits within one poll interval of the flag flipping
+        if let Some(a) = self.admin.take() {
+            let _ = a.join();
         }
     }
 }
@@ -443,6 +505,22 @@ fn dispatch_loop(shared: &Arc<Shared>) {
                 s.per_replica[out.replica] += b.n_real as u64;
             }
         }
+        // amortise the batch's hardware cost over its real rows: each
+        // request's CostReport answers "what did my inference cost" in
+        // batch-share terms (zeros when the ledger is off — the flag, not
+        // the ledger, decides presence, so the wire contract is stable)
+        let cost = (shared.cost_reports && b.n_real > 0).then(|| {
+            let n = b.n_real as u64;
+            proto::CostReport {
+                adc_ops: out.cost.adc_ops() / n,
+                identity_folds: out.cost.identity_folds / n,
+                slice_iters_executed: out.cost.slice_iters_executed / n,
+                slice_iters_folded: out.cost.slice_iters_folded / n,
+                slice_iters_skipped: out.cost.slice_iters_skipped / n,
+                rows: out.cost.rows() / n,
+                energy_pj: out.energy_pj / b.n_real as f64,
+            }
+        });
         let senders: Vec<Option<Sender<RouteReply>>> = {
             let mut q = shared.queue.lock().unwrap();
             b.ids.iter().map(|id| q.routes.remove(id)).collect()
@@ -450,7 +528,7 @@ fn dispatch_loop(shared: &Arc<Shared>) {
         for (tx, logits) in senders.into_iter().zip(out.logits.into_iter()) {
             if let Some(tx) = tx {
                 // a handler that died mid-wait just drops the receiver
-                let _ = tx.send((out.replica as u32, out.max_abs_err, logits));
+                let _ = tx.send((out.replica as u32, out.max_abs_err, logits, cost));
             }
         }
     }
@@ -662,7 +740,7 @@ fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) 
     let reply = rx.recv();
     shared.inflight.fetch_sub(1, Ordering::AcqRel);
     match reply {
-        Ok((replica, max_abs_err, logits)) => {
+        Ok((replica, max_abs_err, logits, cost)) => {
             let ok = {
                 let _enc = obs::span_verbose("encode", "net").arg("trace", req.trace);
                 proto::write_msg(
@@ -673,6 +751,7 @@ fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) 
                         replica,
                         max_abs_err,
                         logits,
+                        cost,
                     }),
                 )
                 .is_ok()
@@ -689,5 +768,112 @@ fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) 
             }),
         )
         .is_ok(),
+    }
+}
+
+// ---- admin plane ---------------------------------------------------------
+
+/// How often the admin thread polls for scrapes and drain.
+const ADMIN_POLL: Duration = Duration::from_millis(20);
+/// Watchdog cadence: drift checks run at this interval, not per scrape.
+const WATCHDOG_TICK: Duration = Duration::from_millis(250);
+
+/// Render the pull-plane text exposition: one `name{label="v"} value`
+/// line per fact, sorted lexicographically so consecutive scrapes diff
+/// cleanly and tests can pin positions. Frameless plain text — any
+/// read-to-EOF client (curl, nc, `newton statz`) can consume it.
+fn render_exposition(shared: &Shared) -> String {
+    let snap = obs::metrics_snapshot();
+    let stats = snapshot(shared);
+    let mut lines: Vec<String> = Vec::new();
+    for (name, v) in &snap.counters {
+        lines.push(format!("newton_counter{{name=\"{name}\"}} {v}"));
+    }
+    for (name, h) in &snap.histograms {
+        for (stat, v) in [
+            ("count", h.count),
+            ("sum", h.sum),
+            ("p50", h.percentile(0.50)),
+            ("p99", h.percentile(0.99)),
+        ] {
+            lines.push(format!("newton_histogram{{name=\"{name}\",stat=\"{stat}\"}} {v}"));
+        }
+    }
+    for (r, &s) in stats.health.iter().enumerate() {
+        let state = crate::coordinator::health::HealthState::from_u8(s).label();
+        lines.push(format!("newton_replica_health{{replica=\"{r}\",state=\"{state}\"}} 1"));
+    }
+    lines.push(format!("newton_served {}", stats.served));
+    lines.push(format!("newton_busy {}", stats.busy));
+    lines.push(format!("newton_batches {}", stats.batches));
+    lines.push(format!("newton_latency_us{{stat=\"p50\"}} {}", stats.p50_us));
+    lines.push(format!("newton_latency_us{{stat=\"p99\"}} {}", stats.p99_us));
+    // ledger aggregate -> live energy-per-inference gauge (0 until the
+    // first ledgered batch retires, or always 0 with the ledger off)
+    let energy_pj = snap
+        .counters
+        .iter()
+        .find(|(n, _)| n == "ledger.energy_pj")
+        .map_or(0, |&(_, v)| v);
+    let epi = if stats.served > 0 {
+        energy_pj as f64 / stats.served as f64
+    } else {
+        0.0
+    };
+    lines.push(format!("newton_energy_pj_per_infer {epi:.3}"));
+    let degraded =
+        stats.degraded || shared.watchdog_degraded.load(Ordering::Acquire);
+    lines.push(format!("newton_degraded {}", degraded as u8));
+    lines.sort();
+    let mut out = lines.join("\n");
+    out.push('\n');
+    out
+}
+
+/// Admin-plane thread: a nonblocking accept loop that answers every
+/// connection with one exposition and closes, interleaved with watchdog
+/// drift ticks. Exits within one poll of the drain flag flipping.
+fn admin_loop(shared: &Arc<Shared>, listener: TcpListener) {
+    if listener.set_nonblocking(true).is_err() {
+        return; // cannot poll the drain flag without nonblocking accepts
+    }
+    let mut dog = obs::watchdog::Watchdog::new();
+    let mut last_tick = Instant::now();
+    let mut last_energy = 0u64;
+    let mut last_served = 0u64;
+    while !shared.draining.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((mut s, _)) => {
+                let _ = s.set_write_timeout(Some(shared.timeouts.write_timeout));
+                let _ = s.write_all(render_exposition(shared).as_bytes());
+                // drop closes the socket: the scraper reads to EOF
+            }
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ADMIN_POLL);
+            }
+            Err(_) => std::thread::sleep(ADMIN_POLL),
+        }
+        if last_tick.elapsed() >= WATCHDOG_TICK {
+            last_tick = Instant::now();
+            // energy-per-inference over the tick window (not cumulative,
+            // so a drift shows up at the tick it happens, undiluted by
+            // history); 0 on idle ticks, which the watchdog ignores
+            let served = shared.stats.lock().unwrap().served;
+            let energy = obs::counter("ledger.energy_pj").get();
+            let d_served = served.saturating_sub(last_served);
+            let epi = if d_served > 0 {
+                energy.saturating_sub(last_energy) as f64 / d_served as f64
+            } else {
+                0.0
+            };
+            if d_served > 0 {
+                last_served = served;
+                last_energy = energy;
+            }
+            let p99 = shared.latency.percentile(0.99);
+            if dog.tick(p99 as f64, epi) {
+                shared.watchdog_degraded.store(true, Ordering::Release);
+            }
+        }
     }
 }

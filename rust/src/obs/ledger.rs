@@ -1,0 +1,409 @@
+//! Per-forward hardware cost ledger: the dimensional attribution layer on
+//! top of the flat `obs::metrics` counters (ARCHITECTURE.md §Observability).
+//!
+//! Newton's argument is an accounting argument — energy and ADC pressure
+//! attributed per sub-computation (PAPER.md §IV) — and the [`CostLedger`]
+//! makes the serving stack a measured instance of it: every forward pass
+//! counts the ADC conversions it performed *bucketed by resolved bit-width*
+//! (heterogeneous under the adaptive schedule — that is the paper's point),
+//! the slice iterations it executed vs skipped (zero/uniform planes from
+//! `ProgrammedXbar::slice_profile`, all-zero DAC iterations), the
+//! identity-ADC folds that bypassed the quantiser, and the rows it moved.
+//!
+//! The ledger is a plain-`u64` struct embedded in `xbar::RunScratch` — zero
+//! allocation, no atomics on the counting path — and merged upward:
+//! `RunScratch` → `ForwardScratch` → per-stage deltas in
+//! `ProgrammedCnn::run_stage` → per-batch/per-replica/per-request in
+//! `coordinator::golden`/`pipeline`, where `energy::TileModel::
+//! ledger_energy_pj` converts the counts into modeled picojoules.
+//!
+//! Counting is gated by a process-global flag ([`set_enabled`]/[`enabled`],
+//! the `TraceLevel` pattern): when off, an instrumented row costs one
+//! relaxed atomic load and ledger-on vs ledger-off forwards are pinned
+//! bit-identical by the property tests (`prop_ledger_enable_is_pure`); the
+//! wall-clock cost when on is gated by `ledger_overhead_b8 <= 1.03` in
+//! verify.sh.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use super::metrics::Counter;
+
+/// Resolved-bit-width buckets: index = effective bits of one quantising ADC
+/// conversion, clamped to the last bucket. `AdcKind` caps resolutions at 16
+/// bits, so 20 buckets never clamp in practice.
+pub const ADC_BIT_BUCKETS: usize = 20;
+
+/// Hardware-cost counters of one unit of forward work. Plain `u64`s — the
+/// counting path takes no locks and allocates nothing; aggregation is
+/// [`Self::merge`] up the scratch hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CostLedger {
+    /// Quantising ADC conversions by resolved bit-width (index = bits).
+    /// Lossy configs resolve `adc_bits`; the adaptive schedule truncates
+    /// `out_shift - place` further bits below the kept window, so one
+    /// forward spreads over several buckets — the heterogeneity Fig 12
+    /// prices.
+    pub adc_ops_by_bits: [u64; ADC_BIT_BUCKETS],
+    /// ADC samples folded as exact identities (lossless window, and the
+    /// fused masked-matmul path where every sample telescopes away): no
+    /// quantiser engages, only sample-and-hold + shift-add.
+    pub identity_folds: u64,
+    /// DAC iterations executed (some digit was non-zero).
+    pub iters_executed: u64,
+    /// DAC iterations skipped outright (all digits zero).
+    pub iters_skipped: u64,
+    /// Dense slice-iterations walked: one per (row, executed iteration,
+    /// dense slice).
+    pub slice_iters_executed: u64,
+    /// Uniform slice-iterations folded to one quantise-and-broadcast.
+    pub slice_iters_folded: u64,
+    /// Slice-iterations skipped: zero planes of executed iterations plus
+    /// every slice of a skipped iteration.
+    pub slice_iters_skipped: u64,
+    /// Batch rows run through the fused masked-matmul path.
+    pub fused_rows: u64,
+    /// Batch rows run through the digit-major slice engine.
+    pub slice_rows: u64,
+    /// Input elements streamed (rows × reduction length): the eDRAM/DAC
+    /// traffic a row move costs.
+    pub row_elems: u64,
+}
+
+impl CostLedger {
+    pub const fn new() -> Self {
+        CostLedger {
+            adc_ops_by_bits: [0; ADC_BIT_BUCKETS],
+            identity_folds: 0,
+            iters_executed: 0,
+            iters_skipped: 0,
+            slice_iters_executed: 0,
+            slice_iters_folded: 0,
+            slice_iters_skipped: 0,
+            fused_rows: 0,
+            slice_rows: 0,
+            row_elems: 0,
+        }
+    }
+
+    /// Count `n` quantising conversions resolving `bits` bits each.
+    #[inline]
+    pub fn count_adc(&mut self, bits: u32, n: u64) {
+        let i = (bits as usize).min(ADC_BIT_BUCKETS - 1);
+        self.adc_ops_by_bits[i] += n;
+    }
+
+    /// Total quantising ADC conversions across all bit-width buckets.
+    pub fn adc_ops(&self) -> u64 {
+        self.adc_ops_by_bits.iter().sum()
+    }
+
+    /// Rows moved through either engine.
+    pub fn rows(&self) -> u64 {
+        self.fused_rows + self.slice_rows
+    }
+
+    /// Fraction of slice-iterations the engine never executed (zero planes
+    /// + all-zero iterations); 0 when nothing was counted.
+    pub fn skipped_slice_frac(&self) -> f64 {
+        let total =
+            self.slice_iters_executed + self.slice_iters_folded + self.slice_iters_skipped;
+        if total == 0 {
+            0.0
+        } else {
+            self.slice_iters_skipped as f64 / total as f64
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        *self == CostLedger::new()
+    }
+
+    /// Add `other`'s counts into `self` (the scratch-to-aggregate step).
+    pub fn merge(&mut self, other: &CostLedger) {
+        for (a, b) in self
+            .adc_ops_by_bits
+            .iter_mut()
+            .zip(other.adc_ops_by_bits.iter())
+        {
+            *a += b;
+        }
+        self.identity_folds += other.identity_folds;
+        self.iters_executed += other.iters_executed;
+        self.iters_skipped += other.iters_skipped;
+        self.slice_iters_executed += other.slice_iters_executed;
+        self.slice_iters_folded += other.slice_iters_folded;
+        self.slice_iters_skipped += other.slice_iters_skipped;
+        self.fused_rows += other.fused_rows;
+        self.slice_rows += other.slice_rows;
+        self.row_elems += other.row_elems;
+    }
+
+    /// Counts accrued since `earlier` was copied out of the same ledger
+    /// (per-stage delta capture in `ProgrammedCnn::run_stage`).
+    pub fn delta_since(&self, earlier: &CostLedger) -> CostLedger {
+        let mut d = CostLedger::new();
+        for (i, slot) in d.adc_ops_by_bits.iter_mut().enumerate() {
+            *slot = self.adc_ops_by_bits[i].wrapping_sub(earlier.adc_ops_by_bits[i]);
+        }
+        d.identity_folds = self.identity_folds.wrapping_sub(earlier.identity_folds);
+        d.iters_executed = self.iters_executed.wrapping_sub(earlier.iters_executed);
+        d.iters_skipped = self.iters_skipped.wrapping_sub(earlier.iters_skipped);
+        d.slice_iters_executed = self
+            .slice_iters_executed
+            .wrapping_sub(earlier.slice_iters_executed);
+        d.slice_iters_folded = self
+            .slice_iters_folded
+            .wrapping_sub(earlier.slice_iters_folded);
+        d.slice_iters_skipped = self
+            .slice_iters_skipped
+            .wrapping_sub(earlier.slice_iters_skipped);
+        d.fused_rows = self.fused_rows.wrapping_sub(earlier.fused_rows);
+        d.slice_rows = self.slice_rows.wrapping_sub(earlier.slice_rows);
+        d.row_elems = self.row_elems.wrapping_sub(earlier.row_elems);
+        d
+    }
+}
+
+impl Default for CostLedger {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+static LEDGER_ON: AtomicBool = AtomicBool::new(false);
+
+/// Enable or disable cost counting process-wide (CLI: serve paths enable it
+/// unless `--no-ledger`). Off by default: a disabled ledger site costs one
+/// relaxed atomic load, and enabling it must not move a bit of any result
+/// (property-pinned).
+pub fn set_enabled(on: bool) {
+    LEDGER_ON.store(on, Ordering::Relaxed);
+}
+
+/// Whether forwards currently count hardware cost.
+#[inline]
+pub fn enabled() -> bool {
+    LEDGER_ON.load(Ordering::Relaxed)
+}
+
+/// Serialises unit tests that flip the process-global enable flag, so a
+/// toggle in one test cannot race another's ledger assertions (the
+/// integration tests keep their own lock in `tests/properties.rs`).
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Per-stage ledger counter names, indexed by pipeline stage (clamped to
+/// the table end — newton-mini has 4 stages). The stage dimension is owned
+/// by `ProgrammedCnn::run_stage`; conservation across stages is
+/// property-pinned (`prop_ledger_stage_sums_match_whole_model`).
+const STAGE_ADC_OPS: [&str; 8] = [
+    "ledger.stage0.adc_ops",
+    "ledger.stage1.adc_ops",
+    "ledger.stage2.adc_ops",
+    "ledger.stage3.adc_ops",
+    "ledger.stage4.adc_ops",
+    "ledger.stage5.adc_ops",
+    "ledger.stage6.adc_ops",
+    "ledger.stage7.adc_ops",
+];
+const STAGE_IDENTITY: [&str; 8] = [
+    "ledger.stage0.identity_folds",
+    "ledger.stage1.identity_folds",
+    "ledger.stage2.identity_folds",
+    "ledger.stage3.identity_folds",
+    "ledger.stage4.identity_folds",
+    "ledger.stage5.identity_folds",
+    "ledger.stage6.identity_folds",
+    "ledger.stage7.identity_folds",
+];
+
+/// Record one stage's ledger delta into the global registry. ADC ops and
+/// identity folds carry the stage dimension; the full-dimensional ledger is
+/// aggregated one level up (per batch, in `coordinator::golden`).
+pub fn record_stage(s: usize, delta: &CostLedger) {
+    let i = s.min(STAGE_ADC_OPS.len() - 1);
+    super::counter(STAGE_ADC_OPS[i]).add(delta.adc_ops());
+    super::counter(STAGE_IDENTITY[i]).add(delta.identity_folds);
+}
+
+/// Read back the per-stage ADC-op counter for stage `s` (conservation
+/// tests compare these sums against whole-model ledgers).
+pub fn stage_adc_ops(s: usize) -> u64 {
+    super::counter(STAGE_ADC_OPS[s.min(STAGE_ADC_OPS.len() - 1)]).get()
+}
+
+/// Per-replica ledger counter names (clamped to the table end). The
+/// replica dimension is owned by `coordinator::golden::run_batch`: the
+/// count is total ADC samples — quantising conversions plus identity
+/// folds — of the forward whose logits a replica served.
+const REPLICA_ADC_SAMPLES: [&str; 8] = [
+    "ledger.replica0.adc_samples",
+    "ledger.replica1.adc_samples",
+    "ledger.replica2.adc_samples",
+    "ledger.replica3.adc_samples",
+    "ledger.replica4.adc_samples",
+    "ledger.replica5.adc_samples",
+    "ledger.replica6.adc_samples",
+    "ledger.replica7.adc_samples",
+];
+
+/// Record one served forward's ADC pressure against the replica that ran
+/// it.
+pub fn record_replica(r: usize, delta: &CostLedger) {
+    let i = r.min(REPLICA_ADC_SAMPLES.len() - 1);
+    super::counter(REPLICA_ADC_SAMPLES[i]).add(delta.adc_ops() + delta.identity_folds);
+}
+
+struct ServeSites {
+    adc_ops: Arc<Counter>,
+    identity_folds: Arc<Counter>,
+    slice_iters_executed: Arc<Counter>,
+    slice_iters_folded: Arc<Counter>,
+    slice_iters_skipped: Arc<Counter>,
+    rows: Arc<Counter>,
+    energy_pj: Arc<Counter>,
+    energy_hist: Arc<super::metrics::Histogram>,
+    adc_hist: Arc<super::metrics::Histogram>,
+}
+
+fn serve_sites() -> &'static ServeSites {
+    static SITES: OnceLock<ServeSites> = OnceLock::new();
+    SITES.get_or_init(|| ServeSites {
+        adc_ops: super::counter("ledger.adc_ops"),
+        identity_folds: super::counter("ledger.identity_folds"),
+        slice_iters_executed: super::counter("ledger.slice_iters_executed"),
+        slice_iters_folded: super::counter("ledger.slice_iters_folded"),
+        slice_iters_skipped: super::counter("ledger.slice_iters_skipped"),
+        rows: super::counter("ledger.rows"),
+        energy_pj: super::counter("ledger.energy_pj"),
+        energy_hist: super::histogram("serve.energy_pj_per_infer"),
+        adc_hist: super::histogram("serve.adc_ops_per_infer"),
+    })
+}
+
+/// Record one served batch's ledger into the global registry: totals into
+/// the `ledger.*` counters (integer picojoules, so the aggregates ride the
+/// wire `Stats` metrics vec), per-inference figures into the
+/// `serve.energy_pj_per_infer` / `serve.adc_ops_per_infer` histograms.
+pub fn record_serving(delta: &CostLedger, n_real: usize, energy_pj: f64) {
+    let s = serve_sites();
+    s.adc_ops.add(delta.adc_ops());
+    s.identity_folds.add(delta.identity_folds);
+    s.slice_iters_executed.add(delta.slice_iters_executed);
+    s.slice_iters_folded.add(delta.slice_iters_folded);
+    s.slice_iters_skipped.add(delta.slice_iters_skipped);
+    s.rows.add(delta.rows());
+    s.energy_pj.add(energy_pj.round().max(0.0) as u64);
+    if n_real > 0 {
+        s.energy_hist
+            .record((energy_pj / n_real as f64).round().max(0.0) as u64);
+        s.adc_hist.record(delta.adc_ops() / n_real as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CostLedger {
+        let mut l = CostLedger::new();
+        l.count_adc(9, 10);
+        l.count_adc(5, 3);
+        l.count_adc(99, 2); // clamps to the last bucket
+        l.identity_folds = 7;
+        l.iters_executed = 4;
+        l.iters_skipped = 12;
+        l.slice_iters_executed = 20;
+        l.slice_iters_folded = 4;
+        l.slice_iters_skipped = 104;
+        l.slice_rows = 2;
+        l.row_elems = 256;
+        l
+    }
+
+    #[test]
+    fn adc_ops_sums_buckets_and_clamps() {
+        let l = sample();
+        assert_eq!(l.adc_ops(), 15);
+        assert_eq!(l.adc_ops_by_bits[9], 10);
+        assert_eq!(l.adc_ops_by_bits[5], 3);
+        assert_eq!(l.adc_ops_by_bits[ADC_BIT_BUCKETS - 1], 2);
+    }
+
+    #[test]
+    fn merge_adds_every_field() {
+        let mut a = sample();
+        let b = sample();
+        a.merge(&b);
+        assert_eq!(a.adc_ops(), 30);
+        assert_eq!(a.identity_folds, 14);
+        assert_eq!(a.slice_iters_skipped, 208);
+        assert_eq!(a.row_elems, 512);
+        assert_eq!(a.rows(), 4);
+    }
+
+    #[test]
+    fn delta_since_inverts_merge() {
+        let before = sample();
+        let mut after = before;
+        after.merge(&sample());
+        assert_eq!(after.delta_since(&before), before);
+        assert_eq!(before.delta_since(&before), CostLedger::new());
+        assert!(CostLedger::new().is_empty());
+        assert!(!before.is_empty());
+    }
+
+    #[test]
+    fn skipped_frac_is_a_fraction() {
+        let l = sample();
+        let f = l.skipped_slice_frac();
+        assert!((0.0..=1.0).contains(&f));
+        assert!((f - 104.0 / 128.0).abs() < 1e-12);
+        assert_eq!(CostLedger::new().skipped_slice_frac(), 0.0);
+    }
+
+    #[test]
+    fn enable_flag_round_trips() {
+        let _guard = test_guard();
+        let was = enabled();
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(was);
+    }
+
+    #[test]
+    fn stage_recording_accumulates_by_stage() {
+        let mut d = CostLedger::new();
+        d.count_adc(8, 5);
+        d.identity_folds = 2;
+        let s0 = stage_adc_ops(0);
+        record_stage(0, &d);
+        assert_eq!(stage_adc_ops(0), s0 + 5);
+        // out-of-table stages clamp instead of panicking
+        let tail = stage_adc_ops(99);
+        record_stage(99, &d);
+        assert_eq!(stage_adc_ops(99), tail + 5);
+    }
+
+    #[test]
+    fn serving_record_updates_counters_and_histograms() {
+        let d = sample();
+        let before = super::super::counter("ledger.adc_ops").get();
+        record_serving(&d, 2, 100.0);
+        assert_eq!(super::super::counter("ledger.adc_ops").get(), before + 15);
+        assert!(super::super::counter("ledger.energy_pj").get() >= 100);
+        let snap = super::super::metrics_snapshot();
+        let h = snap
+            .histograms
+            .iter()
+            .find(|(n, _)| n == "serve.energy_pj_per_infer")
+            .expect("energy histogram registered");
+        assert!(h.1.count >= 1);
+    }
+}

@@ -8,7 +8,7 @@
 //! threads through it (see ARCHITECTURE.md §Observability for the span
 //! taxonomy and the overhead discipline).
 //!
-//! Two halves:
+//! Four parts:
 //!
 //! * [`span`] — RAII spans with monotonic µs timestamps and per-thread
 //!   buffers draining into a bounded drop-oldest [`TraceSink`];
@@ -21,10 +21,20 @@
 //!   sampler) in a process-global registry snapshotted without stopping
 //!   writers; snapshots ride the net `Stats` frame into
 //!   `print_net_stats`, `net_summary.csv`, and `BENCH_net.json`.
+//! * [`ledger`] — the per-forward hardware [`CostLedger`] (ADC conversions
+//!   by resolved bit-width, slice iterations executed vs skipped, identity
+//!   folds, rows moved), threaded through the engine scratches and
+//!   aggregated per stage / replica / request; gated like [`TraceLevel`].
+//! * [`watchdog`] — baseline-window drift detection over the registry
+//!   (p99 latency, energy per inference) feeding the admin plane's
+//!   `degraded` flag and the `obs.anomaly.*` counters.
 
+pub mod ledger;
 pub mod metrics;
 pub mod span;
+pub mod watchdog;
 
+pub use ledger::CostLedger;
 pub use metrics::{
     counter, histogram, metrics_snapshot, Counter, Histogram, HistogramSnapshot, MetricsSnapshot,
     Registry,

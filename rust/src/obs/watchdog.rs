@@ -1,0 +1,167 @@
+//! Registry watchdog: drift detection against a startup baseline window.
+//!
+//! The admin plane (net/server.rs) runs a sampling loop over the metrics
+//! registry; this module is the pure state machine under it, so the drift
+//! logic is unit-testable without sockets or timers. A [`DriftWatch`]
+//! collects its first `baseline_window` positive observations, freezes
+//! their mean as the baseline, and flags any later observation exceeding
+//! `factor ×` baseline. [`Watchdog`] composes the two serving watches the
+//! tentpole asks for — request-latency p99 and modeled energy per
+//! inference — raising `obs.anomaly.*` counters and reporting a degraded
+//! verdict the admin exposition surfaces as `newton_degraded`.
+
+use super::counter;
+
+/// One drifting-signal detector: baseline = mean of the first
+/// `baseline_window` positive samples, anomaly = sample > factor × baseline.
+#[derive(Debug)]
+pub struct DriftWatch {
+    baseline_window: usize,
+    factor: f64,
+    seen: Vec<f64>,
+    baseline: Option<f64>,
+}
+
+impl DriftWatch {
+    pub fn new(baseline_window: usize, factor: f64) -> Self {
+        assert!(baseline_window > 0, "baseline window must be non-empty");
+        assert!(factor > 1.0, "a drift factor <= 1 flags the baseline itself");
+        DriftWatch {
+            baseline_window,
+            factor,
+            seen: Vec::new(),
+            baseline: None,
+        }
+    }
+
+    /// Feed one observation. Non-positive samples are ignored (no traffic
+    /// yet — an idle histogram reports 0). Returns `true` when the sample
+    /// exceeds `factor ×` the frozen baseline.
+    pub fn observe(&mut self, v: f64) -> bool {
+        if v <= 0.0 {
+            return false;
+        }
+        match self.baseline {
+            None => {
+                self.seen.push(v);
+                if self.seen.len() >= self.baseline_window {
+                    let mean = self.seen.iter().sum::<f64>() / self.seen.len() as f64;
+                    self.baseline = Some(mean);
+                    self.seen = Vec::new();
+                }
+                false
+            }
+            Some(b) => v > b * self.factor,
+        }
+    }
+
+    /// Frozen baseline, once the startup window filled.
+    pub fn baseline(&self) -> Option<f64> {
+        self.baseline
+    }
+}
+
+/// The serving watchdog: p99 latency and energy-per-inference drift
+/// against their startup baselines. Factors are deliberately loose — the
+/// watchdog flags regressions an operator should look at, not noise.
+#[derive(Debug)]
+pub struct Watchdog {
+    latency: DriftWatch,
+    energy: DriftWatch,
+}
+
+impl Watchdog {
+    /// Default windows: 5 baseline samples, 3× latency / 1.5× energy drift
+    /// (energy per inference is near-deterministic for a fixed model, so a
+    /// tighter bound still avoids false positives).
+    pub fn new() -> Self {
+        Watchdog {
+            latency: DriftWatch::new(5, 3.0),
+            energy: DriftWatch::new(5, 1.5),
+        }
+    }
+
+    /// One sampling tick. Raises `obs.anomaly.latency_p99` /
+    /// `obs.anomaly.energy_drift` counters for each drifting signal and
+    /// returns whether any fired (the admin plane latches this into its
+    /// `degraded` flag).
+    pub fn tick(&mut self, latency_p99_us: f64, energy_pj_per_infer: f64) -> bool {
+        let mut degraded = false;
+        if self.latency.observe(latency_p99_us) {
+            counter("obs.anomaly.latency_p99").inc();
+            degraded = true;
+        }
+        if self.energy.observe(energy_pj_per_infer) {
+            counter("obs.anomaly.energy_drift").inc();
+            degraded = true;
+        }
+        degraded
+    }
+}
+
+impl Default for Watchdog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_freezes_after_window() {
+        let mut w = DriftWatch::new(3, 2.0);
+        assert!(w.baseline().is_none());
+        assert!(!w.observe(10.0));
+        assert!(!w.observe(20.0));
+        assert!(!w.observe(30.0));
+        assert_eq!(w.baseline(), Some(20.0));
+        // later samples cannot move the baseline
+        assert!(!w.observe(1000.0) || w.baseline() == Some(20.0));
+        assert_eq!(w.baseline(), Some(20.0));
+    }
+
+    #[test]
+    fn drift_fires_only_beyond_factor() {
+        let mut w = DriftWatch::new(2, 3.0);
+        w.observe(10.0);
+        w.observe(10.0);
+        assert!(!w.observe(29.9), "below 3x baseline");
+        assert!(w.observe(30.1), "above 3x baseline");
+        // recovery: a sane sample after an anomaly does not flag
+        assert!(!w.observe(12.0));
+    }
+
+    #[test]
+    fn idle_zero_samples_never_fill_the_window() {
+        let mut w = DriftWatch::new(2, 2.0);
+        for _ in 0..10 {
+            assert!(!w.observe(0.0));
+        }
+        assert!(w.baseline().is_none());
+        w.observe(5.0);
+        w.observe(5.0);
+        assert_eq!(w.baseline(), Some(5.0));
+    }
+
+    #[test]
+    fn watchdog_raises_the_anomaly_counters() {
+        let lat_before = counter("obs.anomaly.latency_p99").get();
+        let en_before = counter("obs.anomaly.energy_drift").get();
+        let mut w = Watchdog::new();
+        // fill both baselines
+        for _ in 0..5 {
+            assert!(!w.tick(100.0, 1000.0));
+        }
+        // latency blows past 3x, energy stays flat
+        assert!(w.tick(500.0, 1000.0));
+        assert_eq!(counter("obs.anomaly.latency_p99").get(), lat_before + 1);
+        assert_eq!(counter("obs.anomaly.energy_drift").get(), en_before);
+        // energy drifts past 1.5x
+        assert!(w.tick(100.0, 1600.0));
+        assert_eq!(counter("obs.anomaly.energy_drift").get(), en_before + 1);
+        // both healthy again
+        assert!(!w.tick(100.0, 1000.0));
+    }
+}

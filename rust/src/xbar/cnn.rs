@@ -205,6 +205,20 @@ impl ForwardScratch {
             xbar: RunScratch::empty(),
         }
     }
+
+    /// Hardware cost accrued by forwards through this scratch since the
+    /// last [`Self::take_ledger`] (empty unless `obs::ledger` is enabled).
+    pub fn ledger(&self) -> &crate::obs::CostLedger {
+        &self.xbar.ledger
+    }
+
+    /// Drain the accrued cost ledger, resetting it to empty — the capture
+    /// point the serving layers use to attribute one forward's cost to one
+    /// request (and to discard residue from forwards that must not count,
+    /// e.g. health-check reruns).
+    pub fn take_ledger(&mut self) -> crate::obs::CostLedger {
+        self.xbar.take_ledger()
+    }
 }
 
 impl Default for ForwardScratch {
@@ -386,10 +400,14 @@ impl ProgrammedCnn {
     /// (only the last stage emits [`StageData::Logits`]).
     pub fn run_stage(&self, s: usize, input: &StageData, scratch: &mut ForwardScratch) -> StageData {
         let _sp = crate::obs::span("stage", "cnn").arg("s", s as u64);
+        // per-stage cost attribution: snapshot the scratch ledger around
+        // the stage body and credit the delta to this stage's registry
+        // counters (one Copy each way; nothing when the ledger is off)
+        let before = crate::obs::ledger::enabled().then(|| scratch.xbar.ledger);
         let StageData::Act(act) = input else {
             panic!("stage {s}: input must be a feature map, not logits");
         };
-        if s < self.convs.len() {
+        let out = if s < self.convs.len() {
             let conv = conv3x3_programmed(act, &self.convs[s], self.act_max, scratch);
             StageData::Act(maxpool2(&conv))
         } else {
@@ -399,7 +417,11 @@ impl ProgrammedCnn {
             });
             let ForwardScratch { raw, xbar, .. } = scratch;
             StageData::Logits(self.fc.run_with(&flat, raw, xbar))
+        };
+        if let Some(b) = before {
+            crate::obs::ledger::record_stage(s, &scratch.xbar.ledger.delta_since(&b));
         }
+        out
     }
 
     /// Full forward pass: (B,32,32,3) image -> (B,10) logits.
@@ -432,17 +454,40 @@ impl ProgrammedCnn {
     /// [`Self::forward`] on a caller-sized executor — the property tests
     /// sweep worker counts against [`Self::forward_seq`].
     pub fn forward_on(&self, img: &Tensor, exec: &crate::sched::Executor) -> Matrix {
+        self.forward_on_ledgered(img, exec).0
+    }
+
+    /// [`Self::forward_on`] returning the batch's hardware cost ledger
+    /// alongside the logits: each per-image job owns a fresh scratch and
+    /// hands its accrued ledger back with its row, merged here — the
+    /// executor fan-out would otherwise strand per-image cost inside
+    /// worker-local scratches. Empty ledger unless `obs::ledger` is
+    /// enabled; the logits are bit-identical to [`Self::forward_on`]
+    /// either way.
+    pub fn forward_on_ledgered(
+        &self,
+        img: &Tensor,
+        exec: &crate::sched::Executor,
+    ) -> (Matrix, crate::obs::CostLedger) {
         if img.b <= 1 || exec.workers() <= 1 {
-            return self.forward_seq(img);
+            let mut scratch = ForwardScratch::new();
+            let out = self.forward_seq_with(img, &mut scratch);
+            return (out, scratch.take_ledger());
         }
-        let rows = exec.map(img.b, |i| self.forward_seq(&img.image(i)).data);
+        let rows = exec.map(img.b, |i| {
+            let mut scratch = ForwardScratch::new();
+            let m = self.forward_seq_with(&img.image(i), &mut scratch);
+            (m.data, scratch.take_ledger())
+        });
         let cols = self.fc.out_cols();
         let mut out = Matrix::zeros(img.b, cols);
-        for (r, row) in rows.into_iter().enumerate() {
+        let mut ledger = crate::obs::CostLedger::new();
+        for (r, (row, l)) in rows.into_iter().enumerate() {
             debug_assert_eq!(row.len(), cols);
             out.data[r * cols..(r + 1) * cols].copy_from_slice(&row);
+            ledger.merge(&l);
         }
-        out
+        (out, ledger)
     }
 
     /// Sequential whole-batch forward — the reference the parallel split

@@ -141,6 +141,12 @@ pub struct RunScratch {
     cols: Vec<i64>,
     digits: Vec<i64>,
     digit_sums: Vec<i64>,
+    /// Hardware cost counted by runs using this scratch (plain `u64`s, no
+    /// allocation), accrued only while `obs::ledger::enabled()`. Callers
+    /// that attribute cost (stage/batch aggregation in `cnn`/`coordinator`)
+    /// snapshot and reset it between units of work; it never feeds back
+    /// into the numerics.
+    pub ledger: crate::obs::CostLedger,
 }
 
 impl RunScratch {
@@ -152,7 +158,14 @@ impl RunScratch {
             cols: Vec::new(),
             digits: Vec::new(),
             digit_sums: Vec::new(),
+            ledger: crate::obs::CostLedger::new(),
         }
+    }
+
+    /// Take the accrued cost ledger, leaving zeros (the delta-capture
+    /// primitive for per-stage and per-batch attribution).
+    pub fn take_ledger(&mut self) -> crate::obs::CostLedger {
+        std::mem::take(&mut self.ledger)
     }
 }
 
@@ -401,6 +414,19 @@ impl ProgrammedXbar {
         )
     }
 
+    /// Resolved bit-width of one quantising ADC conversion at `place`:
+    /// the deployed resolution (capped at the lossless budget) minus the
+    /// bits the adaptive schedule gates below the kept output window —
+    /// the bucket key of [`crate::obs::CostLedger::adc_ops_by_bits`].
+    fn resolved_adc_bits(&self, place: u32) -> u32 {
+        let base = self.p.adc_bits.min(self.p.lossless_adc_bits());
+        if self.adaptive && place < self.p.out_shift {
+            base.saturating_sub(self.p.out_shift - place)
+        } else {
+            base
+        }
+    }
+
     /// Fresh scratch sized for this installation.
     pub fn scratch(&self) -> RunScratch {
         let mut s = RunScratch::empty();
@@ -626,6 +652,10 @@ impl ProgrammedXbar {
             // chunk of the output (one uncontended lock per chunk) and
             // writes rows in place — no per-call buffers or copy-back —
             // with a private scratch, bit-identical to the sequential loop.
+            // Each job returns its private scratch's cost ledger so the
+            // fan-out loses no counts: they merge into the caller scratch
+            // (cost attribution needs a scratch to land in — callers that
+            // pass None get no ledger, by design).
             let pool = match exec {
                 Some(e) => *e,
                 None => crate::sched::Executor::new(workers),
@@ -635,7 +665,7 @@ impl ProgrammedXbar {
                 .chunks_mut(rows_per * n)
                 .map(|c| std::sync::Mutex::new(Some(c)))
                 .collect();
-            pool.map(chunk_slots.len(), |ci| {
+            let ledgers = pool.map(chunk_slots.len(), |ci| {
                 let chunk = chunk_slots[ci]
                     .lock()
                     .unwrap()
@@ -645,7 +675,13 @@ impl ProgrammedXbar {
                 for (j, out) in chunk.chunks_mut(n).enumerate() {
                     self.run_row(x, ci * rows_per + j, x_col0, x_off, out, &mut scratch);
                 }
+                scratch.ledger
             });
+            if let Some(s) = scratch {
+                for l in &ledgers {
+                    s.ledger.merge(l);
+                }
+            }
         }
     }
 
@@ -660,7 +696,16 @@ impl ProgrammedXbar {
         scratch: &mut RunScratch,
     ) {
         let n = self.n;
+        let ledger_on = crate::obs::ledger::enabled();
         if self.fast {
+            if ledger_on {
+                // every sample of an identity-ADC config telescopes away,
+                // so the whole row's ADC work is an analytic identity count
+                let l = &mut scratch.ledger;
+                l.fused_rows += 1;
+                l.row_elems += self.kdim as u64;
+                l.identity_folds += (self.iters * self.slices * n) as u64;
+            }
             // identity-ADC configs telescope back into a masked matmul:
             // sum_i sum_s (x_bits_i @ w_slice_s) << place == (x & m) @ (Wb & m')
             for k in 0..self.kdim {
@@ -688,8 +733,13 @@ impl ProgrammedXbar {
             cols,
             digits,
             digit_sums,
+            ledger,
         } = scratch;
         let kdim = self.kdim;
+        if ledger_on {
+            ledger.slice_rows += 1;
+            ledger.row_elems += kdim as u64;
+        }
 
         // 1. extract this row's DAC digits once (iteration-major `iters ×
         // kdim` plane) and the per-iteration digit sums. Iterated
@@ -714,7 +764,17 @@ impl ProgrammedXbar {
                 // 0 in every regime, so the whole iteration is skipped —
                 // u8-range activations streamed at 16 input bits skip
                 // half their iterations here
+                if ledger_on {
+                    ledger.iters_skipped += 1;
+                    ledger.slice_iters_skipped += self.slices as u64;
+                }
                 continue;
+            }
+            if ledger_on {
+                ledger.iters_executed += 1;
+                ledger.slice_iters_executed += dense as u64;
+                ledger.slice_iters_folded += self.uniform_slices.len() as u64;
+                ledger.slice_iters_skipped += self.zero_slices as u64;
             }
             let iter_place = i as u32 * self.p.dac_bits;
             if dense > 0 {
@@ -740,11 +800,17 @@ impl ProgrammedXbar {
                     let place = iter_place + shift;
                     let src = &cols[j * n..(j + 1) * n];
                     if self.lossless && (!self.adaptive || place >= self.p.out_shift) {
+                        if ledger_on {
+                            ledger.identity_folds += n as u64;
+                        }
                         // identity ADC: fold straight into the accumulator
                         for (o, &v) in out.iter_mut().zip(src) {
                             *o += v << place;
                         }
                     } else {
+                        if ledger_on {
+                            ledger.count_adc(self.resolved_adc_bits(place), n as u64);
+                        }
                         for (o, &v) in out.iter_mut().zip(src) {
                             *o += adc_sample(v, place, &self.p, self.adaptive) << place;
                         }
@@ -758,8 +824,14 @@ impl ProgrammedXbar {
                 let place = iter_place + shift;
                 let col = v * digit_sums[i];
                 let q = if self.lossless && (!self.adaptive || place >= self.p.out_shift) {
+                    if ledger_on {
+                        ledger.identity_folds += n as u64;
+                    }
                     col
                 } else {
+                    if ledger_on {
+                        ledger.count_adc(self.resolved_adc_bits(place), n as u64);
+                    }
                     adc_sample(col, place, &self.p, self.adaptive)
                 };
                 if q != 0 {
@@ -1107,5 +1179,97 @@ mod tests {
             let got = programmed.run_window_on(&x, 0, &crate::sched::Executor::new(workers));
             assert_eq!(got, want, "workers={workers}");
         }
+    }
+
+    #[test]
+    fn ledger_conserves_and_never_moves_a_bit() {
+        // the four ADC regimes of installed_run_is_bit_identical_...: the
+        // ledger must (a) stay empty when off, (b) change no output bit
+        // when on, (c) satisfy the conservation identities against the
+        // install-time slice profile
+        let _guard = crate::obs::ledger::test_guard();
+        for (adc_bits, out_shift, adaptive) in
+            [(9, 10, false), (9, 10, true), (6, 0, false), (7, 4, true)]
+        {
+            let p = XbarParams {
+                adc_bits,
+                out_shift,
+                ..XbarParams::default()
+            };
+            let (x, w) = rand_xw(131 + adc_bits as u64, 4, 9, &p);
+            let programmed = ProgrammedXbar::install(&w, &p, adaptive);
+            crate::obs::ledger::set_enabled(false);
+            let mut scratch = programmed.scratch();
+            let off = programmed.run_with_scratch(&x, &mut scratch);
+            assert!(scratch.ledger.is_empty(), "disabled ledger counted work");
+            crate::obs::ledger::set_enabled(true);
+            let on = programmed.run_with_scratch(&x, &mut scratch);
+            crate::obs::ledger::set_enabled(false);
+            assert_eq!(off, on, "enabling the ledger moved bits");
+            let l = scratch.take_ledger();
+            assert!(scratch.ledger.is_empty(), "take_ledger left residue");
+
+            let rows = x.rows as u64;
+            let n = programmed.n() as u64;
+            let iters = programmed.iters() as u64;
+            let (dense, uniform, zero) = programmed.slice_profile();
+            assert_eq!(l.row_elems, rows * programmed.kdim() as u64);
+            if programmed.is_fused() {
+                assert_eq!(l.fused_rows, rows);
+                assert_eq!(l.slice_rows, 0);
+                assert_eq!(l.adc_ops(), 0, "fused path quantises nothing");
+                assert_eq!(
+                    l.identity_folds,
+                    rows * iters * programmed.slices() as u64 * n
+                );
+                assert_eq!(
+                    l.slice_iters_executed + l.slice_iters_folded + l.slice_iters_skipped,
+                    0,
+                    "fused path walks no slices (profile is all zero)"
+                );
+            } else {
+                assert_eq!(l.slice_rows, rows);
+                assert_eq!(l.iters_executed + l.iters_skipped, rows * iters);
+                // slice iterations account exactly against slice_profile()
+                assert_eq!(
+                    l.slice_iters_executed + l.slice_iters_folded + l.slice_iters_skipped,
+                    rows * iters * (dense + uniform + zero) as u64
+                );
+                assert_eq!(l.slice_iters_executed, l.iters_executed * dense as u64);
+                assert_eq!(l.slice_iters_folded, l.iters_executed * uniform as u64);
+                // every non-skipped slice sample is quantised or folded
+                assert_eq!(
+                    l.adc_ops() + l.identity_folds,
+                    (l.slice_iters_executed + l.slice_iters_folded) * n
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_ledger_buckets_are_heterogeneous() {
+        // the adaptive schedule truncates more bits at lower places, so a
+        // lossy+adaptive run must spread its conversions over several
+        // resolved-width buckets — the heterogeneity the ledger exists to
+        // expose
+        let _guard = crate::obs::ledger::test_guard();
+        let p = XbarParams {
+            adc_bits: 7,
+            out_shift: 4,
+            ..XbarParams::default()
+        };
+        let (x, w) = rand_xw(17, 3, 8, &p);
+        let programmed = ProgrammedXbar::install(&w, &p, true);
+        crate::obs::ledger::set_enabled(true);
+        let mut scratch = programmed.scratch();
+        let _ = programmed.run_with_scratch(&x, &mut scratch);
+        crate::obs::ledger::set_enabled(false);
+        let l = scratch.take_ledger();
+        let populated = l.adc_ops_by_bits.iter().filter(|&&c| c > 0).count();
+        assert!(
+            populated >= 2,
+            "adaptive run used {populated} bit-width bucket(s): {:?}",
+            l.adc_ops_by_bits
+        );
     }
 }

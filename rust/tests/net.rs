@@ -82,6 +82,8 @@ impl Engine for EchoEngine {
             n_real: b.n_real,
             logits,
             max_abs_err: 0,
+            cost: newton::obs::CostLedger::new(),
+            energy_pj: 0.0,
         }
     }
 }
@@ -422,6 +424,155 @@ fn health_report_rides_the_stats_frame() {
     server.shutdown();
 }
 
+/// Echo engine that also fills the batch cost ledger with a fixed
+/// per-real-row profile, to exercise the per-request CostReport division
+/// without the golden engine's compute cost.
+struct CostedEcho(EchoEngine);
+
+impl Engine for CostedEcho {
+    fn image_elems(&self) -> usize {
+        self.0.image_elems()
+    }
+
+    fn batch_capacity(&self) -> usize {
+        self.0.batch_capacity()
+    }
+
+    fn n_replicas(&self) -> usize {
+        self.0.n_replicas()
+    }
+
+    fn describe(&self) -> String {
+        "echo stub + ledger".to_string()
+    }
+
+    fn run(&self, index: usize, b: &Batch) -> EngineBatch {
+        let mut out = self.0.run(index, b);
+        for _ in 0..b.n_real {
+            out.cost.count_adc(8, 10); // 10 conversions per real row
+            out.cost.identity_folds += 3;
+            out.cost.slice_iters_executed += 4;
+            out.cost.slice_iters_folded += 2;
+            out.cost.slice_iters_skipped += 1;
+            out.cost.slice_rows += 1;
+            out.cost.row_elems += self.0.elems as u64;
+        }
+        out.energy_pj = 50.0 * b.n_real as f64;
+        out
+    }
+}
+
+#[test]
+fn cost_report_rides_the_reply_only_when_enabled() {
+    // proto v3 opt-in: with --cost-reports the Reply frame carries the
+    // batch ledger divided per real request; without it the tail is
+    // absent (zero extra bytes on the wire, pinned in proto's unit tests)
+    let server = NetServer::start(
+        Arc::new(CostedEcho(EchoEngine::small())),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_inflight: 16,
+            batch_wait: Duration::from_millis(1),
+            cost_reports: true,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    for i in 0..3u64 {
+        match c.infer(i, &[1, 2, 3, 4]).unwrap() {
+            InferOutcome::Ok(r) => {
+                let cost = r.cost.expect("cost_reports on but the reply carried none");
+                assert_eq!(cost.adc_ops, 10, "per-request ADC-op division");
+                assert_eq!(cost.identity_folds, 3);
+                assert_eq!(cost.slice_iters_executed, 4);
+                assert_eq!(cost.slice_iters_folded, 2);
+                assert_eq!(cost.slice_iters_skipped, 1);
+                assert_eq!(cost.rows, 1);
+                assert!(
+                    (cost.energy_pj - 50.0).abs() < 1e-9,
+                    "per-request energy division, got {}",
+                    cost.energy_pj
+                );
+            }
+            InferOutcome::Busy => panic!("busy under a 16-deep limit"),
+        }
+    }
+    server.shutdown();
+
+    // default config: same engine, no cost tail on the reply
+    let server = start(Arc::new(CostedEcho(EchoEngine::small())), 16);
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    match c.infer(9, &[1, 1, 1, 1]).unwrap() {
+        InferOutcome::Ok(r) => assert!(r.cost.is_none(), "cost report rode a disabled reply"),
+        InferOutcome::Busy => panic!("busy"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn admin_plane_serves_a_sorted_exposition() {
+    // pull-based introspection: `--admin-addr` binds a second listener
+    // that answers every connection with one name-sorted text exposition
+    // (counters, histograms, replica health, serving gauges) and closes;
+    // it dies with the drain
+    let server = NetServer::start(
+        Arc::new(HealthyEcho(EchoEngine {
+            elems: 4,
+            capacity: 2,
+            replicas: 2,
+        })),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            admin_addr: Some("127.0.0.1:0".to_string()),
+            max_inflight: 16,
+            batch_wait: Duration::from_millis(1),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let admin = server.admin_addr().expect("admin plane requested but not bound");
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    for i in 0..4u64 {
+        assert!(matches!(c.infer(i, &[1, 2, 3, 4]).unwrap(), InferOutcome::Ok(_)));
+    }
+
+    let body = newton::net::scrape_statz(admin, Duration::from_secs(5)).unwrap();
+    assert!(body.ends_with('\n'), "exposition must end with a newline");
+    let lines: Vec<&str> = body.lines().collect();
+    let mut sorted = lines.clone();
+    sorted.sort_unstable();
+    assert_eq!(lines, sorted, "exposition lines are not name-sorted:\n{body}");
+    assert!(lines.contains(&"newton_served 4"), "served gauge missing:\n{body}");
+    assert!(lines.contains(&"newton_degraded 0"), "degraded gauge missing:\n{body}");
+    assert!(
+        lines.iter().any(|l| l.starts_with("newton_energy_pj_per_infer ")),
+        "energy-per-inference gauge missing:\n{body}"
+    );
+    assert!(
+        lines.contains(&"newton_replica_health{replica=\"0\",state=\"healthy\"} 1"),
+        "replica 0 health line missing:\n{body}"
+    );
+    assert!(
+        lines.contains(&"newton_replica_health{replica=\"1\",state=\"quarantined\"} 1"),
+        "replica 1 health line missing:\n{body}"
+    );
+    assert!(
+        lines.iter().any(|l| l.starts_with("newton_latency_us{stat=\"p99\"}")),
+        "latency gauge missing:\n{body}"
+    );
+    // one exposition per connection: a second scrape answers too
+    let again = newton::net::scrape_statz(admin, Duration::from_secs(5)).unwrap();
+    assert!(again.contains("newton_served 4"), "second scrape diverged:\n{again}");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 4);
+    assert!(
+        TcpStream::connect(admin).is_err(),
+        "admin listener survived the drain"
+    );
+}
+
 #[test]
 fn chaos_lanes_still_cover_every_request_exactly_once() {
     // chaos mode over real sockets: client-side fault injection tears
@@ -491,6 +642,7 @@ fn retry_attempts_share_one_trace_id() {
                         replica: 0,
                         max_abs_err: 0,
                         logits: vec![42],
+                        cost: None,
                     }),
                 )
                 .unwrap();

@@ -632,6 +632,169 @@ fn trace_completeness_every_pipeline_cell_recorded_once() {
     assert!(replicas.len() >= 2, "pipelined cells all ran on one replica");
 }
 
+/// The cost-ledger tests flip the process-global `obs::ledger` enable
+/// flag and read the shared per-stage registry counters, so — like the
+/// trace tests above — everything touching them serialises on one lock
+/// (the crate-internal ledger test guard is not visible to integration
+/// tests; same poison-tolerant pattern as `TRACE_LOCK`).
+static LEDGER_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn ledger_guard() -> std::sync::MutexGuard<'static, ()> {
+    LEDGER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn prop_ledger_enable_is_pure() {
+    // the cost ledger's purity pin, companion to
+    // prop_forward_scratch_reuse_is_pure: counting hardware cost must
+    // change no output bit, and a disabled ledger must count nothing
+    let _g = ledger_guard();
+    check("ledger-pure", 8, |rng| {
+        let p = XbarParams {
+            adc_bits: 6 + rng.below(4) as u32,
+            out_shift: rng.below(12) as u32,
+            ..XbarParams::default()
+        };
+        let adaptive = rng.below(2) == 1;
+        let kdim = 130 + rng.below(140) as usize; // always spans 2 chunks
+        let n = 1 + rng.below(8) as usize;
+        let w = rand_matrix(rng, kdim, n, -(1 << 15), 1 << 15);
+        let layer = ProgrammedLinear::install(&w, &p, adaptive);
+        let x = rand_matrix(rng, 2, kdim, 0, 1 << 16);
+        let mut raw = Matrix::zeros(0, 0);
+        let mut xs = RunScratch::empty();
+        newton::obs::ledger::set_enabled(false);
+        let off = layer.run_with(&x, &mut raw, &mut xs);
+        prop_assert!(xs.ledger.is_empty(), "disabled ledger counted work");
+        newton::obs::ledger::set_enabled(true);
+        let on = layer.run_with(&x, &mut raw, &mut xs);
+        newton::obs::ledger::set_enabled(false);
+        prop_assert!(off == on, "enabling the ledger moved bits");
+        prop_assert!(
+            !xs.take_ledger().is_empty(),
+            "enabled ledger counted nothing across a two-chunk layer"
+        );
+        prop_assert!(
+            layer.run_with(&x, &mut raw, &mut xs) == off,
+            "run after disabling the ledger diverged"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ledger_slice_accounting_is_conserved() {
+    // integration-side conservation sweep over random geometry in all
+    // four ADC regimes: executed + folded + skipped slice iterations
+    // must account exactly against the install-time slice profile, and
+    // every non-skipped slice sample must be either quantised (an ADC
+    // op) or folded as an identity — nothing vanishes, nothing is
+    // double-counted
+    let _g = ledger_guard();
+    check("ledger-conservation", 12, |rng| {
+        let (adc_bits, out_shift, adaptive) = [
+            (9u32, 10u32, false), // lossless -> fused fast path
+            (9, 10, true),        // lossless + adaptive -> slice engine
+            (6, 0, false),        // lossy
+            (7, 4, true),         // lossy + adaptive
+        ][rng.below(4) as usize];
+        let p = XbarParams {
+            adc_bits,
+            out_shift,
+            ..XbarParams::default()
+        };
+        let b = 1 + rng.below(4) as usize;
+        let k = 1 + rng.below(p.rows as u64) as usize;
+        let n = 1 + rng.below(9) as usize;
+        let w = rand_matrix(rng, k, n, -(1 << 15), 1 << 15);
+        let x = rand_matrix(rng, b, k, 0, 1 << 16);
+        let programmed = ProgrammedXbar::install(&w, &p, adaptive);
+        newton::obs::ledger::set_enabled(true);
+        let mut scratch = programmed.scratch();
+        let _ = programmed.run_with_scratch(&x, &mut scratch);
+        newton::obs::ledger::set_enabled(false);
+        let l = scratch.take_ledger();
+
+        let rows = b as u64;
+        let iters = programmed.iters() as u64;
+        let n64 = n as u64;
+        let (dense, uniform, zero) = programmed.slice_profile();
+        prop_assert!(
+            l.row_elems == rows * programmed.kdim() as u64,
+            "row movement miscounted (adc={adc_bits} shift={out_shift} adaptive={adaptive})"
+        );
+        if programmed.is_fused() {
+            prop_assert!(
+                l.fused_rows == rows && l.slice_rows == 0,
+                "fused run attributed rows to the slice engine"
+            );
+            prop_assert!(l.adc_ops() == 0, "fused path quantised something");
+            prop_assert!(
+                l.identity_folds == rows * iters * programmed.slices() as u64 * n64,
+                "fused identity folds diverged from the analytic count"
+            );
+        } else {
+            prop_assert!(
+                l.slice_rows == rows && l.fused_rows == 0,
+                "slice-engine run attributed rows to the fused path"
+            );
+            prop_assert!(
+                l.iters_executed + l.iters_skipped == rows * iters,
+                "DAC iterations leaked (adc={adc_bits} shift={out_shift} adaptive={adaptive})"
+            );
+            prop_assert!(
+                l.slice_iters_executed + l.slice_iters_folded + l.slice_iters_skipped
+                    == rows * iters * (dense + uniform + zero) as u64,
+                "slice iterations do not account against slice_profile() \
+                 (adc={adc_bits} shift={out_shift} adaptive={adaptive})"
+            );
+            prop_assert!(
+                l.adc_ops() + l.identity_folds
+                    == (l.slice_iters_executed + l.slice_iters_folded) * n64,
+                "a non-skipped slice sample was neither quantised nor folded"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ledger_stage_attribution_sums_to_the_whole_forward() {
+    // per-stage attribution conservation: the `ledger.stage<i>.adc_ops`
+    // registry deltas captured by ProgrammedCnn::run_stage across one
+    // sequential forward must sum exactly to the whole-forward scratch
+    // ledger — no stage loses or double-counts conversions
+    use newton::xbar::cnn::{random_images, ForwardScratch, MiniCnn};
+
+    let _g = ledger_guard();
+    let p = XbarParams {
+        adc_bits: 8, // lossy -> slice engine everywhere, every stage quantises
+        ..XbarParams::default()
+    };
+    let cnn = MiniCnn::new(7).program(&p, true);
+    let img = random_images(2, 19);
+    let before: Vec<u64> = (0..cnn.n_stages())
+        .map(newton::obs::ledger::stage_adc_ops)
+        .collect();
+    newton::obs::ledger::set_enabled(true);
+    let mut scratch = ForwardScratch::new();
+    let _ = cnn.forward_seq_with(&img, &mut scratch);
+    newton::obs::ledger::set_enabled(false);
+    let whole = scratch.take_ledger();
+    assert!(whole.adc_ops() > 0, "lossy forward quantised nothing");
+    let mut stage_sum = 0u64;
+    for s in 0..cnn.n_stages() {
+        let delta = newton::obs::ledger::stage_adc_ops(s) - before[s];
+        assert!(delta > 0, "stage {s} attributed no ADC conversions");
+        stage_sum += delta;
+    }
+    assert_eq!(
+        stage_sum,
+        whole.adc_ops(),
+        "per-stage ADC-op attribution does not sum to the whole forward"
+    );
+}
+
 #[test]
 fn prop_adaptive_within_bound_of_exact() {
     // the adaptive ADC's rounding never moves a scaled output by more than

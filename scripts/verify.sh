@@ -20,28 +20,28 @@ echo "== cargo test --release -q (release-gated suites) =="
 cargo test --release -q
 
 echo
-echo "== cargo clippy (rust/src/{xbar,net,faults,obs}/ gate) =="
+echo "== cargo clippy (rust/src/{xbar,net,faults,obs,energy}/ gate) =="
 # clippy cannot be scoped to one module, so run it on the lib at
 # `-D warnings` severity and gate only the subtrees written under the
 # clippy regime: any diagnostic pointing into rust/src/xbar/, rust/src/net/,
-# rust/src/faults/ or rust/src/obs/ fails the build, drift elsewhere stays
-# advisory (seed code predates the clippy adoption)
+# rust/src/faults/, rust/src/obs/ or rust/src/energy/ fails the build,
+# drift elsewhere stays advisory (seed code predates the clippy adoption)
 if cargo clippy --version >/dev/null 2>&1; then
   clippy_status=0
   clippy_out=$(cargo clippy -q --lib --message-format=short -- -D warnings 2>&1) || clippy_status=$?
-  gated_hits=$(printf '%s\n' "$clippy_out" | grep 'src/xbar/\|src/net/\|src/faults/\|src/obs/' || true)
+  gated_hits=$(printf '%s\n' "$clippy_out" | grep 'src/xbar/\|src/net/\|src/faults/\|src/obs/\|src/energy/' || true)
   if [ -n "$gated_hits" ]; then
     printf '%s\n' "$gated_hits"
-    echo "FAIL: clippy diagnostics in rust/src/{xbar,net,faults,obs}/ (-D warnings gate)"
+    echo "FAIL: clippy diagnostics in rust/src/{xbar,net,faults,obs,energy}/ (-D warnings gate)"
     exit 1
   elif [ "$clippy_status" -ne 0 ]; then
     # clippy exited non-zero with no gated diagnostics: either lints in
     # other (advisory) modules or an incomplete run — do not report a
     # clean gate in either case, and surface the tail for triage
     printf '%s\n' "$clippy_out" | tail -5
-    echo "WARN: clippy exited ${clippy_status} with no gated diagnostics; xbar/net/faults/obs gate inconclusive (other lints stay advisory)"
+    echo "WARN: clippy exited ${clippy_status} with no gated diagnostics; xbar/net/faults/obs/energy gate inconclusive (other lints stay advisory)"
   else
-    echo "clippy xbar/net/faults/obs gate OK"
+    echo "clippy xbar/net/faults/obs/energy gate OK"
   fi
 else
   echo "clippy unavailable; skipped"
@@ -198,6 +198,64 @@ fi
 echo "chaos smoke OK (quarantines: ${quarantines}, bit-exact under 5% wire faults, clean drain)"
 
 echo
+echo "== admin-plane smoke: live exposition mid-serve, scraped via newton statz =="
+# serve-net with the pull-based admin plane up (--admin-addr) and replica
+# health armed; drive traffic WITHOUT shutting down, scrape the exposition
+# through the `statz` subcommand while the server is still serving, and
+# assert it carries a nonzero live energy-per-inference gauge and one
+# health line per replica — observability without the Stats frame. The
+# drain arrives as a second, tiny bench-net run.
+portfile=$(mktemp)
+adminfile=$(mktemp)
+"$newton_bin" serve-net --adc exact --replicas 2 --health \
+  --addr 127.0.0.1:0 --port-file "$portfile" \
+  --admin-addr 127.0.0.1:0 --admin-port-file "$adminfile" &
+srv_pid=$!
+trap 'kill "$srv_pid" 2>/dev/null || true' EXIT
+for _ in $(seq 1 150); do
+  [ -s "$portfile" ] && [ -s "$adminfile" ] && break
+  sleep 0.2
+done
+if ! [ -s "$portfile" ] || ! [ -s "$adminfile" ]; then
+  echo "FAIL: serve-net never wrote its serving/admin addresses"
+  exit 1
+fi
+addr=$(cat "$portfile")
+adminaddr=$(cat "$adminfile")
+"$newton_bin" bench-net --addr "$addr" --requests 32 --concurrency 4
+statz_out=$(mktemp)
+"$newton_bin" statz --addr "$adminaddr" | tee "$statz_out"
+if command -v python3 >/dev/null 2>&1; then
+  python3 - "$statz_out" <<'PY'
+import sys
+lines = [l for l in open(sys.argv[1]).read().splitlines() if l]
+assert lines == sorted(lines), "exposition lines are not name-sorted"
+gauges = {}
+for l in lines:
+    name, _, value = l.rpartition(" ")
+    assert name, f"malformed exposition line: {l!r}"
+    gauges[name] = float(value)
+epi = gauges.get("newton_energy_pj_per_infer")
+assert epi is not None, "newton_energy_pj_per_infer line missing"
+assert epi > 0, f"energy per inference is {epi}, want nonzero (ledger live)"
+health = [n for n in gauges if n.startswith("newton_replica_health{")]
+assert len(health) == 2, f"want one health line per replica, got {health}"
+assert gauges.get("newton_served", 0) >= 32, "served gauge below the driven load"
+assert gauges.get("newton_degraded") in (0.0, 1.0), "degraded gauge missing"
+print(f"admin smoke OK ({len(lines)} lines, {epi:.1f} pJ/inference, "
+      f"{len(health)} replica health lines)")
+PY
+else
+  grep -q '^newton_energy_pj_per_infer ' "$statz_out" || {
+    echo "FAIL: exposition misses newton_energy_pj_per_infer"; exit 1; }
+  echo "WARN: python3 unavailable; admin exposition structurally unchecked"
+fi
+"$newton_bin" bench-net --addr "$addr" --requests 1 --concurrency 1 --shutdown
+wait "$srv_pid"
+trap - EXIT
+rm -f "$portfile" "$adminfile" "$statz_out"
+
+echo
 echo "== perf smoke: cargo bench --bench perf_hotpath -- --smoke =="
 cargo bench --bench perf_hotpath -- --smoke
 
@@ -256,6 +314,19 @@ if [ -f BENCH_hotpath.json ]; then
     fi
   else
     echo "WARN: BENCH_hotpath.json carries no trace_overhead_b8; skipped"
+  fi
+  ledger=$(awk -F': ' '/"ledger_overhead_b8":/ {gsub(/[,[:space:]]/, "", $2); print $2; exit}' BENCH_hotpath.json)
+  if [ -n "${ledger}" ]; then
+    # ledger-on vs ledger-off ratio of the pipelined b8 forward; counting
+    # hardware cost must stay within 3% of the uncounted hot path
+    if awk "BEGIN { exit !(${ledger} <= 1.03) }"; then
+      echo "ledger overhead (pipelined b8, counts on): ${ledger}x (target <= 1.03x) OK"
+    else
+      echo "FAIL: ledger overhead ${ledger}x above the 1.03x target"
+      exit 1
+    fi
+  else
+    echo "WARN: BENCH_hotpath.json carries no ledger_overhead_b8; skipped"
   fi
 else
   echo "WARN: BENCH_hotpath.json absent; perf-target assert skipped"
