@@ -15,7 +15,9 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
     ("verify", "run artifacts against golden test vectors"),
     ("serve", "in-process batched serving demo (--adc, --replicas, --pipeline, --trace-out)"),
     ("serve-net", "TCP serving endpoint (--addr, --adc, --replicas, --pipeline, --health, --admin-addr, --cost-reports, --trace-out)"),
-    ("bench-net", "load-generate against a serve-net endpoint (--addr; --concurrency 1,8,64 sweeps; --fault-rate = chaos; --trace-out)"),
+    ("worker", "cluster shard worker: serves the shard plane on --addr (--seed, --adc, --admin-addr)"),
+    ("cluster-serve", "shard the stage pipeline across --workers A,B,C and serve clients on --addr"),
+    ("bench-net", "load-generate against a serve-net endpoint (--addr; --concurrency 1,8,64 sweeps; --fault-rate = chaos; --cluster = failover benchmark; --trace-out)"),
     ("statz", "scrape a serve-net admin plane (--addr; see serve-net --admin-addr)"),
     ("sched-stress", "work-stealing executor stress smoke (CI)"),
     ("export", "write every figure's data series as CSV (--out)"),
@@ -130,7 +132,16 @@ mod tests {
     #[test]
     fn command_table_is_complete_and_unique() {
         let names: Vec<&str> = SUBCOMMANDS.iter().map(|(n, _)| *n).collect();
-        for want in ["serve", "serve-net", "bench-net", "export", "sched-stress", "list"] {
+        for want in [
+            "serve",
+            "serve-net",
+            "worker",
+            "cluster-serve",
+            "bench-net",
+            "export",
+            "sched-stress",
+            "list",
+        ] {
             assert!(names.contains(&want), "missing {want}");
         }
         let mut dedup = names.clone();

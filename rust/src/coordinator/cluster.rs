@@ -1,0 +1,1569 @@
+//! Sharded multi-process serving: a coordinator that splits the
+//! newton-mini stage pipeline across worker *processes* over the v3 wire
+//! protocol, with worker lifecycle tracking, failure detection, and
+//! automatic re-sharding onto survivors.
+//!
+//! The software shape mirrors the paper's hardware shape one level up:
+//! where [`crate::coordinator::pipeline`] pipelines stages across threads
+//! the way Newton pipelines layers across tiles on one chip, this module
+//! pipelines stages across *processes* the way a multi-chip deployment
+//! forwards activations over the inter-chip mesh. A
+//! [`crate::mapping::ShardMap`] assigns the `n_conv + 1` stages to worker
+//! shards (contiguous, classifier isolated under
+//! [`StagePolicy::newton`]); its `segments()` are literally the
+//! forwarding plan — one wire hop per occupied shard.
+//!
+//! Robustness model, in one paragraph: every worker programs the **full**
+//! model at startup from the shared `(seed, adc)` config, so installs are
+//! bit-identical across processes and "installing" a shard is flipping a
+//! served-stage window — a re-shard after a failure is one small frame
+//! per survivor, not a weight transfer. The coordinator tracks each
+//! worker through a [`WorkerState`] lifecycle (Joining → Ready → Suspect
+//! → Dead → Rejoining) fed by heartbeats (admin-plane scrapes, with a
+//! stats round-trip fallback) and by retryable wire errors on the data
+//! path. Any worker death triggers [`ClusterEngine::reshard`]: survivors
+//! get a new generation's windows, the batch restarts from its input, and
+//! because the forward is integer-exact and every install is
+//! bit-identical, replies stay bit-exact across arbitrary kill schedules.
+//! When the pool empties entirely the engine degrades to an in-process
+//! [`GoldenServer`] fallback and latches `degraded` — visible through
+//! [`Engine::degraded`], the admin exposition, and `cluster.*` counters.
+//!
+//! Chaos is first-class: inter-shard links are wrapped in
+//! [`crate::faults::FaultyStream`] (rate 0 = passthrough), and
+//! `bench-net --cluster` drives seeded [`crate::faults::ChaosPlan`]
+//! schedules that kill/stall/restart worker processes mid-load while
+//! asserting bit-exactness (`--expect-exact`).
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::config::{AdcKind, XbarParams};
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::golden::{GoldenServer, IMAGE_ELEMS};
+use crate::coordinator::health::{rebaseline_marker, HealthReport};
+use crate::coordinator::health::HealthState;
+use crate::faults::FaultyStream;
+use crate::mapping::{ShardMap, StagePolicy};
+use crate::net::proto::{
+    self, FwdReply, FwdRequest, Msg, ProtoError, ShardAck, ShardInstall, StatsSnapshot,
+    WireError, WireStage,
+};
+use crate::net::{Backoff, Client, Engine, EngineBatch, NetError};
+use crate::obs;
+use crate::obs::CostLedger;
+use crate::xbar::cnn::{ForwardScratch, MiniCnn, ProgrammedCnn, StageData, Tensor};
+use crate::xbar::Matrix;
+
+/// Largest batch the cluster path serves: the widest stage boundary is
+/// `batch × 16×16×32` i64s after stage 0, and 64 × that (512 KiB × 8)
+/// stays under [`proto::MAX_PAYLOAD`] with frame overhead to spare.
+pub const MAX_CLUSTER_BATCH: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Worker lifecycle
+// ---------------------------------------------------------------------------
+
+/// One worker's place in the coordinator's lifecycle state machine.
+///
+/// ```text
+/// Joining ──install ack──▶ Ready ◀──heartbeat ok── Suspect
+///    │                       │ missed ≥ suspect_after ▲
+///    │                       └───────────────────────-┘
+///    │ missed ≥ dead_after / wire failure
+///    ▼                                   heartbeat ok
+///  Dead ─────────────────────────────▶ Rejoining ──install ack──▶ Ready
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Known but not yet serving a shard window (startup).
+    Joining,
+    /// Heartbeating and holding the current generation's window.
+    Ready,
+    /// Missed heartbeats; still in the map, one good beat heals it.
+    Suspect,
+    /// Declared failed: out of the map until it proves itself again.
+    Dead,
+    /// A dead worker answered a heartbeat; needs a fresh install before
+    /// it can carry stages again.
+    Rejoining,
+}
+
+impl WorkerState {
+    /// Stable byte for stats/exposition.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            WorkerState::Joining => 0,
+            WorkerState::Ready => 1,
+            WorkerState::Suspect => 2,
+            WorkerState::Dead => 3,
+            WorkerState::Rejoining => 4,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            WorkerState::Joining => "joining",
+            WorkerState::Ready => "ready",
+            WorkerState::Suspect => "suspect",
+            WorkerState::Dead => "dead",
+            WorkerState::Rejoining => "rejoining",
+        }
+    }
+
+    /// Projection onto the replica-health vocabulary the stats plane
+    /// already speaks ([`HealthState`] bytes in `StatsSnapshot::health`).
+    pub fn health(self) -> HealthState {
+        match self {
+            WorkerState::Ready => HealthState::Healthy,
+            WorkerState::Suspect => HealthState::Suspect,
+            WorkerState::Dead => HealthState::Quarantined,
+            WorkerState::Joining | WorkerState::Rejoining => HealthState::Probation,
+        }
+    }
+}
+
+/// Thresholds for the missed-heartbeat failure detector.
+#[derive(Clone, Copy, Debug)]
+pub struct LifecyclePolicy {
+    /// Consecutive missed beats before Ready demotes to Suspect.
+    pub suspect_after: u32,
+    /// Consecutive missed beats before any live state is declared Dead.
+    pub dead_after: u32,
+    /// Heartbeat probe interval. With the defaults a dead worker is
+    /// detected within one second — the "deadline window" the bench's
+    /// recovery-latency series is measured against.
+    pub heartbeat_every: Duration,
+}
+
+impl Default for LifecyclePolicy {
+    fn default() -> Self {
+        LifecyclePolicy {
+            suspect_after: 2,
+            dead_after: 4,
+            heartbeat_every: Duration::from_millis(250),
+        }
+    }
+}
+
+/// The pure lifecycle state machine — no sockets, no timers, so every
+/// transition is unit-testable. The [`ClusterEngine`] feeds it heartbeat
+/// outcomes and data-path failures and reads back the candidate/usable
+/// sets its shard maps are built over.
+#[derive(Debug)]
+pub struct ClusterMonitor {
+    policy: LifecyclePolicy,
+    states: Vec<WorkerState>,
+    missed: Vec<u32>,
+    /// Transitions *into* Dead (analogous to health's `quarantines`).
+    deaths: u64,
+}
+
+impl ClusterMonitor {
+    pub fn new(n: usize, policy: LifecyclePolicy) -> Self {
+        assert!(n > 0, "a cluster needs at least one worker");
+        assert!(
+            policy.suspect_after > 0 && policy.dead_after > policy.suspect_after,
+            "lifecycle thresholds must order 0 < suspect_after < dead_after"
+        );
+        ClusterMonitor {
+            policy,
+            states: vec![WorkerState::Joining; n],
+            missed: vec![0; n],
+            deaths: 0,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn state(&self, i: usize) -> WorkerState {
+        self.states[i]
+    }
+
+    /// Per-worker [`HealthState`] projection bytes for the stats plane.
+    pub fn health_bytes(&self) -> Vec<u8> {
+        self.states.iter().map(|s| s.health().as_u8()).collect()
+    }
+
+    /// Transitions into Dead so far (monotone).
+    pub fn deaths(&self) -> u64 {
+        self.deaths
+    }
+
+    /// One heartbeat outcome. A good beat clears the missed counter and
+    /// heals Suspect back to Ready (Joining/Rejoining promote only via
+    /// [`Self::joined`] — liveness alone does not mean a window is
+    /// installed). A missed beat walks Ready → Suspect at
+    /// `suspect_after` and any live state → Dead at `dead_after`.
+    /// Returns `true` exactly when this beat killed the worker.
+    pub fn heartbeat(&mut self, i: usize, ok: bool) -> bool {
+        if ok {
+            self.missed[i] = 0;
+            if self.states[i] == WorkerState::Suspect {
+                self.states[i] = WorkerState::Ready;
+            }
+            return false;
+        }
+        if self.states[i] == WorkerState::Dead {
+            return false;
+        }
+        self.missed[i] = self.missed[i].saturating_add(1);
+        if self.missed[i] >= self.policy.dead_after {
+            self.states[i] = WorkerState::Dead;
+            self.deaths += 1;
+            return true;
+        }
+        if self.missed[i] >= self.policy.suspect_after && self.states[i] == WorkerState::Ready {
+            self.states[i] = WorkerState::Suspect;
+        }
+        false
+    }
+
+    /// A retryable wire error on the data path counts as one missed beat:
+    /// the failure detector sees transport evidence without waiting for
+    /// the next probe tick.
+    pub fn wire_error(&mut self, i: usize) -> bool {
+        self.heartbeat(i, false)
+    }
+
+    /// Declare a worker failed outright (exhausted data-path retries,
+    /// refused an install). Counts a death only on the transition.
+    pub fn fail(&mut self, i: usize) {
+        if self.states[i] != WorkerState::Dead {
+            self.states[i] = WorkerState::Dead;
+            self.deaths += 1;
+        }
+        self.missed[i] = 0;
+    }
+
+    /// Install acked: the worker holds the current generation's window.
+    pub fn joined(&mut self, i: usize) {
+        self.states[i] = WorkerState::Ready;
+        self.missed[i] = 0;
+    }
+
+    /// A dead worker answered a probe; it re-enters the candidate set but
+    /// stays out of `usable()` until an install promotes it.
+    pub fn rejoining(&mut self, i: usize) {
+        if self.states[i] == WorkerState::Dead {
+            self.states[i] = WorkerState::Rejoining;
+            self.missed[i] = 0;
+        }
+    }
+
+    /// Workers a new shard map may be built over: everyone not Dead
+    /// (ascending — [`ShardMap::build_over`]'s contract).
+    pub fn candidates(&self) -> Vec<usize> {
+        (0..self.states.len())
+            .filter(|&i| self.states[i] != WorkerState::Dead)
+            .collect()
+    }
+
+    /// Workers currently trusted to serve: Ready or Suspect. Empty means
+    /// the cluster is degraded to the in-process fallback.
+    pub fn usable(&self) -> Vec<usize> {
+        (0..self.states.len())
+            .filter(|&i| {
+                matches!(self.states[i], WorkerState::Ready | WorkerState::Suspect)
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator engine
+// ---------------------------------------------------------------------------
+
+/// Cluster serving configuration. Constructed through
+/// [`ClusterConfig::new`], which enforces the cluster's correctness
+/// envelope: a lossless ADC config (bit-exact replies are the failover
+/// contract, so drifting configs are rejected up front, not discovered as
+/// mysterious deviations mid-chaos) and a batch that fits the widest
+/// stage boundary under [`proto::MAX_PAYLOAD`].
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub seed: u64,
+    pub kind: AdcKind,
+    pub batch: usize,
+    pub policy: StagePolicy,
+    pub lifecycle: LifecyclePolicy,
+    /// Per-hop budget: one inter-shard forward must land (across link
+    /// retries) within this window or the worker is declared failed.
+    pub hop_deadline: Duration,
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Seeded fault-injection rate on inter-shard links (0 = clean).
+    pub link_fault_rate: f64,
+    pub link_fault_seed: u64,
+}
+
+impl ClusterConfig {
+    pub fn new(seed: u64, kind: AdcKind, batch: usize) -> Result<Self, String> {
+        lossless_kind(&kind)?;
+        if batch == 0 || batch > MAX_CLUSTER_BATCH {
+            return Err(format!(
+                "cluster batch must be in 1..={MAX_CLUSTER_BATCH} (stage boundaries must fit one frame), got {batch}"
+            ));
+        }
+        Ok(ClusterConfig {
+            seed,
+            kind,
+            batch,
+            policy: StagePolicy::newton(),
+            lifecycle: LifecyclePolicy::default(),
+            hop_deadline: Duration::from_secs(2),
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(50),
+            link_fault_rate: 0.0,
+            link_fault_seed: 0,
+        })
+    }
+}
+
+/// Reject ADC configs whose forward is not bit-exact: the cluster's
+/// failover contract ("killing any worker yields bit-exact replies")
+/// only holds when every install computes the same integers.
+pub fn lossless_kind(kind: &AdcKind) -> Result<(), String> {
+    let (p, adaptive) = kind.apply(&XbarParams::default());
+    if adaptive || p.adc_bits < p.lossless_adc_bits() {
+        return Err(format!(
+            "cluster serving requires a lossless ADC config (got {kind}): \
+             failover re-runs batches and asserts bit-exact replies"
+        ));
+    }
+    Ok(())
+}
+
+/// Why a forward attempt over one shard map failed.
+enum FwdFail {
+    /// This worker is gone (deadline exhausted / non-retryable error):
+    /// fail it and re-shard.
+    Worker(usize),
+    /// A re-shard landed mid-batch; retry with the fresh map.
+    Stale,
+}
+
+struct WorkerSlot {
+    addr: String,
+    /// Worker admin-plane address (heartbeat scrape target); falls back
+    /// to a stats round-trip on the shard port when absent.
+    admin: Option<String>,
+    /// Persistent coordinator→worker link, re-dialed lazily after any
+    /// failure. Always wrapped in [`FaultyStream`]; rate 0 is a
+    /// passthrough.
+    link: Mutex<Option<FaultyStream<TcpStream>>>,
+}
+
+/// The coordinator-side [`Engine`]: shards the stage pipeline across
+/// worker processes and forwards activations shard to shard. Plugs into
+/// the unmodified [`crate::net::NetServer`], so clients speak the same
+/// protocol to a cluster as to a single process.
+pub struct ClusterEngine {
+    cfg: ClusterConfig,
+    workers: Vec<WorkerSlot>,
+    n_conv: usize,
+    monitor: Mutex<ClusterMonitor>,
+    /// Current `(generation, map)` — kept under one lock so readers never
+    /// see a generation paired with another generation's map.
+    map: Mutex<(u64, ShardMap)>,
+    generation: AtomicU64,
+    /// Serializes re-shards (heartbeat thread vs data-path failures).
+    reshard_lock: Mutex<()>,
+    /// In-process single-replica engine serving while the pool is empty.
+    fallback: GoldenServer,
+    degraded: AtomicBool,
+    reshards: AtomicU64,
+    hop_retries: AtomicU64,
+    next_id: AtomicU64,
+    stop: AtomicBool,
+}
+
+impl ClusterEngine {
+    /// Connect to `endpoints` (`(shard_addr, admin_addr)` per worker) and
+    /// install generation 1. Fails when no initial map can be installed
+    /// on any subset of the pool.
+    pub fn connect(
+        cfg: ClusterConfig,
+        endpoints: &[(String, Option<String>)],
+    ) -> Result<Arc<ClusterEngine>, String> {
+        if endpoints.is_empty() {
+            return Err("cluster needs at least one worker endpoint".to_string());
+        }
+        let n_conv = crate::coordinator::newton_mini().conv_layers().count();
+        let workers: Vec<WorkerSlot> = endpoints
+            .iter()
+            .map(|(addr, admin)| WorkerSlot {
+                addr: addr.clone(),
+                admin: admin.clone(),
+                link: Mutex::new(None),
+            })
+            .collect();
+        // Placeholder map; connect() always re-shards before returning.
+        let seed_map = ShardMap::build_over(
+            n_conv,
+            &(0..workers.len()).collect::<Vec<_>>(),
+            workers.len(),
+            cfg.policy,
+        )
+        .or_else(|_| {
+            ShardMap::build_over(
+                n_conv,
+                &(0..workers.len()).collect::<Vec<_>>(),
+                workers.len(),
+                StagePolicy::unconstrained(),
+            )
+        })?;
+        let engine = Arc::new(ClusterEngine {
+            fallback: GoldenServer::replicated(cfg.seed, cfg.kind, 1, cfg.batch),
+            monitor: Mutex::new(ClusterMonitor::new(workers.len(), cfg.lifecycle)),
+            map: Mutex::new((0, seed_map)),
+            generation: AtomicU64::new(0),
+            reshard_lock: Mutex::new(()),
+            degraded: AtomicBool::new(false),
+            reshards: AtomicU64::new(0),
+            hop_retries: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+            stop: AtomicBool::new(false),
+            n_conv,
+            workers,
+            cfg,
+        });
+        // The initial install doubles as the join handshake: workers that
+        // ack flip Joining -> Ready, workers that don't start dying.
+        engine.reshard()?;
+        Ok(engine)
+    }
+
+    /// Completed re-shards (generation installs after the first success
+    /// counts too — the bench's `cluster_failover_reshards` series).
+    pub fn reshard_count(&self) -> u64 {
+        // the initial install is generation 1, not a failover
+        self.reshards.load(Ordering::Relaxed).saturating_sub(1)
+    }
+
+    /// Current shard-map generation.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Stop background heartbeats (the thread also exits when the last
+    /// `Arc` drops).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    /// Best-effort `Shutdown` to every worker (drain for clean exits).
+    pub fn shutdown_workers(&self) {
+        for (i, slot) in self.workers.iter().enumerate() {
+            let _ = self.send_recv(i, &Msg::Shutdown);
+            *slot.link.lock().unwrap() = None;
+        }
+    }
+
+    /// One framed round trip on worker `shard`'s persistent link,
+    /// (re)dialing lazily. Any failure tears the link down so the next
+    /// attempt starts on a fresh connection.
+    fn send_recv(&self, shard: usize, msg: &Msg) -> Result<Msg, NetError> {
+        let slot = &self.workers[shard];
+        let mut link = slot.link.lock().unwrap();
+        if link.is_none() {
+            let stream = TcpStream::connect(&slot.addr).map_err(NetError::from)?;
+            stream.set_nodelay(true).map_err(NetError::from)?;
+            let t = Some(self.cfg.hop_deadline);
+            stream.set_read_timeout(t).map_err(NetError::from)?;
+            stream.set_write_timeout(t).map_err(NetError::from)?;
+            // per-link seed salt keeps fault schedules independent
+            let salt = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(shard as u64 + 1);
+            *link = Some(FaultyStream::new(
+                stream,
+                self.cfg.link_fault_seed ^ salt,
+                self.cfg.link_fault_rate,
+            ));
+        }
+        let r = (|| -> Result<Msg, NetError> {
+            let s = link.as_mut().expect("link dialed above");
+            proto::write_msg(s, msg)?;
+            Ok(proto::read_msg(s)?)
+        })();
+        if r.is_err() {
+            *link = None;
+        }
+        r
+    }
+
+    /// Rebuild the shard map over the monitor's candidate set and install
+    /// it on every occupied shard, retrying on a shrinking pool until a
+    /// whole generation acks or no candidates remain. Success clears the
+    /// degraded latch and marks a rebaseline
+    /// ([`rebaseline_marker`]) so the admin watchdog re-learns its drift
+    /// baselines against the new pool shape.
+    fn reshard(&self) -> Result<(), String> {
+        let _g = self.reshard_lock.lock().unwrap();
+        let _sp = obs::span("cluster.reshard", "cluster");
+        loop {
+            let candidates = self.monitor.lock().unwrap().candidates();
+            if candidates.is_empty() {
+                return Err("no live workers to re-shard onto".to_string());
+            }
+            let map = ShardMap::build_over(
+                self.n_conv,
+                &candidates,
+                self.workers.len(),
+                self.cfg.policy,
+            )
+            .or_else(|_| {
+                // constrained placement impossible on the shrunken pool:
+                // correctness beats isolation, fall back to unconstrained
+                ShardMap::build_over(
+                    self.n_conv,
+                    &candidates,
+                    self.workers.len(),
+                    StagePolicy::unconstrained(),
+                )
+            })
+            .map_err(|e| format!("shard map over survivors: {e}"))?;
+            let gen = self.generation.fetch_add(1, Ordering::AcqRel) + 1;
+            let mut lost = false;
+            for (shard, lo, hi) in map.segments() {
+                let install = Msg::ShardInstall(ShardInstall {
+                    generation: gen,
+                    shard: shard as u32,
+                    stage_lo: lo as u32,
+                    stage_hi: hi as u32,
+                });
+                match self.send_recv(shard, &install) {
+                    Ok(Msg::ShardAck(ShardAck { generation, shard: s }))
+                        if generation == gen && s == shard as u32 =>
+                    {
+                        self.monitor.lock().unwrap().joined(shard);
+                    }
+                    _ => {
+                        self.monitor.lock().unwrap().fail(shard);
+                        lost = true;
+                        break;
+                    }
+                }
+            }
+            if lost {
+                continue;
+            }
+            *self.map.lock().unwrap() = (gen, map);
+            self.reshards.fetch_add(1, Ordering::Relaxed);
+            obs::counter("cluster.reshards").inc();
+            obs::event("cluster.reshard", "cluster", &[("generation", gen)]);
+            // the pool changed shape: old drift baselines and the
+            // degraded latch describe a cluster that no longer exists
+            rebaseline_marker();
+            self.degraded.store(false, Ordering::Release);
+            return Ok(());
+        }
+    }
+
+    /// One inter-shard hop under a per-hop deadline: send the stage range,
+    /// retry retryable wire errors with [`Backoff`] on a fresh link, heal
+    /// [`proto::ERR_STALE_SHARD`] by re-installing the window (same
+    /// generation — the worker restarted), and give up as
+    /// [`FwdFail::Worker`] when the deadline passes.
+    fn hop(
+        &self,
+        shard: usize,
+        gen: u64,
+        lo: usize,
+        hi: usize,
+        data: &WireStage,
+        trace: u64,
+    ) -> Result<FwdReply, FwdFail> {
+        let deadline = Instant::now() + self.cfg.hop_deadline;
+        let mut backoff = Backoff::new(
+            self.cfg.backoff_base,
+            self.cfg.backoff_cap,
+            self.cfg.link_fault_seed ^ ((shard as u64) << 8) ^ gen,
+        );
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        loop {
+            let req = Msg::Fwd(FwdRequest {
+                id,
+                trace,
+                generation: gen,
+                stage_lo: lo as u32,
+                stage_hi: hi as u32,
+                data: data.clone(),
+            });
+            match self.send_recv(shard, &req) {
+                Ok(Msg::FwdOut(r)) if r.id == id && r.generation == gen => return Ok(r),
+                Ok(Msg::Error(e)) if e.code == proto::ERR_STALE_SHARD => {
+                    if self.generation.load(Ordering::Acquire) != gen {
+                        // a re-shard moved the map under this batch
+                        return Err(FwdFail::Stale);
+                    }
+                    // same generation: the worker lost its window (a
+                    // restart wiped it) — re-install and retry the hop
+                    let install = Msg::ShardInstall(ShardInstall {
+                        generation: gen,
+                        shard: shard as u32,
+                        stage_lo: lo as u32,
+                        stage_hi: hi as u32,
+                    });
+                    match self.send_recv(shard, &install) {
+                        Ok(Msg::ShardAck(a)) if a.generation == gen => {
+                            self.monitor.lock().unwrap().joined(shard);
+                        }
+                        _ => return Err(FwdFail::Worker(shard)),
+                    }
+                }
+                Ok(_) => return Err(FwdFail::Worker(shard)),
+                Err(e) if e.retryable() => {
+                    self.hop_retries.fetch_add(1, Ordering::Relaxed);
+                    obs::counter("cluster.hop_retries").inc();
+                    self.monitor.lock().unwrap().wire_error(shard);
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return Err(FwdFail::Worker(shard));
+                    }
+                    thread::sleep(backoff.next_delay().min(deadline - now));
+                }
+                Err(_) => return Err(FwdFail::Worker(shard)),
+            }
+            if Instant::now() >= deadline {
+                return Err(FwdFail::Worker(shard));
+            }
+        }
+    }
+
+    /// Run one batch across a snapshot of the shard map: one hop per
+    /// segment, activations forwarded shard to shard, hop ledgers merged
+    /// (stages partition, so the merged ledger equals a single-process
+    /// run's) and attributed per shard.
+    fn forward_once(
+        &self,
+        gen: u64,
+        map: &ShardMap,
+        t: &Tensor,
+        trace: u64,
+    ) -> Result<(Matrix, CostLedger, f64), FwdFail> {
+        let mut data = WireStage::Act {
+            b: t.b as u32,
+            h: t.h as u32,
+            w: t.w as u32,
+            c: t.c as u32,
+            data: t.data.clone(),
+        };
+        let mut total = CostLedger::new();
+        let mut energy_pj = 0.0;
+        let segments = map.segments();
+        let last_shard = segments.last().map(|s| s.0).unwrap_or(0);
+        let mut hops: Vec<(usize, CostLedger)> = Vec::with_capacity(segments.len());
+        for (shard, lo, hi) in segments {
+            let _sp = obs::span("cluster.hop", "cluster");
+            let r = self.hop(shard, gen, lo, hi, &data, trace)?;
+            if !r.cost.is_empty() {
+                hops.push((shard, r.cost));
+            }
+            total.merge(&r.cost);
+            energy_pj += r.energy_pj;
+            data = r.data;
+        }
+        // attribute per-shard cost only for the attempt that served: a
+        // failed-over batch charges the map that answered, keeping the
+        // merged total equal to a single-process run's ledger
+        for (shard, cost) in &hops {
+            obs::ledger::record_replica(*shard, cost);
+        }
+        match data {
+            WireStage::Logits { rows, cols, data } => Ok((
+                Matrix {
+                    rows: rows as usize,
+                    cols: cols as usize,
+                    data,
+                },
+                total,
+                energy_pj,
+            )),
+            // a map whose last segment is not the classifier cannot be
+            // built; a worker answering activations here is misbehaving
+            WireStage::Act { .. } => Err(FwdFail::Worker(last_shard)),
+        }
+    }
+
+    /// Heartbeat probe for one worker: scrape its admin plane when known
+    /// (cheap, read-only), else a stats round trip on the shard port over
+    /// a transient connection.
+    fn ping(&self, i: usize) -> bool {
+        let slot = &self.workers[i];
+        let t = Duration::from_millis(200);
+        if let Some(admin) = &slot.admin {
+            return matches!(
+                crate::net::scrape_statz(admin.as_str(), t),
+                Ok(body) if body.contains("newton_worker_up 1")
+            );
+        }
+        let Some(addr) = slot
+            .addr
+            .to_socket_addrs()
+            .ok()
+            .and_then(|mut a| a.next())
+        else {
+            return false;
+        };
+        let Ok(stream) = TcpStream::connect_timeout(&addr, t) else {
+            return false;
+        };
+        if stream.set_read_timeout(Some(t)).is_err() || stream.set_write_timeout(Some(t)).is_err()
+        {
+            return false;
+        }
+        Client::from_stream(stream).stats().is_ok()
+    }
+
+    /// One failure-detector sweep over the pool. Deaths trigger a
+    /// re-shard onto survivors; a dead worker answering again is pulled
+    /// back in (Rejoining, then a fresh install in the re-shard).
+    fn heartbeat_tick(&self) {
+        for i in 0..self.workers.len() {
+            if self.stop.load(Ordering::Acquire) {
+                return;
+            }
+            let ok = self.ping(i);
+            let (died, revived) = {
+                let mut m = self.monitor.lock().unwrap();
+                if m.state(i) == WorkerState::Dead {
+                    if ok {
+                        m.rejoining(i);
+                        (false, true)
+                    } else {
+                        (false, false)
+                    }
+                } else {
+                    (m.heartbeat(i, ok), false)
+                }
+            };
+            if died {
+                *self.workers[i].link.lock().unwrap() = None;
+                obs::counter("cluster.worker_deaths").inc();
+                obs::event("cluster.worker_dead", "cluster", &[("worker", i as u64)]);
+                let _ = self.reshard();
+            } else if revived {
+                obs::counter("cluster.worker_rejoins").inc();
+                let _ = self.reshard();
+            }
+        }
+    }
+
+    /// Spawn the background failure detector. Holds only a [`Weak`]: the
+    /// thread exits when the engine drops or [`Self::stop`] is called.
+    pub fn spawn_heartbeats(self: &Arc<Self>) -> thread::JoinHandle<()> {
+        let weak: Weak<ClusterEngine> = Arc::downgrade(self);
+        thread::Builder::new()
+            .name("cluster-heartbeat".to_string())
+            .spawn(move || loop {
+                let Some(engine) = weak.upgrade() else { return };
+                if engine.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                let every = engine.cfg.lifecycle.heartbeat_every;
+                engine.heartbeat_tick();
+                drop(engine);
+                thread::sleep(every);
+            })
+            .expect("spawn cluster-heartbeat thread")
+    }
+}
+
+/// Rebuild the batcher's padded flat tensor (same layout as the golden
+/// engine's private helper: batch-major, one `IMAGE_ELEMS` image per row).
+fn tensor_from_flat(data: &[i32], batch: usize) -> Tensor {
+    assert_eq!(data.len(), batch * IMAGE_ELEMS, "padded batch shape");
+    let mut t = Tensor::zeros(batch, 32, 32, 3);
+    for (i, &v) in data.iter().enumerate() {
+        t.data[i] = v as i64;
+    }
+    t
+}
+
+impl Engine for ClusterEngine {
+    fn image_elems(&self) -> usize {
+        IMAGE_ELEMS
+    }
+
+    fn batch_capacity(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn n_replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "cluster engine: {} workers, adc {}, batch {}, gen {}",
+            self.workers.len(),
+            self.cfg.kind.label(),
+            self.cfg.batch,
+            self.generation()
+        )
+    }
+
+    /// Serve one batch with failover: forward over a `(generation, map)`
+    /// snapshot; a worker failure fails that worker, re-shards onto
+    /// survivors, and restarts the batch from its input (integer-exact
+    /// forward + bit-identical installs ⇒ the retry's logits are
+    /// bit-identical to an undisturbed run). When the pool empties the
+    /// batch lands on the in-process fallback and `degraded` latches.
+    fn run(&self, index: usize, b: &Batch) -> EngineBatch {
+        let _sp = obs::span("cluster.batch", "coordinator");
+        let t = tensor_from_flat(&b.data, self.cfg.batch);
+        let trace = b.traces.first().copied().unwrap_or(0);
+        let mut attempts = 0usize;
+        while attempts <= self.workers.len() + 1 {
+            attempts += 1;
+            let (gen, map) = self.map.lock().unwrap().clone();
+            match self.forward_once(gen, &map, &t, trace) {
+                Ok((m, cost, energy_pj)) => {
+                    let logits: Vec<Vec<i32>> = (0..b.n_real)
+                        .map(|r| {
+                            m.data[r * m.cols..(r + 1) * m.cols]
+                                .iter()
+                                .map(|&v| v as i32)
+                                .collect()
+                        })
+                        .collect();
+                    if !cost.is_empty() {
+                        obs::ledger::record_serving(&cost, b.n_real, energy_pj);
+                    }
+                    let classifier = map.segments().last().map(|s| s.0).unwrap_or(0);
+                    return EngineBatch {
+                        replica: classifier,
+                        n_real: b.n_real,
+                        logits,
+                        // the config is validated lossless; deviations are
+                        // impossible, not merely unobserved
+                        max_abs_err: 0,
+                        cost,
+                        energy_pj,
+                    };
+                }
+                Err(FwdFail::Stale) => {
+                    // a re-shard landed mid-batch: retry on the fresh map
+                    continue;
+                }
+                Err(FwdFail::Worker(w)) => {
+                    {
+                        let mut m = self.monitor.lock().unwrap();
+                        m.fail(w);
+                    }
+                    *self.workers[w].link.lock().unwrap() = None;
+                    obs::counter("cluster.worker_deaths").inc();
+                    obs::event("cluster.worker_dead", "cluster", &[("worker", w as u64)]);
+                    if self.reshard().is_err() {
+                        break; // pool is empty
+                    }
+                }
+            }
+        }
+        // graceful degradation: the in-process single-replica engine
+        // serves (bit-identically — same seed, same lossless config)
+        // until a re-shard over rejoined workers clears the latch.
+        self.degraded.store(true, Ordering::Release);
+        obs::counter("cluster.fallback_batches").inc();
+        let r = self.fallback.run_one(index, b);
+        EngineBatch {
+            replica: r.replica,
+            n_real: r.n_real,
+            logits: r.logits,
+            max_abs_err: r.max_abs_err,
+            cost: r.cost,
+            energy_pj: r.energy_pj,
+        }
+    }
+
+    fn health(&self) -> Option<HealthReport> {
+        let m = self.monitor.lock().unwrap();
+        let usable_empty = m.usable().is_empty();
+        Some(HealthReport {
+            states: m.health_bytes(),
+            reruns: self.hop_retries.load(Ordering::Relaxed),
+            quarantines: m.deaths(),
+            degraded: usable_empty || self.degraded.load(Ordering::Acquire),
+        })
+    }
+
+    fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::Acquire)
+            || self.monitor.lock().unwrap().usable().is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker process
+// ---------------------------------------------------------------------------
+
+/// Worker-side configuration; `(seed, kind)` must match the coordinator's
+/// so every process programs a bit-identical model.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    pub seed: u64,
+    pub kind: AdcKind,
+    /// Read-timeout tick on shard connections (drain poll granularity).
+    pub read_tick: Duration,
+    pub write_timeout: Duration,
+}
+
+impl WorkerConfig {
+    pub fn new(seed: u64, kind: AdcKind) -> Result<Self, String> {
+        lossless_kind(&kind)?;
+        Ok(WorkerConfig {
+            seed,
+            kind,
+            read_tick: Duration::from_millis(100),
+            write_timeout: Duration::from_secs(5),
+        })
+    }
+}
+
+struct WorkerShared {
+    cnn: ProgrammedCnn,
+    tile: crate::energy::TileModel,
+    /// The served-stage window: `(generation, shard, stage_lo, stage_hi)`.
+    /// `None` until the first install — forwards answer
+    /// [`proto::ERR_STALE_SHARD`] so the coordinator knows to install.
+    window: Mutex<Option<(u64, u32, u32, u32)>>,
+    draining: AtomicBool,
+    fwds: AtomicU64,
+    installs: AtomicU64,
+    read_tick: Duration,
+    write_timeout: Duration,
+}
+
+/// A shard-serving worker process body: programs the full model at
+/// startup, then serves `ShardInstall`/`Fwd` on its shard port and a
+/// read-only `newton_worker_*` exposition on an optional admin port
+/// (the coordinator's heartbeat target).
+pub struct ClusterWorker {
+    addr: SocketAddr,
+    admin_addr: Option<SocketAddr>,
+    shared: Arc<WorkerShared>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl ClusterWorker {
+    /// Bind `addr` (and `admin_addr` when given — pass port 0 for
+    /// ephemeral) and start serving. The worker prices its own hops: the
+    /// returned `FwdReply.energy_pj` runs the same tile energy model the
+    /// single-process engine uses, so merged cluster totals stay
+    /// comparable to `BENCH_energy` numbers.
+    pub fn start(
+        cfg: WorkerConfig,
+        addr: &str,
+        admin_addr: Option<&str>,
+    ) -> io::Result<ClusterWorker> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let admin_listener = match admin_addr {
+            Some(a) => {
+                let l = TcpListener::bind(a)?;
+                l.set_nonblocking(true)?;
+                Some(l)
+            }
+            None => None,
+        };
+        let admin_local = admin_listener.as_ref().map(|l| l.local_addr()).transpose()?;
+        let (p, adaptive) = cfg.kind.apply(&XbarParams::default());
+        let shared = Arc::new(WorkerShared {
+            cnn: MiniCnn::new(cfg.seed).program(&p, adaptive),
+            tile: crate::energy::TileModel::new(
+                crate::config::ChipConfig::newton().conv_tile,
+                p,
+            ),
+            window: Mutex::new(None),
+            draining: AtomicBool::new(false),
+            fwds: AtomicU64::new(0),
+            installs: AtomicU64::new(0),
+            read_tick: cfg.read_tick,
+            write_timeout: cfg.write_timeout,
+        });
+        if let Some(l) = admin_listener {
+            let s = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("worker-admin".to_string())
+                .spawn(move || worker_admin_loop(l, s))
+                .expect("spawn worker admin thread");
+        }
+        let accept = {
+            let s = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("worker-accept".to_string())
+                .spawn(move || worker_accept_loop(listener, s))
+                .expect("spawn worker accept thread")
+        };
+        Ok(ClusterWorker {
+            addr: local,
+            admin_addr: admin_local,
+            shared,
+            accept: Some(accept),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn admin_addr(&self) -> Option<SocketAddr> {
+        self.admin_addr
+    }
+
+    /// Ask the worker to drain (idempotent; also triggered by a
+    /// `Shutdown` frame on any shard connection).
+    pub fn shutdown(&self) {
+        self.shared.draining.store(true, Ordering::Release);
+    }
+
+    /// Wait for the accept loop to exit (it polls the drain flag).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_accept_loop(listener: TcpListener, shared: Arc<WorkerShared>) {
+    loop {
+        if shared.draining.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let s = Arc::clone(&shared);
+                // detached: handlers notice the drain flag via read ticks
+                let _ = thread::Builder::new()
+                    .name("worker-conn".to_string())
+                    .spawn(move || worker_conn(s, stream));
+            }
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// `read_exact` tolerating read-timeout ticks; polls the drain flag at
+/// frame boundaries. `Ok(false)` = clean stop (EOF / draining idle).
+fn worker_read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    shared: &WorkerShared,
+    frame_start: bool,
+) -> Result<bool, ProtoError> {
+    let mut off = 0;
+    let mut idle_ticks = 0u32;
+    while off < buf.len() {
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => {
+                if off == 0 && frame_start {
+                    return Ok(false);
+                }
+                return Err(ProtoError::Malformed("connection closed mid-frame"));
+            }
+            Ok(n) => off += n,
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                if shared.draining.load(Ordering::Acquire) {
+                    idle_ticks += 1;
+                    if off == 0 && frame_start {
+                        if idle_ticks > 2 {
+                            return Ok(false);
+                        }
+                    } else if idle_ticks > 25 {
+                        return Err(ProtoError::Malformed("drain deadline passed mid-frame"));
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+fn worker_read_msg(
+    stream: &mut TcpStream,
+    shared: &WorkerShared,
+) -> Result<Option<Msg>, ProtoError> {
+    let mut h = [0u8; proto::HEADER_LEN];
+    if !worker_read_full(stream, &mut h, shared, true)? {
+        return Ok(None);
+    }
+    let (ty, len, sum) = proto::parse_header(&h)?;
+    let mut payload = vec![0u8; len];
+    if len > 0 && !worker_read_full(stream, &mut payload, shared, false)? {
+        return Err(ProtoError::Malformed("connection closed mid-frame"));
+    }
+    let got = proto::checksum(&payload);
+    if got != sum {
+        return Err(ProtoError::Checksum { want: sum, got });
+    }
+    proto::decode_payload(ty, &payload).map(Some)
+}
+
+fn worker_conn(shared: Arc<WorkerShared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.read_tick));
+    let _ = stream.set_write_timeout(Some(shared.write_timeout));
+    loop {
+        let msg = match worker_read_msg(&mut stream, &shared) {
+            Ok(Some(m)) => m,
+            Ok(None) => return,
+            Err(e) => {
+                let _ = proto::write_msg(
+                    &mut stream,
+                    &Msg::Error(WireError {
+                        code: proto::ERR_MALFORMED,
+                        message: format!("protocol error: {e}"),
+                    }),
+                );
+                return;
+            }
+        };
+        if !worker_serve_msg(&shared, &mut stream, msg) {
+            return;
+        }
+    }
+}
+
+/// Handle one decoded frame; returns `false` to close the connection.
+/// [`proto::ERR_STALE_SHARD`] replies keep the connection **open** — a
+/// stale window is a recoverable coordination state, not a protocol
+/// violation.
+fn worker_serve_msg(shared: &Arc<WorkerShared>, stream: &mut TcpStream, msg: Msg) -> bool {
+    match msg {
+        Msg::ShardInstall(inst) => {
+            if shared.draining.load(Ordering::Acquire) {
+                let _ = proto::write_msg(
+                    stream,
+                    &Msg::Error(WireError {
+                        code: proto::ERR_DRAINING,
+                        message: "worker is draining".to_string(),
+                    }),
+                );
+                return false;
+            }
+            let n_stages = shared.cnn.n_stages() as u32;
+            if inst.stage_lo >= inst.stage_hi || inst.stage_hi > n_stages {
+                let _ = proto::write_msg(
+                    stream,
+                    &Msg::Error(WireError {
+                        code: proto::ERR_BAD_SHAPE,
+                        message: format!(
+                            "stage window [{}, {}) outside 0..{n_stages}",
+                            inst.stage_lo, inst.stage_hi
+                        ),
+                    }),
+                );
+                return false;
+            }
+            *shared.window.lock().unwrap() =
+                Some((inst.generation, inst.shard, inst.stage_lo, inst.stage_hi));
+            shared.installs.fetch_add(1, Ordering::Relaxed);
+            obs::counter("worker.installs").inc();
+            proto::write_msg(
+                stream,
+                &Msg::ShardAck(ShardAck {
+                    generation: inst.generation,
+                    shard: inst.shard,
+                }),
+            )
+            .is_ok()
+        }
+        Msg::Fwd(req) => worker_serve_fwd(shared, stream, req),
+        Msg::StatsReq => {
+            // minimal snapshot so a coordinator without an admin address
+            // can still heartbeat over the shard port
+            let snap = StatsSnapshot {
+                served: shared.fwds.load(Ordering::Relaxed),
+                batches: shared.fwds.load(Ordering::Relaxed),
+                ..StatsSnapshot::default()
+            };
+            proto::write_msg(stream, &Msg::Stats(snap)).is_ok()
+        }
+        Msg::Shutdown => {
+            shared.draining.store(true, Ordering::Release);
+            let _ = proto::write_msg(stream, &Msg::ShutdownAck);
+            false
+        }
+        _ => {
+            let _ = proto::write_msg(
+                stream,
+                &Msg::Error(WireError {
+                    code: proto::ERR_MALFORMED,
+                    message: "message type not served by a shard worker".to_string(),
+                }),
+            );
+            false
+        }
+    }
+}
+
+fn worker_serve_fwd(shared: &Arc<WorkerShared>, stream: &mut TcpStream, req: FwdRequest) -> bool {
+    if shared.draining.load(Ordering::Acquire) {
+        // refuse new work while draining: ERR_DRAINING is non-retryable,
+        // so the coordinator fails this worker and re-shards immediately
+        // instead of spinning its hop deadline down on a dying process
+        let _ = proto::write_msg(
+            stream,
+            &Msg::Error(WireError {
+                code: proto::ERR_DRAINING,
+                message: "worker is draining".to_string(),
+            }),
+        );
+        return false;
+    }
+    let window = *shared.window.lock().unwrap();
+    let stale = match window {
+        Some((gen, _, lo, hi)) => {
+            gen != req.generation || req.stage_lo < lo || req.stage_hi > hi
+        }
+        None => true,
+    };
+    if stale {
+        obs::counter("worker.stale_fwds").inc();
+        // recoverable: the coordinator re-installs on this connection
+        return proto::write_msg(
+            stream,
+            &Msg::Error(WireError {
+                code: proto::ERR_STALE_SHARD,
+                message: format!(
+                    "window {:?} does not cover generation {} stages [{}, {})",
+                    window, req.generation, req.stage_lo, req.stage_hi
+                ),
+            }),
+        )
+        .is_ok();
+    }
+    let (b, h, w, c, data) = match req.data {
+        WireStage::Act { b, h, w, c, data } => (b, h, w, c, data),
+        WireStage::Logits { .. } => {
+            let _ = proto::write_msg(
+                stream,
+                &Msg::Error(WireError {
+                    code: proto::ERR_BAD_SHAPE,
+                    message: "forward input must be an activation tensor".to_string(),
+                }),
+            );
+            return false;
+        }
+    };
+    let t = Tensor {
+        b: b as usize,
+        h: h as usize,
+        w: w as usize,
+        c: c as usize,
+        data,
+    };
+    if t.data.len() != t.b * t.h * t.w * t.c {
+        let _ = proto::write_msg(
+            stream,
+            &Msg::Error(WireError {
+                code: proto::ERR_BAD_SHAPE,
+                message: "tensor data does not match its dims".to_string(),
+            }),
+        );
+        return false;
+    }
+    let _sp = obs::span("worker.fwd", "cluster");
+    let mut scratch = ForwardScratch::new();
+    let mut sd = StageData::Act(t);
+    for s in req.stage_lo..req.stage_hi {
+        sd = shared.cnn.run_stage(s as usize, &sd, &mut scratch);
+    }
+    let cost = scratch.take_ledger();
+    let energy_pj = if cost.is_empty() {
+        0.0
+    } else {
+        shared.tile.ledger_energy_pj(&cost)
+    };
+    let out = match sd {
+        StageData::Act(t) => WireStage::Act {
+            b: t.b as u32,
+            h: t.h as u32,
+            w: t.w as u32,
+            c: t.c as u32,
+            data: t.data,
+        },
+        StageData::Logits(m) => WireStage::Logits {
+            rows: m.rows as u32,
+            cols: m.cols as u32,
+            data: m.data,
+        },
+    };
+    shared.fwds.fetch_add(1, Ordering::Relaxed);
+    obs::counter("worker.fwds").inc();
+    proto::write_msg(
+        stream,
+        &Msg::FwdOut(FwdReply {
+            id: req.id,
+            trace: req.trace,
+            generation: req.generation,
+            cost,
+            energy_pj,
+            data: out,
+        }),
+    )
+    .is_ok()
+}
+
+/// Worker admin plane: read-only `newton_worker_*` exposition, one
+/// detached thread per scrape with read *and* write timeouts so a
+/// stalled scraper can never pin the accept loop (the same discipline
+/// the serving admin plane applies).
+fn worker_admin_loop(listener: TcpListener, shared: Arc<WorkerShared>) {
+    loop {
+        if shared.draining.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                let s = Arc::clone(&shared);
+                let _ = thread::Builder::new()
+                    .name("worker-admin-conn".to_string())
+                    .spawn(move || {
+                        let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+                        let _ = stream.set_write_timeout(Some(s.write_timeout));
+                        let _ = stream.write_all(worker_exposition(&s).as_bytes());
+                    });
+            }
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+/// Name-sorted `newton_worker_*` lines (the heartbeat probe greps
+/// `newton_worker_up 1`).
+fn worker_exposition(shared: &WorkerShared) -> String {
+    let (generation, shard, lo, hi) = shared.window.lock().unwrap().unwrap_or((0, 0, 0, 0));
+    format!(
+        "newton_worker_fwds {}\nnewton_worker_generation {}\nnewton_worker_installs {}\nnewton_worker_shard {}\nnewton_worker_stage_hi {}\nnewton_worker_stage_lo {}\nnewton_worker_up 1\n",
+        shared.fwds.load(Ordering::Relaxed),
+        generation,
+        shared.installs.load(Ordering::Relaxed),
+        shard,
+        hi,
+        lo,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monitor(n: usize) -> ClusterMonitor {
+        ClusterMonitor::new(n, LifecyclePolicy::default())
+    }
+
+    #[test]
+    fn lifecycle_walks_joining_ready_suspect_dead() {
+        let mut m = monitor(2);
+        assert_eq!(m.state(0), WorkerState::Joining);
+        m.joined(0);
+        m.joined(1);
+        assert_eq!(m.state(0), WorkerState::Ready);
+        // default policy: suspect at 2 missed beats, dead at 4
+        assert!(!m.heartbeat(0, false));
+        assert_eq!(m.state(0), WorkerState::Ready);
+        assert!(!m.heartbeat(0, false));
+        assert_eq!(m.state(0), WorkerState::Suspect);
+        assert!(!m.heartbeat(0, false));
+        assert!(m.heartbeat(0, false), "4th miss kills");
+        assert_eq!(m.state(0), WorkerState::Dead);
+        assert_eq!(m.deaths(), 1);
+        // dead workers do not die twice
+        assert!(!m.heartbeat(0, false));
+        assert_eq!(m.deaths(), 1);
+        assert_eq!(m.candidates(), vec![1]);
+        assert_eq!(m.usable(), vec![1]);
+    }
+
+    #[test]
+    fn one_good_beat_heals_a_suspect() {
+        let mut m = monitor(1);
+        m.joined(0);
+        m.heartbeat(0, false);
+        m.heartbeat(0, false);
+        assert_eq!(m.state(0), WorkerState::Suspect);
+        assert!(m.usable().contains(&0), "suspects still serve");
+        m.heartbeat(0, true);
+        assert_eq!(m.state(0), WorkerState::Ready);
+        // and the missed counter restarted from zero
+        m.heartbeat(0, false);
+        assert_eq!(m.state(0), WorkerState::Ready);
+    }
+
+    #[test]
+    fn wire_errors_feed_the_failure_detector() {
+        let mut m = monitor(1);
+        m.joined(0);
+        m.wire_error(0);
+        m.wire_error(0);
+        assert_eq!(m.state(0), WorkerState::Suspect);
+        m.wire_error(0);
+        assert!(m.wire_error(0));
+        assert_eq!(m.state(0), WorkerState::Dead);
+    }
+
+    #[test]
+    fn rejoin_cycle_needs_an_install_to_serve_again() {
+        let mut m = monitor(2);
+        m.joined(0);
+        m.joined(1);
+        m.fail(0);
+        assert_eq!(m.state(0), WorkerState::Dead);
+        assert_eq!(m.deaths(), 1);
+        // a live probe pulls it back as a candidate, not as usable
+        m.rejoining(0);
+        assert_eq!(m.state(0), WorkerState::Rejoining);
+        assert_eq!(m.candidates(), vec![0, 1]);
+        assert_eq!(m.usable(), vec![1]);
+        // the re-shard's install ack promotes it
+        m.joined(0);
+        assert_eq!(m.usable(), vec![0, 1]);
+        // rejoining() on a live worker is a no-op
+        m.rejoining(1);
+        assert_eq!(m.state(1), WorkerState::Ready);
+    }
+
+    #[test]
+    fn health_projection_speaks_the_stats_vocabulary() {
+        assert_eq!(WorkerState::Ready.health(), HealthState::Healthy);
+        assert_eq!(WorkerState::Suspect.health(), HealthState::Suspect);
+        assert_eq!(WorkerState::Dead.health(), HealthState::Quarantined);
+        assert_eq!(WorkerState::Joining.health(), HealthState::Probation);
+        assert_eq!(WorkerState::Rejoining.health(), HealthState::Probation);
+        let mut m = monitor(3);
+        m.joined(0);
+        m.fail(2);
+        assert_eq!(
+            m.health_bytes(),
+            vec![
+                HealthState::Healthy.as_u8(),
+                HealthState::Probation.as_u8(),
+                HealthState::Quarantined.as_u8()
+            ]
+        );
+    }
+
+    #[test]
+    fn config_rejects_lossy_and_adaptive_adcs() {
+        assert!(ClusterConfig::new(7, AdcKind::Exact, 8).is_ok());
+        assert!(ClusterConfig::new(7, AdcKind::Adaptive, 8).is_err());
+        assert!(ClusterConfig::new(7, AdcKind::Lossy(6), 8).is_err());
+        // a "lossy" width at/above the lossless threshold is exact
+        let wide = AdcKind::Lossy(16);
+        let (p, _) = wide.apply(&XbarParams::default());
+        if p.adc_bits >= p.lossless_adc_bits() {
+            assert!(ClusterConfig::new(7, wide, 8).is_ok());
+        }
+    }
+
+    #[test]
+    fn config_bounds_the_batch_to_one_frame() {
+        assert!(ClusterConfig::new(7, AdcKind::Exact, 0).is_err());
+        assert!(ClusterConfig::new(7, AdcKind::Exact, MAX_CLUSTER_BATCH).is_ok());
+        assert!(ClusterConfig::new(7, AdcKind::Exact, MAX_CLUSTER_BATCH + 1).is_err());
+        // the bound actually protects the wire: widest boundary is
+        // batch × 16×16×32 i64s after stage 0
+        let widest = MAX_CLUSTER_BATCH * 16 * 16 * 32 * 8;
+        assert!(widest + 64 < proto::MAX_PAYLOAD);
+    }
+
+    #[test]
+    fn worker_state_bytes_are_stable() {
+        for (s, b) in [
+            (WorkerState::Joining, 0u8),
+            (WorkerState::Ready, 1),
+            (WorkerState::Suspect, 2),
+            (WorkerState::Dead, 3),
+            (WorkerState::Rejoining, 4),
+        ] {
+            assert_eq!(s.as_u8(), b);
+            assert!(!s.label().is_empty());
+        }
+    }
+
+    /// End-to-end over loopback: two in-process workers, a coordinator
+    /// engine, bit-exact replies vs the single-process golden engine —
+    /// then one worker drains away mid-session and the survivor serves
+    /// the same bits after an automatic re-shard.
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+    fn loopback_cluster_serves_bit_exact_and_survives_a_worker_loss() {
+        let seed = 11;
+        let batch = 2;
+        // hop ledgers ride the wire regardless, but counting only happens
+        // while the process-global ledger is on
+        let _ledger = crate::obs::ledger::test_guard();
+        crate::obs::ledger::set_enabled(true);
+        let wcfg = WorkerConfig::new(seed, AdcKind::Exact).unwrap();
+        let w0 = ClusterWorker::start(wcfg.clone(), "127.0.0.1:0", None).unwrap();
+        let w1 = ClusterWorker::start(wcfg, "127.0.0.1:0", None).unwrap();
+        let endpoints = vec![
+            (w0.local_addr().to_string(), None),
+            (w1.local_addr().to_string(), None),
+        ];
+        let mut ccfg = ClusterConfig::new(seed, AdcKind::Exact, batch).unwrap();
+        // keep the loss detectable quickly but the test deterministic:
+        // no background heartbeats — the data path drives failover
+        ccfg.hop_deadline = Duration::from_millis(500);
+        let engine = ClusterEngine::connect(ccfg, &endpoints).unwrap();
+        assert_eq!(engine.generation(), 1);
+        assert!(!engine.degraded());
+
+        let golden = GoldenServer::replicated(seed, AdcKind::Exact, 1, batch);
+        let images: Vec<Vec<i32>> = (0..batch)
+            .map(|i| crate::net::bench_image(seed, i as u64))
+            .collect();
+        let want = golden.infer(&images);
+
+        let mk_batch = || {
+            let mut data = vec![0i32; batch * IMAGE_ELEMS];
+            for (i, img) in images.iter().enumerate() {
+                data[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].copy_from_slice(img);
+            }
+            Batch {
+                ids: (0..batch as u64).collect(),
+                traces: vec![0; batch],
+                data,
+                n_real: batch,
+                enqueued: vec![std::time::Instant::now(); batch],
+            }
+        };
+
+        let r = engine.run(0, &mk_batch());
+        assert_eq!(r.logits, want, "cluster must match the golden engine bit for bit");
+        assert_eq!(r.max_abs_err, 0);
+        assert!(!r.cost.is_empty(), "hop ledgers must survive the wire");
+
+        // kill worker 0 (drain: its connections die, new dials are
+        // refused once the accept loop exits) and serve again
+        w0.shutdown();
+        w0.join();
+        let r2 = engine.run(1, &mk_batch());
+        assert_eq!(r2.logits, want, "failover must reproduce the same bits");
+        assert!(engine.reshard_count() >= 1, "the loss must have re-sharded");
+        assert!(!engine.degraded(), "one survivor is a serving pool, not degraded");
+
+        engine.stop();
+        engine.shutdown_workers();
+        w1.shutdown();
+        w1.join();
+        crate::obs::ledger::set_enabled(false);
+    }
+}
+

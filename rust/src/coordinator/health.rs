@@ -159,6 +159,16 @@ pub struct HealthReport {
     pub degraded: bool,
 }
 
+/// Mark a serving-pool reshape — quarantine, reinstall, or cluster
+/// re-shard. Bumps the `obs.rebaseline` counter the admin watchdog tick
+/// watches; when it moves, the watchdog re-learns its drift baselines
+/// ([`crate::obs::watchdog::Watchdog::rebaseline`]) and un-latches `degraded`, so a
+/// recovered pool is judged against its own normal rather than the old
+/// pool's.
+pub fn rebaseline_marker() {
+    crate::obs::counter("obs.rebaseline").inc();
+}
+
 struct MonitorInner {
     replicas: Vec<ReplicaHealth>,
     reruns: u64,
@@ -234,6 +244,9 @@ impl HealthMonitor {
             g.quarantines += 1;
             crate::obs::counter("health.quarantines").inc();
             crate::obs::event("quarantine", "health", &[("replica", replica as u64)]);
+            // a quarantine reshapes the serving pool: whatever latency /
+            // energy baseline the watchdog froze describes the old pool
+            rebaseline_marker();
         }
         now
     }
@@ -314,6 +327,8 @@ impl HealthMonitor {
             state: HealthState::Probation,
             ..ReplicaHealth::new()
         };
+        drop(g);
+        rebaseline_marker();
     }
 
     /// Snapshot for `Stats`.
@@ -484,6 +499,25 @@ mod tests {
         assert_eq!(rep.quarantines, 0);
         assert!(!rep.degraded);
         assert_eq!(rep.states, vec![0, 0]);
+    }
+
+    #[test]
+    fn quarantine_and_reinstall_bump_the_rebaseline_marker() {
+        let m = HealthMonitor::new(2, HealthPolicy::default());
+        let before = crate::obs::counter("obs.rebaseline").get();
+        for _ in 0..3 {
+            m.observe(0, 7);
+        }
+        assert_eq!(m.state(0), HealthState::Quarantined);
+        // other tests quarantine replicas in parallel, so the global
+        // counter can only be bounded from below
+        assert!(
+            crate::obs::counter("obs.rebaseline").get() >= before + 1,
+            "entering quarantine must tell the watchdog to re-learn"
+        );
+        let mid = crate::obs::counter("obs.rebaseline").get();
+        m.reinstalled(0);
+        assert!(crate::obs::counter("obs.rebaseline").get() >= mid + 1);
     }
 
     #[test]

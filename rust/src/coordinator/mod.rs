@@ -21,12 +21,17 @@
 //! `--pipeline` on `newton serve`/`serve-net`).
 
 pub mod batcher;
+pub mod cluster;
 pub mod golden;
 pub mod health;
 pub mod pipeline;
 pub mod server;
 
 pub use batcher::{Batch, Batcher};
+pub use cluster::{
+    ClusterConfig, ClusterEngine, ClusterMonitor, ClusterWorker, LifecyclePolicy, WorkerConfig,
+    WorkerState,
+};
 pub use golden::{serve_totals, BatchReport, GoldenServer};
 pub use health::{HealthMonitor, HealthPolicy, HealthReport, HealthState};
 pub use pipeline::{build_map, forward_pipelined, ScratchPool, StagePool};

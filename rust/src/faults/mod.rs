@@ -321,6 +321,140 @@ impl<S: Write> Write for FaultyStream<S> {
     }
 }
 
+/// One process-level chaos action against a cluster worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// SIGKILL the worker process (no drain, no goodbye — the coordinator
+    /// finds out from missed heartbeats / torn connections).
+    Kill,
+    /// Stall the worker's links for this many milliseconds (the harness
+    /// suspends forwarding to it, modelling a long GC-style pause).
+    Stall(u64),
+    /// Restart a previously killed worker so it can rejoin; a `Restart`
+    /// for a live worker is a no-op.
+    Restart,
+}
+
+/// One scheduled event: after the `at_request`-th request completes,
+/// apply `action` to `worker`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosEvent {
+    pub at_request: u64,
+    pub worker: usize,
+    pub action: ChaosAction,
+}
+
+/// A seeded, reproducible schedule of process-level chaos — the cluster
+/// analogue of [`FaultPlan`] (cells) and [`FaultyStream`] (links): workers
+/// are killed, stalled, and restarted at fixed points in the request
+/// stream, so a chaos run replays exactly from `(seed, workers,
+/// requests)`. The plan is pure data; `bench-net --cluster` owns the
+/// worker processes and applies the events.
+#[derive(Clone, Debug)]
+pub struct ChaosPlan {
+    seed: u64,
+    /// Events sorted by `at_request`; `cursor` marks the first not yet
+    /// taken.
+    events: Vec<ChaosEvent>,
+    cursor: usize,
+}
+
+impl ChaosPlan {
+    /// Draw `n_events` events over `workers` workers spread across a
+    /// `requests`-long run. Kills dominate (half the draws); a drawn
+    /// `Restart` revives the most recent kill of that worker, or is a
+    /// no-op if it was never killed. Deterministic in every argument.
+    pub fn seeded(seed: u64, workers: usize, requests: u64, n_events: usize) -> Self {
+        assert!(workers > 0, "chaos plan needs at least one worker");
+        assert!(requests > 1, "chaos plan needs a request stream to schedule into");
+        let mut rng = Rng::new(seed ^ 0xC3A5_C85C_97CB_3127);
+        let mut events: Vec<ChaosEvent> = (0..n_events)
+            .map(|_| {
+                let at_request = 1 + rng.below(requests - 1);
+                let worker = rng.below(workers as u64) as usize;
+                let action = match rng.below(4) {
+                    0 | 1 => ChaosAction::Kill,
+                    2 => ChaosAction::Stall(1 + rng.below(50)),
+                    _ => ChaosAction::Restart,
+                };
+                ChaosEvent {
+                    at_request,
+                    worker,
+                    action,
+                }
+            })
+            .collect();
+        events.sort_by_key(|e| e.at_request);
+        ChaosPlan {
+            seed,
+            events,
+            cursor: 0,
+        }
+    }
+
+    /// The minimal failover schedule: SIGKILL `worker` once the
+    /// `at_request`-th request has completed (the verify.sh cluster smoke
+    /// and the worker-kill-mid-batch test pin exactly this shape).
+    pub fn kill_one(worker: usize, at_request: u64) -> Self {
+        ChaosPlan {
+            seed: 0,
+            events: vec![ChaosEvent {
+                at_request,
+                worker,
+                action: ChaosAction::Kill,
+            }],
+            cursor: 0,
+        }
+    }
+
+    /// Kill `worker` at `at_request`, then restart it `gap` requests
+    /// later — the rejoin path in one schedule.
+    pub fn kill_then_restart(worker: usize, at_request: u64, gap: u64) -> Self {
+        ChaosPlan {
+            seed: 0,
+            events: vec![
+                ChaosEvent {
+                    at_request,
+                    worker,
+                    action: ChaosAction::Kill,
+                },
+                ChaosEvent {
+                    at_request: at_request + gap.max(1),
+                    worker,
+                    action: ChaosAction::Restart,
+                },
+            ],
+            cursor: 0,
+        }
+    }
+
+    /// The seed the schedule was drawn from (0 for explicit plans).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The full schedule, sorted by request index.
+    pub fn events(&self) -> &[ChaosEvent] {
+        &self.events
+    }
+
+    /// Events not yet taken by [`Self::take_due`].
+    pub fn remaining(&self) -> usize {
+        self.events.len() - self.cursor
+    }
+
+    /// Pop every event due once `completed` requests have finished. The
+    /// driver calls this after each completion; each event is returned
+    /// exactly once, in schedule order.
+    pub fn take_due(&mut self, completed: u64) -> Vec<ChaosEvent> {
+        let start = self.cursor;
+        while self.cursor < self.events.len() && self.events[self.cursor].at_request <= completed {
+            self.cursor += 1;
+        }
+        self.events[start..self.cursor].to_vec()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -459,6 +593,66 @@ mod tests {
         assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
         let err = s.read(&mut [0; 4]).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+    }
+
+    #[test]
+    fn chaos_plan_is_deterministic_and_sorted() {
+        let a = ChaosPlan::seeded(11, 3, 100, 8);
+        let b = ChaosPlan::seeded(11, 3, 100, 8);
+        assert_eq!(a.events(), b.events());
+        assert_eq!(a.seed(), 11);
+        assert_eq!(a.events().len(), 8);
+        assert!(a
+            .events()
+            .windows(2)
+            .all(|w| w[0].at_request <= w[1].at_request));
+        for e in a.events() {
+            assert!(e.worker < 3);
+            assert!((1..100).contains(&e.at_request), "never before the first or after the last request");
+            if let ChaosAction::Stall(ms) = e.action {
+                assert!((1..=50).contains(&ms));
+            }
+        }
+        let c = ChaosPlan::seeded(12, 3, 100, 8);
+        assert_ne!(a.events(), c.events(), "different seed, different schedule");
+    }
+
+    #[test]
+    fn chaos_take_due_returns_each_event_exactly_once_in_order() {
+        let mut p = ChaosPlan::seeded(5, 2, 50, 6);
+        let all = p.events().to_vec();
+        let mut taken = Vec::new();
+        for completed in 0..=50 {
+            taken.extend(p.take_due(completed));
+        }
+        assert_eq!(taken, all);
+        assert_eq!(p.remaining(), 0);
+        assert!(p.take_due(u64::MAX).is_empty(), "drained plan yields nothing");
+    }
+
+    #[test]
+    fn explicit_plans_pin_their_shape() {
+        let mut p = ChaosPlan::kill_one(1, 4);
+        assert!(p.take_due(3).is_empty());
+        assert_eq!(
+            p.take_due(4),
+            vec![ChaosEvent {
+                at_request: 4,
+                worker: 1,
+                action: ChaosAction::Kill,
+            }]
+        );
+        let p = ChaosPlan::kill_then_restart(0, 2, 0);
+        // a zero gap still restarts strictly after the kill
+        assert_eq!(p.events()[0].action, ChaosAction::Kill);
+        assert_eq!(
+            p.events()[1],
+            ChaosEvent {
+                at_request: 3,
+                worker: 0,
+                action: ChaosAction::Restart,
+            }
+        );
     }
 
     #[test]

@@ -48,6 +48,18 @@
 //!   --metrics-out PATH       periodically rewrite PATH with a sorted
 //!                            metric_<name> snapshot of the obs registry
 //!   --metrics-interval-ms N  snapshot cadence (default 1000)
+//! worker                     cluster shard worker: programs the full
+//!                            model from (--seed, --adc) and serves the
+//!                            shard-plane wire protocol on --addr
+//!   --admin-addr HOST:PORT   per-worker admin plane (heartbeat target)
+//!   --port-file/--admin-port-file PATH   write bound addresses
+//! cluster-serve              coordinator: shards the stage pipeline
+//!                            across --workers A,B,C processes and serves
+//!                            the ordinary client protocol on --addr
+//!   --worker-admins A,B,C    admin planes for heartbeat scrapes
+//!   --hop-deadline-ms N      per-hop forwarding deadline
+//!   --link-fault-rate/--link-fault-seed   seeded chaos on shard links
+//!   --shutdown-workers       drain the fleet after the server drains
 //! statz --addr HOST:PORT     scrape a serve-net admin plane and print
 //!                            the exposition (read-to-EOF plain text)
 //! bench-net --addr HOST:PORT multi-threaded load generator
@@ -61,6 +73,15 @@
 //!                            against a clean pass (fault_overhead_b8)
 //!   --deadline-ms N          per-request deadline across retries
 //!   --shutdown               drain the server after the run
+//!   --cluster                self-contained failover benchmark: spawns
+//!                            --workers N (default 3) worker processes,
+//!                            serves them through an in-process cluster
+//!                            coordinator, and replays the stream under a
+//!                            seeded kill/stall/restart ChaosPlan
+//!                            (--chaos-seed/--chaos-events, or a pinned
+//!                            --kill-worker W --kill-at R); asserts
+//!                            bit-exact replies under --expect-exact and
+//!                            writes cluster_failover_* JSON keys
 //!   --trace-out/--trace-level      client-side Chrome-trace export
 //! sched-stress               work-stealing executor stress smoke (CI)
 //! export --out DIR           every figure's data series as CSV
@@ -74,8 +95,11 @@ use anyhow::{anyhow, bail, Result};
 
 use newton::cli::{self, Args};
 use newton::config::{AdcKind, ChipConfig, ImaConfig, XbarParams};
-use newton::coordinator::{newton_mini, GoldenServer, HealthPolicy, HealthState, PipelineServer, ServerConfig};
-use newton::faults::FaultPlan;
+use newton::coordinator::{
+    newton_mini, ClusterConfig, ClusterEngine, ClusterWorker, GoldenServer, HealthPolicy,
+    HealthState, PipelineServer, ServerConfig, WorkerConfig,
+};
+use newton::faults::{ChaosAction, ChaosPlan, FaultPlan};
 use newton::mapping::{self, Mapping, MappingPolicy, StagePolicy};
 use newton::metrics;
 use newton::net::{self, BenchConfig, NetServer, ServeConfig};
@@ -96,6 +120,8 @@ fn main() {
         "verify" => cmd_verify(&args),
         "serve" => cmd_serve(&args),
         "serve-net" => cmd_serve_net(&args),
+        "worker" => cmd_worker(&args),
+        "cluster-serve" => cmd_cluster_serve(&args),
         "bench-net" => cmd_bench_net(&args),
         "statz" => cmd_statz(&args),
         "sched-stress" => cmd_sched_stress(&args),
@@ -569,6 +595,140 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One shard-serving worker process: programs the full model, serves
+/// `ShardInstall`/`Fwd` on its shard port and a `newton_worker_*`
+/// exposition on the admin port, and exits when a `Shutdown` frame (or a
+/// coordinator drain) lands.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let kind = AdcKind::parse(args.get_or("adc", "exact")).map_err(|e| anyhow!("{e}"))?;
+    let seed = args.get_usize("seed", 0) as u64;
+    let cfg = WorkerConfig::new(seed, kind).map_err(|e| anyhow!("{e}"))?;
+    // workers price their own hops: FwdReply ships the hop's CostLedger
+    // and energy, and cluster conservation is asserted against it
+    newton::obs::ledger::set_enabled(!args.has_flag("no-ledger"));
+    let t0 = std::time::Instant::now();
+    let worker = ClusterWorker::start(cfg, args.get_or("addr", "127.0.0.1:0"), args.get("admin-addr"))?;
+    println!(
+        "worker listening on {} (programmed full model in {:.1} ms, seed {seed})",
+        worker.local_addr(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    if let Some(pf) = args.get("port-file") {
+        std::fs::write(pf, worker.local_addr().to_string())?;
+    }
+    if let Some(admin) = worker.admin_addr() {
+        println!("  worker admin plane on {admin}");
+        if let Some(pf) = args.get("admin-port-file") {
+            std::fs::write(pf, admin.to_string())?;
+        }
+    }
+    worker.join();
+    println!("worker drained");
+    Ok(())
+}
+
+/// Coordinator endpoint: shards the stage pipeline across `--workers`
+/// processes and serves the ordinary client protocol on `--addr` — to a
+/// client there is no difference between a cluster and a single process.
+fn cmd_cluster_serve(args: &Args) -> Result<()> {
+    let trace_out = init_tracing(args)?;
+    let kind = AdcKind::parse(args.get_or("adc", "exact")).map_err(|e| anyhow!("{e}"))?;
+    let seed = args.get_usize("seed", 0) as u64;
+    let batch = args.get_usize("batch", 8);
+    let max_inflight = args.get_usize("max-inflight", 64);
+    let wait_ms = args.get_usize("batch-wait-ms", 2);
+    let workers_spec = args
+        .get("workers")
+        .ok_or_else(|| anyhow!("--workers A,B,C is required (shard addresses)"))?;
+    let workers: Vec<String> = workers_spec
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if workers.is_empty() {
+        bail!("--workers needs at least one address");
+    }
+    // optional parallel list of worker admin planes (heartbeat scrape
+    // targets); empty entries fall back to stats-probe heartbeats
+    let admins: Vec<Option<String>> = match args.get("worker-admins") {
+        Some(spec) => spec
+            .split(',')
+            .map(|s| {
+                let s = s.trim();
+                if s.is_empty() { None } else { Some(s.to_string()) }
+            })
+            .collect(),
+        None => vec![None; workers.len()],
+    };
+    if admins.len() != workers.len() {
+        bail!(
+            "--worker-admins has {} entries for {} workers",
+            admins.len(),
+            workers.len()
+        );
+    }
+    let endpoints: Vec<(String, Option<String>)> =
+        workers.into_iter().zip(admins).collect();
+
+    let mut ccfg = ClusterConfig::new(seed, kind, batch).map_err(|e| anyhow!("{e}"))?;
+    if let Some(ms) = args.get("hop-deadline-ms") {
+        let ms: u64 = ms.parse().map_err(|_| anyhow!("--hop-deadline-ms wants a number"))?;
+        ccfg.hop_deadline = Duration::from_millis(ms.max(1));
+    }
+    ccfg.link_fault_rate = args.get_f64("link-fault-rate", 0.0);
+    ccfg.link_fault_seed = args.get_usize("link-fault-seed", 0) as u64;
+    if !(0.0..=1.0).contains(&ccfg.link_fault_rate) {
+        bail!("--link-fault-rate must be in [0, 1]");
+    }
+
+    newton::obs::ledger::set_enabled(!args.has_flag("no-ledger"));
+    let t0 = std::time::Instant::now();
+    let engine = ClusterEngine::connect(ccfg, &endpoints).map_err(|e| anyhow!("cluster connect: {e}"))?;
+    let heartbeats = engine.spawn_heartbeats();
+    println!(
+        "cluster up in {:.1} ms: {}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        newton::net::Engine::describe(engine.as_ref())
+    );
+
+    let timeouts = net::Timeouts::default();
+    let server = NetServer::start(
+        engine.clone(),
+        ServeConfig {
+            addr: args.get_or("addr", "127.0.0.1:0").to_string(),
+            max_inflight,
+            batch_wait: Duration::from_millis(wait_ms as u64),
+            timeouts,
+            admin_addr: args.get("admin-addr").map(str::to_string),
+            cost_reports: args.has_flag("cost-reports"),
+        },
+    )?;
+    let addr = server.local_addr();
+    println!("cluster-serve listening on {addr} (max {max_inflight} in flight)");
+    if let Some(pf) = args.get("port-file") {
+        std::fs::write(pf, addr.to_string())?;
+    }
+    if let Some(admin) = server.admin_addr() {
+        println!("  admin plane on {admin}");
+        if let Some(pf) = args.get("admin-port-file") {
+            std::fs::write(pf, admin.to_string())?;
+        }
+    }
+    println!("  drain with: newton bench-net --addr {addr} --shutdown");
+
+    let stats = server.join();
+    engine.stop();
+    let _ = heartbeats.join();
+    if args.has_flag("shutdown-workers") {
+        engine.shutdown_workers();
+        println!("sent shutdown to every worker");
+    }
+    println!("final re-shard count: {} (generation {})", engine.reshard_count(), engine.generation());
+    print_net_stats(&stats);
+    export_trace(trace_out.as_deref());
+    Ok(())
+}
+
 fn print_net_stats(s: &net::StatsSnapshot) {
     println!(
         "drained: {} served / {} busy-rejected / {} protocol errors",
@@ -656,6 +816,11 @@ fn cmd_statz(args: &Args) -> Result<()> {
 /// request stream through an in-process `GoldenServer` and asserts
 /// bit-identity plus zero deviation; `--shutdown` drains the server.
 fn cmd_bench_net(args: &Args) -> Result<()> {
+    if args.has_flag("cluster") {
+        // --cluster owns its own server and worker fleet; everything else
+        // in this function benches an endpoint somebody else started
+        return cmd_bench_net_cluster(args);
+    }
     let trace_out = init_tracing(args)?;
     let addr = args
         .get("addr")
@@ -802,12 +967,333 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
         None
     };
 
-    write_bench_net_json(&report, &stats, verified, fault_overhead, &sweep);
+    write_bench_net_json(&report, &stats, verified, fault_overhead, &sweep, None);
 
     if args.has_flag("shutdown") {
         ctl.shutdown()?;
         println!("sent shutdown; server drained and acked");
     }
+    export_trace(trace_out.as_deref());
+    Ok(())
+}
+
+/// One worker child process owned by the cluster bench harness: the
+/// `newton worker` subprocess plus the addresses it bound. A chaos
+/// `Restart` revives it on the exact same ports, because the coordinator
+/// re-dials the address it already knows.
+struct WorkerProc {
+    child: std::process::Child,
+    addr: String,
+    admin: String,
+    alive: bool,
+}
+
+impl WorkerProc {
+    /// SIGKILL and reap; idempotent.
+    fn kill(&mut self) {
+        if self.alive {
+            let _ = self.child.kill();
+            let _ = self.child.wait();
+            self.alive = false;
+        }
+    }
+}
+
+/// Spawn one `newton worker` child and wait for its port files. On a
+/// restart the worker must rebind the exact ports it had, which can
+/// transiently fail while the dead process's socket drains — a child that
+/// exits before writing its port files is respawned after a short pause.
+fn spawn_worker_proc(
+    exe: &std::path::Path,
+    dir: &std::path::Path,
+    i: usize,
+    engine_seed: u64,
+    adc: &str,
+    addr: &str,
+    admin: &str,
+) -> Result<WorkerProc> {
+    let pf = dir.join(format!("worker{i}.port"));
+    let af = dir.join(format!("worker{i}.admin"));
+    for _attempt in 0..40 {
+        let _ = std::fs::remove_file(&pf);
+        let _ = std::fs::remove_file(&af);
+        let mut child = std::process::Command::new(exe)
+            .args([
+                "worker",
+                "--seed",
+                &engine_seed.to_string(),
+                "--adc",
+                adc,
+                "--addr",
+                addr,
+                "--admin-addr",
+                admin,
+                "--port-file",
+                pf.to_str().unwrap_or_default(),
+                "--admin-port-file",
+                af.to_str().unwrap_or_default(),
+            ])
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .spawn()?;
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        loop {
+            if let (Ok(a), Ok(ad)) = (std::fs::read_to_string(&pf), std::fs::read_to_string(&af)) {
+                if !a.is_empty() && !ad.is_empty() {
+                    return Ok(WorkerProc { child, addr: a, admin: ad, alive: true });
+                }
+            }
+            if matches!(child.try_wait(), Ok(Some(_))) {
+                // exited before binding (old port still draining) — respawn
+                break;
+            }
+            if std::time::Instant::now() >= deadline {
+                let _ = child.kill();
+                let _ = child.wait();
+                bail!("worker {i} did not come up on {addr} within 20s");
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        std::thread::sleep(Duration::from_millis(250));
+    }
+    bail!("worker {i} could not rebind {addr} after repeated attempts")
+}
+
+/// `bench-net --cluster`: the sharded-serving failover benchmark. Owns a
+/// fleet of `newton worker` child processes, serves them through an
+/// in-process cluster coordinator, runs a clean pass, then replays the
+/// identical request stream while a seeded [`ChaosPlan`] kills, stalls,
+/// and restarts workers mid-load. Replies must stay bit-identical to the
+/// single-process golden path through every schedule; `BENCH_net.json`
+/// gains the `cluster_failover_*` series (worst recovery latency,
+/// re-shard count, chaos overhead vs the clean sequential pass).
+fn cmd_bench_net_cluster(args: &Args) -> Result<()> {
+    let trace_out = init_tracing(args)?;
+    let adc = args.get_or("adc", "exact");
+    let kind = AdcKind::parse(adc).map_err(|e| anyhow!("{e}"))?;
+    let engine_seed = args.get_usize("engine-seed", 0) as u64;
+    let n_workers = args.get_usize("workers", 3);
+    let requests = args.get_usize("requests", 48);
+    let batch = args.get_usize("batch", 8);
+    let concurrency = args.get_usize("concurrency", 4);
+    let stream_seed = args.get_usize("seed", 0) as u64;
+    let deadline = Duration::from_millis(args.get_usize("deadline-ms", 60_000) as u64);
+    if n_workers == 0 || requests < 2 || concurrency == 0 {
+        bail!("--cluster needs --workers >= 1, --requests >= 2, --concurrency >= 1");
+    }
+
+    // fleet of real worker processes on ephemeral ports
+    let exe = std::env::current_exe()?;
+    let dir = std::env::temp_dir().join(format!("newton-cluster-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    println!("bench-net --cluster: spawning {n_workers} worker processes (seed {engine_seed})");
+    let mut fleet: Vec<WorkerProc> = Vec::new();
+    for i in 0..n_workers {
+        fleet.push(spawn_worker_proc(
+            &exe,
+            &dir,
+            i,
+            engine_seed,
+            adc,
+            "127.0.0.1:0",
+            "127.0.0.1:0",
+        )?);
+    }
+    let endpoints: Vec<(String, Option<String>)> =
+        fleet.iter().map(|w| (w.addr.clone(), Some(w.admin.clone()))).collect();
+
+    // in-process coordinator plus the ordinary client-facing endpoint
+    let mut ccfg = ClusterConfig::new(engine_seed, kind, batch).map_err(|e| anyhow!("{e}"))?;
+    if let Some(ms) = args.get("hop-deadline-ms") {
+        let ms: u64 = ms.parse().map_err(|_| anyhow!("--hop-deadline-ms wants a number"))?;
+        ccfg.hop_deadline = Duration::from_millis(ms.max(1));
+    }
+    ccfg.link_fault_rate = args.get_f64("link-fault-rate", 0.0);
+    ccfg.link_fault_seed = args.get_usize("link-fault-seed", 0) as u64;
+    if !(0.0..=1.0).contains(&ccfg.link_fault_rate) {
+        bail!("--link-fault-rate must be in [0, 1]");
+    }
+    newton::obs::ledger::set_enabled(!args.has_flag("no-ledger"));
+    let engine =
+        ClusterEngine::connect(ccfg, &endpoints).map_err(|e| anyhow!("cluster connect: {e}"))?;
+    let heartbeats = engine.spawn_heartbeats();
+    let server = NetServer::start(
+        engine.clone(),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_inflight: args.get_usize("max-inflight", 64),
+            batch_wait: Duration::from_millis(2),
+            timeouts: net::Timeouts::default(),
+            admin_addr: None,
+            cost_reports: false,
+        },
+    )?;
+    let addr = server.local_addr().to_string();
+    println!("cluster up: {}", newton::net::Engine::describe(engine.as_ref()));
+
+    // one request stream shared by every pass and by the golden reference
+    let images: Vec<Vec<i32>> =
+        (0..requests).map(|i| net::bench_image(stream_seed, i)).collect();
+    let want = GoldenServer::replicated(engine_seed, AdcKind::Exact, 1, batch).infer(&images);
+
+    // clean pass 1: the standard concurrent load generator — primary
+    // BenchReport for the JSON latency keys
+    let mut cfg = BenchConfig::new(&addr);
+    cfg.requests = requests;
+    cfg.concurrency = concurrency;
+    cfg.seed = stream_seed;
+    cfg.deadline = deadline;
+    let mut report = net::load_generate(&cfg)?;
+    println!(
+        "clean pass: {} requests in {:.2}s ({:.1} req/s)",
+        report.requests, report.wall_s, report.throughput_rps
+    );
+
+    // clean pass 2: sequential, through the same retrying client the
+    // chaos pass uses, so the overhead ratio compares like against like
+    let policy = net::RetryPolicy {
+        deadline,
+        ..net::RetryPolicy::default()
+    };
+    let mut rc = net::RetryClient::new(&addr, policy, stream_seed);
+    let t_clean = std::time::Instant::now();
+    for (i, img) in images.iter().enumerate() {
+        rc.infer_timed(i as u64, img)
+            .map_err(|e| anyhow!("clean sequential pass, request {i}: {e}"))?;
+    }
+    let clean_seq_s = t_clean.elapsed().as_secs_f64().max(1e-9);
+
+    // chaos pass: replay the stream sequentially under the seeded
+    // schedule, so event positions in the request stream are exact. A
+    // Stall pauses the request stream (the coordinator keeps heartbeating
+    // underneath); Kill/Restart act on the real child processes.
+    let mut plan = match args.get("kill-worker") {
+        Some(w) => {
+            let w: usize =
+                w.parse().map_err(|_| anyhow!("--kill-worker wants a worker index"))?;
+            if w >= n_workers {
+                bail!("--kill-worker {w} out of range for {n_workers} workers");
+            }
+            let at = args.get_usize("kill-at", requests / 2).max(1) as u64;
+            ChaosPlan::kill_one(w, at)
+        }
+        None => ChaosPlan::seeded(
+            args.get_usize("chaos-seed", 7) as u64,
+            n_workers,
+            requests as u64,
+            args.get_usize("chaos-events", 4),
+        ),
+    };
+    println!(
+        "chaos pass: {} scheduled events (seed {})",
+        plan.events().len(),
+        plan.seed()
+    );
+    let reshards_before = engine.reshard_count();
+    let policy = net::RetryPolicy {
+        deadline,
+        ..net::RetryPolicy::default()
+    };
+    let mut rc = net::RetryClient::new(&addr, policy, stream_seed.wrapping_add(1));
+    let mut chaos_logits: Vec<Vec<i32>> = Vec::with_capacity(requests);
+    let mut kill_pending: Option<std::time::Instant> = None;
+    let mut recovery_worst_ms = 0.0f64;
+    let mut kills = 0u64;
+    let t_chaos = std::time::Instant::now();
+    for (i, img) in images.iter().enumerate() {
+        for ev in plan.take_due(i as u64) {
+            match ev.action {
+                ChaosAction::Kill => {
+                    if fleet[ev.worker].alive {
+                        fleet[ev.worker].kill();
+                        kills += 1;
+                        if kill_pending.is_none() {
+                            kill_pending = Some(std::time::Instant::now());
+                        }
+                        println!("  chaos: SIGKILL worker {} before request {i}", ev.worker);
+                    }
+                }
+                ChaosAction::Stall(ms) => {
+                    println!("  chaos: stall {ms} ms before request {i}");
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                ChaosAction::Restart => {
+                    if !fleet[ev.worker].alive {
+                        let (a, ad) =
+                            (fleet[ev.worker].addr.clone(), fleet[ev.worker].admin.clone());
+                        fleet[ev.worker] =
+                            spawn_worker_proc(&exe, &dir, ev.worker, engine_seed, adc, &a, &ad)?;
+                        println!("  chaos: restarted worker {} on {a} before request {i}", ev.worker);
+                    }
+                }
+            }
+        }
+        let (reply, _us) = rc
+            .infer_timed(i as u64, img)
+            .map_err(|e| anyhow!("chaos pass, request {i}: {e}"))?;
+        if let Some(k) = kill_pending.take() {
+            recovery_worst_ms = recovery_worst_ms.max(k.elapsed().as_secs_f64() * 1e3);
+        }
+        chaos_logits.push(reply.logits);
+    }
+    let chaos_s = t_chaos.elapsed().as_secs_f64().max(1e-9);
+    let fault_overhead = chaos_s / clean_seq_s;
+    let reshards = engine.reshard_count().saturating_sub(reshards_before);
+
+    // bit-exactness across every schedule is the whole point of the
+    // generation protocol; check it on both passes, hard-fail only under
+    // --expect-exact so exploratory runs still report
+    let clean_ok = report.logits == want && report.worst_abs_err == 0;
+    let chaos_ok = chaos_logits == want;
+    if args.has_flag("expect-exact") {
+        if !clean_ok {
+            bail!("--cluster --expect-exact: clean pass NOT bit-identical to the golden path");
+        }
+        if !chaos_ok {
+            bail!("--cluster --expect-exact: chaos pass NOT bit-identical to the golden path");
+        }
+        println!("  verified   : both passes bit-identical to the in-process golden path ✓");
+    } else if !(clean_ok && chaos_ok) {
+        println!("  verified   : FAILED — replies deviate from the in-process golden path");
+    }
+    let verified = Some(clean_ok && chaos_ok);
+    println!(
+        "  failover   : {kills} kills, {reshards} re-shards, worst recovery {:.1} ms, \
+         chaos overhead {:.2}x{}",
+        recovery_worst_ms,
+        fault_overhead,
+        if newton::net::Engine::degraded(engine.as_ref()) {
+            " — DEGRADED (fallback engine)"
+        } else {
+            ""
+        }
+    );
+
+    // server-side view, JSON, then drain everything we own
+    let sweep = vec![(concurrency, report.p50_us, report.p99_us, report.p999_us)];
+    let mut ctl = net::Client::connect(&addr)?;
+    let stats = ctl.stats()?;
+    if report.per_replica.len() < stats.per_replica.len() {
+        report.per_replica.resize(stats.per_replica.len(), 0);
+    }
+    write_bench_net_json(
+        &report,
+        &stats,
+        verified,
+        Some(fault_overhead),
+        &sweep,
+        Some((recovery_worst_ms, reshards, fault_overhead)),
+    );
+    ctl.shutdown()?;
+    let stats = server.join();
+    engine.stop();
+    let _ = heartbeats.join();
+    engine.shutdown_workers();
+    for w in &mut fleet {
+        w.kill();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    print_net_stats(&stats);
     export_trace(trace_out.as_deref());
     Ok(())
 }
@@ -818,6 +1304,7 @@ fn write_bench_net_json(
     verified: Option<bool>,
     fault_overhead: Option<f64>,
     sweep: &[(usize, u64, u64, u64)],
+    cluster: Option<(f64, u64, f64)>,
 ) {
     let per_replica = r
         .per_replica
@@ -839,6 +1326,16 @@ fn write_bench_net_json(
              \"latency_p999_us_c{c}\": {p999},\n"
         ));
     }
+    // cluster failover series (bench-net --cluster only): worst
+    // kill-to-next-reply latency, re-shards during the chaos pass, and
+    // chaos wall time over the clean sequential pass
+    let cluster_keys = cluster.map_or(String::new(), |(recovery_ms, reshards, overhead)| {
+        format!(
+            "  \"cluster_failover_recovery_ms\": {recovery_ms:.3},\n  \
+             \"cluster_failover_reshards\": {reshards},\n  \
+             \"cluster_failover_fault_overhead\": {overhead:.3},\n"
+        )
+    });
     let metrics_json = server
         .metrics
         .iter()
@@ -869,7 +1366,7 @@ fn write_bench_net_json(
     let json = format!(
         "{{\n  \"requests\": {},\n  \"concurrency\": {},\n  \"wall_s\": {:.6},\n  \
          \"throughput_rps\": {:.3},\n  \"p50_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \
-         \"max_ms\": {:.3},\n{}  \"busy_retries\": {},\n  \"fault_retries\": {},\n  \
+         \"max_ms\": {:.3},\n{}{}  \"busy_retries\": {},\n  \"fault_retries\": {},\n  \
          \"reconnects\": {},\n  \"injected_faults\": {},\n  \"fault_overhead_b8\": {},\n  \
          \"worst_abs_err\": {},\n  \
          \"adc_ops_per_infer\": {adc_ops_per_infer:.3},\n  \
@@ -888,6 +1385,7 @@ fn write_bench_net_json(
         r.p99_ms,
         r.max_ms,
         sweep_keys,
+        cluster_keys,
         r.busy_retries,
         r.fault_retries,
         r.reconnects,

@@ -430,6 +430,150 @@ impl StageMap {
     }
 }
 
+/// A stage → *shard* assignment for multi-process serving
+/// ([`crate::coordinator::cluster`]): the process-level analogue of
+/// [`StageMap`], reusing the same [`StagePolicy`] vocabulary one level up.
+/// Where a `StageMap` places stages on replicas inside one process, a
+/// `ShardMap` places them on worker *processes*, and activations cross a
+/// wire at every shard boundary — so assignments are always **contiguous
+/// runs of stages**: a batch crosses each inter-shard link exactly once,
+/// front to back, and [`Self::segments`] *is* the forwarding plan.
+///
+/// # Examples
+///
+/// ```
+/// use newton::mapping::{ShardMap, StagePolicy};
+///
+/// // newton-mini over 3 workers: convs chunk over shards 0-1, the
+/// // classifier tail keeps the last shard to itself (§III-B2, one level
+/// // up: classifier *processes* are distinct provisioning)
+/// let map = ShardMap::build(3, 3, StagePolicy::newton()).unwrap();
+/// assert_eq!(map.assignment, vec![0, 1, 1, 2]);
+/// assert_eq!(map.segments(), vec![(0, 0, 1), (1, 1, 3), (2, 3, 4)]);
+///
+/// // a worker died: re-shard over the survivors, pool size kept
+/// let map = ShardMap::build_over(3, &[0, 2], 3, StagePolicy::newton()).unwrap();
+/// assert_eq!(map.segments(), vec![(0, 0, 3), (2, 3, 4)]);
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    /// `assignment[s]` = shard that executes stage `s`; stages
+    /// `0..assignment.len()-1` are convs, the last is the classifier.
+    /// Always a non-decreasing sequence (contiguity invariant).
+    pub assignment: Vec<usize>,
+    /// Shards the assignment draws from — the worker-pool size; some may
+    /// hold no stages (dead or surplus workers).
+    pub n_shards: usize,
+    /// The policy the assignment was built under.
+    pub policy: StagePolicy,
+}
+
+impl ShardMap {
+    /// Assign `n_conv + 1` stages onto `n_shards` worker shards under
+    /// `policy`. Contiguous by construction: shard indices are assigned in
+    /// stage order. Fails when the policy cannot be met with this shard
+    /// count ([`StagePolicy::newton`] needs >= 2: the classifier tail owns
+    /// the last shard alone).
+    pub fn build(n_conv: usize, n_shards: usize, policy: StagePolicy) -> Result<ShardMap, String> {
+        if n_shards == 0 {
+            return Err("shard map needs at least one worker".to_string());
+        }
+        let n_stages = n_conv + 1;
+        let assignment: Vec<usize> = if policy.share_mixed {
+            // unconstrained: balanced contiguous chunks over the pool
+            let k = n_shards.min(n_stages);
+            let mut a = Vec::with_capacity(n_stages);
+            for i in 0..k {
+                let n = (i + 1) * n_stages / k - i * n_stages / k;
+                a.resize(a.len() + n, i);
+            }
+            a
+        } else {
+            // Newton: the classifier tail owns the last shard, convs chunk
+            // contiguously over the rest
+            if n_shards < 2 {
+                return Err(
+                    "conv/classifier isolation needs >= 2 shards (or an unconstrained policy)"
+                        .to_string(),
+                );
+            }
+            let k = (n_shards - 1).min(n_conv.max(1));
+            if !policy.share_conv && n_shards - 1 < n_conv {
+                return Err(format!(
+                    "{n_conv} conv stages need {} shards when conv stages may not share (have {n_shards})",
+                    n_conv + 1
+                ));
+            }
+            let mut a: Vec<usize> = Vec::with_capacity(n_stages);
+            for i in 0..k {
+                let n = (i + 1) * n_conv / k - i * n_conv / k;
+                a.resize(a.len() + n, i);
+            }
+            a.push(n_shards - 1);
+            a
+        };
+        debug_assert!(assignment.windows(2).all(|w| w[0] <= w[1]));
+        Ok(ShardMap {
+            assignment,
+            n_shards,
+            policy,
+        })
+    }
+
+    /// [`Self::build`] over a *subset* of the worker pool — the failover
+    /// path: dead workers leave the usable set, stage placement re-derives
+    /// over the survivors, and `n_shards` stays the pool size so shard
+    /// indices remain stable across re-shards (same contract as
+    /// [`StageMap::build_over`]). `usable` must be ascending,
+    /// duplicate-free, and within the pool.
+    pub fn build_over(
+        n_conv: usize,
+        usable: &[usize],
+        n_pool: usize,
+        policy: StagePolicy,
+    ) -> Result<ShardMap, String> {
+        assert!(
+            usable.windows(2).all(|w| w[0] < w[1]),
+            "usable shard list must be ascending and duplicate-free"
+        );
+        assert!(
+            usable.iter().all(|&r| r < n_pool),
+            "usable shard outside the pool"
+        );
+        let inner = Self::build(n_conv, usable.len(), policy)?;
+        Ok(ShardMap {
+            assignment: inner.assignment.iter().map(|&r| usable[r]).collect(),
+            n_shards: n_pool,
+            policy,
+        })
+    }
+
+    /// Shard assigned to stage `s`.
+    pub fn shard_of(&self, s: usize) -> usize {
+        self.assignment[s]
+    }
+
+    /// The forwarding plan: `(shard, stage_lo, stage_hi)` per occupied
+    /// shard, in stage order, with half-open contiguous stage ranges that
+    /// partition `0..n_stages`. A batch visits these left to right, one
+    /// wire hop each.
+    pub fn segments(&self) -> Vec<(usize, usize, usize)> {
+        let mut out: Vec<(usize, usize, usize)> = Vec::new();
+        for (s, &shard) in self.assignment.iter().enumerate() {
+            match out.last_mut() {
+                Some(seg) if seg.0 == shard => seg.2 = s + 1,
+                _ => out.push((shard, s, s + 1)),
+            }
+        }
+        out
+    }
+
+    /// Distinct shards actually holding stages.
+    pub fn occupancy(&self) -> usize {
+        self.segments().len()
+    }
+}
+
 /// Fig 10 sweep entry: average conv under-utilisation across a suite for a
 /// given constrained-IMA shape.
 pub fn avg_underutilization(
@@ -637,5 +781,78 @@ mod tests {
         let m = StageMap::build(3, 1, StagePolicy::unconstrained()).unwrap();
         assert_eq!(m.assignment, vec![0, 0, 0, 0]);
         assert_eq!(m.concurrency(), 1);
+    }
+
+    #[test]
+    fn shard_map_is_contiguous_and_partitions_the_stages() {
+        for n_shards in 1..6 {
+            for policy in [StagePolicy::newton(), StagePolicy::unconstrained()] {
+                let Ok(m) = ShardMap::build(3, n_shards, policy) else {
+                    assert!(!policy.share_mixed && n_shards < 2);
+                    continue;
+                };
+                assert_eq!(m.assignment.len(), 4);
+                assert!(m.assignment.windows(2).all(|w| w[0] <= w[1]), "{:?}", m.assignment);
+                assert!(m.assignment.iter().all(|&s| s < n_shards));
+                // segments partition 0..4 exactly, in order
+                let segs = m.segments();
+                assert_eq!(segs.first().unwrap().1, 0);
+                assert_eq!(segs.last().unwrap().2, 4);
+                for w in segs.windows(2) {
+                    assert_eq!(w[0].2, w[1].1, "gap between segments: {segs:?}");
+                    assert_ne!(w[0].0, w[1].0, "adjacent segments share a shard");
+                }
+                assert_eq!(m.occupancy(), segs.len());
+            }
+        }
+    }
+
+    #[test]
+    fn shard_map_isolates_the_classifier_under_newton_policy() {
+        let m = ShardMap::build(3, 3, StagePolicy::newton()).unwrap();
+        assert_eq!(m.assignment, vec![0, 1, 1, 2]);
+        assert_eq!(m.shard_of(3), 2);
+        assert!(m.assignment[..3].iter().all(|&s| s != 2));
+        // exactly enough shards: one stage each
+        let m = ShardMap::build(3, 4, StagePolicy::newton()).unwrap();
+        assert_eq!(m.assignment, vec![0, 1, 2, 3]);
+        // surplus shards stay empty rather than splitting a stage
+        let m = ShardMap::build(3, 6, StagePolicy::newton()).unwrap();
+        assert_eq!(m.occupancy(), 4);
+        assert_eq!(*m.assignment.last().unwrap(), 5);
+    }
+
+    #[test]
+    fn shard_map_rejects_infeasible_policies() {
+        assert!(ShardMap::build(3, 1, StagePolicy::newton()).is_err());
+        assert!(ShardMap::build(3, 0, StagePolicy::unconstrained()).is_err());
+        let rigid = StagePolicy {
+            share_conv: false,
+            share_mixed: false,
+            pooled_scratch: false,
+        };
+        assert!(ShardMap::build(3, 3, rigid).is_err());
+        assert_eq!(ShardMap::build(3, 4, rigid).unwrap().assignment, vec![0, 1, 2, 3]);
+        // a single unconstrained shard degenerates to single-process serving
+        let m = ShardMap::build(3, 1, StagePolicy::unconstrained()).unwrap();
+        assert_eq!(m.segments(), vec![(0, 0, 4)]);
+    }
+
+    #[test]
+    fn shard_build_over_reshards_onto_survivors() {
+        // full pool: identical to build()
+        let m = ShardMap::build_over(3, &[0, 1, 2], 3, StagePolicy::newton()).unwrap();
+        assert_eq!(m, ShardMap::build(3, 3, StagePolicy::newton()).unwrap());
+        // worker 1 died: stages re-chunk over 0 and 2, pool size kept
+        let m = ShardMap::build_over(3, &[0, 2], 3, StagePolicy::newton()).unwrap();
+        assert_eq!(m.assignment, vec![0, 0, 0, 2]);
+        assert_eq!(m.n_shards, 3);
+        assert!(!m.assignment.contains(&1));
+        // last survivor: newton infeasible, unconstrained takes everything
+        assert!(ShardMap::build_over(3, &[1], 3, StagePolicy::newton()).is_err());
+        let m = ShardMap::build_over(3, &[1], 3, StagePolicy::unconstrained()).unwrap();
+        assert_eq!(m.segments(), vec![(1, 0, 4)]);
+        // empty pool is an error, not a panic
+        assert!(ShardMap::build_over(3, &[], 3, StagePolicy::unconstrained()).is_err());
     }
 }

@@ -224,24 +224,6 @@ impl<S: Read + Write> Client<S> {
         }
     }
 
-    /// Inference with bounded fixed-sleep busy-retry.
-    #[deprecated(
-        note = "fixed-sleep spin; use infer_backoff with a Backoff, or RetryClient for \
-                full transport-level resilience"
-    )]
-    pub fn infer_retry(
-        &mut self,
-        id: u64,
-        image: &[i32],
-        max_retries: usize,
-        backoff: Duration,
-    ) -> Result<(InferReply, usize), NetError> {
-        // base == cap pins every delay to the old per-sleep duration
-        // (modulo the jitter factor, which only ever shortens it)
-        let mut b = Backoff::new(backoff, backoff, id);
-        self.infer_backoff(id, image, max_retries, &mut b)
-    }
-
     /// Fetch the server's statistics snapshot.
     pub fn stats(&mut self) -> Result<StatsSnapshot, NetError> {
         match self.request(&Msg::StatsReq)? {

@@ -88,6 +88,13 @@ pub trait Engine: Send + Sync {
     fn health(&self) -> Option<crate::coordinator::health::HealthReport> {
         None
     }
+    /// Whether the engine is serving in a degraded mode (e.g. the cluster
+    /// engine running on its in-process fallback after losing every
+    /// worker). ORed into the admin exposition's `newton_degraded` gauge
+    /// alongside the stats and watchdog verdicts.
+    fn degraded(&self) -> bool {
+        false
+    }
 }
 
 /// Nearest-rank percentile over an ascending-sorted latency sample.

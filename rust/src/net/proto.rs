@@ -37,8 +37,11 @@ pub const MAGIC: [u8; 4] = *b"NWT0";
 /// and `Reply` with a client-minted trace id and the `Stats` payload with
 /// p999 + an observability metrics block; v3 lets an opt-in
 /// [`CostReport`] ride the tail of the `Reply` frame (zero bytes when the
-/// server has cost reports disabled). Older peers are rejected at the
-/// header (both ends of the wire live in this repo).
+/// server has cost reports disabled). The shard-plane messages
+/// (`TY_SHARD_*` / `TY_FWD*`, `coordinator::cluster`) ride the same v3
+/// framing as new types — unknown types were already fatal, so old peers
+/// reject them cleanly. Older versions are rejected at the header (both
+/// ends of the wire live in this repo).
 pub const VERSION: u8 = 3;
 /// Fixed frame-header size in bytes.
 pub const HEADER_LEN: usize = 16;
@@ -67,12 +70,22 @@ pub const TY_STATS_REQ: u8 = 5;
 pub const TY_STATS: u8 = 6;
 pub const TY_SHUTDOWN: u8 = 7;
 pub const TY_SHUTDOWN_ACK: u8 = 8;
+// Shard plane (coordinator <-> worker; `coordinator::cluster`): same v3
+// framing, new types — a worker is just another v3 peer.
+pub const TY_SHARD_INSTALL: u8 = 9;
+pub const TY_SHARD_ACK: u8 = 10;
+pub const TY_FWD: u8 = 11;
+pub const TY_FWD_OUT: u8 = 12;
 
 /// [`WireError`] codes.
 pub const ERR_MALFORMED: u16 = 1;
 pub const ERR_BAD_SHAPE: u16 = 2;
 pub const ERR_DRAINING: u16 = 3;
 pub const ERR_INTERNAL: u16 = 4;
+/// A forward named a stage range / generation the worker does not hold
+/// (install lost or superseded). Recoverable: the coordinator re-sends
+/// [`Msg::ShardInstall`] and retries the hop.
+pub const ERR_STALE_SHARD: u16 = 5;
 
 /// Decode/IO failure for one frame.
 #[derive(Debug)]
@@ -179,6 +192,96 @@ pub struct WireError {
     pub message: String,
 }
 
+/// One stage boundary's activations on the wire — the inter-shard hand-off
+/// of `xbar::cnn::StageData`, dimensioned so the receiver can rebuild the
+/// tensor without trusting a bare element count. i64 values travel as-is:
+/// the forward is integer-exact end to end, and the largest boundary
+/// (batch 8 × 16×16×32 after stage 0) is 512 KiB, well under
+/// [`MAX_PAYLOAD`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireStage {
+    /// A `(b, h, w, c)` activation tensor (conv-stage boundaries).
+    Act {
+        b: u32,
+        h: u32,
+        w: u32,
+        c: u32,
+        data: Vec<i64>,
+    },
+    /// A `(rows, cols)` logits matrix (the classifier's output).
+    Logits { rows: u32, cols: u32, data: Vec<i64> },
+}
+
+impl WireStage {
+    /// Declared element count (product of the dims).
+    pub fn elems(&self) -> u64 {
+        match self {
+            WireStage::Act { b, h, w, c, .. } => {
+                *b as u64 * *h as u64 * *w as u64 * *c as u64
+            }
+            WireStage::Logits { rows, cols, .. } => *rows as u64 * *cols as u64,
+        }
+    }
+}
+
+/// Coordinator -> worker: own stages `[stage_lo, stage_hi)` of the shared
+/// model under shard map `generation`. Workers program the full model at
+/// startup from the common `(seed, adc)` config — installs are
+/// bit-identical across processes — so "installing" a range is flipping
+/// the served-stage window, and a re-shard after a failure is one small
+/// frame, not a weight transfer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardInstall {
+    /// Shard-map generation; bumped by every re-shard. A worker serves
+    /// exactly one generation at a time.
+    pub generation: u64,
+    /// This worker's shard index within the generation's map.
+    pub shard: u32,
+    pub stage_lo: u32,
+    pub stage_hi: u32,
+}
+
+/// Worker -> coordinator: the install is live (echoes the request).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardAck {
+    pub generation: u64,
+    pub shard: u32,
+}
+
+/// Coordinator -> worker: run stages `[stage_lo, stage_hi)` on `data`.
+/// The worker answers [`Msg::FwdOut`], or an [`ERR_STALE_SHARD`] error if
+/// it does not hold that range at that generation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FwdRequest {
+    /// Batch id minted by the coordinator, echoed in the reply.
+    pub id: u64,
+    /// Trace id (0 = untraced), echoed in the reply.
+    pub trace: u64,
+    pub generation: u64,
+    pub stage_lo: u32,
+    pub stage_hi: u32,
+    pub data: WireStage,
+}
+
+/// Worker -> coordinator: the hop's output activations plus the full
+/// hardware [`CostLedger`] the hop accrued and its worker-priced energy.
+/// Shipping the whole ledger (fixed 232 bytes) rather than a lossy
+/// summary keeps cluster cost attribution bit-exact: the coordinator
+/// merges hop ledgers, and the merged total equals a single-process run's
+/// ledger because stages partition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FwdReply {
+    pub id: u64,
+    pub trace: u64,
+    /// Echo of the serving generation (lets the coordinator drop replies
+    /// that raced a re-shard).
+    pub generation: u64,
+    pub cost: crate::obs::CostLedger,
+    /// `cost` priced through the worker's own tile energy model, pJ.
+    pub energy_pj: f64,
+    pub data: WireStage,
+}
+
 /// Server statistics snapshot — served over the wire (`Msg::StatsReq` ->
 /// `Msg::Stats`) and exported by `metrics::export::export_net_summary`.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -221,7 +324,8 @@ pub struct StatsSnapshot {
 
 /// One protocol message. Client-to-server: `Infer`, `StatsReq`,
 /// `Shutdown`. Server-to-client: `Reply`, `Busy`, `Error`, `Stats`,
-/// `ShutdownAck`.
+/// `ShutdownAck`. Coordinator-to-worker: `ShardInstall`, `Fwd`,
+/// `Shutdown`; worker-to-coordinator: `ShardAck`, `FwdOut`, `Error`.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     Infer(InferRequest),
@@ -234,6 +338,10 @@ pub enum Msg {
     /// Ask the server to drain in-flight work and exit.
     Shutdown,
     ShutdownAck,
+    ShardInstall(ShardInstall),
+    ShardAck(ShardAck),
+    Fwd(FwdRequest),
+    FwdOut(FwdReply),
 }
 
 /// FNV-1a 32-bit checksum (std-only; no CRC crate offline).
@@ -251,6 +359,59 @@ pub fn checksum(data: &[u8]) -> u32 {
 fn put_i32s(out: &mut Vec<u8>, vs: &[i32]) {
     out.extend_from_slice(&(vs.len() as u32).to_le_bytes());
     for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// A [`WireStage`]: tag byte, dims, then the dim-product's worth of LE
+/// i64s — no separate element count to lie about.
+fn put_stage(out: &mut Vec<u8>, s: &WireStage) {
+    debug_assert_eq!(
+        s.elems(),
+        match s {
+            WireStage::Act { data, .. } | WireStage::Logits { data, .. } => data.len() as u64,
+        },
+        "stage dims disagree with data length"
+    );
+    match s {
+        WireStage::Act { b, h, w, c, data } => {
+            out.push(0);
+            for d in [b, h, w, c] {
+                out.extend_from_slice(&d.to_le_bytes());
+            }
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        WireStage::Logits { rows, cols, data } => {
+            out.push(1);
+            for d in [rows, cols] {
+                out.extend_from_slice(&d.to_le_bytes());
+            }
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// A full [`crate::obs::CostLedger`]: the 20 per-bit-width ADC buckets
+/// followed by the 9 scalar counters, fixed 232 bytes.
+fn put_ledger(out: &mut Vec<u8>, l: &crate::obs::CostLedger) {
+    for b in &l.adc_ops_by_bits {
+        out.extend_from_slice(&b.to_le_bytes());
+    }
+    for v in [
+        l.identity_folds,
+        l.iters_executed,
+        l.iters_skipped,
+        l.slice_iters_executed,
+        l.slice_iters_folded,
+        l.slice_iters_skipped,
+        l.fused_rows,
+        l.slice_rows,
+        l.row_elems,
+    ] {
         out.extend_from_slice(&v.to_le_bytes());
     }
 }
@@ -327,6 +488,36 @@ pub fn encode_payload(m: &Msg) -> (u8, Vec<u8>) {
         }
         Msg::Shutdown => TY_SHUTDOWN,
         Msg::ShutdownAck => TY_SHUTDOWN_ACK,
+        Msg::ShardInstall(s) => {
+            p.extend_from_slice(&s.generation.to_le_bytes());
+            p.extend_from_slice(&s.shard.to_le_bytes());
+            p.extend_from_slice(&s.stage_lo.to_le_bytes());
+            p.extend_from_slice(&s.stage_hi.to_le_bytes());
+            TY_SHARD_INSTALL
+        }
+        Msg::ShardAck(a) => {
+            p.extend_from_slice(&a.generation.to_le_bytes());
+            p.extend_from_slice(&a.shard.to_le_bytes());
+            TY_SHARD_ACK
+        }
+        Msg::Fwd(f) => {
+            p.extend_from_slice(&f.id.to_le_bytes());
+            p.extend_from_slice(&f.trace.to_le_bytes());
+            p.extend_from_slice(&f.generation.to_le_bytes());
+            p.extend_from_slice(&f.stage_lo.to_le_bytes());
+            p.extend_from_slice(&f.stage_hi.to_le_bytes());
+            put_stage(&mut p, &f.data);
+            TY_FWD
+        }
+        Msg::FwdOut(f) => {
+            p.extend_from_slice(&f.id.to_le_bytes());
+            p.extend_from_slice(&f.trace.to_le_bytes());
+            p.extend_from_slice(&f.generation.to_le_bytes());
+            put_ledger(&mut p, &f.cost);
+            p.extend_from_slice(&f.energy_pj.to_le_bytes());
+            put_stage(&mut p, &f.data);
+            TY_FWD_OUT
+        }
     };
     (ty, p)
 }
@@ -410,6 +601,52 @@ impl<'a> Cur<'a> {
             return Err(ProtoError::Malformed("element count exceeds payload"));
         }
         (0..n).map(|_| self.i32()).collect()
+    }
+
+    /// A dim-counted i64 run: `n` was computed from already-decoded dims,
+    /// so it is validated against the bytes actually present before any
+    /// allocation is sized from it (same discipline as [`Self::i32s`]).
+    fn i64s(&mut self, n: u64) -> Result<Vec<i64>, ProtoError> {
+        if ((self.b.len() - self.at) / 8) as u64 < n {
+            return Err(ProtoError::Malformed("element count exceeds payload"));
+        }
+        (0..n).map(|_| self.i64()).collect()
+    }
+
+    /// A [`WireStage`]: tag, dims, dim-product i64s.
+    fn stage(&mut self) -> Result<WireStage, ProtoError> {
+        match self.u8()? {
+            0 => {
+                let (b, h, w, c) = (self.u32()?, self.u32()?, self.u32()?, self.u32()?);
+                let n = b as u64 * h as u64 * w as u64 * c as u64;
+                let data = self.i64s(n)?;
+                Ok(WireStage::Act { b, h, w, c, data })
+            }
+            1 => {
+                let (rows, cols) = (self.u32()?, self.u32()?);
+                let data = self.i64s(rows as u64 * cols as u64)?;
+                Ok(WireStage::Logits { rows, cols, data })
+            }
+            _ => Err(ProtoError::Malformed("unknown stage-data tag")),
+        }
+    }
+
+    /// A fixed-width [`crate::obs::CostLedger`] (232 bytes).
+    fn ledger(&mut self) -> Result<crate::obs::CostLedger, ProtoError> {
+        let mut l = crate::obs::CostLedger::new();
+        for b in l.adc_ops_by_bits.iter_mut() {
+            *b = self.u64()?;
+        }
+        l.identity_folds = self.u64()?;
+        l.iters_executed = self.u64()?;
+        l.iters_skipped = self.u64()?;
+        l.slice_iters_executed = self.u64()?;
+        l.slice_iters_folded = self.u64()?;
+        l.slice_iters_skipped = self.u64()?;
+        l.fused_rows = self.u64()?;
+        l.slice_rows = self.u64()?;
+        l.row_elems = self.u64()?;
+        Ok(l)
     }
 
     fn done(&self) -> bool {
@@ -525,6 +762,48 @@ pub fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
         }
         TY_SHUTDOWN => Msg::Shutdown,
         TY_SHUTDOWN_ACK => Msg::ShutdownAck,
+        TY_SHARD_INSTALL => Msg::ShardInstall(ShardInstall {
+            generation: c.u64()?,
+            shard: c.u32()?,
+            stage_lo: c.u32()?,
+            stage_hi: c.u32()?,
+        }),
+        TY_SHARD_ACK => Msg::ShardAck(ShardAck {
+            generation: c.u64()?,
+            shard: c.u32()?,
+        }),
+        TY_FWD => {
+            let id = c.u64()?;
+            let trace = c.u64()?;
+            let generation = c.u64()?;
+            let stage_lo = c.u32()?;
+            let stage_hi = c.u32()?;
+            let data = c.stage()?;
+            Msg::Fwd(FwdRequest {
+                id,
+                trace,
+                generation,
+                stage_lo,
+                stage_hi,
+                data,
+            })
+        }
+        TY_FWD_OUT => {
+            let id = c.u64()?;
+            let trace = c.u64()?;
+            let generation = c.u64()?;
+            let cost = c.ledger()?;
+            let energy_pj = c.f64()?;
+            let data = c.stage()?;
+            Msg::FwdOut(FwdReply {
+                id,
+                trace,
+                generation,
+                cost,
+                energy_pj,
+                data,
+            })
+        }
         other => return Err(ProtoError::BadType(other)),
     };
     if !c.done() {
@@ -666,6 +945,51 @@ mod tests {
             Msg::Stats(StatsSnapshot::default()),
             Msg::Shutdown,
             Msg::ShutdownAck,
+            Msg::ShardInstall(ShardInstall {
+                generation: 3,
+                shard: 1,
+                stage_lo: 1,
+                stage_hi: 3,
+            }),
+            Msg::ShardAck(ShardAck {
+                generation: 3,
+                shard: 1,
+            }),
+            Msg::Fwd(FwdRequest {
+                id: 42,
+                trace: 0xFEED_0000_0000_0001,
+                generation: 3,
+                stage_lo: 1,
+                stage_hi: 3,
+                data: WireStage::Act {
+                    b: 2,
+                    h: 2,
+                    w: 1,
+                    c: 3,
+                    data: vec![0, -5, i64::MAX, i64::MIN, 7, 8, 9, -1, 2, 3, 4, 5],
+                },
+            }),
+            Msg::FwdOut(FwdReply {
+                id: 42,
+                trace: 0xFEED_0000_0000_0001,
+                generation: 3,
+                cost: {
+                    let mut l = crate::obs::CostLedger::new();
+                    l.count_adc(9, 1000);
+                    l.count_adc(4, 32);
+                    l.identity_folds = 12;
+                    l.slice_iters_executed = 77;
+                    l.fused_rows = 8;
+                    l.row_elems = 4096;
+                    l
+                },
+                energy_pj: 12_345.75,
+                data: WireStage::Logits {
+                    rows: 2,
+                    cols: 3,
+                    data: vec![1, -2, 3, -4, 5, -6],
+                },
+            }),
         ]
     }
 
@@ -852,6 +1176,57 @@ mod tests {
             decode_payload(ty, &payload),
             Err(ProtoError::Malformed(_))
         ));
+    }
+
+    #[test]
+    fn lying_stage_dims_are_rejected_before_allocation() {
+        // a Fwd whose dims multiply past the bytes present must fail the
+        // bounds check, not size a 128 GiB allocation from the product
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u64.to_le_bytes()); // id
+        payload.extend_from_slice(&0u64.to_le_bytes()); // trace
+        payload.extend_from_slice(&1u64.to_le_bytes()); // generation
+        payload.extend_from_slice(&0u32.to_le_bytes()); // stage_lo
+        payload.extend_from_slice(&1u32.to_le_bytes()); // stage_hi
+        payload.push(0); // Act tag
+        for d in [u32::MAX, u32::MAX, 2, 2] {
+            payload.extend_from_slice(&d.to_le_bytes());
+        }
+        assert!(matches!(
+            decode_payload(TY_FWD, &payload),
+            Err(ProtoError::Malformed(_))
+        ));
+        // an unknown stage tag is malformed, not a panic
+        let at = payload.len() - 17;
+        payload[at] = 9;
+        assert!(matches!(
+            decode_payload(TY_FWD, &payload),
+            Err(ProtoError::Malformed("unknown stage-data tag"))
+        ));
+    }
+
+    #[test]
+    fn fwd_out_ledger_is_fixed_width() {
+        // the ledger block must cost exactly 232 bytes on the wire, so a
+        // truncated one can never decode as a smaller valid reply
+        let m = Msg::FwdOut(FwdReply {
+            id: 1,
+            trace: 0,
+            generation: 1,
+            cost: crate::obs::CostLedger::new(),
+            energy_pj: 0.0,
+            data: WireStage::Logits {
+                rows: 0,
+                cols: 0,
+                data: vec![],
+            },
+        });
+        let (ty, payload) = encode_payload(&m);
+        // 3×u64 header + 232-byte ledger + f64 + tag + 2×u32 dims
+        assert_eq!(payload.len(), 24 + 232 + 8 + 1 + 8);
+        for cut in [24, 24 + 100, payload.len() - 1] {
+            assert!(decode_payload(ty, &payload[..cut]).is_err(), "cut {cut}");
+        }
     }
 
     #[test]

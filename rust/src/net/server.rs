@@ -645,8 +645,17 @@ fn serve_msg(shared: &Arc<Shared>, stream: &mut TcpStream, msg: Msg) -> bool {
             false
         }
         // server-to-client message types arriving at the server are a
-        // protocol violation
-        Msg::Reply(_) | Msg::Busy | Msg::Error(_) | Msg::Stats(_) | Msg::ShutdownAck => {
+        // protocol violation, as is the coordinator/worker shard plane —
+        // this endpoint serves clients, not inter-shard forwards
+        Msg::Reply(_)
+        | Msg::Busy
+        | Msg::Error(_)
+        | Msg::Stats(_)
+        | Msg::ShutdownAck
+        | Msg::ShardInstall(_)
+        | Msg::ShardAck(_)
+        | Msg::Fwd(_)
+        | Msg::FwdOut(_) => {
             shared.stats.lock().unwrap().proto_errors += 1;
             let _ = proto::write_msg(
                 stream,
@@ -821,8 +830,9 @@ fn render_exposition(shared: &Shared) -> String {
         0.0
     };
     lines.push(format!("newton_energy_pj_per_infer {epi:.3}"));
-    let degraded =
-        stats.degraded || shared.watchdog_degraded.load(Ordering::Acquire);
+    let degraded = stats.degraded
+        || shared.watchdog_degraded.load(Ordering::Acquire)
+        || shared.engine.degraded();
     lines.push(format!("newton_degraded {}", degraded as u8));
     lines.sort();
     let mut out = lines.join("\n");
@@ -830,9 +840,15 @@ fn render_exposition(shared: &Shared) -> String {
     out
 }
 
-/// Admin-plane thread: a nonblocking accept loop that answers every
-/// connection with one exposition and closes, interleaved with watchdog
-/// drift ticks. Exits within one poll of the drain flag flipping.
+/// Admin-plane thread: a nonblocking accept loop that hands each scrape
+/// to a short-lived writer thread, interleaved with watchdog drift
+/// ticks. Exits within one poll of the drain flag flipping.
+///
+/// Scrapes are answered off-thread with both read *and* write timeouts
+/// ([`Timeouts`]) applied to the connection: the exposition can exceed a
+/// socket send buffer, so an accepted-but-stalled scraper that never
+/// reads would otherwise block `write_all` on the admin thread itself —
+/// pinning watchdog ticks and every later scrape behind one bad client.
 fn admin_loop(shared: &Arc<Shared>, listener: TcpListener) {
     if listener.set_nonblocking(true).is_err() {
         return; // cannot poll the drain flag without nonblocking accepts
@@ -841,12 +857,21 @@ fn admin_loop(shared: &Arc<Shared>, listener: TcpListener) {
     let mut last_tick = Instant::now();
     let mut last_energy = 0u64;
     let mut last_served = 0u64;
+    let mut last_rebaseline = obs::counter("obs.rebaseline").get();
     while !shared.draining.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((mut s, _)) => {
+                let _ = s.set_read_timeout(Some(shared.timeouts.read_tick));
                 let _ = s.set_write_timeout(Some(shared.timeouts.write_timeout));
-                let _ = s.write_all(render_exposition(shared).as_bytes());
-                // drop closes the socket: the scraper reads to EOF
+                let body = render_exposition(shared);
+                let _ = std::thread::Builder::new()
+                    .name("admin-scrape".to_string())
+                    .spawn(move || {
+                        // a stalled peer costs this thread its write
+                        // timeout, never the admin loop
+                        let _ = s.write_all(body.as_bytes());
+                        // drop closes the socket: the scraper reads to EOF
+                    });
             }
             Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
                 std::thread::sleep(ADMIN_POLL);
@@ -855,6 +880,16 @@ fn admin_loop(shared: &Arc<Shared>, listener: TcpListener) {
         }
         if last_tick.elapsed() >= WATCHDOG_TICK {
             last_tick = Instant::now();
+            // a moved rebaseline marker means the serving pool changed
+            // shape (quarantine, reinstall, cluster re-shard): drop the
+            // drift baselines — they describe the old pool — and
+            // un-latch `degraded` so recovery is observable
+            let rebaseline = obs::counter("obs.rebaseline").get();
+            if rebaseline != last_rebaseline {
+                last_rebaseline = rebaseline;
+                dog.rebaseline();
+                shared.watchdog_degraded.store(false, Ordering::Release);
+            }
             // energy-per-inference over the tick window (not cumulative,
             // so a drift shows up at the tick it happens, undiluted by
             // history); 0 on idle ticks, which the watchdog ignores

@@ -59,6 +59,16 @@ impl DriftWatch {
     pub fn baseline(&self) -> Option<f64> {
         self.baseline
     }
+
+    /// Drop the frozen baseline and re-learn it from the next
+    /// `baseline_window` positive samples. Called after a structural
+    /// change to the serving pool (quarantine, reinstall, re-shard): the
+    /// old baseline described a pool that no longer exists, and holding a
+    /// recovered cluster against it latches `degraded` forever.
+    pub fn reset(&mut self) {
+        self.seen.clear();
+        self.baseline = None;
+    }
 }
 
 /// The serving watchdog: p99 latency and energy-per-inference drift
@@ -96,6 +106,18 @@ impl Watchdog {
             degraded = true;
         }
         degraded
+    }
+
+    /// Re-learn both baselines ([`DriftWatch::reset`]) after a pool
+    /// change — quarantine, reinstall, or cluster re-shard. The admin
+    /// plane calls this when the `obs.rebaseline` counter moves and
+    /// un-latches its `degraded` flag at the same time; counts
+    /// `obs.anomaly.rebaseline` so rebaselines are visible in the
+    /// exposition.
+    pub fn rebaseline(&mut self) {
+        self.latency.reset();
+        self.energy.reset();
+        counter("obs.anomaly.rebaseline").inc();
     }
 }
 
@@ -163,5 +185,42 @@ mod tests {
         assert_eq!(counter("obs.anomaly.energy_drift").get(), en_before + 1);
         // both healthy again
         assert!(!w.tick(100.0, 1000.0));
+    }
+
+    #[test]
+    fn reset_relearns_the_baseline() {
+        let mut w = DriftWatch::new(2, 2.0);
+        w.observe(10.0);
+        w.observe(10.0);
+        assert_eq!(w.baseline(), Some(10.0));
+        assert!(w.observe(25.0), "drift before the reset");
+        w.reset();
+        assert!(w.baseline().is_none());
+        // the very samples that flagged before now *are* the baseline —
+        // the recovered pool's normal is the new normal
+        assert!(!w.observe(25.0));
+        assert!(!w.observe(25.0));
+        assert_eq!(w.baseline(), Some(25.0));
+        assert!(!w.observe(30.0), "within factor of the new baseline");
+        assert!(w.observe(60.0), "drift against the new baseline");
+    }
+
+    #[test]
+    fn rebaseline_unlatches_a_recovered_watchdog() {
+        let mut w = Watchdog::new();
+        for _ in 0..5 {
+            assert!(!w.tick(100.0, 1000.0));
+        }
+        // a re-shard doubles per-survivor latency: old baseline flags it
+        assert!(w.tick(500.0, 1000.0));
+        let before = counter("obs.anomaly.rebaseline").get();
+        w.rebaseline();
+        assert_eq!(counter("obs.anomaly.rebaseline").get(), before + 1);
+        // the post-reshard steady state fills a fresh window quietly
+        for _ in 0..5 {
+            assert!(!w.tick(500.0, 1000.0));
+        }
+        assert!(!w.tick(520.0, 1000.0), "new normal flagged as drift");
+        assert!(w.tick(5000.0, 1000.0), "real drift still caught");
     }
 }

@@ -1,0 +1,186 @@
+//! Real-process failover tests for the sharded cluster serving stack
+//! (`rust/src/coordinator/cluster.rs`): `newton worker` child processes
+//! on ephemeral ports, driven by an in-process coordinator engine, with a
+//! SIGKILL landing mid-stream. The failover contract under test is the
+//! strongest one the generation protocol makes: killing any worker must
+//! change no reply bit, and the merged per-shard cost ledger must be
+//! conserved across re-sharding.
+//!
+//! Heavy (each worker programs the full model): release-gated like the
+//! other serving tests.
+
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use newton::config::AdcKind;
+use newton::coordinator::batcher::PendingRequest;
+use newton::coordinator::golden::IMAGE_ELEMS;
+use newton::coordinator::{Batcher, ClusterConfig, ClusterEngine, GoldenServer};
+use newton::net::{bench_image, Engine, EngineBatch};
+
+/// The cluster tests flip the process-global `obs::ledger` enable flag;
+/// serialise them so a toggle in one test cannot race another's ledger
+/// assertions (the crate-internal guard is not visible out here).
+static LEDGER_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn ledger_guard() -> std::sync::MutexGuard<'static, ()> {
+    LEDGER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct WorkerChild {
+    child: std::process::Child,
+    addr: String,
+    admin: String,
+}
+
+impl WorkerChild {
+    /// SIGKILL and reap; idempotent (a second kill of a dead child is an
+    /// error std already swallows).
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn one `newton worker` child on ephemeral ports and wait for its
+/// port files (written only after both listeners bound).
+fn spawn_worker(dir: &std::path::Path, i: usize, seed: u64) -> WorkerChild {
+    let pf = dir.join(format!("w{i}.port"));
+    let af = dir.join(format!("w{i}.admin"));
+    let _ = std::fs::remove_file(&pf);
+    let _ = std::fs::remove_file(&af);
+    let mut child = Command::new(env!("CARGO_BIN_EXE_newton"))
+        .args([
+            "worker",
+            "--seed",
+            &seed.to_string(),
+            "--addr",
+            "127.0.0.1:0",
+            "--admin-addr",
+            "127.0.0.1:0",
+            "--port-file",
+            pf.to_str().unwrap(),
+            "--admin-port-file",
+            af.to_str().unwrap(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn newton worker");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let (Ok(a), Ok(ad)) = (std::fs::read_to_string(&pf), std::fs::read_to_string(&af)) {
+            if !a.is_empty() && !ad.is_empty() {
+                return WorkerChild { child, addr: a, admin: ad };
+            }
+        }
+        assert!(
+            !matches!(child.try_wait(), Ok(Some(_))),
+            "worker {i} exited before binding"
+        );
+        assert!(Instant::now() < deadline, "worker {i} did not come up within 30s");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Push `images` through the engine as one padded batcher-shaped batch,
+/// exactly the way the net server's dispatcher would.
+fn run_batch(engine: &ClusterEngine, images: &[Vec<i32>], batch: usize, base_id: u64) -> EngineBatch {
+    let mut b = Batcher::new(batch, IMAGE_ELEMS, Duration::from_secs(60));
+    for (j, img) in images.iter().enumerate() {
+        b.push(PendingRequest {
+            id: base_id + j as u64,
+            trace: 0,
+            image: img.clone(),
+            enqueued: Instant::now(),
+        });
+    }
+    engine.run(0, &b.take_batch().expect("non-empty batch"))
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug; run with --release")]
+fn sigkill_mid_stream_keeps_replies_bit_exact_and_ledger_conserved() {
+    let _g = ledger_guard();
+    newton::obs::ledger::set_enabled(true);
+    let seed = 5u64;
+    let batch = 4usize;
+    let dir = std::env::temp_dir().join(format!("newton-cluster-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut fleet: Vec<WorkerChild> = (0..3).map(|i| spawn_worker(&dir, i, seed)).collect();
+    let endpoints: Vec<(String, Option<String>)> =
+        fleet.iter().map(|w| (w.addr.clone(), Some(w.admin.clone()))).collect();
+
+    let mut cfg = ClusterConfig::new(seed, AdcKind::Exact, batch).unwrap();
+    // loopback hops land in milliseconds; a short deadline keeps the
+    // dead-worker detection (which burns one full hop deadline) quick
+    cfg.hop_deadline = Duration::from_millis(500);
+    cfg.lifecycle.heartbeat_every = Duration::from_millis(50);
+    let engine = ClusterEngine::connect(cfg, &endpoints).expect("cluster join");
+    let heartbeats = engine.spawn_heartbeats();
+    assert!(!engine.degraded(), "fresh three-worker cluster must not be degraded");
+
+    // the reference every assertion compares against: the single-process
+    // golden path over the same installed weights and request stream
+    let images: Vec<Vec<i32>> = (0..2 * batch).map(|i| bench_image(seed, i)).collect();
+    let want = GoldenServer::replicated(seed, AdcKind::Exact, 1, batch).infer(&images);
+
+    // batch A, clean: pipelined across all three shards; its merged hop
+    // ledger is the conservation baseline
+    let clean = run_batch(&engine, &images[..batch], batch, 0);
+    assert_eq!(clean.logits.as_slice(), &want[..batch], "clean cluster batch diverged");
+    assert_eq!(clean.max_abs_err, 0);
+    assert!(!clean.cost.is_empty(), "workers did not ship hop ledgers");
+
+    // SIGKILL the middle worker while batch B forwards stream on another
+    // thread — whether the kill lands mid-hop or between forwards, every
+    // reply must still match the golden path bit for bit
+    let eng = Arc::clone(&engine);
+    let tail: Vec<Vec<i32>> = images[batch..].to_vec();
+    let pump = std::thread::spawn(move || {
+        (0u64..4).map(|k| run_batch(&eng, &tail, batch, (k + 1) * batch as u64)).collect::<Vec<_>>()
+    });
+    std::thread::sleep(Duration::from_millis(5));
+    fleet[1].kill();
+    for out in pump.join().expect("pump thread") {
+        assert_eq!(out.logits.as_slice(), &want[batch..], "reply diverged across the kill");
+        assert_eq!(out.max_abs_err, 0);
+    }
+    assert!(engine.reshard_count() >= 1, "losing a worker must force a re-shard");
+    assert!(!engine.degraded(), "two survivors can still serve every stage");
+
+    // ledger conservation: batch A re-run on the survivors partitions the
+    // stages differently, but the merged ledger (and its priced energy)
+    // must be identical — stage costs move between shards, never appear
+    // or vanish
+    let after = run_batch(&engine, &images[..batch], batch, 100);
+    assert_eq!(after.logits.as_slice(), &want[..batch]);
+    assert_eq!(after.cost, clean.cost, "re-sharded hop ledgers do not merge to the same total");
+    let tol = 1e-6 * clean.energy_pj.abs().max(1.0);
+    assert!(
+        (after.energy_pj - clean.energy_pj).abs() <= tol,
+        "priced energy not conserved: {} vs {}",
+        after.energy_pj,
+        clean.energy_pj
+    );
+
+    // degraded transition: kill the survivors too — the engine must fall
+    // back to its in-process single-process path (still bit-exact) and
+    // latch the degraded gauge
+    fleet[0].kill();
+    fleet[2].kill();
+    let fallback = run_batch(&engine, &images[..batch], batch, 200);
+    assert_eq!(fallback.logits.as_slice(), &want[..batch], "fallback path diverged");
+    assert!(engine.degraded(), "serving with zero workers must flag degraded");
+    let health = engine.health().expect("cluster engine reports health");
+    assert!(health.degraded, "health report must carry the degraded verdict");
+
+    engine.stop();
+    let _ = heartbeats.join();
+    for w in &mut fleet {
+        w.kill();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    newton::obs::ledger::set_enabled(false);
+}

@@ -574,6 +574,63 @@ fn admin_plane_serves_a_sorted_exposition() {
 }
 
 #[test]
+fn stalled_admin_scraper_cannot_pin_the_admin_plane() {
+    // regression: the admin loop used to write the exposition inline on
+    // the admin thread, so a scraper that connects and never reads could
+    // wedge `write_all` against a full send buffer — pinning watchdog
+    // ticks and every later scrape behind one bad client. Scrapes now go
+    // to a short-lived writer thread with read AND write timeouts on the
+    // socket, so stalled peers cost only their own thread.
+    let timeouts = newton::net::Timeouts {
+        write_timeout: Duration::from_millis(200),
+        ..Default::default()
+    };
+    let server = NetServer::start(
+        Arc::new(EchoEngine::small()),
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            admin_addr: Some("127.0.0.1:0".to_string()),
+            max_inflight: 16,
+            batch_wait: Duration::from_millis(1),
+            timeouts,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let admin = server.admin_addr().expect("admin plane requested but not bound");
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    assert!(matches!(c.infer(1, &[1, 2, 3, 4]).unwrap(), InferOutcome::Ok(_)));
+
+    // a pack of scrapers that connect and then never read a byte
+    let stalled: Vec<TcpStream> =
+        (0..4).map(|_| TcpStream::connect(admin).expect("connect stalled scraper")).collect();
+    // let the admin loop accept them all before the real scrape arrives
+    std::thread::sleep(Duration::from_millis(50));
+
+    // a well-behaved scrape behind the stalled pack is still answered,
+    // well inside the stalled peers' write timeout budget
+    let t0 = std::time::Instant::now();
+    let body = newton::net::scrape_statz(admin, Duration::from_secs(2)).unwrap();
+    assert!(body.contains("newton_served 1"), "scrape behind stalled peers diverged:\n{body}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "scrape took {:?} behind stalled scrapers",
+        t0.elapsed()
+    );
+
+    // and the drain is not wedged behind them either
+    let t0 = std::time::Instant::now();
+    let stats = server.shutdown();
+    assert_eq!(stats.served, 1);
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "drain took {:?} behind stalled scrapers",
+        t0.elapsed()
+    );
+    drop(stalled);
+}
+
+#[test]
 fn chaos_lanes_still_cover_every_request_exactly_once() {
     // chaos mode over real sockets: client-side fault injection tears
     // frames, stalls reads, and drops connections, and the retry loop

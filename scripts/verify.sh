@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Repo verification: tier-1 build + tests, advisory formatting check, the
-# sched executor stress smoke, the multi-replica serving smoke, and the
-# hot-path perf smoke (writes BENCH_hotpath.json for the trajectory).
+# sched executor stress smoke, the multi-replica serving smokes, the
+# sharded-cluster failover smoke, and the hot-path perf smoke (writes
+# BENCH_hotpath.json for the trajectory).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -20,28 +21,29 @@ echo "== cargo test --release -q (release-gated suites) =="
 cargo test --release -q
 
 echo
-echo "== cargo clippy (rust/src/{xbar,net,faults,obs,energy}/ gate) =="
+echo "== cargo clippy (rust/src/{xbar,net,faults,obs,energy,coordinator,mapping}/ gate) =="
 # clippy cannot be scoped to one module, so run it on the lib at
 # `-D warnings` severity and gate only the subtrees written under the
 # clippy regime: any diagnostic pointing into rust/src/xbar/, rust/src/net/,
-# rust/src/faults/, rust/src/obs/ or rust/src/energy/ fails the build,
-# drift elsewhere stays advisory (seed code predates the clippy adoption)
+# rust/src/faults/, rust/src/obs/, rust/src/energy/, rust/src/coordinator/
+# or rust/src/mapping/ fails the build, drift elsewhere stays advisory
+# (seed code predates the clippy adoption)
 if cargo clippy --version >/dev/null 2>&1; then
   clippy_status=0
   clippy_out=$(cargo clippy -q --lib --message-format=short -- -D warnings 2>&1) || clippy_status=$?
-  gated_hits=$(printf '%s\n' "$clippy_out" | grep 'src/xbar/\|src/net/\|src/faults/\|src/obs/\|src/energy/' || true)
+  gated_hits=$(printf '%s\n' "$clippy_out" | grep 'src/xbar/\|src/net/\|src/faults/\|src/obs/\|src/energy/\|src/coordinator/\|src/mapping/' || true)
   if [ -n "$gated_hits" ]; then
     printf '%s\n' "$gated_hits"
-    echo "FAIL: clippy diagnostics in rust/src/{xbar,net,faults,obs,energy}/ (-D warnings gate)"
+    echo "FAIL: clippy diagnostics in rust/src/{xbar,net,faults,obs,energy,coordinator,mapping}/ (-D warnings gate)"
     exit 1
   elif [ "$clippy_status" -ne 0 ]; then
     # clippy exited non-zero with no gated diagnostics: either lints in
     # other (advisory) modules or an incomplete run — do not report a
     # clean gate in either case, and surface the tail for triage
     printf '%s\n' "$clippy_out" | tail -5
-    echo "WARN: clippy exited ${clippy_status} with no gated diagnostics; xbar/net/faults/obs/energy gate inconclusive (other lints stay advisory)"
+    echo "WARN: clippy exited ${clippy_status} with no gated diagnostics; xbar/net/faults/obs/energy/coordinator/mapping gate inconclusive (other lints stay advisory)"
   else
-    echo "clippy xbar/net/faults/obs/energy gate OK"
+    echo "clippy xbar/net/faults/obs/energy/coordinator/mapping gate OK"
   fi
 else
   echo "clippy unavailable; skipped"
@@ -254,6 +256,36 @@ fi
 wait "$srv_pid"
 trap - EXIT
 rm -f "$portfile" "$adminfile" "$statz_out"
+
+echo
+echo "== cluster chaos smoke: 3 workers, SIGKILL worker 1 mid-load, bit-exact failover =="
+# bench-net --cluster owns the whole topology: it spawns 3 `newton worker`
+# processes on ephemeral ports, shards the stage pipeline across them
+# through an in-process coordinator, runs a clean pass, then replays the
+# identical (seed-pinned) request stream while SIGKILLing worker 1 (the
+# second of three) after request 10. --expect-exact asserts every reply of
+# BOTH passes is bit-identical to the single-process golden path, and the
+# JSON must show the coordinator re-sharded the survivors at least once.
+# The harness drains its own server and fleet, so reaching the JSON checks
+# is itself the clean-drain assertion.
+rm -f BENCH_net.json
+"$newton_bin" bench-net --cluster --workers 3 \
+  --requests 32 --concurrency 4 --seed 0 \
+  --kill-worker 1 --kill-at 10 --expect-exact
+if ! [ -f BENCH_net.json ]; then
+  echo "FAIL: cluster bench-net wrote no BENCH_net.json"
+  exit 1
+fi
+reshards=$(awk -F': ' '/"cluster_failover_reshards":/ {gsub(/[,[:space:]]/, "", $2); print $2; exit}' BENCH_net.json)
+if [ -z "${reshards}" ] || [ "${reshards}" -lt 1 ]; then
+  echo "FAIL: coordinator never re-sharded after the kill (cluster_failover_reshards: ${reshards:-missing})"
+  exit 1
+fi
+if ! grep -q '"verified_exact": true' BENCH_net.json; then
+  echo "FAIL: cluster run did not verify bit-exact answers across the kill"
+  exit 1
+fi
+echo "cluster smoke OK (re-shards: ${reshards}, bit-exact across a SIGKILL, clean drain)"
 
 echo
 echo "== perf smoke: cargo bench --bench perf_hotpath -- --smoke =="
