@@ -60,9 +60,10 @@ use crate::xbar::cnn::{ForwardScratch, MiniCnn, ProgrammedCnn, StageData, Tensor
 use crate::xbar::Matrix;
 
 /// Largest batch the cluster path serves: the widest stage boundary is
-/// `batch × 16×16×32` i64s after stage 0, and 64 × that (512 KiB × 8)
-/// stays under [`proto::MAX_PAYLOAD`] with frame overhead to spare.
-pub const MAX_CLUSTER_BATCH: usize = 64;
+/// `batch × 16×16×32` i64s after stage 0, and 63 × that leaves 64 KiB of
+/// [`proto::MAX_PAYLOAD`] for the `Fwd`/`FwdOut` frame fields (a batch of
+/// 64 would fill the cap exactly, with no room for the frame).
+pub const MAX_CLUSTER_BATCH: usize = 63;
 
 // ---------------------------------------------------------------------------
 // Worker lifecycle
@@ -473,7 +474,22 @@ impl ClusterEngine {
         let slot = &self.workers[shard];
         let mut link = slot.link.lock().unwrap();
         if link.is_none() {
-            let stream = TcpStream::connect(&slot.addr).map_err(NetError::from)?;
+            // connect_timeout, not connect: a blackholed worker must not
+            // pin this link's mutex (and with it reshard installs and
+            // shutdown) for the OS SYN timeout
+            let addr = slot
+                .addr
+                .to_socket_addrs()
+                .map_err(NetError::from)?
+                .next()
+                .ok_or_else(|| {
+                    NetError::from(io::Error::new(
+                        io::ErrorKind::AddrNotAvailable,
+                        "worker address resolved to nothing",
+                    ))
+                })?;
+            let stream = TcpStream::connect_timeout(&addr, self.cfg.hop_deadline)
+                .map_err(NetError::from)?;
             stream.set_nodelay(true).map_err(NetError::from)?;
             let t = Some(self.cfg.hop_deadline);
             stream.set_read_timeout(t).map_err(NetError::from)?;
@@ -819,9 +835,15 @@ impl Engine for ClusterEngine {
         let _sp = obs::span("cluster.batch", "coordinator");
         let t = tensor_from_flat(&b.data, self.cfg.batch);
         let trace = b.traces.first().copied().unwrap_or(0);
-        let mut attempts = 0usize;
-        while attempts <= self.workers.len() + 1 {
-            attempts += 1;
+        // Stale retries (a re-shard moved the map mid-batch) are benign
+        // coordination noise, not evidence of failure, so they spend
+        // their own generous budget rather than the worker-failure one —
+        // a burst of re-shards on a healthy cluster must not push a
+        // batch onto the fallback engine.
+        const MAX_STALE_RETRIES: usize = 32;
+        let mut worker_failures = 0usize;
+        let mut stale_retries = 0usize;
+        while worker_failures <= self.workers.len() + 1 && stale_retries <= MAX_STALE_RETRIES {
             let (gen, map) = self.map.lock().unwrap().clone();
             match self.forward_once(gen, &map, &t, trace) {
                 Ok((m, cost, energy_pj)) => {
@@ -849,10 +871,19 @@ impl Engine for ClusterEngine {
                     };
                 }
                 Err(FwdFail::Stale) => {
-                    // a re-shard landed mid-batch: retry on the fresh map
+                    // a re-shard landed mid-batch: the generation bumped
+                    // before the new map committed, so wait for the map
+                    // snapshot to move off our stale generation (bounded
+                    // by one hop deadline) before retrying on it
+                    stale_retries += 1;
+                    let wait = Instant::now() + self.cfg.hop_deadline;
+                    while self.map.lock().unwrap().0 == gen && Instant::now() < wait {
+                        thread::sleep(Duration::from_millis(1));
+                    }
                     continue;
                 }
                 Err(FwdFail::Worker(w)) => {
+                    worker_failures += 1;
                     {
                         let mut m = self.monitor.lock().unwrap();
                         m.fail(w);
@@ -1055,12 +1086,22 @@ fn worker_accept_loop(listener: TcpListener, shared: Arc<WorkerShared>) {
 
 /// `read_exact` tolerating read-timeout ticks; polls the drain flag at
 /// frame boundaries. `Ok(false)` = clean stop (EOF / draining idle).
+///
+/// Idle between frames is unbounded (coordinator links legitimately sit
+/// idle between batches), but a peer that stalls *mid-frame* — partial
+/// header or payload, never completing, never closing — is cut off after
+/// a bounded number of progress-free ticks whether draining or not, so a
+/// wedged peer cannot leak a worker-conn thread forever.
 fn worker_read_full(
     stream: &mut TcpStream,
     buf: &mut [u8],
     shared: &WorkerShared,
     frame_start: bool,
 ) -> Result<bool, ProtoError> {
+    // with the default 100 ms read tick: ~5 s mid-frame stall budget
+    // normally, tightened to ~2.5 s while draining
+    const STALL_TICKS: u32 = 50;
+    const DRAIN_STALL_TICKS: u32 = 25;
     let mut off = 0;
     let mut idle_ticks = 0u32;
     while off < buf.len() {
@@ -1071,17 +1112,20 @@ fn worker_read_full(
                 }
                 return Err(ProtoError::Malformed("connection closed mid-frame"));
             }
-            Ok(n) => off += n,
+            Ok(n) => {
+                off += n;
+                idle_ticks = 0;
+            }
             Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
-                if shared.draining.load(Ordering::Acquire) {
-                    idle_ticks += 1;
-                    if off == 0 && frame_start {
-                        if idle_ticks > 2 {
-                            return Ok(false);
-                        }
-                    } else if idle_ticks > 25 {
-                        return Err(ProtoError::Malformed("drain deadline passed mid-frame"));
+                idle_ticks += 1;
+                let draining = shared.draining.load(Ordering::Acquire);
+                let stall_limit = if draining { DRAIN_STALL_TICKS } else { STALL_TICKS };
+                if off == 0 && frame_start {
+                    if draining && idle_ticks > 2 {
+                        return Ok(false);
                     }
+                } else if idle_ticks > stall_limit {
+                    return Err(ProtoError::Malformed("peer stalled mid-frame"));
                 }
             }
             Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
