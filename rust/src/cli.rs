@@ -14,10 +14,10 @@ pub const SUBCOMMANDS: &[(&str, &str)] = &[
     ("sweep", "design-space sweeps (--what ima|buffer|fc)"),
     ("verify", "run artifacts against golden test vectors"),
     ("serve", "in-process batched serving demo (--adc, --replicas, --pipeline, --trace-out)"),
-    ("serve-net", "TCP serving endpoint (--addr, --adc, --replicas, --pipeline, --health, --admin-addr, --cost-reports, --trace-out)"),
+    ("serve-net", "TCP serving endpoint (--addr, --adc, --replicas, --pipeline, --health, --admin-addr, --cost-reports, --trace-out; --event-loop --max-pipeline N --workers W = readiness-driven pipelined mode)"),
     ("worker", "cluster shard worker: serves the shard plane on --addr (--seed, --adc, --admin-addr)"),
     ("cluster-serve", "shard the stage pipeline across --workers A,B,C and serve clients on --addr"),
-    ("bench-net", "load-generate against a serve-net endpoint (--addr; --concurrency 1,8,64 sweeps; --fault-rate = chaos; --cluster = failover benchmark; --trace-out)"),
+    ("bench-net", "load-generate against a serve-net endpoint (--addr; --concurrency 1,8,64 sweeps; --pipeline-depth 1,8,32 tagged-pipelining sweeps; --fault-rate = chaos; --cluster = failover benchmark; --trace-out)"),
     ("statz", "scrape a serve-net admin plane (--addr; see serve-net --admin-addr)"),
     ("sched-stress", "work-stealing executor stress smoke (CI)"),
     ("export", "write every figure's data series as CSV (--out)"),

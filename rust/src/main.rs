@@ -538,6 +538,27 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     // ledger_overhead_b8 in PERF.md) — it feeds the admin exposition,
     // the Stats frame's ledger.* counters, and --cost-reports
     newton::obs::ledger::set_enabled(!args.has_flag("no-ledger"));
+    // --event-loop: readiness-driven serving (connections cost fds, not
+    // threads) with per-connection pipelining up to --max-pipeline tagged
+    // requests, dispatched by a --workers-sized engine pool
+    let event_loop = (args.has_flag("event-loop")
+        || args.get("max-pipeline").is_some()
+        || args.get("workers").is_some())
+    .then(|| {
+        let d = newton::net::EventLoopConfig::default();
+        newton::net::EventLoopConfig {
+            workers: args.get_usize("workers", d.workers),
+            max_pipeline: args.get_usize("max-pipeline", d.max_pipeline),
+        }
+    });
+    if let Some(el) = &event_loop {
+        if el.workers == 0 {
+            bail!("--workers must be >= 1");
+        }
+        if el.max_pipeline == 0 {
+            bail!("--max-pipeline must be >= 1");
+        }
+    }
     let server = NetServer::start(
         engine,
         ServeConfig {
@@ -547,10 +568,17 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
             timeouts,
             admin_addr: args.get("admin-addr").map(str::to_string),
             cost_reports: args.has_flag("cost-reports"),
+            event_loop: event_loop.clone(),
         },
     )?;
     let addr = server.local_addr();
-    println!("serve-net listening on {addr} (max {max_inflight} in flight)");
+    match &event_loop {
+        Some(el) => println!(
+            "serve-net listening on {addr} (event loop: {} workers, pipeline window {}, max {max_inflight} in flight)",
+            el.workers, el.max_pipeline
+        ),
+        None => println!("serve-net listening on {addr} (max {max_inflight} in flight)"),
+    }
     if let Some(pf) = args.get("port-file") {
         std::fs::write(pf, addr.to_string())?;
         println!("  bound address written to {pf}");
@@ -942,6 +970,32 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
         stats.batch_fill * 100.0
     );
 
+    // pipeline sweep: one tagged v4 connection per depth, window-bounded
+    // out-of-order completion (the event-loop server reorders; the
+    // threaded server serializes but echoes tags, so both modes work)
+    let mut pipelined: Vec<net::PipelinedReport> = Vec::new();
+    if let Some(spec) = args.get("pipeline-depth") {
+        let depths: Vec<usize> = spec
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<usize>().map_err(|_| {
+                    anyhow!("--pipeline-depth wants N or a comma list like 1,8,32, got {spec:?}")
+                })
+            })
+            .collect::<Result<_>>()?;
+        if depths.iter().any(|&d| d == 0) {
+            bail!("--pipeline-depth entries must be >= 1");
+        }
+        for &d in &depths {
+            let p = net::load_generate_pipelined(&cfg, d)?;
+            println!(
+                "  pipeline d={d:<3}: {:.1} req/s   p50 {} us  p99 {} us  p999 {} us  ({} busy retries)",
+                p.throughput_rps, p.p50_us, p.p99_us, p.p999_us, p.busy_retries
+            );
+            pipelined.push(p);
+        }
+    }
+
     let verified = if args.has_flag("expect-exact") {
         // the in-process reference must install the same weights the
         // server did: --engine-seed mirrors serve-net's --seed (default 0)
@@ -958,16 +1012,38 @@ fn cmd_bench_net(args: &Args) -> Result<()> {
                 report.worst_abs_err
             );
         }
+        // each pipelined pass replays the identical request stream, so its
+        // tag-reassembled logits must match the same golden bit for bit
+        for p in &pipelined {
+            if p.logits != want {
+                bail!(
+                    "--expect-exact: pipelined pass (depth {}) logits are NOT bit-identical to the in-process GoldenServer",
+                    p.depth
+                );
+            }
+            if p.worst_abs_err != 0 {
+                bail!(
+                    "--expect-exact: pipelined pass (depth {}) reported a nonzero deviation ({}) under an exact config",
+                    p.depth,
+                    p.worst_abs_err
+                );
+            }
+        }
         println!(
-            "  verified   : {} responses bit-identical to the in-process path, zero deviation ✓",
-            cfg.requests
+            "  verified   : {} responses bit-identical to the in-process path, zero deviation ✓{}",
+            cfg.requests,
+            if pipelined.is_empty() {
+                String::new()
+            } else {
+                format!(" ({} pipelined passes included)", pipelined.len())
+            }
         );
         Some(true)
     } else {
         None
     };
 
-    write_bench_net_json(&report, &stats, verified, fault_overhead, &sweep, None);
+    write_bench_net_json(&report, &stats, verified, fault_overhead, &sweep, &pipelined, None);
 
     if args.has_flag("shutdown") {
         ctl.shutdown()?;
@@ -1282,6 +1358,7 @@ fn cmd_bench_net_cluster(args: &Args) -> Result<()> {
         verified,
         Some(fault_overhead),
         &sweep,
+        &[],
         Some((recovery_worst_ms, reshards, fault_overhead)),
     );
     ctl.shutdown()?;
@@ -1304,6 +1381,7 @@ fn write_bench_net_json(
     verified: Option<bool>,
     fault_overhead: Option<f64>,
     sweep: &[(usize, u64, u64, u64)],
+    pipelined: &[net::PipelinedReport],
     cluster: Option<(f64, u64, f64)>,
 ) {
     let per_replica = r
@@ -1324,6 +1402,18 @@ fn write_bench_net_json(
         sweep_keys.push_str(&format!(
             "  \"latency_p50_us_c{c}\": {p50},\n  \"latency_p99_us_c{c}\": {p99},\n  \
              \"latency_p999_us_c{c}\": {p999},\n"
+        ));
+    }
+    // one throughput + exact-microsecond latency block per pipelined
+    // depth (bench-net --pipeline-depth): single tagged connection,
+    // window-bounded out-of-order completion
+    let mut pipelined_keys = String::new();
+    for p in pipelined {
+        let d = p.depth;
+        pipelined_keys.push_str(&format!(
+            "  \"pipelined_throughput_d{d}\": {:.3},\n  \"latency_p50_us_d{d}\": {},\n  \
+             \"latency_p99_us_d{d}\": {},\n  \"latency_p999_us_d{d}\": {},\n",
+            p.throughput_rps, p.p50_us, p.p99_us, p.p999_us
         ));
     }
     // cluster failover series (bench-net --cluster only): worst
@@ -1366,7 +1456,7 @@ fn write_bench_net_json(
     let json = format!(
         "{{\n  \"requests\": {},\n  \"concurrency\": {},\n  \"wall_s\": {:.6},\n  \
          \"throughput_rps\": {:.3},\n  \"p50_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \
-         \"max_ms\": {:.3},\n{}{}  \"busy_retries\": {},\n  \"fault_retries\": {},\n  \
+         \"max_ms\": {:.3},\n{}{}{}  \"busy_retries\": {},\n  \"fault_retries\": {},\n  \
          \"reconnects\": {},\n  \"injected_faults\": {},\n  \"fault_overhead_b8\": {},\n  \
          \"worst_abs_err\": {},\n  \
          \"adc_ops_per_infer\": {adc_ops_per_infer:.3},\n  \
@@ -1385,6 +1475,7 @@ fn write_bench_net_json(
         r.p99_ms,
         r.max_ms,
         sweep_keys,
+        pipelined_keys,
         cluster_keys,
         r.busy_retries,
         r.fault_retries,

@@ -2,10 +2,17 @@
 //! generator behind `newton bench-net`.
 //!
 //! One [`Client`] is one TCP connection with one request outstanding at a
-//! time (the protocol is strict request/response per connection);
+//! time (v3 framing is strict request/response per connection);
 //! concurrency comes from opening more connections, which is exactly what
 //! [`load_generate`] does — one lane per connection, fanned out on the
 //! work-stealing executor ([`crate::sched`]).
+//!
+//! [`PipelinedClient`] is the v4-framing peer: up to `window` tagged
+//! requests ride ONE connection concurrently and replies return in
+//! completion order, matched by tag. [`load_generate_pipelined`] drives
+//! the same deterministic request stream through it at a fixed depth —
+//! `bench-net --pipeline-depth` compares depths on one connection where
+//! [`load_generate`] compares connection counts.
 //!
 //! [`RetryClient`] layers resilience on top: a per-request deadline, a
 //! reconnect-and-retry loop with capped exponential [`Backoff`] and
@@ -708,6 +715,349 @@ pub fn load_generate(cfg: &BenchConfig) -> Result<BenchReport, NetError> {
     })
 }
 
+// ---- pipelined client ----------------------------------------------------
+
+/// One reply off a pipelined connection: which request (by tag) it
+/// answers, the outcome, and the submit-to-reply time of the attempt.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaggedReply {
+    pub tag: u16,
+    pub outcome: InferOutcome,
+    /// Wall time from [`PipelinedClient::submit`] to this reply, µs.
+    pub service_us: u64,
+}
+
+struct PendingTag {
+    id: u64,
+    trace: u64,
+    submitted: Instant,
+}
+
+/// A windowed, tagged (proto v4) client: up to `window` requests ride one
+/// connection concurrently and replies return in completion order, each
+/// matched to its request by tag.
+///
+/// Designed against the `serve-net --event-loop` server, but correct
+/// against the threaded server too (which answers tagged requests
+/// serially, in order — a valid completion order). Control traffic
+/// ([`Self::stats`], [`Self::shutdown`]) requires an empty window, since
+/// those frames are request/response.
+///
+/// # Examples
+///
+/// ```no_run
+/// use newton::net::PipelinedClient;
+///
+/// let mut c = PipelinedClient::connect("127.0.0.1:4242", 8)?;
+/// for i in 0..32u64 {
+///     c.submit(i, &[0; 3072])?; // blocks only when the window is full
+///     while let Some(r) = c.ready() {
+///         println!("tag {} done: {:?}", r.tag, r.outcome);
+///     }
+/// }
+/// for r in c.drain()? {
+///     println!("tag {} done: {:?}", r.tag, r.outcome);
+/// }
+/// # Ok::<(), Box<dyn std::error::Error>>(())
+/// ```
+pub struct PipelinedClient<S = TcpStream> {
+    stream: S,
+    window: usize,
+    next_tag: u16,
+    outstanding: std::collections::HashMap<u16, PendingTag>,
+    /// Replies received while waiting for a window slot in
+    /// [`Self::submit`]; handed out by [`Self::ready`]/[`Self::recv`]
+    /// before the wire is read again.
+    backlog: std::collections::VecDeque<TaggedReply>,
+}
+
+impl PipelinedClient<TcpStream> {
+    /// Connect with a pipeline window of `window` requests (>= 1).
+    pub fn connect<A: ToSocketAddrs>(addr: A, window: usize) -> io::Result<PipelinedClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(PipelinedClient::from_stream(stream, window))
+    }
+}
+
+impl<S: Read + Write> PipelinedClient<S> {
+    /// Wrap an already-connected bidirectional stream.
+    pub fn from_stream(stream: S, window: usize) -> PipelinedClient<S> {
+        assert!(window >= 1, "pipeline window must be >= 1");
+        PipelinedClient {
+            stream,
+            window,
+            next_tag: 0,
+            outstanding: std::collections::HashMap::new(),
+            backlog: std::collections::VecDeque::new(),
+        }
+    }
+
+    /// Requests submitted but not yet returned by
+    /// [`Self::ready`]/[`Self::recv`] (includes backlogged replies'
+    /// absence: a reply pulled into the backlog has left the wire but not
+    /// the caller's hands yet — its tag is already released).
+    pub fn in_flight(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// The configured window.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Mint the next tag: never 0 (kept distinguishable from a v3
+    /// reserved field on the wire), never a tag still in flight.
+    fn mint_tag(&mut self) -> u16 {
+        loop {
+            self.next_tag = self.next_tag.wrapping_add(1);
+            if self.next_tag == 0 {
+                continue;
+            }
+            if !self.outstanding.contains_key(&self.next_tag) {
+                return self.next_tag;
+            }
+        }
+    }
+
+    /// Submit one inference request; returns its tag. Blocks for a reply
+    /// (parked in the backlog for [`Self::ready`]) only when the window
+    /// is full.
+    pub fn submit(&mut self, id: u64, image: &[i32]) -> Result<u16, NetError> {
+        if image.len() > proto::MAX_IMAGE_ELEMS {
+            return Err(NetError::Proto(ProtoError::Oversized {
+                len: 20 + image.len() * 4,
+            }));
+        }
+        while self.outstanding.len() >= self.window {
+            let r = self.recv_wire()?;
+            self.backlog.push_back(r);
+        }
+        let tag = self.mint_tag();
+        let trace = obs::next_trace_id();
+        let _sp = obs::span_verbose("client_submit", "net")
+            .arg("trace", trace)
+            .arg("id", id);
+        proto::write_msg_tagged(
+            &mut self.stream,
+            &Msg::Infer(InferRequest {
+                id,
+                trace,
+                image: image.to_vec(),
+            }),
+            tag,
+        )
+        .map_err(|e| NetError::Proto(ProtoError::Io(e)))?;
+        self.outstanding.insert(
+            tag,
+            PendingTag {
+                id,
+                trace,
+                submitted: Instant::now(),
+            },
+        );
+        Ok(tag)
+    }
+
+    /// Pop a reply that already arrived (no IO). `None` means nothing is
+    /// buffered — [`Self::recv`] will read the wire.
+    pub fn ready(&mut self) -> Option<TaggedReply> {
+        self.backlog.pop_front()
+    }
+
+    /// Next reply: backlog first, then a blocking wire read. Errors if
+    /// nothing is in flight.
+    pub fn recv(&mut self) -> Result<TaggedReply, NetError> {
+        if let Some(r) = self.backlog.pop_front() {
+            return Ok(r);
+        }
+        if self.outstanding.is_empty() {
+            return Err(NetError::Unexpected("recv with nothing in flight"));
+        }
+        self.recv_wire()
+    }
+
+    /// Collect every outstanding reply (backlog included), in arrival
+    /// order.
+    pub fn drain(&mut self) -> Result<Vec<TaggedReply>, NetError> {
+        let mut out: Vec<TaggedReply> = self.backlog.drain(..).collect();
+        while !self.outstanding.is_empty() {
+            out.push(self.recv_wire()?);
+        }
+        Ok(out)
+    }
+
+    fn recv_wire(&mut self) -> Result<TaggedReply, NetError> {
+        let (tag, msg) = proto::read_msg_tagged(&mut self.stream)?;
+        let Some(tag) = tag else {
+            return Err(NetError::Unexpected("untagged frame on a pipelined connection"));
+        };
+        let Some(pending) = self.outstanding.remove(&tag) else {
+            return Err(NetError::Unexpected("reply tag matches no in-flight request"));
+        };
+        let service_us = pending.submitted.elapsed().as_micros() as u64;
+        match msg {
+            Msg::Reply(r) if r.id == pending.id && r.trace == pending.trace => Ok(TaggedReply {
+                tag,
+                outcome: InferOutcome::Ok(r),
+                service_us,
+            }),
+            Msg::Reply(_) => Err(NetError::Unexpected("reply id/trace does not echo the request")),
+            Msg::Busy => Ok(TaggedReply {
+                tag,
+                outcome: InferOutcome::Busy,
+                service_us,
+            }),
+            Msg::Error(e) => Err(NetError::Server(e)),
+            _ => Err(NetError::Unexpected("non-reply frame to an inference request")),
+        }
+    }
+
+    /// Fetch the server's statistics snapshot. The window must be empty
+    /// (stats is request/response, not pipelined).
+    pub fn stats(&mut self) -> Result<StatsSnapshot, NetError> {
+        if !self.outstanding.is_empty() {
+            return Err(NetError::Unexpected("stats with requests in flight"));
+        }
+        let tag = self.mint_tag();
+        proto::write_msg_tagged(&mut self.stream, &Msg::StatsReq, tag)
+            .map_err(|e| NetError::Proto(ProtoError::Io(e)))?;
+        match proto::read_msg_tagged(&mut self.stream)? {
+            (Some(t), Msg::Stats(s)) if t == tag => Ok(s),
+            (_, Msg::Error(e)) => Err(NetError::Server(e)),
+            _ => Err(NetError::Unexpected("non-stats frame to a stats request")),
+        }
+    }
+
+    /// Ask the server to drain and exit. The window must be empty.
+    pub fn shutdown(&mut self) -> Result<(), NetError> {
+        if !self.outstanding.is_empty() {
+            return Err(NetError::Unexpected("shutdown with requests in flight"));
+        }
+        let tag = self.mint_tag();
+        proto::write_msg_tagged(&mut self.stream, &Msg::Shutdown, tag)
+            .map_err(|e| NetError::Proto(ProtoError::Io(e)))?;
+        match proto::read_msg_tagged(&mut self.stream)? {
+            (Some(t), Msg::ShutdownAck) if t == tag => Ok(()),
+            (_, Msg::Error(e)) => Err(NetError::Server(e)),
+            _ => Err(NetError::Unexpected("non-ack frame to a shutdown request")),
+        }
+    }
+}
+
+/// Results of one pipelined load-generation pass at a fixed depth.
+#[derive(Clone, Debug)]
+pub struct PipelinedReport {
+    /// Pipeline window used (requests in flight on the one connection).
+    pub depth: usize,
+    pub requests: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    /// Submit-to-reply latency percentiles, µs (the last successful
+    /// attempt per request; busy resubmits restart the clock).
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    /// Busy rejections absorbed (each is resubmitted after a backoff).
+    pub busy_retries: u64,
+    /// Worst batch deviation vs the lossless golden observed in replies.
+    pub worst_abs_err: i64,
+    /// Logits per request, ordered by request index — the bit-identity
+    /// hook against an in-process golden run.
+    pub logits: Vec<Vec<i32>>,
+}
+
+/// Drive `cfg.requests` requests down ONE connection with `depth`
+/// requests pipelined, against the same deterministic
+/// [`bench_image`]`(seed, i)` stream as [`load_generate`] — so the
+/// pipelined path's logits can be verified bit-exactly against the same
+/// in-process golden replay. `Busy` replies (window admission at the
+/// server, or the global ceiling) are resubmitted under a capped
+/// backoff.
+pub fn load_generate_pipelined(
+    cfg: &BenchConfig,
+    depth: usize,
+) -> Result<PipelinedReport, NetError> {
+    assert!(cfg.requests > 0, "requests must be >= 1");
+    let depth = depth.max(1);
+    let mut client = PipelinedClient::connect(cfg.addr.as_str(), depth)?;
+    let mut tag_index: std::collections::HashMap<u16, usize> = std::collections::HashMap::new();
+    let mut latencies = vec![0u64; cfg.requests];
+    let mut logits: Vec<Option<Vec<i32>>> = vec![None; cfg.requests];
+    let mut resubmit: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+    let mut backoff = Backoff::new(
+        cfg.busy_backoff,
+        cfg.busy_backoff.saturating_mul(32),
+        cfg.seed ^ 0xA076_1D64_78BD_642F,
+    );
+    let mut busy_retries = 0u64;
+    let mut worst_abs_err = 0i64;
+    let mut done = 0usize;
+    let mut next_req = 0usize;
+    let t0 = Instant::now();
+    while done < cfg.requests {
+        // fill the window: resubmits first (they already waited), then
+        // fresh indices
+        while client.in_flight() < depth {
+            let i = match resubmit.pop_front() {
+                Some(i) => i,
+                None if next_req < cfg.requests => {
+                    let i = next_req;
+                    next_req += 1;
+                    i
+                }
+                None => break,
+            };
+            let tag = client.submit(i as u64, &bench_image(cfg.seed, i))?;
+            tag_index.insert(tag, i);
+        }
+        // consume whatever submit() backlogged, then block for one reply
+        let reply = match client.ready() {
+            Some(r) => r,
+            None => client.recv()?,
+        };
+        let i = tag_index
+            .remove(&reply.tag)
+            .expect("reply tag tracked by the generator");
+        match reply.outcome {
+            InferOutcome::Ok(r) => {
+                debug_assert_eq!(r.id, i as u64, "server echoes the request id");
+                latencies[i] = reply.service_us;
+                worst_abs_err = worst_abs_err.max(r.max_abs_err);
+                logits[i] = Some(r.logits);
+                done += 1;
+                backoff.reset();
+            }
+            InferOutcome::Busy => {
+                busy_retries += 1;
+                resubmit.push_back(i);
+                // the window stays pipelined around the sleep: only this
+                // request waits, the rest keep flowing
+                std::thread::sleep(backoff.next_delay());
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let logits: Vec<Vec<i32>> = logits
+        .into_iter()
+        .map(|l| l.expect("every request index answered exactly once"))
+        .collect();
+    let mut lat = latencies;
+    lat.sort_unstable();
+    Ok(PipelinedReport {
+        depth,
+        requests: cfg.requests,
+        wall_s: wall,
+        throughput_rps: cfg.requests as f64 / wall.max(1e-9),
+        p50_us: percentile_us(&lat, 0.50),
+        p99_us: percentile_us(&lat, 0.99),
+        p999_us: percentile_us(&lat, 0.999),
+        busy_retries,
+        worst_abs_err,
+        logits,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -780,6 +1130,72 @@ mod tests {
             elapsed: Duration::ZERO
         }
         .retryable());
+    }
+
+    /// Swallows writes, EOFs reads: enough to exercise the pipelined
+    /// client's submit/tag bookkeeping without a server.
+    struct FrameSink {
+        wrote: Vec<u8>,
+    }
+
+    impl Write for FrameSink {
+        fn write(&mut self, b: &[u8]) -> io::Result<usize> {
+            self.wrote.extend_from_slice(b);
+            Ok(b.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    impl Read for FrameSink {
+        fn read(&mut self, _b: &mut [u8]) -> io::Result<usize> {
+            Ok(0)
+        }
+    }
+
+    #[test]
+    fn pipelined_submit_mints_distinct_nonzero_tags_and_frames_v4() {
+        let mut c = PipelinedClient::from_stream(FrameSink { wrote: Vec::new() }, 4);
+        let t1 = c.submit(10, &[1, 2, 3]).unwrap();
+        let t2 = c.submit(11, &[4, 5, 6]).unwrap();
+        let t3 = c.submit(12, &[7, 8, 9]).unwrap();
+        assert!(t1 != 0 && t2 != 0 && t3 != 0, "tag 0 is reserved");
+        assert!(t1 != t2 && t2 != t3 && t1 != t3, "tags must be distinct");
+        assert_eq!(c.in_flight(), 3);
+        assert!(c.ready().is_none(), "nothing arrived yet");
+        // the first emitted frame is v4 with t1 in the header tag bytes
+        let f = &c.stream.wrote;
+        assert_eq!(f[4], proto::VERSION);
+        assert_eq!(u16::from_le_bytes([f[6], f[7]]), t1);
+    }
+
+    #[test]
+    fn pipelined_tag_minting_skips_zero_and_in_flight_tags() {
+        let mut c = PipelinedClient::from_stream(FrameSink { wrote: Vec::new() }, 8);
+        let first = c.submit(1, &[0]).unwrap();
+        // force the counter to wrap: the next mints must skip 0 and the
+        // still-in-flight first tag
+        c.next_tag = u16::MAX - 1;
+        let a = c.submit(2, &[0]).unwrap();
+        let b = c.submit(3, &[0]).unwrap();
+        let d = c.submit(4, &[0]).unwrap();
+        assert_eq!(a, u16::MAX);
+        assert!(b != 0 && d != 0);
+        assert!(![a, b, d].contains(&first));
+        assert_eq!(c.in_flight(), 4);
+    }
+
+    #[test]
+    fn pipelined_oversized_image_fails_locally() {
+        let mut c = PipelinedClient::from_stream(FrameSink { wrote: Vec::new() }, 2);
+        let img = vec![0i32; proto::MAX_IMAGE_ELEMS + 1];
+        assert!(matches!(
+            c.submit(1, &img),
+            Err(NetError::Proto(ProtoError::Oversized { .. }))
+        ));
+        assert_eq!(c.in_flight(), 0, "nothing was framed");
+        assert!(c.stream.wrote.is_empty());
     }
 
     #[test]

@@ -1,0 +1,819 @@
+//! Readiness-driven event loop: every connection on one poll thread.
+//!
+//! The threaded server costs one OS thread per connection and leaves the
+//! wire idle between each request/response pair. This module replaces
+//! that tier (when [`crate::net::ServeConfig::event_loop`] is set) with:
+//!
+//! * **one loop thread** holding the listener and every accepted
+//!   connection as nonblocking sockets, multiplexed with `poll(2)` (raw
+//!   FFI — std already links libc, no crate added; a portable fallback
+//!   emulates readiness with a short sleep on non-unix targets);
+//! * **a fixed dispatcher pool** (`workers` threads running the same
+//!   [`crate::net::server::dispatch_loop`] as the threaded server) that
+//!   closes batches and runs the engine;
+//! * **a completion bridge** carrying finished rows back: dispatchers
+//!   push [`Completion`]s and poke the loop's waker (a socketpair byte),
+//!   and the loop frames each reply into its connection's write buffer.
+//!
+//! Per-connection state machine (implicit in the buffers):
+//!
+//! ```text
+//!   reading-header ──16 bytes──▶ reading-payload ──frame──▶ dispatched(k)
+//!        ▲                                                       │
+//!        │                     reply completes: frame appended   │
+//!        └────────── writing ◀──────── to write_buf ─────────────┘
+//! ```
+//!
+//! A connection may hold up to `max_pipeline` tagged (proto v4) requests
+//! in `dispatched`; replies return in completion order, not arrival
+//! order, each carrying its request's tag. Untagged (v3) requests keep
+//! their strict one-in-flight contract: the loop stops parsing that
+//! connection's bytes until the reply is enqueued, which is exactly the
+//! pacing a blocking [`crate::net::Client`] produces — so v3 peers see
+//! byte-identical behaviour.
+//!
+//! Backpressure is layered: over-window v4 requests get a *tagged*
+//! [`Msg::Busy`] (per-request, the connection lives on), the global
+//! admission ceiling returns `Busy` exactly as the threaded server does,
+//! and a slow reader whose write buffer exceeds [`WRITE_BUF_CAP`] stops
+//! being *read* (its socket stays registered for write-readiness only)
+//! until it drains — one stalled consumer can never pin loop memory or
+//! other connections.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::coordinator::batcher::PendingRequest;
+use crate::net::proto::{self, InferReply, InferRequest, Msg, StatsSnapshot, WireError};
+use crate::net::server::{site_counter, snapshot, try_admit, RouteSink, Shared};
+use crate::obs::{self, Counter};
+
+/// Event-loop serving knobs (see [`crate::net::ServeConfig::event_loop`]).
+#[derive(Clone, Debug)]
+pub struct EventLoopConfig {
+    /// Dispatcher threads closing batches and running the engine. The
+    /// server's thread count is bounded by this pool (plus the loop and
+    /// admin threads) no matter how many connections are held open.
+    pub workers: usize,
+    /// Max tagged requests a single connection may hold in flight;
+    /// request `max_pipeline + 1` gets a tagged `Busy` while the
+    /// connection keeps serving.
+    pub max_pipeline: usize,
+}
+
+impl Default for EventLoopConfig {
+    fn default() -> Self {
+        EventLoopConfig {
+            workers: 2,
+            max_pipeline: 32,
+        }
+    }
+}
+
+/// A slow reader's write buffer is capped here; past it the loop stops
+/// reading that connection until the peer drains its replies.
+const WRITE_BUF_CAP: usize = 1 << 20;
+
+/// Read scratch size per syscall; the loop reads until `WouldBlock`, so
+/// this bounds a single `read`, not a connection's frame size.
+const READ_CHUNK: usize = 64 * 1024;
+
+// ---- readiness primitives -------------------------------------------------
+
+/// Minimal `poll(2)` wrapper. On unix this is the real syscall via FFI
+/// (std links libc already — no dependency added). Elsewhere readiness is
+/// emulated: a short sleep, then every entry is reported ready, which is
+/// correct (all sockets are nonblocking, so spurious readiness costs a
+/// `WouldBlock`) if wasteful — the unix path is the production one.
+pub(crate) mod sys {
+    use std::time::Duration;
+
+    /// Mirror of `struct pollfd`.
+    #[repr(C)]
+    pub(crate) struct PollFd {
+        pub(crate) fd: i32,
+        pub(crate) events: i16,
+        pub(crate) revents: i16,
+    }
+
+    pub(crate) const POLLIN: i16 = 0x001;
+    pub(crate) const POLLOUT: i16 = 0x004;
+
+    #[cfg(unix)]
+    pub(crate) fn raw_fd<F: std::os::unix::io::AsRawFd>(f: &F) -> i32 {
+        f.as_raw_fd()
+    }
+
+    #[cfg(not(unix))]
+    pub(crate) fn raw_fd<F>(_f: &F) -> i32 {
+        -1
+    }
+
+    #[cfg(unix)]
+    pub(crate) fn poll_fds(fds: &mut [PollFd], timeout: Duration) -> usize {
+        #[cfg(target_os = "linux")]
+        type NfdsT = std::ffi::c_ulong;
+        #[cfg(not(target_os = "linux"))]
+        type NfdsT = std::ffi::c_uint;
+        extern "C" {
+            fn poll(fds: *mut super::sys::PollFd, nfds: NfdsT, timeout: std::ffi::c_int)
+                -> std::ffi::c_int;
+        }
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        loop {
+            let r = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, ms) };
+            if r >= 0 {
+                return r as usize;
+            }
+            if std::io::Error::last_os_error().kind() != std::io::ErrorKind::Interrupted {
+                return 0; // EBADF etc.: treat as a timed-out tick
+            }
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub(crate) fn poll_fds(fds: &mut [PollFd], timeout: Duration) -> usize {
+        std::thread::sleep(timeout.min(Duration::from_millis(2)));
+        for f in fds.iter_mut() {
+            f.revents = f.events;
+        }
+        fds.len()
+    }
+
+    /// Sleep until `l` is accept-ready or `timeout` passes. Used by the
+    /// admin plane so its accept loop is readiness-driven, not a
+    /// sleep-and-retry spin.
+    pub(crate) fn wait_readable(l: &std::net::TcpListener, timeout: Duration) -> bool {
+        let mut fds = [PollFd {
+            fd: raw_fd(l),
+            events: POLLIN,
+            revents: 0,
+        }];
+        poll_fds(&mut fds, timeout) > 0 && fds[0].revents & POLLIN != 0
+    }
+}
+
+/// Wakes the loop thread out of `poll` when a dispatcher finishes a row.
+/// One byte down a socketpair; coalesced by the `pending` flag so a burst
+/// of completions costs one write. If the pair cannot be created the
+/// bridge still works — the loop's poll timeout doubles as the delivery
+/// tick, trading latency for liveness.
+struct Waker {
+    #[cfg(unix)]
+    pair: Option<(std::os::unix::net::UnixStream, std::os::unix::net::UnixStream)>,
+    pending: AtomicBool,
+}
+
+impl Waker {
+    fn new() -> Waker {
+        #[cfg(unix)]
+        {
+            let pair = std::os::unix::net::UnixStream::pair().ok().and_then(|(r, w)| {
+                r.set_nonblocking(true).ok()?;
+                w.set_nonblocking(true).ok()?;
+                Some((r, w))
+            });
+            Waker {
+                pair,
+                pending: AtomicBool::new(false),
+            }
+        }
+        #[cfg(not(unix))]
+        Waker {
+            pending: AtomicBool::new(false),
+        }
+    }
+
+    fn wake(&self) {
+        if self.pending.swap(true, Ordering::AcqRel) {
+            return; // a byte is already in flight
+        }
+        #[cfg(unix)]
+        if let Some((_, w)) = &self.pair {
+            let _ = (&mut &*w).write(&[1u8]);
+        }
+    }
+
+    /// Clear the pending flag and drain the pipe. Called by the loop
+    /// *before* consuming completions, so a completion arriving after the
+    /// drain leaves either the flag or a byte behind — never lost.
+    fn drain(&self) {
+        self.pending.store(false, Ordering::Release);
+        #[cfg(unix)]
+        if let Some((r, _)) = &self.pair {
+            let mut buf = [0u8; 64];
+            while matches!((&mut &*r).read(&mut buf), Ok(n) if n > 0) {}
+        }
+    }
+
+    fn poll_fd(&self) -> Option<i32> {
+        #[cfg(unix)]
+        {
+            self.pair.as_ref().map(|(r, _)| sys::raw_fd(r))
+        }
+        #[cfg(not(unix))]
+        None
+    }
+}
+
+/// A finished row travelling dispatcher → loop: everything needed to
+/// frame the reply without the loop re-looking the request up.
+pub(crate) struct Completion {
+    pub(crate) conn: u64,
+    pub(crate) tag: u16,
+    pub(crate) tagged: bool,
+    pub(crate) id: u64,
+    pub(crate) trace: u64,
+    pub(crate) t0: Instant,
+    pub(crate) replica: u32,
+    pub(crate) max_abs_err: i64,
+    pub(crate) logits: Vec<i32>,
+    pub(crate) cost: Option<proto::CostReport>,
+}
+
+/// Dispatcher-side handle: push a completion, poke the loop.
+pub(crate) struct CompletionBridge {
+    completions: Mutex<Vec<Completion>>,
+    waker: Waker,
+}
+
+impl CompletionBridge {
+    fn new() -> Arc<CompletionBridge> {
+        Arc::new(CompletionBridge {
+            completions: Mutex::new(Vec::new()),
+            waker: Waker::new(),
+        })
+    }
+
+    pub(crate) fn complete(&self, c: Completion) {
+        self.completions.lock().unwrap().push(c);
+        self.waker.wake();
+    }
+
+    fn drain(&self) -> Vec<Completion> {
+        self.waker.drain();
+        std::mem::take(&mut *self.completions.lock().unwrap())
+    }
+}
+
+// ---- per-connection state -------------------------------------------------
+
+struct Conn {
+    stream: TcpStream,
+    /// Unparsed inbound bytes; a torn frame simply stays here until the
+    /// next readable event completes it.
+    read_buf: Vec<u8>,
+    /// Framed replies waiting for the socket; `write_pos` is the flushed
+    /// prefix (compacted, not re-allocated, as it drains).
+    write_buf: Vec<u8>,
+    write_pos: usize,
+    /// Live v4 tags: duplicates are a routing ambiguity and close the
+    /// connection; completion removes its tag, freeing it for reuse.
+    tags: HashSet<u16>,
+    /// Dispatched-not-yet-written requests (tagged and untagged).
+    outstanding: usize,
+    /// An untagged (v3) `Infer` is in flight: stop parsing this
+    /// connection until its reply is enqueued, preserving the strict
+    /// request/response pacing a blocking client relies on.
+    serial_wait: bool,
+    /// Peer half-closed its write side (EOF); replies still flush.
+    read_closed: bool,
+    /// Close once `outstanding == 0` and the write buffer flushed.
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            read_buf: Vec::new(),
+            write_buf: Vec::new(),
+            write_pos: 0,
+            tags: HashSet::new(),
+            outstanding: 0,
+            serial_wait: false,
+            read_closed: false,
+            closing: false,
+        }
+    }
+
+    fn pending_write(&self) -> usize {
+        self.write_buf.len() - self.write_pos
+    }
+
+    /// Frame `m` into the write buffer, echoing the request's framing:
+    /// tagged v4 when `tag` is `Some`, untagged v3 otherwise.
+    fn enqueue(&mut self, m: &Msg, tag: Option<u16>) {
+        let frame = match tag {
+            Some(t) => proto::encode_frame_tagged(m, t),
+            None => proto::encode_frame(m),
+        };
+        self.write_buf.extend_from_slice(&frame);
+    }
+
+    /// Write until the socket pushes back. `Err` means the peer is gone.
+    fn flush(&mut self) -> io::Result<()> {
+        while self.write_pos < self.write_buf.len() {
+            match self.stream.write(&self.write_buf[self.write_pos..]) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => self.write_pos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if self.write_pos == self.write_buf.len() {
+            self.write_buf.clear();
+            self.write_pos = 0;
+        } else if self.write_pos > READ_CHUNK {
+            self.write_buf.drain(..self.write_pos);
+            self.write_pos = 0;
+        }
+        Ok(())
+    }
+
+    /// Reading is paused while a v3 request is in flight, once the peer
+    /// hit EOF or a fatal error, and while a slow reader's replies back
+    /// up past the cap.
+    fn wants_read(&self) -> bool {
+        !self.read_closed
+            && !self.closing
+            && !self.serial_wait
+            && self.pending_write() < WRITE_BUF_CAP
+    }
+
+    fn done(&self) -> bool {
+        self.closing && self.outstanding == 0 && self.pending_write() == 0
+    }
+}
+
+// ---- instrumentation sites ------------------------------------------------
+
+static WAKEUPS: OnceLock<Arc<Counter>> = OnceLock::new();
+static ACCEPTS: OnceLock<Arc<Counter>> = OnceLock::new();
+static COMPLETIONS: OnceLock<Arc<Counter>> = OnceLock::new();
+static BUSY_WINDOW: OnceLock<Arc<Counter>> = OnceLock::new();
+static CONNS_CLOSED: OnceLock<Arc<Counter>> = OnceLock::new();
+static EVREQS: OnceLock<Arc<Counter>> = OnceLock::new();
+static DUP_TRACE: OnceLock<Arc<Counter>> = OnceLock::new();
+
+// ---- the loop -------------------------------------------------------------
+
+/// What a poll slot points at.
+enum Slot {
+    Listener,
+    Waker,
+    Conn(u64),
+}
+
+/// Run the event loop until the server drains. Owns the listener and
+/// every accepted connection; spawned once by `NetServer::start` in event
+/// mode, alongside the dispatcher pool.
+pub(crate) fn run_loop(shared: &Arc<Shared>, listener: TcpListener, cfg: &EventLoopConfig) {
+    if listener.set_nonblocking(true).is_err() {
+        return; // cannot multiplex a blocking listener
+    }
+    let max_pipeline = cfg.max_pipeline.max(1);
+    let bridge = CompletionBridge::new();
+    let outstanding_hist = obs::histogram("net.evloop.outstanding");
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_conn: u64 = 1;
+    let mut chunk = vec![0u8; READ_CHUNK];
+    let tick = shared.timeouts.read_tick;
+    let mut drain_ticks: u32 = 0;
+
+    loop {
+        let draining = shared.draining.load(Ordering::Acquire);
+
+        // 1. build the poll set from current interest
+        let mut fds: Vec<sys::PollFd> = Vec::with_capacity(conns.len() + 2);
+        let mut slots: Vec<Slot> = Vec::with_capacity(conns.len() + 2);
+        if !draining {
+            fds.push(sys::PollFd {
+                fd: sys::raw_fd(&listener),
+                events: sys::POLLIN,
+                revents: 0,
+            });
+            slots.push(Slot::Listener);
+        }
+        if let Some(fd) = bridge.waker.poll_fd() {
+            fds.push(sys::PollFd {
+                fd,
+                events: sys::POLLIN,
+                revents: 0,
+            });
+            slots.push(Slot::Waker);
+        }
+        for (&key, conn) in &conns {
+            let mut events = 0i16;
+            if conn.wants_read() {
+                events |= sys::POLLIN;
+            }
+            if conn.pending_write() > 0 {
+                events |= sys::POLLOUT;
+            }
+            if events != 0 {
+                fds.push(sys::PollFd {
+                    fd: sys::raw_fd(&conn.stream),
+                    events,
+                    revents: 0,
+                });
+                slots.push(Slot::Conn(key));
+            }
+        }
+
+        // 2. sleep until something is ready (tick as drain/backstop)
+        sys::poll_fds(&mut fds, tick);
+        site_counter("net.evloop.wakeups", &WAKEUPS).inc();
+
+        // 3. route completions into write buffers first: finished work
+        // frees window slots before new frames are parsed below
+        for c in bridge.drain() {
+            shared.inflight.fetch_sub(1, Ordering::AcqRel);
+            site_counter("net.evloop.completions", &COMPLETIONS).inc();
+            let Some(conn) = conns.get_mut(&c.conn) else {
+                continue; // client vanished mid-flight; the row is dropped
+            };
+            conn.enqueue(
+                &Msg::Reply(InferReply {
+                    id: c.id,
+                    trace: c.trace,
+                    replica: c.replica,
+                    max_abs_err: c.max_abs_err,
+                    logits: c.logits,
+                    cost: c.cost,
+                }),
+                c.tagged.then_some(c.tag),
+            );
+            conn.outstanding -= 1;
+            if c.tagged {
+                conn.tags.remove(&c.tag);
+            } else {
+                conn.serial_wait = false;
+                // the v3 pause lifted: frames buffered behind it (a peer
+                // may have half-closed after sending them) parse now, not
+                // at the next readable event that might never come
+                parse_frames(shared, &bridge, conn, c.conn, max_pipeline, &outstanding_hist);
+            }
+            shared.latency.record(c.t0.elapsed().as_micros() as u64);
+        }
+
+        // 4. readable sockets: accept, then pull bytes + parse frames
+        for (fd, slot) in fds.iter().zip(&slots) {
+            match slot {
+                Slot::Listener if fd.revents & sys::POLLIN != 0 => loop {
+                    match listener.accept() {
+                        Ok((s, _)) => {
+                            let _ = s.set_nonblocking(true);
+                            let _ = s.set_nodelay(true);
+                            site_counter("net.evloop.accepts", &ACCEPTS).inc();
+                            conns.insert(next_conn, Conn::new(s));
+                            next_conn += 1;
+                        }
+                        Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                        Err(_) => break, // transient (EMFILE, ...): retry next tick
+                    }
+                },
+                Slot::Conn(key) if fd.revents != 0 => {
+                    let Some(conn) = conns.get_mut(key) else {
+                        continue;
+                    };
+                    if conn.wants_read() {
+                        read_into(conn, &mut chunk);
+                        parse_frames(shared, &bridge, conn, *key, max_pipeline, &outstanding_hist);
+                        if conn.read_closed && !conn.read_buf.is_empty() && !conn.serial_wait {
+                            // EOF landed mid-frame: nothing can complete it
+                            shared.stats.lock().unwrap().proto_errors += 1;
+                            conn.read_buf.clear();
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // 5. drain entry: refuse new conns, schedule every conn to close
+        // once its outstanding replies are flushed
+        if draining {
+            for conn in conns.values_mut() {
+                conn.closing = true;
+            }
+        }
+
+        // 6. flush every write buffer; drop dead/finished conns
+        conns.retain(|_, conn| {
+            if conn.flush().is_err() {
+                site_counter("net.evloop.conns_closed", &CONNS_CLOSED).inc();
+                return false; // peer gone; in-flight rows are dropped on arrival
+            }
+            // a half-closed idle peer (EOF, nothing in flight) is done
+            if conn.read_closed && conn.outstanding == 0 && conn.pending_write() == 0 {
+                site_counter("net.evloop.conns_closed", &CONNS_CLOSED).inc();
+                return false;
+            }
+            if conn.done() {
+                site_counter("net.evloop.conns_closed", &CONNS_CLOSED).inc();
+                return false;
+            }
+            true
+        });
+
+        if draining {
+            drain_ticks += 1;
+            let grace_up = drain_ticks > shared.timeouts.drain_grace_ticks;
+            if conns.is_empty() || grace_up {
+                // force-dropping conns past the grace mirrors the threaded
+                // server's drain deadline for wedged peers
+                shared.work_cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+/// Pull bytes until `WouldBlock` (or EOF / a fatal error, which stop
+/// reading but leave buffered frames to be served — a peer may half-close
+/// its write side and still collect replies).
+fn read_into(conn: &mut Conn, chunk: &mut [u8]) {
+    loop {
+        match conn.stream.read(chunk) {
+            Ok(0) => {
+                conn.read_closed = true;
+                return;
+            }
+            Ok(n) => {
+                conn.read_buf.extend_from_slice(&chunk[..n]);
+                // cap per-pass intake so one firehose connection cannot
+                // starve the rest of the poll set
+                if conn.read_buf.len() >= WRITE_BUF_CAP {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.read_closed = true;
+                conn.closing = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Parse every complete frame buffered on `conn` and serve each message.
+/// Stops at a torn frame (kept for the next readable event), when a v3
+/// request pauses the connection, or at a fatal protocol error.
+fn parse_frames(
+    shared: &Arc<Shared>,
+    bridge: &Arc<CompletionBridge>,
+    conn: &mut Conn,
+    key: u64,
+    max_pipeline: usize,
+    outstanding_hist: &obs::Histogram,
+) {
+    let mut pos = 0usize;
+    while !conn.serial_wait && !conn.closing {
+        let buf = &conn.read_buf[pos..];
+        if buf.len() < proto::HEADER_LEN {
+            break;
+        }
+        let h: [u8; proto::HEADER_LEN] = buf[..proto::HEADER_LEN].try_into().unwrap();
+        let fh = match proto::parse_header_tagged(&h) {
+            Ok(fh) => fh,
+            Err(e) => {
+                fatal_proto_error(shared, conn, &e);
+                break;
+            }
+        };
+        if buf.len() < proto::HEADER_LEN + fh.len {
+            break; // torn frame: wait for the rest
+        }
+        let payload = &buf[proto::HEADER_LEN..proto::HEADER_LEN + fh.len];
+        let got = proto::checksum(payload);
+        if got != fh.checksum {
+            fatal_proto_error(
+                shared,
+                conn,
+                &proto::ProtoError::Checksum {
+                    want: fh.checksum,
+                    got,
+                },
+            );
+            break;
+        }
+        let msg = match proto::decode_payload(fh.ty, payload) {
+            Ok(m) => m,
+            Err(e) => {
+                fatal_proto_error(shared, conn, &e);
+                break;
+            }
+        };
+        pos += proto::HEADER_LEN + fh.len;
+        let tag = fh.tagged().then_some(fh.tag);
+        serve_msg(shared, bridge, conn, key, max_pipeline, outstanding_hist, msg, tag);
+    }
+    if pos > 0 {
+        conn.read_buf.drain(..pos);
+    }
+    if conn.closing {
+        conn.read_buf.clear();
+    }
+}
+
+/// A framed stream cannot be resynced past a bad frame: count it, tell
+/// the peer best-effort, close after the write buffer flushes.
+fn fatal_proto_error(shared: &Arc<Shared>, conn: &mut Conn, e: &proto::ProtoError) {
+    shared.stats.lock().unwrap().proto_errors += 1;
+    conn.enqueue(
+        &Msg::Error(WireError {
+            code: proto::ERR_MALFORMED,
+            message: format!("protocol error: {e}"),
+        }),
+        None,
+    );
+    conn.closing = true;
+}
+
+/// Serve one decoded message on the loop thread. Inline answers (stats,
+/// errors, busy) are framed straight into the write buffer; infers are
+/// admitted and routed to the dispatcher pool.
+#[allow(clippy::too_many_arguments)]
+fn serve_msg(
+    shared: &Arc<Shared>,
+    bridge: &Arc<CompletionBridge>,
+    conn: &mut Conn,
+    key: u64,
+    max_pipeline: usize,
+    outstanding_hist: &obs::Histogram,
+    msg: Msg,
+    tag: Option<u16>,
+) {
+    match msg {
+        Msg::Infer(req) => serve_infer(
+            shared,
+            bridge,
+            conn,
+            key,
+            max_pipeline,
+            outstanding_hist,
+            req,
+            tag,
+        ),
+        Msg::StatsReq => {
+            let snap: StatsSnapshot = snapshot(shared);
+            conn.enqueue(&Msg::Stats(snap), tag);
+        }
+        Msg::Shutdown => {
+            shared.draining.store(true, Ordering::Release);
+            shared.work_cv.notify_all();
+            conn.enqueue(&Msg::ShutdownAck, tag);
+            conn.closing = true;
+        }
+        // server-to-client types and the shard plane are protocol
+        // violations on this endpoint, exactly as in threaded mode
+        Msg::Reply(_)
+        | Msg::Busy
+        | Msg::Error(_)
+        | Msg::Stats(_)
+        | Msg::ShutdownAck
+        | Msg::ShardInstall(_)
+        | Msg::ShardAck(_)
+        | Msg::Fwd(_)
+        | Msg::FwdOut(_) => {
+            shared.stats.lock().unwrap().proto_errors += 1;
+            conn.enqueue(
+                &Msg::Error(WireError {
+                    code: proto::ERR_MALFORMED,
+                    message: "client sent a server-side message type".to_string(),
+                }),
+                tag,
+            );
+            conn.closing = true;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_infer(
+    shared: &Arc<Shared>,
+    bridge: &Arc<CompletionBridge>,
+    conn: &mut Conn,
+    key: u64,
+    max_pipeline: usize,
+    outstanding_hist: &obs::Histogram,
+    req: InferRequest,
+    tag: Option<u16>,
+) {
+    let _sp = obs::span("request", "net")
+        .arg("trace", req.trace)
+        .arg("id", req.id);
+    site_counter("net.requests", &EVREQS).inc();
+    let want = shared.engine.image_elems();
+    if req.image.len() != want {
+        conn.enqueue(
+            &Msg::Error(WireError {
+                code: proto::ERR_BAD_SHAPE,
+                message: format!("want {want} image elements, got {}", req.image.len()),
+            }),
+            tag,
+        );
+        return;
+    }
+    if let Some(t) = tag {
+        if conn.tags.contains(&t) {
+            // two live requests with one tag is a routing ambiguity: the
+            // reply stream would be undecodable, so the connection dies
+            shared.stats.lock().unwrap().proto_errors += 1;
+            conn.enqueue(
+                &Msg::Error(WireError {
+                    code: proto::ERR_MALFORMED,
+                    message: format!("duplicate in-flight tag {t}"),
+                }),
+                tag,
+            );
+            conn.closing = true;
+            return;
+        }
+        if conn.outstanding >= max_pipeline {
+            // per-request backpressure: this request is refused, the
+            // window's worth already in flight proceeds untouched
+            site_counter("net.evloop.busy_window", &BUSY_WINDOW).inc();
+            shared.stats.lock().unwrap().busy += 1;
+            conn.enqueue(&Msg::Busy, tag);
+            return;
+        }
+    }
+    if shared.draining.load(Ordering::Acquire) {
+        conn.enqueue(
+            &Msg::Error(WireError {
+                code: proto::ERR_DRAINING,
+                message: "server is draining".to_string(),
+            }),
+            tag,
+        );
+        return;
+    }
+    if !try_admit(shared) {
+        shared.stats.lock().unwrap().busy += 1;
+        conn.enqueue(&Msg::Busy, tag);
+        return;
+    }
+
+    let sid = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
+    {
+        let mut q = shared.queue.lock().unwrap();
+        // re-check under the queue lock (the dispatcher exit check holds
+        // it): an admitted request is guaranteed to be flushed by a drain
+        if shared.draining.load(Ordering::Acquire) {
+            drop(q);
+            shared.inflight.fetch_sub(1, Ordering::AcqRel);
+            conn.enqueue(
+                &Msg::Error(WireError {
+                    code: proto::ERR_DRAINING,
+                    message: "server is draining".to_string(),
+                }),
+                tag,
+            );
+            return;
+        }
+        q.routes.insert(
+            sid,
+            RouteSink::Event {
+                bridge: bridge.clone(),
+                conn: key,
+                tag: tag.unwrap_or(0),
+                tagged: tag.is_some(),
+                id: req.id,
+                trace: req.trace,
+                t0,
+            },
+        );
+        q.batcher.push(PendingRequest {
+            id: sid,
+            trace: req.trace,
+            image: req.image,
+            enqueued: Instant::now(),
+        });
+    }
+    if shared.traces.lock().unwrap().check_insert(req.trace) {
+        site_counter("net.dup_trace_dispatch", &DUP_TRACE).inc();
+        obs::event(
+            "dup_trace_dispatch",
+            "net",
+            &[("trace", req.trace), ("id", req.id)],
+        );
+    }
+    shared.work_cv.notify_one();
+    conn.outstanding += 1;
+    if let Some(t) = tag {
+        conn.tags.insert(t);
+    } else {
+        conn.serial_wait = true;
+    }
+    outstanding_hist.record(conn.outstanding as u64);
+}

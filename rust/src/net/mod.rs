@@ -10,17 +10,26 @@
 //! heterogeneous-replica routing (arXiv:1906.09395) needs a transport
 //! before it can exist.
 //!
-//! Three pieces, all on `std::net`:
+//! Four pieces, all on `std::net`:
 //!
-//! * [`proto`] — the framed wire protocol (versioned header, checksummed
+//! * [`proto`] — the framed wire protocol (versioned header — v3
+//!   untagged, v4 with per-request pipelining tags — checksummed
 //!   payloads, pure encode/decode — unit-testable without sockets);
 //! * [`server`] — [`NetServer`]: accepts connections, enforces an
 //!   admission limit with explicit [`proto::Msg::Busy`] backpressure,
 //!   routes requests through the existing `Batcher` -> `sched::Executor`
 //!   -> engine path, serves [`proto::StatsSnapshot`] requests, and drains
 //!   cleanly on `Shutdown`;
-//! * [`client`] — [`Client`]: a blocking client library, plus the
-//!   multi-threaded load generator behind `newton bench-net`.
+//! * [`event_loop`] — the readiness-driven serving mode
+//!   ([`ServeConfig::event_loop`]): every connection on one nonblocking
+//!   poll thread feeding a fixed dispatcher pool, so connections cost
+//!   file descriptors instead of threads and a single connection can
+//!   pipeline up to `max_pipeline` tagged requests with out-of-order
+//!   replies;
+//! * [`client`] — [`Client`]: a blocking (v3-framing) client library,
+//!   [`PipelinedClient`]: a windowed tagged client for the pipelined
+//!   path, plus the multi-threaded load generator behind
+//!   `newton bench-net`.
 //!
 //! The server is generic over [`Engine`], the seam between transport and
 //! compute: `coordinator::GoldenServer` implements it today (golden
@@ -31,13 +40,16 @@
 //! the wire layer (ROADMAP: multi-backend execution).
 
 pub mod client;
+pub mod event_loop;
 pub mod proto;
 pub mod server;
 
 pub use client::{
-    bench_image, load_generate, scrape_statz, Backoff, BenchConfig, BenchReport, Client,
-    InferOutcome, NetError, RetryClient, RetryPolicy,
+    bench_image, load_generate, load_generate_pipelined, scrape_statz, Backoff, BenchConfig,
+    BenchReport, Client, InferOutcome, NetError, PipelinedClient, PipelinedReport, RetryClient,
+    RetryPolicy, TaggedReply,
 };
+pub use event_loop::EventLoopConfig;
 pub use proto::{CostReport, StatsSnapshot};
 pub use server::{NetServer, ServeConfig, Timeouts};
 

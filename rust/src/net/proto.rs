@@ -2,26 +2,39 @@
 //!
 //! Every message travels as one **frame**: a fixed 16-byte header followed
 //! by a checksummed payload. The header carries a magic, a protocol
-//! version, the message type, the payload length, and an FNV-1a checksum
-//! of the payload, so a receiver can reject garbage *before* trusting the
-//! length prefix and can detect corruption without decoding:
+//! version, the message type, a per-request tag (v4), the payload length,
+//! and an FNV-1a checksum of the payload, so a receiver can reject garbage
+//! *before* trusting the length prefix and can detect corruption without
+//! decoding:
 //!
 //! ```text
 //! offset  size  field
 //! 0       4     magic  b"NWT0"
-//! 4       1     version (3)
+//! 4       1     version (3 = untagged, 4 = tagged)
 //! 5       1     message type (TY_*)
-//! 6       2     reserved (0)
+//! 6       2     v4: per-request tag, LE u16 (v3: reserved, 0)
 //! 8       4     payload length, LE u32 (<= MAX_PAYLOAD)
 //! 12      4     FNV-1a-32 checksum of the payload, LE
 //! 16      len   payload
 //! ```
 //!
 //! All integers are little-endian. Encoding and decoding are pure
-//! functions over byte slices ([`encode_frame`] / [`decode_frame`] /
-//! [`decode_payload`]) so the protocol is unit-testable without opening a
-//! socket; [`read_msg`] / [`write_msg`] adapt them to `Read`/`Write`
-//! streams for the client and server.
+//! functions over byte slices ([`encode_frame`] / [`encode_frame_tagged`]
+//! / [`decode_frame`] / [`decode_payload`]) so the protocol is
+//! unit-testable without opening a socket; [`read_msg`] / [`write_msg`]
+//! (and their `_tagged` twins) adapt them to `Read`/`Write` streams for
+//! the clients and servers.
+//!
+//! **v4 pipelining.** A v3 connection is strict request/response: one
+//! frame in flight, replies in order, the two reserved header bytes zero.
+//! v4 frames carry a client-chosen u16 **tag** in those bytes instead; a
+//! connection may hold many tagged `Infer`s outstanding and the server
+//! echoes each request's tag on its `Reply` (or per-request `Busy` /
+//! `Error`) header, so replies can return out of order and the tag — not
+//! arrival order — routes them. Payload encodings are *identical* across
+//! v3 and v4; the tag lives entirely in the header, which is why a v4
+//! server serves a v3 peer bit-exactly by answering untagged frames with
+//! untagged frames.
 //!
 //! A framed stream cannot be resynchronised after a bad frame (the length
 //! prefix is untrusted from that point on), so every protocol error is
@@ -33,16 +46,22 @@ use std::io::{self, Read, Write};
 
 /// Frame magic: rejects non-protocol peers before the length is trusted.
 pub const MAGIC: [u8; 4] = *b"NWT0";
-/// Protocol version carried in every frame header. v2 widened `Infer`
-/// and `Reply` with a client-minted trace id and the `Stats` payload with
-/// p999 + an observability metrics block; v3 lets an opt-in
+/// Current protocol version: v4, tagged pipelined framing. v2 widened
+/// `Infer` and `Reply` with a client-minted trace id and the `Stats`
+/// payload with p999 + an observability metrics block; v3 lets an opt-in
 /// [`CostReport`] ride the tail of the `Reply` frame (zero bytes when the
-/// server has cost reports disabled). The shard-plane messages
-/// (`TY_SHARD_*` / `TY_FWD*`, `coordinator::cluster`) ride the same v3
-/// framing as new types — unknown types were already fatal, so old peers
-/// reject them cleanly. Older versions are rejected at the header (both
-/// ends of the wire live in this repo).
-pub const VERSION: u8 = 3;
+/// server has cost reports disabled) and carries the shard-plane messages
+/// (`TY_SHARD_*` / `TY_FWD*`, `coordinator::cluster`); v4 spends the two
+/// reserved header bytes on a per-request tag so one connection can hold
+/// many `Infer`s outstanding and receive replies out of order. Receivers
+/// accept [`VERSION_UNTAGGED`] and [`VERSION`]; anything else is rejected
+/// at the header (both ends of the wire live in this repo).
+pub const VERSION: u8 = 4;
+/// The untagged compat framing (v3): reserved header bytes zero, strict
+/// request/response per connection. [`encode_frame`] still emits it, so
+/// the blocking [`crate::net::Client`] and the shard plane are
+/// byte-identical to their pre-v4 selves on the wire.
+pub const VERSION_UNTAGGED: u8 = 3;
 /// Fixed frame-header size in bytes.
 pub const HEADER_LEN: usize = 16;
 /// Hard payload ceiling; an oversized header is rejected before any
@@ -522,13 +541,7 @@ pub fn encode_payload(m: &Msg) -> (u8, Vec<u8>) {
     (ty, p)
 }
 
-/// Serialize a full frame (header + payload).
-///
-/// Panics if the message payload exceeds [`MAX_PAYLOAD`] — every receiver
-/// is required to reject such a frame, so emitting one is a caller bug
-/// (the client library bounds-checks images before encoding; server-built
-/// replies are structurally small).
-pub fn encode_frame(m: &Msg) -> Vec<u8> {
+fn encode_frame_versioned(m: &Msg, version: u8, tag: u16) -> Vec<u8> {
     let (ty, payload) = encode_payload(m);
     assert!(
         payload.len() <= MAX_PAYLOAD,
@@ -537,13 +550,32 @@ pub fn encode_frame(m: &Msg) -> Vec<u8> {
     );
     let mut f = Vec::with_capacity(HEADER_LEN + payload.len());
     f.extend_from_slice(&MAGIC);
-    f.push(VERSION);
+    f.push(version);
     f.push(ty);
-    f.extend_from_slice(&[0u8, 0u8]); // reserved
+    f.extend_from_slice(&tag.to_le_bytes()); // v4 tag; v3 reserved (0)
     f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     f.extend_from_slice(&checksum(&payload).to_le_bytes());
     f.extend_from_slice(&payload);
     f
+}
+
+/// Serialize a full untagged (v3-framing) frame (header + payload) —
+/// byte-identical to the pre-v4 encoder, which is the compat contract the
+/// blocking client and shard plane ride.
+///
+/// Panics if the message payload exceeds [`MAX_PAYLOAD`] — every receiver
+/// is required to reject such a frame, so emitting one is a caller bug
+/// (the client library bounds-checks images before encoding; server-built
+/// replies are structurally small).
+pub fn encode_frame(m: &Msg) -> Vec<u8> {
+    encode_frame_versioned(m, VERSION_UNTAGGED, 0)
+}
+
+/// Serialize a tagged v4 frame: same payload bytes as [`encode_frame`],
+/// with the per-request `tag` riding header bytes 6–7 and the version
+/// byte at [`VERSION`]. Same [`MAX_PAYLOAD`] panic contract.
+pub fn encode_frame_tagged(m: &Msg, tag: u16) -> Vec<u8> {
+    encode_frame_versioned(m, VERSION, tag)
 }
 
 // ---- decoding ------------------------------------------------------------
@@ -812,22 +844,69 @@ pub fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
     Ok(msg)
 }
 
-/// Validate a frame header; returns `(type, payload length, checksum)`.
-/// An oversized length is rejected *here*, before the caller allocates.
-pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize, u32), ProtoError> {
+/// A validated frame header, version-aware.
+///
+/// `tag` is meaningful only when `version ==` [`VERSION`] (v4); on a v3
+/// frame the reserved bytes are carried through but receivers must treat
+/// the request as untagged (strict request/response ordering).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Wire version byte: [`VERSION_UNTAGGED`] (3) or [`VERSION`] (4).
+    pub version: u8,
+    /// Message type discriminant (`TY_*`).
+    pub ty: u8,
+    /// Per-request tag (v4); 0 on v3 frames.
+    pub tag: u16,
+    /// Payload length in bytes, already bounds-checked vs [`MAX_PAYLOAD`].
+    pub len: usize,
+    /// FNV-1a-32 checksum of the payload, as claimed by the sender.
+    pub checksum: u32,
+}
+
+impl FrameHeader {
+    /// Whether this frame carries a meaningful v4 tag.
+    pub fn tagged(&self) -> bool {
+        self.version == VERSION
+    }
+}
+
+/// Validate a frame header, accepting both v3 (untagged) and v4 (tagged)
+/// framing. An oversized length is rejected *here*, before the caller
+/// allocates.
+pub fn parse_header_tagged(h: &[u8; HEADER_LEN]) -> Result<FrameHeader, ProtoError> {
     if h[0..4] != MAGIC {
         return Err(ProtoError::BadMagic([h[0], h[1], h[2], h[3]]));
     }
-    if h[4] != VERSION {
-        return Err(ProtoError::BadVersion(h[4]));
+    let version = h[4];
+    if version != VERSION && version != VERSION_UNTAGGED {
+        return Err(ProtoError::BadVersion(version));
     }
     let ty = h[5];
+    let tag = if version == VERSION {
+        u16::from_le_bytes(h[6..8].try_into().unwrap())
+    } else {
+        0 // v3: reserved bytes, tolerated whatever they hold
+    };
     let len = u32::from_le_bytes(h[8..12].try_into().unwrap()) as usize;
     if len > MAX_PAYLOAD {
         return Err(ProtoError::Oversized { len });
     }
-    let sum = u32::from_le_bytes(h[12..16].try_into().unwrap());
-    Ok((ty, len, sum))
+    let checksum = u32::from_le_bytes(h[12..16].try_into().unwrap());
+    Ok(FrameHeader {
+        version,
+        ty,
+        tag,
+        len,
+        checksum,
+    })
+}
+
+/// Validate a frame header; returns `(type, payload length, checksum)`.
+/// Version-agnostic compatibility shim over [`parse_header_tagged`]:
+/// accepts v3 and v4 frames alike, discarding the tag.
+pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(u8, usize, u32), ProtoError> {
+    let fh = parse_header_tagged(h)?;
+    Ok((fh.ty, fh.len, fh.checksum))
 }
 
 /// Decode one complete in-memory frame (header + payload, no extra bytes).
@@ -865,6 +944,32 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg, ProtoError> {
 /// Write one message to a stream and flush it.
 pub fn write_msg<W: Write>(w: &mut W, m: &Msg) -> io::Result<()> {
     w.write_all(&encode_frame(m))?;
+    w.flush()
+}
+
+/// Read one message from a blocking stream, version-aware: returns
+/// `Some(tag)` for a v4 frame and `None` for a v3 (untagged) one.
+pub fn read_msg_tagged<R: Read>(r: &mut R) -> Result<(Option<u16>, Msg), ProtoError> {
+    let mut h = [0u8; HEADER_LEN];
+    r.read_exact(&mut h)?;
+    let fh = parse_header_tagged(&h)?;
+    let mut payload = vec![0u8; fh.len];
+    r.read_exact(&mut payload)?;
+    let got = checksum(&payload);
+    if got != fh.checksum {
+        return Err(ProtoError::Checksum {
+            want: fh.checksum,
+            got,
+        });
+    }
+    let msg = decode_payload(fh.ty, &payload)?;
+    let tag = if fh.tagged() { Some(fh.tag) } else { None };
+    Ok((tag, msg))
+}
+
+/// Write one tagged (v4) message to a stream and flush it.
+pub fn write_msg_tagged<W: Write>(w: &mut W, m: &Msg, tag: u16) -> io::Result<()> {
+    w.write_all(&encode_frame_tagged(m, tag))?;
     w.flush()
 }
 
@@ -1263,5 +1368,85 @@ mod tests {
             Msg::Error(e) => assert_eq!(e.message.len(), 512),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn untagged_frames_are_byte_identical_to_v3() {
+        // the compat contract: encode_frame still emits pre-v4 bytes, so a
+        // v3-era peer (blocking client, shard plane) sees an unchanged wire
+        for m in sample_messages() {
+            let f = encode_frame(&m);
+            assert_eq!(f[4], VERSION_UNTAGGED, "{m:?}");
+            assert_eq!(&f[6..8], &[0u8, 0u8], "reserved bytes must be zero");
+        }
+    }
+
+    #[test]
+    fn tagged_frames_roundtrip_preserving_tag() {
+        for tag in [0u16, 1, 7, 0x1234, u16::MAX] {
+            for m in sample_messages() {
+                let f = encode_frame_tagged(&m, tag);
+                assert_eq!(f[4], VERSION);
+                let h: [u8; HEADER_LEN] = f[..HEADER_LEN].try_into().unwrap();
+                let fh = parse_header_tagged(&h).unwrap();
+                assert!(fh.tagged());
+                assert_eq!(fh.tag, tag);
+                // payload encoding is identical across versions
+                assert_eq!(f[HEADER_LEN..], encode_frame(&m)[HEADER_LEN..]);
+                let mut cur = std::io::Cursor::new(&f);
+                let (got_tag, got) = read_msg_tagged(&mut cur).unwrap();
+                assert_eq!(got_tag, Some(tag));
+                assert_eq!(got, m, "{m:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn v3_frames_read_as_untagged() {
+        for m in sample_messages() {
+            let f = encode_frame(&m);
+            let h: [u8; HEADER_LEN] = f[..HEADER_LEN].try_into().unwrap();
+            let fh = parse_header_tagged(&h).unwrap();
+            assert!(!fh.tagged());
+            assert_eq!(fh.tag, 0);
+            let mut cur = std::io::Cursor::new(&f);
+            let (tag, got) = read_msg_tagged(&mut cur).unwrap();
+            assert_eq!(tag, None);
+            assert_eq!(got, m, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn version_agnostic_readers_accept_v4_frames() {
+        // old-style readers (decode_frame / read_msg) must not choke on a
+        // tagged frame: the tag is dropped, the message decodes the same
+        let m = Msg::Infer(InferRequest {
+            id: 11,
+            trace: 22,
+            image: vec![1, 2, 3],
+        });
+        let f = encode_frame_tagged(&m, 0xBEEF);
+        assert_eq!(decode_frame(&f).unwrap(), m);
+        let mut cur = std::io::Cursor::new(&f);
+        assert_eq!(read_msg(&mut cur).unwrap(), m);
+    }
+
+    #[test]
+    fn unknown_versions_are_still_rejected() {
+        let mut f = encode_frame_tagged(&Msg::Busy, 3);
+        f[4] = 5;
+        let h: [u8; HEADER_LEN] = f[..HEADER_LEN].try_into().unwrap();
+        assert!(matches!(
+            parse_header_tagged(&h),
+            Err(ProtoError::BadVersion(5))
+        ));
+    }
+
+    #[test]
+    fn write_msg_tagged_matches_encode_frame_tagged() {
+        let m = Msg::ShutdownAck;
+        let mut buf = Vec::new();
+        write_msg_tagged(&mut buf, &m, 42).unwrap();
+        assert_eq!(buf, encode_frame_tagged(&m, 42));
     }
 }

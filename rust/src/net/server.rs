@@ -1,6 +1,6 @@
 //! TCP serving endpoint: admission-limited, batched, drain-on-shutdown.
 //!
-//! Topology (one [`NetServer`]):
+//! Topology (one [`NetServer`], default threaded mode):
 //!
 //! * an **accept loop** thread takes connections off the `TcpListener`
 //!   and spawns one handler thread per connection;
@@ -13,6 +13,16 @@
 //!   engine that is the `Batcher` -> `sched::Executor` ->
 //!   `GoldenServer::replicated` path with round-robin replica affinity —
 //!   and routes per-row results back to the waiting handlers.
+//!
+//! With [`ServeConfig::event_loop`] set, the accept/handler tier is
+//! replaced by one readiness-driven event-loop thread
+//! ([`crate::net::event_loop`]) holding every connection on nonblocking
+//! sockets, plus a fixed pool of dispatcher threads; connections then
+//! cost file descriptors, not threads, and a connection may pipeline up
+//! to `max_pipeline` tagged (proto v4) requests. Both modes share this
+//! module's admission, batching, dispatch, stats, and admin plumbing —
+//! the event mode routes replies through a [`RouteSink::Event`]
+//! completion bridge instead of a per-handler channel.
 //!
 //! Shutdown is a drain, not an abort: a `Shutdown` frame (or
 //! [`NetServer::shutdown`]) flips the draining flag, the listener closes,
@@ -50,6 +60,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{Batcher, PendingRequest};
 use crate::coordinator::Batch;
+use crate::net::event_loop::{self, Completion, CompletionBridge, EventLoopConfig};
 use crate::net::proto::{
     self, InferReply, InferRequest, Msg, ProtoError, StatsSnapshot, WireError,
 };
@@ -115,6 +126,11 @@ pub struct ServeConfig {
     /// Attach a per-request [`proto::CostReport`] to every `Reply` frame
     /// (proto v3 tail). Off by default: replies carry zero extra bytes.
     pub cost_reports: bool,
+    /// `Some` switches the server to readiness-driven event-loop serving
+    /// (nonblocking connections on one poll thread, a fixed dispatcher
+    /// pool, per-connection pipelining up to `max_pipeline`). `None` (the
+    /// default) keeps the thread-per-connection handler tier.
+    pub event_loop: Option<EventLoopConfig>,
 }
 
 impl Default for ServeConfig {
@@ -126,6 +142,7 @@ impl Default for ServeConfig {
             timeouts: Timeouts::default(),
             admin_addr: None,
             cost_reports: false,
+            event_loop: None,
         }
     }
 }
@@ -133,24 +150,44 @@ impl Default for ServeConfig {
 /// What the dispatcher hands back to a blocked handler: replica, batch
 /// max-abs-err, the row's logits, and (when cost reports are on) the
 /// request's amortised share of the batch's hardware cost.
-type RouteReply = (u32, i64, Vec<i32>, Option<proto::CostReport>);
+pub(crate) type RouteReply = (u32, i64, Vec<i32>, Option<proto::CostReport>);
+
+/// Where a dispatched request's reply goes: a blocked handler thread
+/// (threaded mode) or the event loop's completion bridge (event mode).
+pub(crate) enum RouteSink {
+    /// Threaded mode: the handler blocks on the receiving end.
+    Blocking(Sender<RouteReply>),
+    /// Event mode: the reply is queued on the loop's [`CompletionBridge`]
+    /// with everything needed to frame it without the loop re-looking the
+    /// request up (connection key, v4 tag, client-visible id/trace, and
+    /// the admission timestamp for the latency histogram).
+    Event {
+        bridge: Arc<CompletionBridge>,
+        conn: u64,
+        tag: u16,
+        tagged: bool,
+        id: u64,
+        trace: u64,
+        t0: Instant,
+    },
+}
 
 /// Batcher plus the routing table, under one lock so an admission check,
 /// route registration, and push are atomic against the dispatcher's
 /// empty-and-draining exit check.
-struct Queue {
-    batcher: Batcher,
-    routes: HashMap<u64, Sender<RouteReply>>,
+pub(crate) struct Queue {
+    pub(crate) batcher: Batcher,
+    pub(crate) routes: HashMap<u64, RouteSink>,
 }
 
-struct StatsInner {
-    served: u64,
-    busy: u64,
-    proto_errors: u64,
-    batches: u64,
-    fill_sum: f64,
-    worst_abs_err: i64,
-    per_replica: Vec<u64>,
+pub(crate) struct StatsInner {
+    pub(crate) served: u64,
+    pub(crate) busy: u64,
+    pub(crate) proto_errors: u64,
+    pub(crate) batches: u64,
+    pub(crate) fill_sum: f64,
+    pub(crate) worst_abs_err: i64,
+    pub(crate) per_replica: Vec<u64>,
 }
 
 impl StatsInner {
@@ -171,7 +208,7 @@ impl StatsInner {
 /// resend after a lost reply re-dispatches the same trace id on a fresh
 /// connection; this window makes that duplicate-dispatch path observable
 /// (counter + instant event) without unbounded memory.
-struct TraceDedup {
+pub(crate) struct TraceDedup {
     order: VecDeque<u64>,
     seen: HashSet<u64>,
 }
@@ -189,7 +226,7 @@ impl TraceDedup {
     }
 
     /// Record a dispatch; true if `trace` was already dispatched recently.
-    fn check_insert(&mut self, trace: u64) -> bool {
+    pub(crate) fn check_insert(&mut self, trace: u64) -> bool {
         if trace == 0 {
             return false; // untraced request
         }
@@ -208,48 +245,64 @@ impl TraceDedup {
 
 /// Instrumentation-site counter cache: registry lookup once, relaxed
 /// atomic add afterwards.
-fn site_counter(name: &'static str, slot: &'static OnceLock<Arc<Counter>>) -> &'static Counter {
+pub(crate) fn site_counter(
+    name: &'static str,
+    slot: &'static OnceLock<Arc<Counter>>,
+) -> &'static Counter {
     slot.get_or_init(|| obs::counter(name))
 }
 
 static DUP_TRACE: OnceLock<Arc<Counter>> = OnceLock::new();
 static REQS: OnceLock<Arc<Counter>> = OnceLock::new();
 
-struct Shared {
-    engine: Arc<dyn Engine>,
-    local_addr: SocketAddr,
-    batch_wait: Duration,
-    timeouts: Timeouts,
-    max_inflight: usize,
-    inflight: AtomicUsize,
-    draining: AtomicBool,
-    next_id: AtomicU64,
-    queue: Mutex<Queue>,
-    work_cv: Condvar,
-    stats: Mutex<StatsInner>,
+pub(crate) struct Shared {
+    pub(crate) engine: Arc<dyn Engine>,
+    pub(crate) local_addr: SocketAddr,
+    pub(crate) batch_wait: Duration,
+    pub(crate) timeouts: Timeouts,
+    pub(crate) max_inflight: usize,
+    pub(crate) inflight: AtomicUsize,
+    pub(crate) draining: AtomicBool,
+    pub(crate) next_id: AtomicU64,
+    pub(crate) queue: Mutex<Queue>,
+    pub(crate) work_cv: Condvar,
+    pub(crate) stats: Mutex<StatsInner>,
     /// Request latency (admission -> reply written), µs. A log-bucket
     /// histogram outside the stats mutex: recording is two relaxed atomic
     /// adds on the reply path, and exact-bucket p50/p99/p999 replace the
     /// reservoir sampler whose tail quantiles were sampling-noisy at high
     /// request counts.
-    latency: Histogram,
-    traces: Mutex<TraceDedup>,
+    pub(crate) latency: Histogram,
+    pub(crate) traces: Mutex<TraceDedup>,
     /// Attach per-request cost reports to replies (proto v3 tail).
-    cost_reports: bool,
+    pub(crate) cost_reports: bool,
     /// Admin-plane bound address, when the plane is enabled.
-    admin_addr: Option<SocketAddr>,
+    pub(crate) admin_addr: Option<SocketAddr>,
     /// Latched by the watchdog on p99-latency or energy-per-inference
     /// drift; surfaces as `newton_degraded 1` in the admin exposition.
-    watchdog_degraded: AtomicBool,
+    pub(crate) watchdog_degraded: AtomicBool,
+    /// Global batch index shared by every dispatcher thread: the engine's
+    /// round-robin replica affinity keys off this, so N event-mode
+    /// dispatchers spread batches across replicas the same way one does.
+    pub(crate) batch_seq: AtomicUsize,
+    /// Set after the serving threads joined; the admin loop keeps
+    /// answering scrapes through the whole drain and exits on this, so a
+    /// scrape racing a shutdown still gets its exposition.
+    pub(crate) admin_stop: AtomicBool,
 }
 
-/// A running TCP serving endpoint.
+/// A running TCP serving endpoint (threaded or event-loop mode — see the
+/// module docs; the mode is picked by [`ServeConfig::event_loop`]).
 pub struct NetServer {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
     dispatcher: Option<JoinHandle<()>>,
     admin: Option<JoinHandle<()>>,
     handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// Event mode: the poll-loop thread holding every connection.
+    loop_thread: Option<JoinHandle<()>>,
+    /// Event mode: the fixed dispatcher pool.
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl NetServer {
@@ -288,29 +341,59 @@ impl NetServer {
             cost_reports: cfg.cost_reports,
             admin_addr,
             watchdog_degraded: AtomicBool::new(false),
+            batch_seq: AtomicUsize::new(0),
+            admin_stop: AtomicBool::new(false),
             engine,
         });
         let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
 
-        let dispatcher = {
-            let shared = shared.clone();
-            std::thread::spawn(move || dispatch_loop(&shared))
-        };
-        let accept = {
-            let shared = shared.clone();
-            let handlers = handlers.clone();
-            std::thread::spawn(move || accept_loop(&shared, listener, &handlers))
+        let (accept, loop_thread, workers) = match &cfg.event_loop {
+            None => {
+                let dispatcher = {
+                    let shared = shared.clone();
+                    std::thread::spawn(move || dispatch_loop(&shared))
+                };
+                let accept = {
+                    let shared = shared.clone();
+                    let handlers = handlers.clone();
+                    std::thread::spawn(move || accept_loop(&shared, listener, &handlers))
+                };
+                (Some(accept), None, vec![dispatcher])
+            }
+            Some(el) => {
+                let el = el.clone();
+                let n_workers = el.workers.max(1);
+                let workers: Vec<JoinHandle<()>> = (0..n_workers)
+                    .map(|_| {
+                        let shared = shared.clone();
+                        std::thread::spawn(move || dispatch_loop(&shared))
+                    })
+                    .collect();
+                let loop_thread = {
+                    let shared = shared.clone();
+                    std::thread::spawn(move || event_loop::run_loop(&shared, listener, &el))
+                };
+                (None, Some(loop_thread), workers)
+            }
         };
         let admin = admin_listener.map(|l| {
             let shared = shared.clone();
             std::thread::spawn(move || admin_loop(&shared, l))
         });
+        // in threaded mode the single dispatcher rides the old field so
+        // join order stays identical to the pre-event-loop server
+        let (dispatcher, workers) = match (accept.is_some(), workers) {
+            (true, mut v) => (v.pop(), Vec::new()),
+            (false, v) => (None, v),
+        };
         Ok(NetServer {
             shared,
-            accept: Some(accept),
-            dispatcher: Some(dispatcher),
+            accept,
+            dispatcher,
             admin,
             handlers,
+            loop_thread,
+            workers,
         })
     }
 
@@ -368,11 +451,23 @@ impl NetServer {
                 let _ = h.join();
             }
         }
+        // event mode: the loop thread owns the listener and every
+        // connection; it exits once the drain flushed all outstanding
+        // replies, after which the dispatcher pool sees empty-and-draining
+        if let Some(l) = self.loop_thread.take() {
+            let _ = l.join();
+        }
+        self.shared.work_cv.notify_all();
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
-        // the admin loop polls the drain flag between accepts, so it
-        // exits within one poll interval of the flag flipping
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // only now stop the admin plane: it keeps answering scrapes for
+        // the whole drain (a scrape racing a shutdown still gets its
+        // exposition), and exits within one poll of `admin_stop`
+        self.shared.admin_stop.store(true, Ordering::Release);
         if let Some(a) = self.admin.take() {
             let _ = a.join();
         }
@@ -394,7 +489,7 @@ fn wake_accept(shared: &Shared) {
     let _ = TcpStream::connect_timeout(&addr, shared.timeouts.wake_connect);
 }
 
-fn snapshot(shared: &Shared) -> StatsSnapshot {
+pub(crate) fn snapshot(shared: &Shared) -> StatsSnapshot {
     let health = shared.engine.health();
     let lat = shared.latency.snapshot();
     let metrics = obs::metrics_snapshot().counters;
@@ -458,7 +553,7 @@ fn accept_loop(
 }
 
 /// Close and return the next batch, or `None` once draining and empty.
-fn next_batch(shared: &Shared) -> Option<Batch> {
+pub(crate) fn next_batch(shared: &Shared) -> Option<Batch> {
     let mut q = shared.queue.lock().unwrap();
     loop {
         if q.batcher.ready(Instant::now()) {
@@ -483,15 +578,17 @@ fn next_batch(shared: &Shared) -> Option<Batch> {
     }
 }
 
-fn dispatch_loop(shared: &Arc<Shared>) {
-    let mut batch_index = 0usize;
+pub(crate) fn dispatch_loop(shared: &Arc<Shared>) {
     while let Some(b) = next_batch(shared) {
+        // global sequence, not a thread-local counter: event mode runs N
+        // dispatchers and replica affinity must round-robin across all of
+        // them the way it does with one
+        let batch_index = shared.batch_seq.fetch_add(1, Ordering::Relaxed);
         let _sp = obs::span("dispatch", "net")
             .arg("batch", batch_index as u64)
             .arg("n_real", b.n_real as u64)
             .arg("trace0", b.traces.first().copied().unwrap_or(0));
         let out = shared.engine.run(batch_index, &b);
-        batch_index += 1;
         debug_assert_eq!(out.logits.len(), b.n_real, "engine row count");
         // account the batch *before* releasing replies: a client that has
         // its reply in hand must see it reflected in a stats request
@@ -521,20 +618,54 @@ fn dispatch_loop(shared: &Arc<Shared>) {
                 energy_pj: out.energy_pj / b.n_real as f64,
             }
         });
-        let senders: Vec<Option<Sender<RouteReply>>> = {
+        let sinks: Vec<Option<RouteSink>> = {
             let mut q = shared.queue.lock().unwrap();
             b.ids.iter().map(|id| q.routes.remove(id)).collect()
         };
-        for (tx, logits) in senders.into_iter().zip(out.logits.into_iter()) {
-            if let Some(tx) = tx {
+        for (sink, logits) in sinks.into_iter().zip(out.logits.into_iter()) {
+            match sink {
                 // a handler that died mid-wait just drops the receiver
-                let _ = tx.send((out.replica as u32, out.max_abs_err, logits, cost));
+                Some(RouteSink::Blocking(tx)) => {
+                    let _ = tx.send((out.replica as u32, out.max_abs_err, logits, cost));
+                }
+                Some(RouteSink::Event {
+                    bridge,
+                    conn,
+                    tag,
+                    tagged,
+                    id,
+                    trace,
+                    t0,
+                }) => bridge.complete(Completion {
+                    conn,
+                    tag,
+                    tagged,
+                    id,
+                    trace,
+                    t0,
+                    replica: out.replica as u32,
+                    max_abs_err: out.max_abs_err,
+                    logits,
+                    cost,
+                }),
+                None => {}
             }
         }
     }
 }
 
 // ---- per-connection handling ---------------------------------------------
+
+/// Echo a reply in the framing its request used: tagged v4 when the
+/// request carried a tag, untagged v3 otherwise — which keeps the
+/// threaded server byte-exact for v3 peers while still answering a
+/// pipelined client correctly (serialized, but correctly tagged).
+fn write_echo(stream: &mut TcpStream, m: &Msg, tag: Option<u16>) -> io::Result<()> {
+    match tag {
+        Some(t) => proto::write_msg_tagged(stream, m, t),
+        None => proto::write_msg(stream, m),
+    }
+}
 
 fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream) {
     let _conn_sp = obs::span_verbose("conn", "net");
@@ -543,8 +674,8 @@ fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream) {
     let _ = stream.set_write_timeout(Some(shared.timeouts.write_timeout));
     loop {
         match read_msg_idle(&mut stream, shared) {
-            Ok(Some(msg)) => {
-                if !serve_msg(shared, &mut stream, msg) {
+            Ok(Some((tag, msg))) => {
+                if !serve_msg(shared, &mut stream, msg, tag) {
                     break;
                 }
                 // once draining, finish the message in hand and close:
@@ -612,35 +743,46 @@ fn read_full(
 }
 
 /// Server-side frame read with drain awareness. `Ok(None)` means the
-/// connection is done (peer closed, or idle while draining).
-fn read_msg_idle(stream: &mut TcpStream, shared: &Shared) -> Result<Option<Msg>, ProtoError> {
+/// connection is done (peer closed, or idle while draining). The inner
+/// pair is `(tag, msg)`: `Some(tag)` for a v4 frame, `None` for v3.
+#[allow(clippy::type_complexity)]
+fn read_msg_idle(
+    stream: &mut TcpStream,
+    shared: &Shared,
+) -> Result<Option<(Option<u16>, Msg)>, ProtoError> {
     let mut h = [0u8; proto::HEADER_LEN];
     if !read_full(stream, &mut h, shared, true)? {
         return Ok(None);
     }
-    let (ty, len, sum) = proto::parse_header(&h)?;
-    let mut payload = vec![0u8; len];
-    if len > 0 && !read_full(stream, &mut payload, shared, false)? {
+    let fh = proto::parse_header_tagged(&h)?;
+    let mut payload = vec![0u8; fh.len];
+    if fh.len > 0 && !read_full(stream, &mut payload, shared, false)? {
         return Err(ProtoError::Malformed("connection closed mid-frame"));
     }
     let got = proto::checksum(&payload);
-    if got != sum {
-        return Err(ProtoError::Checksum { want: sum, got });
+    if got != fh.checksum {
+        return Err(ProtoError::Checksum {
+            want: fh.checksum,
+            got,
+        });
     }
     let _sp = obs::span_verbose("decode", "net").arg("len", payload.len() as u64);
-    proto::decode_payload(ty, &payload).map(Some)
+    let tag = if fh.tagged() { Some(fh.tag) } else { None };
+    proto::decode_payload(fh.ty, &payload).map(|m| Some((tag, m)))
 }
 
 /// Handle one decoded message; returns false when the connection should
-/// close.
-fn serve_msg(shared: &Arc<Shared>, stream: &mut TcpStream, msg: Msg) -> bool {
+/// close. `tag` is echoed on every reply frame (v4 requests get v4
+/// replies) — the threaded server serializes pipelined requests but
+/// stays protocol-conformant for them.
+fn serve_msg(shared: &Arc<Shared>, stream: &mut TcpStream, msg: Msg, tag: Option<u16>) -> bool {
     match msg {
-        Msg::Infer(req) => serve_infer(shared, stream, req),
-        Msg::StatsReq => proto::write_msg(stream, &Msg::Stats(snapshot(shared))).is_ok(),
+        Msg::Infer(req) => serve_infer(shared, stream, req, tag),
+        Msg::StatsReq => write_echo(stream, &Msg::Stats(snapshot(shared)), tag).is_ok(),
         Msg::Shutdown => {
             shared.draining.store(true, Ordering::Release);
             shared.work_cv.notify_all();
-            let _ = proto::write_msg(stream, &Msg::ShutdownAck);
+            let _ = write_echo(stream, &Msg::ShutdownAck, tag);
             wake_accept(shared);
             false
         }
@@ -657,12 +799,13 @@ fn serve_msg(shared: &Arc<Shared>, stream: &mut TcpStream, msg: Msg) -> bool {
         | Msg::Fwd(_)
         | Msg::FwdOut(_) => {
             shared.stats.lock().unwrap().proto_errors += 1;
-            let _ = proto::write_msg(
+            let _ = write_echo(
                 stream,
                 &Msg::Error(WireError {
                     code: proto::ERR_MALFORMED,
                     message: "client sent a server-side message type".to_string(),
                 }),
+                tag,
             );
             false
         }
@@ -670,7 +813,7 @@ fn serve_msg(shared: &Arc<Shared>, stream: &mut TcpStream, msg: Msg) -> bool {
 }
 
 /// CAS admission against the in-flight ceiling.
-fn try_admit(shared: &Shared) -> bool {
+pub(crate) fn try_admit(shared: &Shared) -> bool {
     let mut cur = shared.inflight.load(Ordering::Acquire);
     loop {
         if cur >= shared.max_inflight {
@@ -688,19 +831,25 @@ fn try_admit(shared: &Shared) -> bool {
     }
 }
 
-fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) -> bool {
+fn serve_infer(
+    shared: &Arc<Shared>,
+    stream: &mut TcpStream,
+    req: InferRequest,
+    tag: Option<u16>,
+) -> bool {
     let _sp = obs::span("request", "net")
         .arg("trace", req.trace)
         .arg("id", req.id);
     site_counter("net.requests", &REQS).inc();
     let want = shared.engine.image_elems();
     if req.image.len() != want {
-        return proto::write_msg(
+        return write_echo(
             stream,
             &Msg::Error(WireError {
                 code: proto::ERR_BAD_SHAPE,
                 message: format!("want {want} image elements, got {}", req.image.len()),
             }),
+            tag,
         )
         .is_ok();
     }
@@ -709,11 +858,11 @@ fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) 
         message: "server is draining".to_string(),
     });
     if shared.draining.load(Ordering::Acquire) {
-        return proto::write_msg(stream, &draining_err).is_ok();
+        return write_echo(stream, &draining_err, tag).is_ok();
     }
     if !try_admit(shared) {
         shared.stats.lock().unwrap().busy += 1;
-        return proto::write_msg(stream, &Msg::Busy).is_ok();
+        return write_echo(stream, &Msg::Busy, tag).is_ok();
     }
 
     let sid = shared.next_id.fetch_add(1, Ordering::Relaxed);
@@ -727,9 +876,9 @@ fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) 
         if shared.draining.load(Ordering::Acquire) {
             drop(q);
             shared.inflight.fetch_sub(1, Ordering::AcqRel);
-            return proto::write_msg(stream, &draining_err).is_ok();
+            return write_echo(stream, &draining_err, tag).is_ok();
         }
-        q.routes.insert(sid, tx);
+        q.routes.insert(sid, RouteSink::Blocking(tx));
         q.batcher.push(PendingRequest {
             id: sid,
             trace: req.trace,
@@ -752,7 +901,7 @@ fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) 
         Ok((replica, max_abs_err, logits, cost)) => {
             let ok = {
                 let _enc = obs::span_verbose("encode", "net").arg("trace", req.trace);
-                proto::write_msg(
+                write_echo(
                     stream,
                     &Msg::Reply(InferReply {
                         id: req.id,
@@ -762,6 +911,7 @@ fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) 
                         logits,
                         cost,
                     }),
+                    tag,
                 )
                 .is_ok()
             };
@@ -769,12 +919,13 @@ fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) 
             ok
         }
         // dispatcher gone without replying: only possible if it panicked
-        Err(_) => proto::write_msg(
+        Err(_) => write_echo(
             stream,
             &Msg::Error(WireError {
                 code: proto::ERR_INTERNAL,
                 message: "dispatcher terminated before replying".to_string(),
             }),
+            tag,
         )
         .is_ok(),
     }
@@ -782,8 +933,12 @@ fn serve_infer(shared: &Arc<Shared>, stream: &mut TcpStream, req: InferRequest) 
 
 // ---- admin plane ---------------------------------------------------------
 
-/// How often the admin thread polls for scrapes and drain.
-const ADMIN_POLL: Duration = Duration::from_millis(20);
+/// Readiness-poll backstop for the admin listener: the thread normally
+/// sleeps in `poll(2)` until a scrape dials in, and wakes at most this
+/// often to run the watchdog tick and check the stop flag. (This replaced
+/// a 20ms nonblocking-accept busy loop that burned ~50 wakeups/s while
+/// idle.)
+const ADMIN_POLL: Duration = Duration::from_millis(50);
 /// Watchdog cadence: drift checks run at this interval, not per scrape.
 const WATCHDOG_TICK: Duration = Duration::from_millis(250);
 
@@ -840,9 +995,14 @@ fn render_exposition(shared: &Shared) -> String {
     out
 }
 
-/// Admin-plane thread: a nonblocking accept loop that hands each scrape
-/// to a short-lived writer thread, interleaved with watchdog drift
-/// ticks. Exits within one poll of the drain flag flipping.
+/// Admin-plane thread: a readiness-driven accept loop (the listener is
+/// nonblocking and waited on with `poll(2)`, [`ADMIN_POLL`] as the
+/// watchdog-tick backstop) that hands each scrape to a short-lived
+/// writer thread, interleaved with watchdog drift ticks.
+///
+/// The loop runs until [`Shared::admin_stop`], which flips only after
+/// every serving thread joined — so a scrape racing a drain is still
+/// answered, and the last exposition reflects the fully-drained stats.
 ///
 /// Scrapes are answered off-thread with both read *and* write timeouts
 /// ([`Timeouts`]) applied to the connection: the exposition can exceed a
@@ -851,14 +1011,17 @@ fn render_exposition(shared: &Shared) -> String {
 /// pinning watchdog ticks and every later scrape behind one bad client.
 fn admin_loop(shared: &Arc<Shared>, listener: TcpListener) {
     if listener.set_nonblocking(true).is_err() {
-        return; // cannot poll the drain flag without nonblocking accepts
+        return; // cannot check the stop flag without nonblocking accepts
     }
     let mut dog = obs::watchdog::Watchdog::new();
     let mut last_tick = Instant::now();
     let mut last_energy = 0u64;
     let mut last_served = 0u64;
     let mut last_rebaseline = obs::counter("obs.rebaseline").get();
-    while !shared.draining.load(Ordering::Acquire) {
+    while !shared.admin_stop.load(Ordering::Acquire) {
+        // sleep until a scrape is ready (or the tick backstop): readiness,
+        // not a sleep-and-retry spin, decides when accept runs
+        event_loop::sys::wait_readable(&listener, ADMIN_POLL);
         match listener.accept() {
             Ok((mut s, _)) => {
                 let _ = s.set_read_timeout(Some(shared.timeouts.read_tick));
@@ -873,10 +1036,8 @@ fn admin_loop(shared: &Arc<Shared>, listener: TcpListener) {
                         // drop closes the socket: the scraper reads to EOF
                     });
             }
-            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
-                std::thread::sleep(ADMIN_POLL);
-            }
-            Err(_) => std::thread::sleep(ADMIN_POLL),
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {}
+            Err(_) => {}
         }
         if last_tick.elapsed() >= WATCHDOG_TICK {
             last_tick = Instant::now();

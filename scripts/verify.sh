@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # Repo verification: tier-1 build + tests, advisory formatting check, the
 # sched executor stress smoke, the multi-replica serving smokes, the
-# sharded-cluster failover smoke, and the hot-path perf smoke (writes
-# BENCH_hotpath.json for the trajectory).
+# event-loop pipelined smoke, the sharded-cluster failover smoke, and the
+# hot-path perf smoke (writes BENCH_hotpath.json for the trajectory).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,7 +24,8 @@ echo
 echo "== cargo clippy (rust/src/{xbar,net,faults,obs,energy,coordinator,mapping}/ gate) =="
 # clippy cannot be scoped to one module, so run it on the lib at
 # `-D warnings` severity and gate only the subtrees written under the
-# clippy regime: any diagnostic pointing into rust/src/xbar/, rust/src/net/,
+# clippy regime: any diagnostic pointing into rust/src/xbar/, rust/src/net/
+# (proto/server/client and the event_loop poll core alike),
 # rust/src/faults/, rust/src/obs/, rust/src/energy/, rust/src/coordinator/
 # or rust/src/mapping/ fails the build, drift elsewhere stays advisory
 # (seed code predates the clippy adoption)
@@ -151,6 +152,67 @@ PY
   rm -f trace.json
 else
   echo "WARN: python3 unavailable; trace-export smoke skipped"
+fi
+
+echo
+echo "== event-loop smoke: pipelined depth sweep, bit-exact out-of-order replies =="
+# the readiness-driven serving mode: one poll thread + a fixed worker
+# pool, v4 tagged pipelining on a single connection. bench-net runs the
+# usual threaded-client pass (v3 frames against the v4 server — the
+# compatibility pin) plus a --pipeline-depth 1,32 sweep, and
+# --expect-exact asserts every pass, pipelined included, is bit-identical
+# to the in-process GoldenServer. The d32/d1 throughput ratio is the
+# pipelining win itself: deep windows fill batches immediately instead of
+# paying the batch-wait deadline per request.
+portfile=$(mktemp)
+rm -f BENCH_net.json
+"$newton_bin" serve-net --adc exact --replicas 2 \
+  --event-loop --max-pipeline 32 --workers 2 \
+  --addr 127.0.0.1:0 --port-file "$portfile" &
+srv_pid=$!
+trap 'kill "$srv_pid" 2>/dev/null || true' EXIT
+for _ in $(seq 1 150); do
+  [ -s "$portfile" ] && break
+  sleep 0.2
+done
+if ! [ -s "$portfile" ]; then
+  echo "FAIL: event-loop serve-net never wrote its bound address"
+  exit 1
+fi
+addr=$(cat "$portfile")
+"$newton_bin" bench-net --addr "$addr" \
+  --requests 64 --concurrency 8 --pipeline-depth 1,32 \
+  --expect-exact --shutdown
+wait "$srv_pid"
+trap - EXIT
+rm -f "$portfile"
+if ! [ -f BENCH_net.json ]; then
+  echo "FAIL: event-loop bench-net wrote no BENCH_net.json"
+  exit 1
+fi
+if ! grep -q '"verified_exact": true' BENCH_net.json; then
+  echo "FAIL: event-loop run did not verify bit-exact answers"
+  exit 1
+fi
+d1=$(awk -F': ' '/"pipelined_throughput_d1":/ {gsub(/[,[:space:]]/, "", $2); print $2; exit}' BENCH_net.json)
+d32=$(awk -F': ' '/"pipelined_throughput_d32":/ {gsub(/[,[:space:]]/, "", $2); print $2; exit}' BENCH_net.json)
+if [ -z "${d1}" ] || [ -z "${d32}" ]; then
+  echo "FAIL: BENCH_net.json misses pipelined_throughput_d1/d32 (d1: ${d1:-missing}, d32: ${d32:-missing})"
+  exit 1
+fi
+cores=$(nproc 2>/dev/null || echo 1)
+if [ "${cores}" -ge 4 ]; then
+  # with real parallelism available, a 32-deep window must at least
+  # double depth-1 throughput (it amortises the batch-wait deadline and
+  # keeps every worker fed)
+  if awk "BEGIN { exit !(${d32} >= 2.0 * ${d1}) }"; then
+    echo "event-loop smoke OK (d1 ${d1} req/s, d32 ${d32} req/s, >= 2x pipelining win, bit-exact)"
+  else
+    echo "FAIL: pipelining win d32/d1 below 2x (d1 ${d1} req/s, d32 ${d32} req/s)"
+    exit 1
+  fi
+else
+  echo "event-loop smoke OK (d1 ${d1} req/s, d32 ${d32} req/s, bit-exact; only ${cores} cores so the 2x gate is skipped)"
 fi
 
 echo
